@@ -1,0 +1,75 @@
+//! Integrating a *different* accelerator (the paper's promise: a new
+//! GEMM-based accelerator needs only a functional description + an
+//! architectural YAML, no compiler surgery).
+//!
+//! Here: "bigarray-os", a 32x32 output-stationary array with a 512 KiB
+//! scratchpad, described entirely by `configs/bigarray_os.yaml` + the same
+//! ~60-line functional description. The whole backend — legalization,
+//! scheduling, tensorization, codegen — is regenerated automatically, and
+//! the same model runs correctly on both machines.
+//!
+//! Run with: `cargo run --release --example custom_accelerator`
+
+use anyhow::Result;
+use tvm_accel::accel::gemmini::{desc_for_arch, gemmini_desc};
+use tvm_accel::arch::parse::arch_from_file;
+use tvm_accel::metrics::describe;
+use tvm_accel::pipeline::Compiler;
+use tvm_accel::relay::import::{from_quantized, to_qnn_graph};
+use tvm_accel::relay::quantize::{quantize_mlp, FloatDense};
+use tvm_accel::sim::Simulator;
+use tvm_accel::util::prng::Rng;
+
+fn main() -> Result<()> {
+    // 1. Architectural description from YAML (the CoSA-style input).
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs/bigarray_os.yaml");
+    let arch = arch_from_file(&path)?;
+    println!(
+        "loaded {}: {}x{} PE array, dataflows {:?}, scratchpad {} KiB",
+        arch.name,
+        arch.pe_dim,
+        arch.pe_dim,
+        arch.dataflows,
+        arch.levels.iter().find(|l| l.name == "Scratchpad").unwrap().size_bytes / 1024
+    );
+
+    // 2. Functional description: identical registration code as Gemmini —
+    //    the compute/memory/config intrinsics transfer unchanged.
+    let custom = desc_for_arch("bigarray-os", arch)?;
+    let gemmini = gemmini_desc()?;
+
+    // 3. One model, two accelerators.
+    let mut rng = Rng::new(7);
+    let dims = [128usize, 256, 64];
+    let layers: Vec<FloatDense> = dims
+        .windows(2)
+        .enumerate()
+        .map(|(i, w)| FloatDense {
+            weight: (0..w[0] * w[1]).map(|_| (rng.f64() as f32 - 0.5) * 0.2).collect(),
+            bias: (0..w[1]).map(|_| (rng.f64() as f32 - 0.5) * 0.1).collect(),
+            in_dim: w[0],
+            out_dim: w[1],
+            relu: i == 0,
+        })
+        .collect();
+    let model = from_quantized(32, 0.03, &quantize_mlp(&layers, &[0.03, 0.05, 0.07])?);
+    let graph = to_qnn_graph(&model)?;
+    let input = rng.i8_vec(32 * dims[0]);
+
+    let mut outputs = Vec::new();
+    for accel in [&gemmini, &custom] {
+        let dep = Compiler::new(accel.clone()).compile(&graph)?;
+        let sim = Simulator::new(&accel.arch);
+        let (out, rep) = dep.run(&sim, &input)?;
+        println!("\n== {} ==", accel.name);
+        for (name, s, cyc) in &dep.chosen {
+            println!("  {name}: {s} (profiled {cyc:?})");
+        }
+        println!("  {}", describe("run", &rep, accel.arch.pe_dim));
+        outputs.push(out);
+    }
+
+    assert_eq!(outputs[0], outputs[1], "both accelerators must agree bit-exactly");
+    println!("\nboth accelerators produced identical outputs ✔");
+    Ok(())
+}

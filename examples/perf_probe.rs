@@ -1,0 +1,47 @@
+// quick probe: simulator + scheduler wall-clock on the heaviest workloads
+use std::time::Instant;
+use tvm_accel::accel::gemmini::gemmini_desc;
+use tvm_accel::baselines::naive_byoc::compile_naive;
+use tvm_accel::baselines::c_toolchain::compile_c_toolchain;
+use tvm_accel::relay::import::from_quantized;
+use tvm_accel::relay::quantize::{quantize_mlp, FloatDense};
+use tvm_accel::scheduler::sweep::{sweep, SweepOptions};
+use tvm_accel::sim::Simulator;
+use tvm_accel::util::prng::Rng;
+use tvm_accel::workload::Gemm;
+
+fn main() {
+    let accel = gemmini_desc().unwrap();
+    let sim = Simulator::new(&accel.arch);
+    let mut rng = Rng::new(1);
+    let size = 512usize;
+    let l = FloatDense {
+        weight: (0..size*size).map(|_| (rng.f64() as f32 - 0.5) * 0.25).collect(),
+        bias: (0..size).map(|_| 0.0).collect(),
+        in_dim: size, out_dim: size, relu: false,
+    };
+    let model = from_quantized(size, 0.04, &quantize_mlp(&[l], &[0.04, 0.05]).unwrap());
+    let x = rng.i8_vec(size*size);
+
+    let t0 = Instant::now();
+    let nb = compile_naive(&accel, &model).unwrap();
+    let t_compile_naive = t0.elapsed();
+    let items = nb.program.items.len();
+    let t0 = Instant::now();
+    let (_, rep) = nb.run(&sim, &x).unwrap();
+    let t_sim = t0.elapsed();
+    println!("naive 512^3: compile {:?}, sim {:?} for {} items ({} sim-cycles) => {:.1} Mitems/s",
+        t_compile_naive, t_sim, items, rep.cycles, items as f64 / t_sim.as_secs_f64() / 1e6);
+
+    let ct = compile_c_toolchain(&accel, &model).unwrap();
+    let t0 = Instant::now();
+    let (_, repc) = ct.run(&sim, &x).unwrap();
+    println!("c-toolchain 512^3: sim {:?} ({} cycles)", t0.elapsed(), repc.cycles);
+
+    let t0 = Instant::now();
+    let r = sweep(&accel.arch, Gemm::new(512,512,512), &SweepOptions::default());
+    println!("sweep 512^3: {:?} ({} candidates)", t0.elapsed(), r.candidates.len());
+    let t0 = Instant::now();
+    let r2 = sweep(&accel.arch, Gemm::new(1,640,128), &SweepOptions::default());
+    println!("sweep toycar-layer: {:?} ({} candidates)", t0.elapsed(), r2.candidates.len());
+}

@@ -1,0 +1,61 @@
+//! Quickstart: integrate Gemmini with the functional-description API
+//! (paper Fig. 3), compile a small quantized MLP, and run it on the
+//! cycle-level simulator.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use anyhow::Result;
+use tvm_accel::accel::gemmini::gemmini_desc;
+use tvm_accel::metrics::describe;
+use tvm_accel::pipeline::Compiler;
+use tvm_accel::relay::import::{from_quantized, to_qnn_graph};
+use tvm_accel::relay::quantize::{quantize_mlp, FloatDense};
+use tvm_accel::sim::Simulator;
+use tvm_accel::util::prng::Rng;
+
+fn main() -> Result<()> {
+    // 1. The accelerator model: functional description (Fig. 3) plus the
+    //    architectural description (configs/gemmini.yaml equivalent).
+    let accel = gemmini_desc()?;
+    println!("accelerator: {} (PE {}x{})", accel.name, accel.arch.pe_dim, accel.arch.pe_dim);
+    println!("supported relay ops: {:?}", accel.supported_ops());
+
+    // 2. A quantized 3-layer MLP (what a TFLite import would give us).
+    let mut rng = Rng::new(42);
+    let dims = [64usize, 96, 32, 10];
+    let layers: Vec<FloatDense> = dims
+        .windows(2)
+        .enumerate()
+        .map(|(i, w)| FloatDense {
+            weight: (0..w[0] * w[1]).map(|_| (rng.f64() as f32 - 0.5) * 0.3).collect(),
+            bias: (0..w[1]).map(|_| (rng.f64() as f32 - 0.5) * 0.1).collect(),
+            in_dim: w[0],
+            out_dim: w[1],
+            relu: i + 2 < dims.len(),
+        })
+        .collect();
+    let scales: Vec<f32> = (0..dims.len()).map(|i| 0.03 + 0.01 * i as f32).collect();
+    let model = from_quantized(8, scales[0], &quantize_mlp(&layers, &scales)?);
+    let graph = to_qnn_graph(&model)?;
+    println!("\nimported QNN graph:\n{}", graph.dump());
+
+    // 3. Compile: frontend configurator -> extended CoSA -> mapping
+    //    generator -> codegen, with simulator-profiled schedule selection.
+    let compiler = Compiler::new(accel.clone());
+    let deployment = compiler.compile(&graph)?;
+    println!("chosen schedules:");
+    for (name, sched, cycles) in &deployment.chosen {
+        println!("  {name}: {sched}");
+        if let Some(c) = cycles {
+            println!("    profiled: {c} cycles");
+        }
+    }
+
+    // 4. Run one batch on the cycle-level simulator.
+    let sim = Simulator::new(&accel.arch);
+    let input = rng.i8_vec(8 * dims[0]);
+    let (output, report) = deployment.run(&sim, &input)?;
+    println!("\n{}", describe("inference", &report, accel.arch.pe_dim));
+    println!("first 10 outputs: {:?}", &output[..10]);
+    Ok(())
+}

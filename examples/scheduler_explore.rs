@@ -1,0 +1,86 @@
+//! Scheduler exploration (paper Fig. 2b): run the extended CoSA sweep over
+//! dataflows × uneven-mapping × double-buffering for a GEMM, print the
+//! candidate mappings in CoSA's YAML output format, and profile them on
+//! the simulator to pick the measured best.
+//!
+//! Run with: `cargo run --release --example scheduler_explore -- --n 128 --c 128 --k 128`
+
+use anyhow::Result;
+use tvm_accel::accel::gemmini::gemmini_desc;
+use tvm_accel::backend::codegen::{generate, LayerBufs};
+use tvm_accel::backend::mapping::apply_schedule;
+use tvm_accel::isa::program::Program;
+use tvm_accel::isa::Instr;
+use tvm_accel::scheduler::sweep::{sweep, SweepOptions};
+use tvm_accel::sim::Simulator;
+use tvm_accel::tir::{QuantAttrs, TirFunc};
+use tvm_accel::util::cli::Args;
+use tvm_accel::util::table::{commafy, Table};
+use tvm_accel::workload::Gemm;
+
+fn main() -> Result<()> {
+    let args = Args::from_env(&["n", "c", "k"])?;
+    let g = Gemm::new(
+        args.opt_usize("n", 128)?,
+        args.opt_usize("c", 128)?,
+        args.opt_usize("k", 128)?,
+    );
+    let accel = gemmini_desc()?;
+    println!("extended-CoSA sweep for GEMM {g} on {}\n", accel.name);
+
+    let opts = SweepOptions { max_candidates: 8, ..Default::default() };
+    let result = sweep(&accel.arch, g, &opts);
+    println!(
+        "{} configuration points explored, {} candidates kept\n",
+        result.configs_explored,
+        result.candidates.len()
+    );
+
+    // Profile every candidate on the simulator (Fig. 2b's final step).
+    let sim = Simulator::new(&accel.arch);
+    let mut t = Table::new("Candidate mappings (analytic estimate vs measured)").header(&[
+        "#", "dataflow", "insn tile", "on-chip tile", "order", "db", "est cycles", "measured",
+    ]);
+    let mut best: Option<(usize, u64)> = None;
+    for (i, s) in result.candidates.iter().enumerate() {
+        let f = TirFunc::unscheduled(
+            "explore",
+            g,
+            QuantAttrs { scale: 0.05, act: tvm_accel::isa::Activation::None },
+        );
+        let scheduled = apply_schedule(&accel, &f, s)?;
+        let mut prog = Program::new("explore");
+        let bufs = LayerBufs {
+            x: prog.layout.alloc("x", (g.n * g.c) as u64)?.offset,
+            w: prog.layout.alloc("w", (g.c * g.k) as u64)?.offset,
+            bias: prog.layout.alloc("bias", (g.k * 4) as u64)?.offset,
+            out: prog.layout.alloc("out", (g.n * g.k) as u64)?.offset,
+        };
+        generate(&accel, &scheduled, s, &bufs, &mut prog)?;
+        prog.push(Instr::Fence);
+        let mut dram = prog.make_dram()?;
+        let rep = sim.run(&prog, &mut dram)?;
+        if best.map(|(_, c)| rep.cycles < c).unwrap_or(true) {
+            best = Some((i, rep.cycles));
+        }
+        t.row(vec![
+            format!("{i}"),
+            s.dataflow.to_string(),
+            format!("{:?}", s.insn_tile),
+            format!("{:?}", s.onchip_tile),
+            format!("{}{}{}", s.dram_order[0], s.dram_order[1], s.dram_order[2]),
+            format!("{}", s.double_buffer),
+            commafy(s.est.latency as u64),
+            commafy(rep.cycles),
+        ]);
+    }
+    println!("{}", t.render());
+
+    let (bi, bc) = best.expect("at least one candidate");
+    println!(
+        "measured best: candidate {bi} at {} cycles\n\nCoSA-format mapping:\n{}",
+        commafy(bc),
+        result.candidates[bi].to_yaml()
+    );
+    Ok(())
+}

@@ -1,0 +1,108 @@
+"""AOT export: lower the JAX+Pallas models to HLO *text* and write the
+matching `.qmodel` parameter files.
+
+This is the only Python entry point in the build (`make artifacts`); the
+Rust binary is self-contained afterwards. HLO text — not a serialized
+HloModuleProto — is the interchange format: jax >= 0.5 emits protos with
+64-bit instruction ids that the pinned xla_extension 0.5.1 rejects; the
+text parser reassigns ids (see /opt/xla-example/README.md).
+
+Artifacts written to --out-dir (default ../artifacts):
+  dense_{64,128,256,512}.hlo.txt + .qmodel   (Table 2 single layers)
+  toycar.hlo.txt + toycar.qmodel             (Table 2 full network)
+  toycar_ref.hlo.txt                         (oracle variant, no Pallas)
+
+Usage: python -m compile.aot [--out-dir DIR] [--skip-dense]
+"""
+
+import argparse
+import functools
+import os
+import sys
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import export_model, model
+
+
+def to_hlo_text(lowered):
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export(fn, example_args, path):
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text)} chars)")
+
+
+def export_mlp(layers, batch, name, out_dir, with_ref_variant=False):
+    """Export an MLP's forward pass (Pallas path) + its qmodel.
+
+    Weights/biases are exported as *parameters* (HLO text elides large
+    constants); the runtime feeds them from the matching .qmodel in layer
+    order: x, then (w[C,K] i8, bias[K] i32) per layer.
+    """
+    import jax.numpy as jnp
+
+    x_spec = jax.ShapeDtypeStruct((batch, layers[0].in_dim), jnp.int8)
+    params, metas = model.layer_params(layers)
+    param_specs = [
+        (
+            jax.ShapeDtypeStruct(w.shape, jnp.int8),
+            jax.ShapeDtypeStruct(b.shape, jnp.int32),
+        )
+        for (w, b) in params
+    ]
+    fwd = functools.partial(model.mlp_forward_params, metas=metas)
+    export(fwd, (x_spec, param_specs), os.path.join(out_dir, f"{name}.hlo.txt"))
+    if with_ref_variant:
+        def fwd_ref(x, ps):
+            h = x
+            for (w, b), (scale, act, lo, hi) in zip(ps, metas):
+                from .kernels import ref as _ref
+
+                h = _ref.qgemm_ref(h, w, b, scale, act=act, lo=lo, hi=hi)
+            return (h,)
+
+        export(fwd_ref, (x_spec, param_specs), os.path.join(out_dir, f"{name}_ref.hlo.txt"))
+    scales = model.activation_scales(len(layers))
+    export_model.write_qmodel(
+        os.path.join(out_dir, f"{name}.qmodel"), layers, batch, scales[0]
+    )
+    print(f"  wrote {name}.qmodel")
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(description=__doc__)
+    default_out = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    p.add_argument("--out-dir", default=default_out)
+    p.add_argument("--skip-dense", action="store_true", help="toycar only")
+    # Back-compat with the Makefile's historical `--out file` form.
+    p.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = p.parse_args(argv)
+
+    out_dir = os.path.abspath(args.out_dir if args.out is None else os.path.dirname(args.out))
+    os.makedirs(out_dir, exist_ok=True)
+
+    print(f"exporting artifacts to {out_dir}")
+    if not args.skip_dense:
+        for size in [64, 128, 256, 512]:
+            layers = model.dense_model(size)
+            export_mlp(layers, batch=size, name=f"dense_{size}", out_dir=out_dir)
+    toycar = model.toycar_model()
+    export_mlp(toycar, batch=1, name="toycar", out_dir=out_dir, with_ref_variant=True)
+    print("done")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,41 @@
+"""Write quantized models as `.qmodel` binaries for the Rust importer.
+
+Format (little-endian; mirror of `rust/src/relay/import.rs`):
+
+    magic   b"QMDL", version u8 = 1
+    n_layers u32, batch u32, input_scale f32
+    per layer:
+      in_dim u32, out_dim u32, requant f32, out_scale f32,
+      act u8 (0 none / 1 relu / 2 clip), lo i8, hi i8,
+      weights i8[out_dim * in_dim]   (TFLite layout [out, in])
+      bias    i32[out_dim]
+"""
+
+import struct
+
+import numpy as np
+
+
+def write_qmodel(path, layers, batch, input_scale):
+    """Serialize a list of `model.QuantLayer` to `path`."""
+    with open(path, "wb") as f:
+        f.write(b"QMDL")
+        f.write(struct.pack("<B", 1))
+        f.write(struct.pack("<IIf", len(layers), batch, float(input_scale)))
+        for l in layers:
+            f.write(
+                struct.pack(
+                    "<IIffBbb",
+                    l.in_dim,
+                    l.out_dim,
+                    float(l.requant),
+                    float(l.out_scale),
+                    l.act,
+                    l.lo,
+                    l.hi,
+                )
+            )
+            w = np.ascontiguousarray(l.w_q, dtype=np.int8)
+            assert w.shape == (l.out_dim, l.in_dim)
+            f.write(w.tobytes())
+            f.write(np.ascontiguousarray(l.bias_q, dtype=np.int32).tobytes())

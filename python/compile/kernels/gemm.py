@@ -1,0 +1,135 @@
+"""Layer-1 Pallas kernel: DIM-blocked quantized GEMM with fused
+requantization — the compute hot-spot of the system, written the way the
+paper's insight maps onto a TPU-class spatial core.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): Gemmini executes a
+dense layer as scratchpad-tile mvins feeding a DIMxDIM systolic array with
+int32 accumulation and requantize-on-mvout. On TPU the same structure is:
+
+* ``BlockSpec`` tiles = the scratchpad mvin schedule (HBM -> VMEM),
+* the per-block ``dot_general`` with ``preferred_element_type=int32`` =
+  the systolic GEMM instruction (MXU contraction),
+* the grid's k-dimension with an accumulator block revisited across k =
+  the accumulator + COMPUTE_ACCUMULATED loop,
+* the epilogue on the last k step (bias + requantize + activation) =
+  the configured mvout path,
+* double buffering = Pallas' automatic pipelining across grid steps.
+
+The kernel runs with ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); correctness is asserted against ``ref.py`` and the lowered
+HLO is what the Rust runtime loads as the golden model.
+
+VMEM accounting for the default blocks (BM=BN=BK=128, int8 inputs, int32
+accumulator): A 16 KiB + B 16 KiB + acc 64 KiB + out 16 KiB = 112 KiB per
+pipeline stage; x2 for double buffering = 224 KiB « 16 MiB VMEM. MXU
+utilization estimate: 128x128x128 block contraction fully tiles the
+128x128 MXU (8 passes of 128x128x16), so the structural utilization bound
+is 1.0; see EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Default block sizes (TPU-friendly; clamped per call for small layers).
+DEF_BM = 128
+DEF_BN = 128
+DEF_BK = 128
+
+
+def _qgemm_kernel(x_ref, w_ref, b_ref, s_ref, acc_ref, o_ref, *, nk, act, lo, hi):
+    """One (i, j, k) grid step: acc += X_blk @ W_blk, epilogue on last k."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = x_ref[...].astype(jnp.int32)
+    b = w_ref[...].astype(jnp.int32)
+    acc_ref[...] += jax.lax.dot_general(
+        a, b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        acc = acc_ref[...] + b_ref[...].astype(jnp.int32)  # bias row broadcast
+        scale = s_ref[0, 0]
+        x = acc.astype(jnp.float32) * scale
+        x = jnp.round(x)
+        if act == ref.ACT_RELU:
+            x = jnp.maximum(x, 0.0)
+        q = jnp.clip(x, -128.0, 127.0).astype(jnp.int32)
+        if act == ref.ACT_CLIP:
+            q = jnp.clip(q, lo, hi)
+        o_ref[...] = q.astype(jnp.int8)
+
+
+def _round_up(v, m):
+    return (v + m - 1) // m * m
+
+
+@functools.partial(
+    jax.jit, static_argnames=("act", "lo", "hi", "bm", "bn", "bk")
+)
+def qgemm(
+    x,
+    w,
+    bias,
+    scale,
+    act=ref.ACT_NONE,
+    lo=-128,
+    hi=127,
+    bm=DEF_BM,
+    bn=DEF_BN,
+    bk=DEF_BK,
+):
+    """Quantized dense layer via the Pallas kernel.
+
+    x: int8 [N, C]; w: int8 [C, K]; bias: int32 [K]; scale: f32 scalar.
+    Returns int8 [N, K]. Inputs are zero-padded to block multiples (exact
+    for GEMM) and the result sliced back.
+    """
+    n, c = x.shape
+    c2, k = w.shape
+    assert c == c2, f"reduction mismatch {c} vs {c2}"
+    assert bias.shape == (k,)
+
+    bm_ = min(bm, _round_up(n, 8))
+    bn_ = min(bn, _round_up(k, 8))
+    bk_ = min(bk, _round_up(c, 8))
+    np_, cp, kp = _round_up(n, bm_), _round_up(c, bk_), _round_up(k, bn_)
+
+    xp = jnp.zeros((np_, cp), jnp.int8).at[:n, :c].set(x)
+    wp = jnp.zeros((cp, kp), jnp.int8).at[:c, :k].set(w)
+    bp = jnp.zeros((1, kp), jnp.int32).at[0, :k].set(bias)
+    sp = jnp.asarray(scale, jnp.float32).reshape(1, 1)
+
+    grid = (np_ // bm_, kp // bn_, cp // bk_)
+    kernel = functools.partial(
+        _qgemm_kernel, nk=grid[2], act=act, lo=lo, hi=hi
+    )
+    acc_shape = jax.ShapeDtypeStruct((np_, kp), jnp.int32)
+    out_shape = jax.ShapeDtypeStruct((np_, kp), jnp.int8)
+    acc, out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, k: (i, k)),  # X tile (HBM->VMEM)
+            pl.BlockSpec((bk_, bn_), lambda i, j, k: (k, j)),  # W tile
+            pl.BlockSpec((1, bn_), lambda i, j, k: (0, j)),  # bias row
+            pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),  # requant scale
+        ],
+        out_specs=[
+            pl.BlockSpec((bm_, bn_), lambda i, j, k: (i, j)),  # int32 accumulator
+            pl.BlockSpec((bm_, bn_), lambda i, j, k: (i, j)),  # int8 result
+        ],
+        out_shape=[acc_shape, out_shape],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(xp, wp, bp, sp)
+    del acc
+    return out[:n, :k]

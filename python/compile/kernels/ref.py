@@ -1,0 +1,56 @@
+"""Pure-jnp correctness oracle for the quantized GEMM kernel.
+
+This file is the semantic contract shared by all three validation legs:
+
+* the Pallas kernel (``gemm.py``) must match it exactly (pytest),
+* the Rust simulator's ``requantize`` mirrors ``requantize_i32`` —
+  float32 multiply, round-half-to-even, saturate — bit for bit
+  (``rust/src/sim/mod.rs``),
+* the AOT-exported HLO golden models are built from the same functions.
+
+All arithmetic is exact: int32 accumulation never overflows for the
+supported shapes (|acc| <= 640 * 127 * 127 < 2^31), and the requantize
+multiply is a single f32 x f32 product in both implementations.
+"""
+
+import jax.numpy as jnp
+
+# Activation codes shared with the model/exporter (mirroring the Rust
+# `Activation` enum).
+ACT_NONE = 0
+ACT_RELU = 1
+ACT_CLIP = 2
+
+
+def requantize_i32(acc, scale, act=ACT_NONE, lo=-128, hi=127):
+    """int32 accumulator -> int8, matching the Rust simulator exactly.
+
+    Order of operations (keep in sync with ``sim::requantize``):
+    scale in f32 -> round half-to-even -> relu -> saturate to [-128, 127]
+    -> optional clip to [lo, hi].
+    """
+    x = acc.astype(jnp.float32) * jnp.float32(scale)
+    x = jnp.round(x)  # round-half-to-even, like f32::round_ties_even
+    if act == ACT_RELU:
+        x = jnp.maximum(x, 0.0)
+    q = jnp.clip(x, -128.0, 127.0).astype(jnp.int32)
+    if act == ACT_CLIP:
+        q = jnp.clip(q, lo, hi)
+    return q.astype(jnp.int8)
+
+
+def gemm_i8_acc(x, w):
+    """int8 x int8 -> int32 GEMM: O[n,k] = sum_c X[n,c] * W[c,k]."""
+    return jnp.matmul(
+        x.astype(jnp.int32), w.astype(jnp.int32), preferred_element_type=jnp.int32
+    )
+
+
+def qgemm_ref(x, w, bias, scale, act=ACT_NONE, lo=-128, hi=127):
+    """Reference quantized dense layer: requant(X @ W + bias).
+
+    x: int8 [N, C]; w: int8 [C, K] (accelerator layout); bias: int32 [K].
+    Returns int8 [N, K].
+    """
+    acc = gemm_i8_acc(x, w) + bias.astype(jnp.int32)[None, :]
+    return requantize_i32(acc, scale, act, lo, hi)

@@ -1,0 +1,149 @@
+"""Layer-2 JAX model: quantized dense layers and the MLPerf-Tiny ToyCar
+autoencoder, with every dense layer computed by the Pallas kernel.
+
+The models here are the golden functional references for the Rust system:
+`aot.py` lowers them to HLO text and `export_model.py` writes the same
+quantized parameters as `.qmodel` files for the Rust importer. Both sides
+share one quantization recipe (symmetric int8, round-half-to-even), so
+simulator output and XLA output match element-exactly.
+
+Python runs only at build time (`make artifacts`); nothing here is on the
+deployment path.
+"""
+
+import numpy as np
+
+from .kernels import gemm, ref
+
+# ToyCar autoencoder (MLPerf Tiny anomaly detection): dense stack
+# 640-128-128-128-128-8-128-128-128-128-640, relu on all hidden layers.
+TOYCAR_WIDTHS = [640, 128, 128, 128, 128, 8, 128, 128, 128, 128, 640]
+
+
+class QuantLayer:
+    """One quantized dense layer (parameters + metadata)."""
+
+    def __init__(self, w_q, bias_q, requant, out_scale, act, lo=-128, hi=127):
+        self.w_q = w_q  # int8 [K, C] (TFLite layout, as imported)
+        self.bias_q = bias_q  # int32 [K]
+        self.requant = np.float32(requant)
+        self.out_scale = np.float32(out_scale)
+        self.act = act
+        self.lo, self.hi = lo, hi
+
+    @property
+    def in_dim(self):
+        return self.w_q.shape[1]
+
+    @property
+    def out_dim(self):
+        return self.w_q.shape[0]
+
+
+def symmetric_scale(x):
+    """Scale so max|x| maps to 127 (mirror of relay::quantize)."""
+    m = float(np.max(np.abs(x)))
+    return np.float32(1.0 if m == 0.0 else m / 127.0)
+
+
+def quantize_i8(x, scale):
+    """Round-half-to-even int8 quantization (mirror of relay::quantize)."""
+    q = np.clip(np.rint(np.asarray(x, np.float32) / np.float32(scale)), -128, 127)
+    return q.astype(np.int8)
+
+
+def quantize_mlp(float_layers, act_scales):
+    """Post-training quantization of an MLP.
+
+    float_layers: list of (weight [K,C] f32, bias [K] f32, act_code).
+    act_scales: per-boundary activation scales, len = n_layers + 1.
+    """
+    assert len(act_scales) == len(float_layers) + 1
+    out = []
+    for i, (w, b, act) in enumerate(float_layers):
+        s_in, s_out = np.float32(act_scales[i]), np.float32(act_scales[i + 1])
+        s_w = symmetric_scale(w)
+        w_q = quantize_i8(w, s_w)
+        bias_q = np.rint(np.asarray(b, np.float32) / (s_in * s_w)).astype(np.int32)
+        requant = np.float32(np.float32(s_in * s_w) / s_out)
+        out.append(QuantLayer(w_q, bias_q, requant, s_out, act))
+    return out
+
+
+def random_mlp(widths, seed, weight_scale=0.25, relu_hidden=True):
+    """Deterministic float MLP used for both the .qmodel export and the
+    HLO golden model (same seed => identical parameters everywhere)."""
+    rng = np.random.RandomState(seed)
+    layers = []
+    for i, (cin, cout) in enumerate(zip(widths[:-1], widths[1:])):
+        w = rng.normal(0.0, weight_scale / np.sqrt(cin), (cout, cin)).astype(np.float32)
+        b = rng.normal(0.0, 0.05, (cout,)).astype(np.float32)
+        act = ref.ACT_RELU if (relu_hidden and i + 2 < len(widths)) else ref.ACT_NONE
+        layers.append((w, b, act))
+    return layers
+
+
+def activation_scales(n_layers, base=0.04):
+    """Fixed calibration scales (a real flow would measure these)."""
+    return [np.float32(base * (1.0 + 0.25 * i)) for i in range(n_layers + 1)]
+
+
+def mlp_forward(x_q, layers):
+    """Quantized forward pass; every dense layer runs the Pallas kernel.
+
+    x_q: int8 [batch, in_dim]. Returns int8 [batch, out_dim].
+    """
+    h = x_q
+    for l in layers:
+        # Kernel consumes accelerator-layout weights [C, K].
+        w_ck = np.ascontiguousarray(l.w_q.T)
+        h = gemm.qgemm(h, w_ck, l.bias_q, l.requant, act=l.act, lo=l.lo, hi=l.hi)
+    return (h,)
+
+
+def mlp_forward_params(x_q, params, metas):
+    """Forward pass with *traced* parameters (used for AOT export).
+
+    Large weight constants do not survive the HLO-text interchange (the
+    printer elides them), so the exported computation takes weights and
+    biases as arguments: ``params`` is a list of (w_ck int8 [C,K],
+    bias int32 [K]) and ``metas`` the static per-layer (requant, act, lo,
+    hi) tuples. The Rust runtime feeds the parameters from the .qmodel.
+    """
+    h = x_q
+    for (w_ck, bias), (scale, act, lo, hi) in zip(params, metas):
+        h = gemm.qgemm(h, w_ck, bias, scale, act=act, lo=lo, hi=hi)
+    return (h,)
+
+
+def layer_params(layers):
+    """(params, metas) split of a quantized MLP for `mlp_forward_params`."""
+    params = [
+        (np.ascontiguousarray(l.w_q.T), np.asarray(l.bias_q, np.int32)) for l in layers
+    ]
+    metas = tuple((float(l.requant), l.act, l.lo, l.hi) for l in layers)
+    return params, metas
+
+
+def mlp_forward_ref(x_q, layers):
+    """Same forward pass through the pure-jnp oracle (no Pallas)."""
+    h = x_q
+    for l in layers:
+        w_ck = np.ascontiguousarray(l.w_q.T)
+        h = ref.qgemm_ref(h, w_ck, l.bias_q, l.requant, act=l.act, lo=l.lo, hi=l.hi)
+    return (h,)
+
+
+def toycar_model(seed=1234):
+    """The quantized ToyCar autoencoder."""
+    floats = random_mlp(TOYCAR_WIDTHS, seed)
+    scales = activation_scales(len(floats))
+    return quantize_mlp(floats, scales)
+
+
+def dense_model(size, seed=100):
+    """A single square dense layer (Table 2 single-layer workloads):
+    N = batch = size, C = K = size."""
+    floats = random_mlp([size, size], seed + size, relu_hidden=False)
+    scales = activation_scales(1)
+    return quantize_mlp(floats, scales)

@@ -1,0 +1,98 @@
+"""L1 correctness: the Pallas kernel against the pure-jnp oracle.
+
+Hypothesis sweeps shapes, activations and block sizes; every case must be
+element-exact (the kernel and oracle share one integer/f32 semantics).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gemm, ref
+
+settings.register_profile("ci", max_examples=40, deadline=None)
+settings.load_profile("ci")
+
+
+def _rand(rng, n, c, k):
+    x = rng.integers(-128, 128, (n, c)).astype(np.int8)
+    w = rng.integers(-128, 128, (c, k)).astype(np.int8)
+    b = rng.integers(-2000, 2000, (k,)).astype(np.int32)
+    return x, w, b
+
+
+def _check(x, w, b, scale, act=ref.ACT_NONE, lo=-128, hi=127, **blocks):
+    got = np.asarray(gemm.qgemm(x, w, b, scale, act=act, lo=lo, hi=hi, **blocks))
+    want = np.asarray(ref.qgemm_ref(x, w, b, scale, act=act, lo=lo, hi=hi))
+    np.testing.assert_array_equal(got, want)
+
+
+@given(
+    n=st.integers(1, 96),
+    c=st.integers(1, 96),
+    k=st.integers(1, 96),
+    act=st.sampled_from([ref.ACT_NONE, ref.ACT_RELU, ref.ACT_CLIP]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref_random_shapes(n, c, k, act, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = _rand(rng, n, c, k)
+    scale = np.float32(0.5 ** rng.integers(3, 10))
+    _check(x, w, b, scale, act=act, lo=-100, hi=100)
+
+
+@given(
+    bm=st.sampled_from([8, 16, 32, 128]),
+    bn=st.sampled_from([8, 16, 32, 128]),
+    bk=st.sampled_from([8, 16, 32, 128]),
+)
+def test_kernel_block_shapes(bm, bn, bk):
+    rng = np.random.default_rng(7)
+    x, w, b = _rand(rng, 48, 40, 24)
+    _check(x, w, b, np.float32(0.02), act=ref.ACT_RELU, bm=bm, bn=bn, bk=bk)
+
+
+@pytest.mark.parametrize(
+    "n,c,k",
+    [(1, 640, 128), (1, 128, 8), (1, 8, 128), (64, 64, 64), (3, 5, 7)],
+)
+def test_kernel_workload_shapes(n, c, k):
+    rng = np.random.default_rng(n * 1000 + c * 10 + k)
+    x, w, b = _rand(rng, n, c, k)
+    _check(x, w, b, np.float32(0.01), act=ref.ACT_RELU)
+
+
+def test_saturation_both_rails():
+    # Force saturation in both directions: huge accumulators.
+    n = c = k = 16
+    x = np.full((n, c), 127, np.int8)
+    w = np.full((c, k), 127, np.int8)
+    b = np.zeros(k, np.int32)
+    _check(x, w, b, np.float32(1.0))
+    w_neg = np.full((c, k), -128, np.int8)
+    _check(x, w_neg, b, np.float32(1.0))
+
+
+def test_round_half_to_even():
+    # acc * 0.5 hits exact .5 values: 1*0.5 = 0.5 -> 0, 3*0.5 = 1.5 -> 2.
+    x = np.array([[1, 0], [3, 0]], np.int8)
+    w = np.array([[1], [0]], np.int8)
+    b = np.zeros(1, np.int32)
+    got = np.asarray(gemm.qgemm(x, w, b, np.float32(0.5)))
+    np.testing.assert_array_equal(got[:, 0], [0, 2])
+
+
+def test_clip_activation_bounds():
+    rng = np.random.default_rng(11)
+    x, w, b = _rand(rng, 8, 8, 8)
+    got = np.asarray(
+        gemm.qgemm(x, w, b, np.float32(1.0), act=ref.ACT_CLIP, lo=-5, hi=5)
+    )
+    assert got.min() >= -5 and got.max() <= 5
+
+
+def test_relu_never_negative():
+    rng = np.random.default_rng(12)
+    x, w, b = _rand(rng, 16, 32, 16)
+    got = np.asarray(gemm.qgemm(x, w, b, np.float32(0.03), act=ref.ACT_RELU))
+    assert got.min() >= 0

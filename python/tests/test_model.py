@@ -1,0 +1,87 @@
+"""L2 correctness: model construction, quantization determinism, Pallas vs
+oracle forward passes, and the .qmodel serialization format."""
+
+import io
+import struct
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import export_model, model
+from compile.kernels import ref
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+def test_toycar_topology():
+    layers = model.toycar_model()
+    assert len(layers) == 10
+    dims = [(l.in_dim, l.out_dim) for l in layers]
+    assert dims[0] == (640, 128)
+    assert dims[4] == (128, 8)
+    assert dims[-1] == (128, 640)
+    # Hidden layers relu, output layer linear.
+    assert all(l.act == ref.ACT_RELU for l in layers[:-1])
+    assert layers[-1].act == ref.ACT_NONE
+
+
+def test_model_generation_deterministic():
+    a = model.toycar_model()
+    b = model.toycar_model()
+    for la, lb in zip(a, b):
+        np.testing.assert_array_equal(la.w_q, lb.w_q)
+        np.testing.assert_array_equal(la.bias_q, lb.bias_q)
+        assert la.requant == lb.requant
+
+
+def test_pallas_forward_matches_oracle_toycar_slice():
+    # Two representative layers of ToyCar (keeps CI fast); full-network
+    # equivalence is covered by the Rust golden check.
+    layers = model.toycar_model()[:2]
+    rng = np.random.default_rng(5)
+    x = rng.integers(-128, 128, (1, 640)).astype(np.int8)
+    (got,) = model.mlp_forward(x, layers)
+    (want,) = model.mlp_forward_ref(x, layers)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(size=st.sampled_from([16, 32, 64]), seed=st.integers(0, 1000))
+def test_pallas_forward_matches_oracle_dense(size, seed):
+    layers = model.dense_model(size)
+    rng = np.random.default_rng(seed)
+    x = rng.integers(-128, 128, (size, size)).astype(np.int8)
+    (got,) = model.mlp_forward(x, layers)
+    (want,) = model.mlp_forward_ref(x, layers)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_quantize_round_half_even():
+    q = model.quantize_i8(np.array([0.5, 1.5, -0.5, 2.5]), 1.0)
+    np.testing.assert_array_equal(q, [0, 2, 0, 2])
+
+
+def test_qmodel_serialization_layout(tmp_path):
+    layers = model.dense_model(16)
+    path = tmp_path / "m.qmodel"
+    export_model.write_qmodel(str(path), layers, batch=16, input_scale=0.04)
+    blob = path.read_bytes()
+    assert blob[:4] == b"QMDL"
+    assert blob[4] == 1
+    n_layers, batch, in_scale = struct.unpack_from("<IIf", blob, 5)
+    assert n_layers == 1 and batch == 16
+    assert abs(in_scale - 0.04) < 1e-7
+    in_dim, out_dim, requant, out_scale, act, lo, hi = struct.unpack_from(
+        "<IIffBbb", blob, 17
+    )
+    assert (in_dim, out_dim) == (16, 16)
+    assert requant == float(layers[0].requant)
+    # Exact total size: header + per-layer header + weights + bias.
+    expected = 17 + 19 + 16 * 16 + 16 * 4
+    assert len(blob) == expected
+
+
+def test_activation_scales_monotone():
+    s = model.activation_scales(4)
+    assert len(s) == 5
+    assert all(b > a for a, b in zip(s, s[1:]))

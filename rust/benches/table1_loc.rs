@@ -1,0 +1,88 @@
+//! Regenerates **Table 1** of the paper: lines of code a user must write
+//! to enable lowering + scheduling for a new accelerator, manual
+//! integration vs the proposed functional description.
+//!
+//! The "manual" side counts this repo's actual backend machinery — the
+//! code a manual TVM-style integration would hand-write per accelerator
+//! (legalization patterns, strategy binding, intrinsic registration,
+//! TIR scheduling, codegen). The "proposed" side counts what a user
+//! actually writes here: the Gemmini functional description plus the
+//! architectural YAML.
+//!
+//! Run with: `cargo bench --bench table1_loc`.
+
+use std::path::Path;
+
+use tvm_accel::util::table::Table;
+
+/// Count non-blank, non-comment lines (matching how LoC tables are
+/// usually produced).
+fn loc(path: &Path) -> usize {
+    let src = std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("reading {}: {e}", path.display()));
+    let mut in_block_comment = false;
+    src.lines()
+        .filter(|l| {
+            let t = l.trim();
+            if in_block_comment {
+                if t.contains("*/") {
+                    in_block_comment = false;
+                }
+                return false;
+            }
+            if t.starts_with("/*") {
+                in_block_comment = !t.contains("*/");
+                return false;
+            }
+            !t.is_empty()
+                && !t.starts_with("//")
+                && !t.starts_with('#')
+                && !t.starts_with("*")
+        })
+        .count()
+}
+
+fn total(paths: &[&str]) -> usize {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    paths.iter().map(|p| loc(&root.join(p))).sum()
+}
+
+fn main() {
+    // Manual integration: everything the configurators generate/automate.
+    let manual_frontend = total(&["rust/src/relay/legalize.rs", "rust/src/frontend/mod.rs"]);
+    let manual_backend = total(&[
+        "rust/src/backend/strategy.rs",
+        "rust/src/backend/intrin.rs",
+        "rust/src/backend/mapping.rs",
+    ]);
+    let manual_sched = total(&["rust/src/backend/codegen.rs", "rust/src/tir/schedule.rs"]);
+    let manual = manual_frontend + manual_backend + manual_sched;
+
+    // Proposed: what a user writes for one accelerator.
+    let proposed = total(&["rust/src/accel/gemmini.rs", "configs/gemmini.yaml"]);
+
+    let reduction = 100.0 * (1.0 - proposed as f64 / manual as f64);
+
+    let mut t = Table::new(
+        "Table 1: LoC for enabling lowering and scheduling (manual vs proposed)",
+    )
+    .header(&["Component", "LoC"]);
+    t.row(vec!["Manual: legalization + frontend config".into(), manual_frontend.to_string()]);
+    t.row(vec!["Manual: strategy/intrinsic/mapping generators".into(), manual_backend.to_string()]);
+    t.row(vec!["Manual: TIR scheduling + codegen".into(), manual_sched.to_string()]);
+    t.row(vec!["Manual total".into(), manual.to_string()]);
+    t.row(vec!["Proposed: functional description (+ YAML)".into(), proposed.to_string()]);
+    t.row(vec!["Reduction".into(), format!("{reduction:.0}%")]);
+    println!("{}", t.render());
+
+    println!(
+        "paper's Table 1: manual ≈ 230 (C++) + 398 (Python Relay) + 425 (TE/TIR) = 1053 LoC;"
+    );
+    println!("proposed ≈ 208 LoC functional description → ~80% reduction.\n");
+
+    assert!(
+        reduction >= 70.0,
+        "reproduction expects ≥70% LoC reduction, got {reduction:.0}%"
+    );
+    println!("shape check passed: {reduction:.0}% reduction (paper: ~80%).");
+}

@@ -1,0 +1,362 @@
+//! Accelerator functional description (paper §3.2, Fig. 3).
+//!
+//! "Users define a hardware accelerator model comprising functional and
+//! architectural descriptions." The architectural half is [`crate::arch`];
+//! this module is the functional half: which operators the accelerator
+//! supports (core computes + preprocessing) and the interface functions
+//! used to offload work (hardware intrinsics, categorized into compute,
+//! memory and configuration).
+//!
+//! The Rust analogue of the paper's Python decorators:
+//!
+//! ```ignore
+//! AccelDesc::builder("gemmini", arch)
+//!     .register_preprocessing("dense", Preprocessing::WeightTranspose)   // Fig 3(a)
+//!     .register_core_compute(CoreCompute::quantized_gemm("dense"))       // Fig 3(b)
+//!     .register_hw_intrinsic(HwIntrinsic::compute("gemmini_matmul", ..)) // Fig 3(c)
+//!     .register_hw_intrinsic(HwIntrinsic::memory("gemmini_mvin", ..))    // Fig 3(d)
+//!     .build()
+//! ```
+//!
+//! Intrinsic implementations are plain functions from typed argument
+//! structs to instruction sequences, so integrating a new accelerator
+//! never requires touching the compiler's internals — the point of the
+//! paper.
+
+pub mod gemmini;
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use anyhow::{bail, ensure, Result};
+
+use crate::arch::{ArchDesc, Dataflow};
+use crate::isa::{Activation, Instr, LocalAddr};
+
+/// Intrinsic categories (paper §3.2: "categorized into compute, memory,
+/// and configuration intrinsics").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IntrinsicClass {
+    Compute,
+    Memory,
+    Config,
+}
+
+/// Constant-related preprocessing registered for an operator (paper Fig.
+/// 3a). Folded at compile time when the operand is constant; otherwise
+/// executed on the host.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Preprocessing {
+    /// Transpose weights from importer layout `[K,C]` to accelerator
+    /// layout `[C,K]`.
+    WeightTranspose,
+    /// Flatten a 4-D activation into the dense 2-D shape.
+    FlattenInput,
+    /// im2col expansion for convolutions.
+    Im2col,
+}
+
+/// A core computation registered for an operator tag (Fig. 3b): a
+/// TE-style description the strategy generator binds to the generalized
+/// relay operator.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CoreCompute {
+    /// Operator tag ("dense", "conv2d").
+    pub tag: String,
+    /// The tensor-expression description (documentation + matching).
+    pub einsum: String,
+    /// Relay operator name this compute implements.
+    pub relay_op: String,
+}
+
+impl CoreCompute {
+    /// The quantized GEMM compute (dense layers; convs reach it via
+    /// im2col preprocessing).
+    pub fn quantized_gemm(tag: &str) -> CoreCompute {
+        CoreCompute {
+            tag: tag.to_string(),
+            einsum: "O[n,k] = requant(sum(c, In[n,c] * W[c,k]) + B[k])".to_string(),
+            relay_op: "accel.dense".to_string(),
+        }
+    }
+}
+
+/// Arguments handed to a compute-intrinsic implementation: one
+/// instruction-tile GEMM `dst[rows×cols] (+)= A[rows×red] · B[red×cols]`.
+#[derive(Debug, Clone, Copy)]
+pub struct ComputeArgs {
+    pub a: LocalAddr,
+    pub b: LocalAddr,
+    pub dst: LocalAddr,
+    pub rows: u16,
+    pub red: u16,
+    pub cols: u16,
+    /// Whether the stationary tile must be (re)loaded into the array.
+    pub preload: bool,
+    pub dataflow: Dataflow,
+}
+
+/// Arguments for a memory intrinsic (one strided tile transfer).
+#[derive(Debug, Clone, Copy)]
+pub struct MemArgs {
+    pub dram: u64,
+    pub local: LocalAddr,
+    pub rows: u16,
+    pub cols: u16,
+    /// DRAM row stride in elements (0 = broadcast the same row).
+    pub stride: u32,
+}
+
+/// Arguments for configuration intrinsics.
+#[derive(Debug, Clone, Copy)]
+pub struct ConfigArgs {
+    pub dataflow: Dataflow,
+    pub st_stride: u32,
+    pub scale: f32,
+    pub act: Activation,
+}
+
+/// Implementation of an intrinsic: a plain function mapping typed
+/// arguments to an instruction sequence.
+#[derive(Clone, Copy)]
+pub enum IntrinsicImpl {
+    Compute(fn(&ComputeArgs) -> Vec<Instr>),
+    Memory(fn(&MemArgs) -> Vec<Instr>),
+    Config(fn(&ConfigArgs) -> Vec<Instr>),
+}
+
+impl std::fmt::Debug for IntrinsicImpl {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            IntrinsicImpl::Compute(_) => write!(f, "IntrinsicImpl::Compute(..)"),
+            IntrinsicImpl::Memory(_) => write!(f, "IntrinsicImpl::Memory(..)"),
+            IntrinsicImpl::Config(_) => write!(f, "IntrinsicImpl::Config(..)"),
+        }
+    }
+}
+
+/// A registered hardware intrinsic (Fig. 3c/3d).
+#[derive(Debug, Clone)]
+pub struct HwIntrinsic {
+    pub name: String,
+    pub class: IntrinsicClass,
+    pub implementation: IntrinsicImpl,
+}
+
+impl HwIntrinsic {
+    pub fn compute(name: &str, f: fn(&ComputeArgs) -> Vec<Instr>) -> HwIntrinsic {
+        HwIntrinsic {
+            name: name.to_string(),
+            class: IntrinsicClass::Compute,
+            implementation: IntrinsicImpl::Compute(f),
+        }
+    }
+
+    pub fn memory(name: &str, f: fn(&MemArgs) -> Vec<Instr>) -> HwIntrinsic {
+        HwIntrinsic {
+            name: name.to_string(),
+            class: IntrinsicClass::Memory,
+            implementation: IntrinsicImpl::Memory(f),
+        }
+    }
+
+    pub fn config(name: &str, f: fn(&ConfigArgs) -> Vec<Instr>) -> HwIntrinsic {
+        HwIntrinsic {
+            name: name.to_string(),
+            class: IntrinsicClass::Config,
+            implementation: IntrinsicImpl::Config(f),
+        }
+    }
+}
+
+/// The complete accelerator description: functional + architectural.
+#[derive(Debug, Clone)]
+pub struct AccelDesc {
+    pub name: String,
+    pub arch: ArchDesc,
+    core: BTreeMap<String, CoreCompute>,
+    preprocessing: BTreeMap<String, Vec<Preprocessing>>,
+    intrinsics: BTreeMap<String, HwIntrinsic>,
+    /// Names of the intrinsics codegen uses for each role.
+    pub compute_intrinsic: String,
+    pub load_intrinsic: String,
+    pub store_intrinsic: String,
+    pub config_intrinsic: String,
+}
+
+impl AccelDesc {
+    pub fn builder(name: &str, arch: ArchDesc) -> AccelDescBuilder {
+        AccelDescBuilder {
+            desc: AccelDesc {
+                name: name.to_string(),
+                arch,
+                core: BTreeMap::new(),
+                preprocessing: BTreeMap::new(),
+                intrinsics: BTreeMap::new(),
+                compute_intrinsic: String::new(),
+                load_intrinsic: String::new(),
+                store_intrinsic: String::new(),
+                config_intrinsic: String::new(),
+            },
+        }
+    }
+
+    /// Relay operator names this accelerator supports (drives graph
+    /// partitioning).
+    pub fn supported_ops(&self) -> BTreeSet<String> {
+        self.core.values().map(|c| c.relay_op.clone()).collect()
+    }
+
+    pub fn core_compute(&self, tag: &str) -> Option<&CoreCompute> {
+        self.core.get(tag)
+    }
+
+    pub fn preprocessing(&self, tag: &str) -> &[Preprocessing] {
+        self.preprocessing.get(tag).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    pub fn intrinsic(&self, name: &str) -> Result<&HwIntrinsic> {
+        self.intrinsics
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("intrinsic '{name}' not registered"))
+    }
+
+    pub fn intrinsics(&self) -> impl Iterator<Item = &HwIntrinsic> {
+        self.intrinsics.values()
+    }
+
+    /// Emit one compute tile via the registered compute intrinsic.
+    pub fn emit_compute(&self, args: &ComputeArgs) -> Result<Vec<Instr>> {
+        match self.intrinsic(&self.compute_intrinsic)?.implementation {
+            IntrinsicImpl::Compute(f) => Ok(f(args)),
+            _ => bail!("'{}' is not a compute intrinsic", self.compute_intrinsic),
+        }
+    }
+
+    /// Emit one tile load / store via a registered memory intrinsic.
+    pub fn emit_mem(&self, name: &str, args: &MemArgs) -> Result<Vec<Instr>> {
+        match self.intrinsic(name)?.implementation {
+            IntrinsicImpl::Memory(f) => Ok(f(args)),
+            _ => bail!("'{name}' is not a memory intrinsic"),
+        }
+    }
+
+    /// Emit the per-layer configuration sequence.
+    pub fn emit_config(&self, args: &ConfigArgs) -> Result<Vec<Instr>> {
+        match self.intrinsic(&self.config_intrinsic)?.implementation {
+            IntrinsicImpl::Config(f) => Ok(f(args)),
+            _ => bail!("'{}' is not a config intrinsic", self.config_intrinsic),
+        }
+    }
+
+    fn validate(&self) -> Result<()> {
+        ensure!(!self.core.is_empty(), "no core computes registered");
+        for (role, name) in [
+            ("compute", &self.compute_intrinsic),
+            ("load", &self.load_intrinsic),
+            ("store", &self.store_intrinsic),
+            ("config", &self.config_intrinsic),
+        ] {
+            ensure!(!name.is_empty(), "no {role} intrinsic registered");
+            ensure!(
+                self.intrinsics.contains_key(name),
+                "{role} intrinsic '{name}' not registered"
+            );
+        }
+        self.arch.validate()?;
+        Ok(())
+    }
+}
+
+/// Builder mirroring the paper's decorator API.
+#[derive(Debug)]
+pub struct AccelDescBuilder {
+    desc: AccelDesc,
+}
+
+impl AccelDescBuilder {
+    /// `@register_core_compute(tag)` (Fig. 3b).
+    pub fn register_core_compute(mut self, c: CoreCompute) -> Self {
+        self.desc.core.insert(c.tag.clone(), c);
+        self
+    }
+
+    /// `@register_preprocessing(tag)` (Fig. 3a).
+    pub fn register_preprocessing(mut self, tag: &str, p: Preprocessing) -> Self {
+        self.desc.preprocessing.entry(tag.to_string()).or_default().push(p);
+        self
+    }
+
+    /// `@register_hw_intrinsic` (Fig. 3c/3d). The first registered
+    /// intrinsic of each class becomes the default for its codegen role
+    /// (loads before stores for memory intrinsics).
+    pub fn register_hw_intrinsic(mut self, i: HwIntrinsic) -> Self {
+        match i.class {
+            IntrinsicClass::Compute if self.desc.compute_intrinsic.is_empty() => {
+                self.desc.compute_intrinsic = i.name.clone();
+            }
+            IntrinsicClass::Memory if self.desc.load_intrinsic.is_empty() => {
+                self.desc.load_intrinsic = i.name.clone();
+            }
+            IntrinsicClass::Memory if self.desc.store_intrinsic.is_empty() => {
+                self.desc.store_intrinsic = i.name.clone();
+            }
+            IntrinsicClass::Config if self.desc.config_intrinsic.is_empty() => {
+                self.desc.config_intrinsic = i.name.clone();
+            }
+            _ => {}
+        }
+        self.desc.intrinsics.insert(i.name.clone(), i);
+        self
+    }
+
+    pub fn build(self) -> Result<AccelDesc> {
+        self.desc.validate()?;
+        Ok(self.desc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gemmini_description_builds() {
+        let d = gemmini::gemmini_desc().unwrap();
+        assert_eq!(d.name, "gemmini");
+        assert!(d.supported_ops().contains("accel.dense"));
+        assert_eq!(d.preprocessing("dense"), &[Preprocessing::WeightTranspose]);
+        assert!(d.intrinsic("gemmini_matmul").is_ok());
+        assert!(d.intrinsic("nope").is_err());
+    }
+
+    #[test]
+    fn builder_requires_all_roles() {
+        let arch = ArchDesc::gemmini();
+        let r = AccelDesc::builder("x", arch)
+            .register_core_compute(CoreCompute::quantized_gemm("dense"))
+            .build();
+        assert!(r.is_err()); // no intrinsics registered
+    }
+
+    #[test]
+    fn compute_emission_roundtrip() {
+        let d = gemmini::gemmini_desc().unwrap();
+        let args = ComputeArgs {
+            a: LocalAddr::spad(0),
+            b: LocalAddr::spad(64),
+            dst: LocalAddr::acc_accumulate(0),
+            rows: 16,
+            red: 16,
+            cols: 16,
+            preload: true,
+            dataflow: Dataflow::WeightStationary,
+        };
+        let instrs = d.emit_compute(&args).unwrap();
+        assert_eq!(instrs.len(), 2); // preload + compute
+        assert_eq!(instrs[0].mnemonic(), "preload");
+        assert_eq!(instrs[1].mnemonic(), "compute_preloaded");
+        let no_preload = d.emit_compute(&ComputeArgs { preload: false, ..args }).unwrap();
+        assert_eq!(no_preload.len(), 1);
+        assert_eq!(no_preload[0].mnemonic(), "compute_accumulated");
+    }
+}

@@ -1,0 +1,347 @@
+//! Architectural description of a GEMM-based accelerator (paper §3.2).
+//!
+//! This is the second half of the accelerator model: where the *functional*
+//! description ([`crate::accel`]) says what operators and intrinsics exist,
+//! the architectural description gives the scheduler what it needs —
+//! hardware organization (compute/storage topology) and hardware
+//! constraints (limits on the set of valid mappings) — in the same shape as
+//! CoSA's YAML inputs.
+
+pub mod parse;
+
+use std::fmt;
+
+use crate::workload::{Dim, Operand};
+
+/// Dataflow of the spatial array (paper Fig. 2a).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dataflow {
+    /// Weights resident in the PE array; spatial dims C (rows) × K (cols),
+    /// N streamed temporally.
+    WeightStationary,
+    /// Outputs resident in the PE array; spatial dims N (rows) × K (cols),
+    /// C streamed temporally (accumulation in place).
+    OutputStationary,
+}
+
+impl Dataflow {
+    /// The two GEMM dims mapped spatially onto the (rows, cols) of the
+    /// PE array under this dataflow.
+    pub fn spatial_dims(self) -> [Dim; 2] {
+        match self {
+            Dataflow::WeightStationary => [Dim::C, Dim::K],
+            Dataflow::OutputStationary => [Dim::N, Dim::K],
+        }
+    }
+
+    /// The dim streamed temporally through the array (the innermost
+    /// temporal loop at the array level).
+    pub fn streamed_dim(self) -> Dim {
+        match self {
+            Dataflow::WeightStationary => Dim::N,
+            Dataflow::OutputStationary => Dim::C,
+        }
+    }
+
+    /// The operand held stationary in the PEs.
+    pub fn stationary_operand(self) -> Operand {
+        match self {
+            Dataflow::WeightStationary => Operand::Weight,
+            Dataflow::OutputStationary => Operand::Output,
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Dataflow> {
+        match s {
+            "WS" | "ws" | "weight_stationary" | "WeightStationary" => {
+                Some(Dataflow::WeightStationary)
+            }
+            "OS" | "os" | "output_stationary" | "OutputStationary" => {
+                Some(Dataflow::OutputStationary)
+            }
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Dataflow {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Dataflow::WeightStationary => write!(f, "WS"),
+            Dataflow::OutputStationary => write!(f, "OS"),
+        }
+    }
+}
+
+/// Kind of a memory level in the hierarchy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LevelKind {
+    /// The PE array itself (registers inside the systolic array).
+    PeArray,
+    /// A software-managed on-chip buffer (scratchpad / accumulator).
+    OnChip,
+    /// External DRAM (unbounded for scheduling purposes).
+    Dram,
+}
+
+/// One level of the memory hierarchy, innermost first.
+#[derive(Debug, Clone)]
+pub struct MemLevel {
+    pub name: String,
+    pub kind: LevelKind,
+    /// Capacity in bytes; ignored for `Dram`.
+    pub size_bytes: usize,
+    /// Which operands may reside at this level (CoSA's memory-level
+    /// skipping: e.g. Gemmini's accumulator holds only outputs).
+    pub residents: Vec<Operand>,
+    /// Bytes per element for each operand stored here, indexed by
+    /// `Operand::index()` (Gemmini: int8 in scratchpad, int32 in
+    /// accumulator).
+    pub elem_bytes: [usize; 3],
+}
+
+impl MemLevel {
+    pub fn holds(&self, op: Operand) -> bool {
+        self.residents.contains(&op)
+    }
+}
+
+/// DMA / memory-system timing parameters used by the simulator and by the
+/// scheduler's traffic model.
+#[derive(Debug, Clone, Copy)]
+pub struct DmaParams {
+    /// Sustained bus width between DRAM and on-chip memories.
+    pub bytes_per_cycle: usize,
+    /// Fixed request latency per DMA transfer (command + memory latency).
+    pub request_latency: u64,
+    /// Per-row overhead of a strided (2-D) transfer.
+    pub per_row_overhead: u64,
+}
+
+/// Host CPU cost model: the paper's BYOC gap is dominated by host-side
+/// preprocessing (transpose/quantize) that was not constant-folded; the
+/// simulator charges these per-element costs for host-executed ops.
+#[derive(Debug, Clone, Copy)]
+pub struct HostParams {
+    /// Cycles per scalar ALU op on the host (in accelerator clock cycles).
+    pub cycles_per_elem_alu: u64,
+    /// Cycles per element moved by the host (load+store path).
+    pub cycles_per_elem_move: u64,
+    /// Fixed cost of issuing one custom (RoCC-style) instruction.
+    pub insn_issue_cycles: u64,
+    /// Cost of a full fence (drain all accelerator queues).
+    pub fence_cycles: u64,
+}
+
+/// Hardware constraints on valid mappings (paper Fig. 2a, Eq. 1).
+#[derive(Debug, Clone)]
+pub struct ArchConstraints {
+    /// Eq. (1): at the PE-array level, spatial and temporal loop bounds per
+    /// GEMM dim must not exceed `DIM` (a single compute instruction covers
+    /// at most a DIM×DIM×DIM tile).
+    pub insn_tile_limit: usize,
+    /// Dims that may not be tiled spatially at the array (the remaining
+    /// spatial freedom is already fixed by the dataflow).
+    pub fixed_spatial: bool,
+    /// Whether the accelerator supports double buffering of on-chip
+    /// memories (halves usable capacity when enabled).
+    pub supports_double_buffering: bool,
+    /// Memory-share configurations to explore for uneven mapping:
+    /// fractions of each on-chip level granted to (Input, Weight, Output).
+    /// An empty list means even split among residents.
+    pub memory_share_configs: Vec<[f64; 3]>,
+}
+
+/// Complete architectural description.
+#[derive(Debug, Clone)]
+pub struct ArchDesc {
+    pub name: String,
+    /// Side length of the square PE array.
+    pub pe_dim: usize,
+    /// Dataflows the accelerator can execute.
+    pub dataflows: Vec<Dataflow>,
+    /// Memory hierarchy, innermost (PE array) first, DRAM last.
+    pub levels: Vec<MemLevel>,
+    pub dma: DmaParams,
+    pub host: HostParams,
+    pub constraints: ArchConstraints,
+}
+
+impl ArchDesc {
+    /// Index of the level with the given name.
+    pub fn level_index(&self, name: &str) -> Option<usize> {
+        self.levels.iter().position(|l| l.name == name)
+    }
+
+    /// The on-chip levels (between the PE array and DRAM), innermost first.
+    pub fn onchip_levels(&self) -> impl Iterator<Item = (usize, &MemLevel)> {
+        self.levels
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.kind == LevelKind::OnChip)
+    }
+
+    /// Innermost on-chip level holding `op` — the level the PE array reads
+    /// `op` from.
+    pub fn feed_level(&self, op: Operand) -> Option<usize> {
+        self.levels
+            .iter()
+            .enumerate()
+            .find(|(_, l)| l.kind == LevelKind::OnChip && l.holds(op))
+            .map(|(i, _)| i)
+    }
+
+    /// Validate internal consistency; called after parsing.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        use anyhow::{bail, ensure};
+        ensure!(self.pe_dim >= 1, "pe_dim must be >= 1");
+        ensure!(!self.dataflows.is_empty(), "at least one dataflow required");
+        ensure!(self.levels.len() >= 3, "need at least PE, one on-chip level, DRAM");
+        if self.levels.first().map(|l| l.kind) != Some(LevelKind::PeArray) {
+            bail!("innermost level must be the PE array");
+        }
+        if self.levels.last().map(|l| l.kind) != Some(LevelKind::Dram) {
+            bail!("outermost level must be DRAM");
+        }
+        for op in Operand::ALL {
+            if self.feed_level(op).is_none() {
+                bail!("no on-chip level holds operand {op}");
+            }
+        }
+        for shares in &self.constraints.memory_share_configs {
+            ensure!(
+                shares.iter().all(|&s| s > 0.0 && s <= 1.0),
+                "memory shares must be in (0, 1]"
+            );
+            // Operands sharing the same on-chip level must fit together.
+            for (_, level) in self.onchip_levels() {
+                let sum: f64 = level.residents.iter().map(|&op| shares[op.index()]).sum();
+                ensure!(
+                    sum <= 1.0 + 1e-9,
+                    "memory shares of {}'s residents sum to {sum} > 1",
+                    level.name
+                );
+            }
+        }
+        ensure!(self.dma.bytes_per_cycle > 0, "dma.bytes_per_cycle must be > 0");
+        ensure!(
+            self.constraints.insn_tile_limit >= self.pe_dim,
+            "instruction tile limit below PE dim is unschedulable"
+        );
+        Ok(())
+    }
+
+    /// The reference Gemmini-class configuration (defaults of the public
+    /// Gemmini generator: 16×16 int8 array, 256 KiB scratchpad, 64 KiB
+    /// int32 accumulator, WS-preferred).
+    pub fn gemmini() -> ArchDesc {
+        ArchDesc {
+            name: "gemmini".into(),
+            pe_dim: 16,
+            dataflows: vec![Dataflow::WeightStationary, Dataflow::OutputStationary],
+            levels: vec![
+                MemLevel {
+                    name: "PEArray".into(),
+                    kind: LevelKind::PeArray,
+                    size_bytes: 0,
+                    residents: vec![Operand::Input, Operand::Weight, Operand::Output],
+                    elem_bytes: [1, 1, 4],
+                },
+                MemLevel {
+                    name: "Accumulator".into(),
+                    kind: LevelKind::OnChip,
+                    size_bytes: 64 * 1024,
+                    residents: vec![Operand::Output],
+                    elem_bytes: [1, 1, 4],
+                },
+                MemLevel {
+                    name: "Scratchpad".into(),
+                    kind: LevelKind::OnChip,
+                    size_bytes: 256 * 1024,
+                    residents: vec![Operand::Input, Operand::Weight],
+                    elem_bytes: [1, 1, 4],
+                },
+                MemLevel {
+                    name: "DRAM".into(),
+                    kind: LevelKind::Dram,
+                    size_bytes: usize::MAX,
+                    residents: vec![Operand::Input, Operand::Weight, Operand::Output],
+                    elem_bytes: [1, 1, 1],
+                },
+            ],
+            dma: DmaParams { bytes_per_cycle: 16, request_latency: 40, per_row_overhead: 4 },
+            host: HostParams {
+                cycles_per_elem_alu: 4,
+                cycles_per_elem_move: 2,
+                insn_issue_cycles: 2,
+                fence_cycles: 20,
+            },
+            constraints: ArchConstraints {
+                insn_tile_limit: 16,
+                fixed_spatial: true,
+                supports_double_buffering: true,
+                memory_share_configs: vec![
+                    [0.5, 0.5, 1.0],
+                    [0.25, 0.75, 1.0],
+                    [0.75, 0.25, 1.0],
+                ],
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gemmini_is_valid() {
+        ArchDesc::gemmini().validate().unwrap();
+    }
+
+    #[test]
+    fn dataflow_spatial_dims() {
+        assert_eq!(Dataflow::WeightStationary.spatial_dims(), [Dim::C, Dim::K]);
+        assert_eq!(Dataflow::OutputStationary.spatial_dims(), [Dim::N, Dim::K]);
+        assert_eq!(Dataflow::WeightStationary.streamed_dim(), Dim::N);
+        assert_eq!(Dataflow::OutputStationary.streamed_dim(), Dim::C);
+        // The streamed dim is never one of the spatial dims.
+        for df in [Dataflow::WeightStationary, Dataflow::OutputStationary] {
+            assert!(!df.spatial_dims().contains(&df.streamed_dim()));
+            // The stationary operand depends on both spatial dims.
+            let op = df.stationary_operand();
+            for d in df.spatial_dims() {
+                assert!(op.uses(d), "{df}: {op} should use {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn feed_levels() {
+        let a = ArchDesc::gemmini();
+        assert_eq!(a.feed_level(Operand::Output), Some(1)); // accumulator
+        assert_eq!(a.feed_level(Operand::Input), Some(2)); // scratchpad
+        assert_eq!(a.feed_level(Operand::Weight), Some(2));
+    }
+
+    #[test]
+    fn validation_catches_bad_shares() {
+        let mut a = ArchDesc::gemmini();
+        a.constraints.memory_share_configs.push([0.9, 0.9, 0.9]);
+        assert!(a.validate().is_err());
+    }
+
+    #[test]
+    fn validation_requires_dram_last() {
+        let mut a = ArchDesc::gemmini();
+        a.levels.pop();
+        assert!(a.validate().is_err());
+    }
+
+    #[test]
+    fn dataflow_parse_roundtrip() {
+        assert_eq!(Dataflow::parse("WS"), Some(Dataflow::WeightStationary));
+        assert_eq!(Dataflow::parse("output_stationary"), Some(Dataflow::OutputStationary));
+        assert_eq!(Dataflow::parse("nope"), None);
+    }
+}

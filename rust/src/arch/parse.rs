@@ -1,0 +1,224 @@
+//! YAML → [`ArchDesc`] parsing (the CoSA-style architectural input format,
+//! paper §3.2: "YAML template files that specify (a) the hardware
+//! organization ... and (b) hardware constraints").
+//!
+//! The PE-array and DRAM levels are implicit: users describe only the
+//! on-chip buffers between them. See `configs/gemmini.yaml` for the
+//! reference instance.
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::{ArchConstraints, ArchDesc, Dataflow, DmaParams, HostParams, LevelKind, MemLevel};
+use crate::util::yaml::{self, Yaml};
+use crate::workload::Operand;
+
+fn parse_operand(s: &str) -> Result<Operand> {
+    match s {
+        "Input" | "input" | "in" => Ok(Operand::Input),
+        "Weight" | "weight" | "w" => Ok(Operand::Weight),
+        "Output" | "output" | "out" => Ok(Operand::Output),
+        other => bail!("unknown operand '{other}'"),
+    }
+}
+
+fn parse_elem_bytes(v: &Yaml) -> Result<[usize; 3]> {
+    let seq = v.as_seq()?;
+    if seq.len() != 3 {
+        bail!("elem_bytes must have 3 entries (Input, Weight, Output)");
+    }
+    Ok([seq[0].as_usize()?, seq[1].as_usize()?, seq[2].as_usize()?])
+}
+
+fn parse_shares(v: &Yaml) -> Result<[f64; 3]> {
+    let seq = v.as_seq()?;
+    if seq.len() != 3 {
+        bail!("memory share entry must have 3 fractions (Input, Weight, Output)");
+    }
+    Ok([seq[0].as_f64()?, seq[1].as_f64()?, seq[2].as_f64()?])
+}
+
+/// Parse an architectural description from YAML text.
+pub fn arch_from_yaml(src: &str) -> Result<ArchDesc> {
+    let doc = yaml::parse(src)?;
+
+    let name = doc.get("name")?.as_str()?.to_string();
+
+    let pe = doc.get("pe_array").context("pe_array section")?;
+    let pe_dim = pe.get("dim")?.as_usize()?;
+    let mut dataflows = Vec::new();
+    for d in pe.get("dataflows")?.as_seq()? {
+        let s = d.as_str()?;
+        dataflows.push(
+            Dataflow::parse(s).ok_or_else(|| anyhow!("unknown dataflow '{s}'"))?,
+        );
+    }
+
+    let mut levels = vec![MemLevel {
+        name: "PEArray".into(),
+        kind: LevelKind::PeArray,
+        size_bytes: 0,
+        residents: Operand::ALL.to_vec(),
+        elem_bytes: [1, 1, 4],
+    }];
+    for lv in doc.get("memory").context("memory section")?.as_seq()? {
+        let lname = lv.get("name")?.as_str()?.to_string();
+        let size = lv.get("size")?.as_usize()?;
+        let mut residents = Vec::new();
+        for r in lv.get("residents")?.as_seq()? {
+            residents.push(parse_operand(r.as_str()?)?);
+        }
+        let elem_bytes = match lv.get_opt("elem_bytes") {
+            Some(v) => parse_elem_bytes(v)?,
+            None => [1, 1, 4],
+        };
+        levels.push(MemLevel {
+            name: lname,
+            kind: LevelKind::OnChip,
+            size_bytes: size,
+            residents,
+            elem_bytes,
+        });
+    }
+    levels.push(MemLevel {
+        name: "DRAM".into(),
+        kind: LevelKind::Dram,
+        size_bytes: usize::MAX,
+        residents: Operand::ALL.to_vec(),
+        elem_bytes: [1, 1, 1],
+    });
+
+    let dma_y = doc.get("dma").context("dma section")?;
+    let dma = DmaParams {
+        bytes_per_cycle: dma_y.get("bytes_per_cycle")?.as_usize()?,
+        request_latency: dma_y.get("request_latency")?.as_usize()? as u64,
+        per_row_overhead: dma_y.get("per_row_overhead")?.as_usize()? as u64,
+    };
+
+    let host_y = doc.get("host").context("host section")?;
+    let host = HostParams {
+        cycles_per_elem_alu: host_y.get("cycles_per_elem_alu")?.as_usize()? as u64,
+        cycles_per_elem_move: host_y.get("cycles_per_elem_move")?.as_usize()? as u64,
+        insn_issue_cycles: host_y.get("insn_issue_cycles")?.as_usize()? as u64,
+        fence_cycles: host_y.get("fence_cycles")?.as_usize()? as u64,
+    };
+
+    let c = doc.get("constraints").context("constraints section")?;
+    let mut memory_share_configs = Vec::new();
+    if let Some(shares) = c.get_opt("memory_shares") {
+        for entry in shares.as_seq()? {
+            memory_share_configs.push(parse_shares(entry)?);
+        }
+    }
+    let constraints = ArchConstraints {
+        insn_tile_limit: c.get("insn_tile_limit")?.as_usize()?,
+        fixed_spatial: c
+            .get_opt("fixed_spatial")
+            .map(|v| v.as_bool())
+            .transpose()?
+            .unwrap_or(true),
+        supports_double_buffering: c
+            .get_opt("double_buffering")
+            .map(|v| v.as_bool())
+            .transpose()?
+            .unwrap_or(false),
+        memory_share_configs,
+    };
+
+    let arch = ArchDesc { name, pe_dim, dataflows, levels, dma, host, constraints };
+    arch.validate()?;
+    Ok(arch)
+}
+
+/// Parse an architectural description from a YAML file.
+pub fn arch_from_file(path: &std::path::Path) -> Result<ArchDesc> {
+    let src = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    arch_from_yaml(&src).with_context(|| format!("parsing {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GEMMINI_YAML: &str = r#"
+name: gemmini
+pe_array:
+  dim: 16
+  dataflows: [WS, OS]
+memory:
+  - name: Accumulator
+    size: 65536
+    residents: [Output]
+    elem_bytes: [1, 1, 4]
+  - name: Scratchpad
+    size: 262144
+    residents: [Input, Weight]
+dma:
+  bytes_per_cycle: 16
+  request_latency: 40
+  per_row_overhead: 4
+host:
+  cycles_per_elem_alu: 4
+  cycles_per_elem_move: 2
+  insn_issue_cycles: 2
+  fence_cycles: 20
+constraints:
+  insn_tile_limit: 16
+  fixed_spatial: true
+  double_buffering: true
+  memory_shares:
+    - [0.5, 0.5, 1.0]
+    - [0.25, 0.75, 1.0]
+"#;
+
+    #[test]
+    fn parses_gemmini_yaml() {
+        let a = arch_from_yaml(GEMMINI_YAML).unwrap();
+        assert_eq!(a.name, "gemmini");
+        assert_eq!(a.pe_dim, 16);
+        assert_eq!(a.dataflows.len(), 2);
+        assert_eq!(a.levels.len(), 4); // PE + 2 on-chip + DRAM
+        assert_eq!(a.levels[1].name, "Accumulator");
+        assert_eq!(a.levels[1].size_bytes, 65536);
+        assert!(a.constraints.supports_double_buffering);
+        assert_eq!(a.constraints.memory_share_configs.len(), 2);
+        assert_eq!(a.feed_level(Operand::Output), Some(1));
+    }
+
+    #[test]
+    fn matches_builtin_gemmini() {
+        // The YAML route and the programmatic default describe the same
+        // machine (sizes / topology / limits).
+        let y = arch_from_yaml(GEMMINI_YAML).unwrap();
+        let b = ArchDesc::gemmini();
+        assert_eq!(y.pe_dim, b.pe_dim);
+        assert_eq!(y.levels.len(), b.levels.len());
+        for (l1, l2) in y.levels.iter().zip(&b.levels) {
+            assert_eq!(l1.name, l2.name);
+            assert_eq!(l1.size_bytes, l2.size_bytes);
+            assert_eq!(l1.residents, l2.residents);
+        }
+        assert_eq!(y.constraints.insn_tile_limit, b.constraints.insn_tile_limit);
+    }
+
+    #[test]
+    fn rejects_unknown_dataflow() {
+        let bad = GEMMINI_YAML.replace("[WS, OS]", "[XY]");
+        assert!(arch_from_yaml(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_sections() {
+        assert!(arch_from_yaml("name: x\n").is_err());
+    }
+
+    #[test]
+    fn shipped_config_file_parses() {
+        // configs/gemmini.yaml is the canonical copy used by the CLI and
+        // the examples; keep it in sync with the built-in default.
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs/gemmini.yaml");
+        let a = arch_from_file(&path).unwrap();
+        assert_eq!(a.name, "gemmini");
+        assert_eq!(a.pe_dim, ArchDesc::gemmini().pe_dim);
+    }
+}

@@ -1,0 +1,75 @@
+//! Hardware Intrinsic Generator (paper §3.3).
+//!
+//! TVM's tensorization needs a registered *tensor intrinsic*: a
+//! computation description (what region it covers) plus an implementation
+//! (which hardware instructions realize it). "Instead of requiring manual
+//! registration, the hardware intrinsic generator leverages the
+//! user-defined functional description in the accelerator model to
+//! automatically generate the necessary tensor intrinsics."
+
+use anyhow::{Context, Result};
+
+use crate::accel::{AccelDesc, IntrinsicClass};
+
+/// A generated TIR tensor intrinsic: referenced by name from
+/// `TirNode::Tensorize`, carrying the semantic description used for
+/// matching and the Eq. (1) tile limit used for checking.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorIntrinsic {
+    pub name: String,
+    /// Computation description (the `desc` half of TVM's pair).
+    pub desc: String,
+    /// Maximum extent per dimension of a tensorized tile (Eq. 1).
+    pub max_tile: usize,
+}
+
+/// Generate the tensor intrinsics for an accelerator description.
+pub fn generate_intrinsics(accel: &AccelDesc) -> Result<Vec<TensorIntrinsic>> {
+    let compute = accel
+        .core_compute("dense")
+        .context("no 'dense' core compute registered")?;
+    let mut out = Vec::new();
+    for hw in accel.intrinsics() {
+        if hw.class == IntrinsicClass::Compute {
+            out.push(TensorIntrinsic {
+                name: hw.name.clone(),
+                desc: compute.einsum.clone(),
+                max_tile: accel.arch.constraints.insn_tile_limit,
+            });
+        }
+    }
+    anyhow::ensure!(!out.is_empty(), "no compute intrinsics registered");
+    Ok(out)
+}
+
+/// The intrinsic codegen tensorizes with (the accelerator's designated
+/// compute intrinsic).
+pub fn default_intrinsic(accel: &AccelDesc) -> Result<TensorIntrinsic> {
+    generate_intrinsics(accel)?
+        .into_iter()
+        .find(|i| i.name == accel.compute_intrinsic)
+        .context("designated compute intrinsic not generated")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::gemmini::gemmini_desc;
+
+    #[test]
+    fn generates_matmul_intrinsic() {
+        let d = gemmini_desc().unwrap();
+        let intrinsics = generate_intrinsics(&d).unwrap();
+        assert_eq!(intrinsics.len(), 1);
+        assert_eq!(intrinsics[0].name, "gemmini_matmul");
+        assert_eq!(intrinsics[0].max_tile, 16);
+        assert!(intrinsics[0].desc.contains("requant"));
+    }
+
+    #[test]
+    fn default_is_designated_compute() {
+        let d = gemmini_desc().unwrap();
+        let i = default_intrinsic(&d).unwrap();
+        assert_eq!(i.name, d.compute_intrinsic);
+    }
+}

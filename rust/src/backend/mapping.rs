@@ -1,0 +1,129 @@
+//! Mapping Generator (paper §3.3).
+//!
+//! "Scheduling decisions, including multi-level tiling and reordering, are
+//! generated using the extended CoSA scheduler. CoSA produces a YAML file
+//! that specifies the tile factors and the ordering of tensor dimensions
+//! for each memory level. Based on this output, the mapping generator
+//! applies loop transformations using TIR schedule primitives. ... the
+//! mapping generator utilizes TVM's tensorization feature to rewrite TIR
+//! stages with hardware intrinsics."
+
+use anyhow::{ensure, Result};
+
+use crate::accel::AccelDesc;
+use crate::scheduler::Schedule;
+use crate::tir::schedule::{insert_stages, reorder, split, tensorize};
+use crate::tir::{LoopLevel, TirFunc};
+use crate::workload::Dim;
+
+use super::intrin::default_intrinsic;
+
+/// The canonical total loop order for a schedule: DRAM loops in the
+/// schedule's permutation with C rotated to the innermost DRAM slot, then
+/// on-chip loops (stationary dims outer, streamed dim innermost), then the
+/// instruction-tile loops.
+pub fn canonical_order(s: &Schedule) -> Vec<(Dim, LoopLevel)> {
+    // DRAM: keep the scheduler's relative order of the non-C dims, C last.
+    let mut dram: Vec<Dim> = s.dram_order.iter().copied().filter(|&d| d != Dim::C).collect();
+    dram.push(Dim::C);
+    // On-chip: stationary-operand dims outer, streamed dim innermost
+    // (WS: K, C outer with N streamed; OS: K, N outer with C streamed).
+    let streamed = s.dataflow.streamed_dim();
+    let mut onchip: Vec<Dim> = Dim::ALL.iter().copied().filter(|&d| d != streamed).collect();
+    // Put K before the other non-streamed dim for weight-stationary-style
+    // reuse of the stationary tile.
+    onchip.sort_by_key(|&d| if d == Dim::K { 0 } else { 1 });
+    onchip.push(streamed);
+
+    let mut order: Vec<(Dim, LoopLevel)> =
+        dram.into_iter().map(|d| (d, LoopLevel::Dram)).collect();
+    order.extend(onchip.into_iter().map(|d| (d, LoopLevel::OnChip)));
+    order.extend(Dim::ALL.into_iter().map(|d| (d, LoopLevel::Insn)));
+    order
+}
+
+/// Apply a CoSA schedule to an unscheduled TIR function: multi-level
+/// tiling → reordering → tensorization → memory staging. Returns the
+/// fully scheduled function ready for codegen.
+pub fn apply_schedule(accel: &AccelDesc, f: &TirFunc, s: &Schedule) -> Result<TirFunc> {
+    ensure!(
+        f.gemm == s.workload,
+        "schedule is for {:?}, function computes {:?}",
+        s.workload,
+        f.gemm
+    );
+    s.validate(&accel.arch)?;
+    let mut cur = f.clone();
+    for d in Dim::ALL {
+        cur = split(&cur, d, s.onchip_tile[d.index()], s.insn_tile[d.index()])?;
+    }
+    cur = reorder(&cur, &canonical_order(s))?;
+    let intrinsic = default_intrinsic(accel)?;
+    cur = tensorize(&cur, &intrinsic.name, intrinsic.max_tile)?;
+    let staged = insert_stages(&cur, s.double_buffer)?;
+    staged.validate()?;
+    Ok(staged)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::gemmini::gemmini_desc;
+    use crate::arch::Dataflow;
+    use crate::isa::Activation;
+    use crate::scheduler::solver::{solve, SolverConfig};
+    use crate::tir::{QuantAttrs, TirNode};
+    use crate::workload::Gemm;
+
+    fn func(g: Gemm) -> TirFunc {
+        TirFunc::unscheduled("layer", g, QuantAttrs { scale: 0.1, act: Activation::Relu })
+    }
+
+    #[test]
+    fn applies_solver_schedule() {
+        let accel = gemmini_desc().unwrap();
+        let g = Gemm::new(64, 64, 64);
+        let cfg = SolverConfig { double_buffer: true, ..SolverConfig::new(Dataflow::WeightStationary) };
+        let s = &solve(&accel.arch, g, &cfg)[0];
+        let f = apply_schedule(&accel, &func(g), s).unwrap();
+        assert_eq!(f.count(&|n| matches!(n, TirNode::Tensorize { .. })), 1);
+        assert_eq!(
+            f.count(&|n| matches!(n, TirNode::CacheRead { double_buffer: true, .. })),
+            2
+        );
+        let script = f.script();
+        assert!(script.contains("gemmini_matmul"));
+    }
+
+    #[test]
+    fn canonical_order_forces_c_innermost_dram() {
+        let accel = gemmini_desc().unwrap();
+        let g = Gemm::new(256, 256, 256);
+        let cfg = SolverConfig::new(Dataflow::WeightStationary);
+        for s in solve(&accel.arch, g, &cfg) {
+            let order = canonical_order(&s);
+            assert_eq!(order[2], (Dim::C, LoopLevel::Dram));
+            let f = apply_schedule(&accel, &func(g), &s).unwrap();
+            f.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn os_streams_c_innermost_onchip() {
+        let accel = gemmini_desc().unwrap();
+        let g = Gemm::new(128, 128, 128);
+        let cfg = SolverConfig::new(Dataflow::OutputStationary);
+        let s = &solve(&accel.arch, g, &cfg)[0];
+        let order = canonical_order(s);
+        // On-chip loops are positions 3..6; streamed dim (C under OS) last.
+        assert_eq!(order[5], (Dim::C, LoopLevel::OnChip));
+    }
+
+    #[test]
+    fn workload_mismatch_rejected() {
+        let accel = gemmini_desc().unwrap();
+        let cfg = SolverConfig::new(Dataflow::WeightStationary);
+        let s = &solve(&accel.arch, Gemm::new(64, 64, 64), &cfg)[0];
+        assert!(apply_schedule(&accel, &func(Gemm::new(32, 32, 32)), s).is_err());
+    }
+}

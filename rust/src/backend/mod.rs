@@ -1,0 +1,8 @@
+//! Backend configurator (paper §3.3): the strategy generator, hardware
+//! intrinsic generator, mapping generator and code generator that together
+//! turn the accelerator description into a working compiler backend.
+
+pub mod codegen;
+pub mod intrin;
+pub mod mapping;
+pub mod strategy;

@@ -1,0 +1,131 @@
+//! Strategy Generator (paper §3.3).
+//!
+//! "In the backend, IR lowering requires a well-defined strategy that
+//! consists of a tensor computation description and its scheduling. The
+//! strategy generator creates the strategy by binding the user-defined
+//! computation function and a default schedule to the corresponding
+//! operator." Scheduling proper is deferred to the TIR level (the mapping
+//! generator); the default schedule here is the unscheduled perfect nest.
+
+use anyhow::{bail, Context, Result};
+
+use crate::accel::{AccelDesc, CoreCompute};
+use crate::isa::Activation;
+use crate::relay::{Node, Op};
+use crate::tir::{QuantAttrs, TirFunc};
+use crate::workload::Gemm;
+
+/// A lowering strategy for one graph node: the bound computation
+/// description plus the default (unscheduled) TIR function.
+#[derive(Debug, Clone)]
+pub struct Strategy {
+    pub compute: CoreCompute,
+    pub tir: TirFunc,
+    pub gemm: Gemm,
+    pub quant: QuantAttrs,
+}
+
+/// Bind a strategy given the node and its resolved input types (the graph
+/// carries them; this avoids threading the whole graph through).
+pub fn generate_strategy_typed(
+    accel: &AccelDesc,
+    node: &Node,
+    input_shapes: &[Vec<usize>],
+) -> Result<Strategy> {
+    match &node.op {
+        Op::AccelDense { scale, act, weight_transposed } => {
+            if !*weight_transposed {
+                bail!(
+                    "node '{}': weights still in importer layout — run the \
+                     preprocessing insertion (legalize) first",
+                    node.name
+                );
+            }
+            let compute = accel
+                .core_compute("dense")
+                .context("accelerator registers no 'dense' core compute")?
+                .clone();
+            anyhow::ensure!(
+                input_shapes.len() == 3,
+                "accel.dense expects 3 inputs, got {}",
+                input_shapes.len()
+            );
+            let x = &input_shapes[0];
+            let n = x[0];
+            let c = x[1];
+            let k = node.ty.shape[1];
+            let gemm = Gemm::new(n, c, k);
+            let quant = QuantAttrs { scale: *scale, act: *act };
+            let tir = TirFunc::unscheduled(node.name.clone(), gemm, quant);
+            Ok(Strategy { compute, tir, gemm, quant })
+        }
+        other => bail!("no strategy for operator '{}'", other.name()),
+    }
+}
+
+/// Convenience: default quantization attributes for host-only testing.
+pub fn identity_quant() -> QuantAttrs {
+    QuantAttrs { scale: 1.0, act: Activation::None }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::gemmini::gemmini_desc;
+    use crate::relay::{DType, GraphBuilder, Tensor, TensorData, TensorType};
+
+    fn dense_node(weight_transposed: bool) -> (crate::relay::Graph, usize) {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", TensorType::new(vec![4, 8], DType::I8));
+        let wshape = if weight_transposed { vec![8, 6] } else { vec![6, 8] };
+        let w = b.constant(
+            "w",
+            Tensor::new(wshape, TensorData::I8(vec![0; 48])).unwrap(),
+        );
+        let bias =
+            b.constant("b", Tensor::new(vec![6], TensorData::I32(vec![0; 6])).unwrap());
+        let d = b
+            .op(
+                "layer0",
+                Op::AccelDense { scale: 0.5, act: Activation::Relu, weight_transposed },
+                &[x, w, bias],
+            )
+            .unwrap();
+        (b.outputs(&[d]), d)
+    }
+
+    #[test]
+    fn binds_dense_strategy() {
+        let accel = gemmini_desc().unwrap();
+        let (g, id) = dense_node(true);
+        let node = g.node(id);
+        let shapes: Vec<Vec<usize>> =
+            node.inputs.iter().map(|&i| g.node(i).ty.shape.clone()).collect();
+        let s = generate_strategy_typed(&accel, node, &shapes).unwrap();
+        assert_eq!(s.gemm, Gemm::new(4, 8, 6));
+        assert_eq!(s.quant.scale, 0.5);
+        assert_eq!(s.compute.relay_op, "accel.dense");
+        // Default schedule is the unscheduled perfect nest.
+        assert_eq!(s.tir.loop_chain().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn untransposed_weights_rejected() {
+        let accel = gemmini_desc().unwrap();
+        let (g, id) = dense_node(false);
+        let node = g.node(id);
+        let shapes: Vec<Vec<usize>> =
+            node.inputs.iter().map(|&i| g.node(i).ty.shape.clone()).collect();
+        assert!(generate_strategy_typed(&accel, node, &shapes).is_err());
+    }
+
+    #[test]
+    fn unsupported_op_rejected() {
+        let accel = gemmini_desc().unwrap();
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", TensorType::new(vec![2, 2], DType::I8));
+        let t = b.op("t", Op::Transpose, &[x]).unwrap();
+        let g = b.outputs(&[t]);
+        assert!(generate_strategy_typed(&accel, g.node(t), &[vec![2, 2]]).is_err());
+    }
+}

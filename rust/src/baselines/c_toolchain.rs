@@ -1,0 +1,175 @@
+//! Baseline (1): the Gemmini C-function toolchain.
+//!
+//! Gemmini ships a hand-written C library (`tiled_matmul_auto`) that the
+//! paper uses as its performance reference: weights are laid out offline
+//! (compile-time, like the generated `.h` files), and each dense layer is
+//! executed by the hardware tiling FSM via a single `LOOP_WS` command with
+//! the requantization configured on the store pipeline.
+
+use anyhow::{ensure, Result};
+
+use crate::accel::AccelDesc;
+use crate::isa::program::Program;
+use crate::isa::{Activation, Instr};
+use crate::pipeline::Deployment;
+use crate::relay::import::{to_qnn_graph, QModel};
+
+/// Compile a quantized MLP with the C-toolchain strategy.
+pub fn compile_c_toolchain(accel: &AccelDesc, model: &QModel) -> Result<Deployment> {
+    ensure!(!model.layers.is_empty(), "empty model");
+    let mut prog = Program::new(format!("{}_c_toolchain", accel.name));
+
+    // DRAM image: activations ping-pong between per-layer regions;
+    // weights are stored **pre-transposed** ([C,K]) — the offline layout
+    // step the C toolchain does when generating its parameter headers.
+    let batch = model.batch;
+    let x0 = prog
+        .layout
+        .alloc("input", (batch * model.layers[0].in_dim) as u64)?
+        .offset;
+    let mut acts = vec![x0];
+    let mut weights = Vec::new();
+    let mut biases = Vec::new();
+    for (i, l) in model.layers.iter().enumerate() {
+        let w = prog
+            .layout
+            .alloc(format!("w{i}"), (l.in_dim * l.out_dim) as u64)?
+            .offset;
+        // Transpose [K,C] -> [C,K] at compile time.
+        let mut wt = vec![0u8; l.in_dim * l.out_dim];
+        for k in 0..l.out_dim {
+            for c in 0..l.in_dim {
+                wt[c * l.out_dim + k] = l.weight[k * l.in_dim + c] as u8;
+            }
+        }
+        prog.add_init(w, wt);
+        weights.push(w);
+        let b = prog.layout.alloc(format!("b{i}"), (l.out_dim * 4) as u64)?.offset;
+        prog.add_init(b, l.bias.iter().flat_map(|v| v.to_le_bytes()).collect());
+        biases.push(b);
+        let o = prog
+            .layout
+            .alloc(format!("act{}", i + 1), (batch * l.out_dim) as u64)?
+            .offset;
+        acts.push(o);
+    }
+
+    // tiled_matmul_auto: partition M×N into chunks whose A/B panels fit
+    // the scratchpad (K stays whole so each output chunk accumulates fully
+    // on chip), then hand each chunk to the LOOP_WS FSM.
+    let dim = accel.arch.pe_dim;
+    let spad_rows = accel
+        .arch
+        .levels
+        .iter()
+        .find(|l| l.name == "Scratchpad")
+        .expect("validated arch")
+        .size_bytes
+        / dim;
+    for (i, l) in model.layers.iter().enumerate() {
+        let act = match l.act {
+            0 => Activation::None,
+            1 => Activation::Relu,
+            _ => Activation::Clip { lo: l.lo, hi: l.hi },
+        };
+        prog.push(Instr::ConfigSt { stride: l.out_dim as u32, scale: l.requant, act });
+
+        let (m, n, k) = (batch, l.out_dim, l.in_dim);
+        let tk = crate::util::ceil_div(k, dim);
+        let budget = spad_rows / (tk * dim);
+        ensure!(
+            budget >= 2,
+            "layer {i}: reduction {k} too deep for scratchpad-resident panels"
+        );
+        let tm_full = crate::util::ceil_div(m, dim);
+        let tn_full = crate::util::ceil_div(n, dim);
+        let ti = tm_full.min(budget / 2).max(1);
+        let tj = tn_full.min(budget - ti).max(1);
+        let (chunk_m, chunk_n) = (ti * dim, tj * dim);
+
+        let mut m_off = 0;
+        while m_off < m {
+            let mc = chunk_m.min(m - m_off);
+            let mut n_off = 0;
+            while n_off < n {
+                let nc = chunk_n.min(n - n_off);
+                prog.push(Instr::LoopWs {
+                    a_dram: acts[i] + (m_off * k) as u64,
+                    b_dram: weights[i] + n_off as u64,
+                    c_dram: acts[i + 1] + (m_off * n + n_off) as u64,
+                    d_dram: Some(biases[i] + 4 * n_off as u64),
+                    m: mc as u32,
+                    n: nc as u32,
+                    k: k as u32,
+                    a_stride: k as u32,
+                    b_stride: n as u32,
+                    c_stride: n as u32,
+                });
+                n_off += chunk_n;
+            }
+            m_off += chunk_m;
+        }
+        // The C library fences between layers (gemmini_fence()).
+        prog.push(Instr::Fence);
+    }
+
+    let out_elems = batch * model.layers.last().unwrap().out_dim;
+    Ok(Deployment {
+        input_offset: x0,
+        input_elems: batch * model.layers[0].in_dim,
+        output_offset: *acts.last().unwrap(),
+        output_elems: out_elems,
+        program: prog,
+        graph: to_qnn_graph(model)?,
+        chosen: Vec::new(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::gemmini::gemmini_desc;
+    use crate::relay::eval::eval;
+    use crate::relay::import::from_quantized;
+    use crate::relay::quantize::{quantize_mlp, FloatDense};
+    use crate::relay::{Tensor, TensorData};
+    use crate::sim::Simulator;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn c_toolchain_matches_graph_semantics() {
+        let mut rng = Rng::new(55);
+        let dims = [24usize, 32, 8];
+        let layers: Vec<FloatDense> = dims
+            .windows(2)
+            .enumerate()
+            .map(|(i, w)| FloatDense {
+                weight: (0..w[0] * w[1]).map(|_| (rng.f64() as f32 - 0.5) * 0.4).collect(),
+                bias: (0..w[1]).map(|_| (rng.f64() as f32 - 0.5) * 0.1).collect(),
+                in_dim: w[0],
+                out_dim: w[1],
+                relu: i == 0,
+            })
+            .collect();
+        let q = quantize_mlp(&layers, &[0.03, 0.05, 0.07]).unwrap();
+        let model = from_quantized(2, 0.03, &q);
+
+        let accel = gemmini_desc().unwrap();
+        let dep = compile_c_toolchain(&accel, &model).unwrap();
+        let sim = Simulator::new(&accel.arch);
+        let input = rng.i8_vec(2 * dims[0]);
+        let (got, rep) = dep.run(&sim, &input).unwrap();
+
+        let graph = to_qnn_graph(&model).unwrap();
+        let mut m = std::collections::BTreeMap::new();
+        m.insert(
+            "x".to_string(),
+            Tensor::new(vec![2, dims[0]], TensorData::I8(input)).unwrap(),
+        );
+        let want = eval(&graph, &m).unwrap();
+        assert_eq!(TensorData::I8(got), want[0].data);
+        // Few issued commands: config + loop_ws chunk(s) + fence per layer.
+        assert!(rep.issued_commands <= 4 * 2, "got {}", rep.issued_commands);
+        assert_eq!(rep.host_cycles, 0);
+    }
+}

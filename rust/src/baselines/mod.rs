@@ -1,0 +1,14 @@
+//! The two baselines of the paper's evaluation (§4, Table 2):
+//!
+//! * [`c_toolchain`] — Gemmini's manually implemented C-function-based
+//!   toolchain: weights pre-laid-out offline, one hardware `LOOP_WS` tiling
+//!   loop per layer ("large GEMM tiling and efficient loop instruction
+//!   invocation").
+//! * [`naive_byoc`] — a naive UMA/BYOC backend: the generalized operator is
+//!   offloaded, but constant folding never runs (runtime weight
+//!   dequantize→quantize→transpose on the host) and no scheduling is
+//!   performed (single-instruction-tile default schedule, no double
+//!   buffering).
+
+pub mod c_toolchain;
+pub mod naive_byoc;

@@ -1,0 +1,118 @@
+//! Frontend Configurator (paper §3.3).
+//!
+//! "The frontend configurator sets up the graph partitioning and
+//! legalization passes using predefined supported operators, derived from
+//! the functional description of the hardware accelerator." Given an
+//! [`AccelDesc`] it derives the legalization config (which QNN sequences
+//! fuse, which preprocessing gets inserted) and the supported-operator set
+//! for partitioning, then runs the pass pipeline:
+//! legalize → constant-fold → partition.
+
+use anyhow::Result;
+
+use crate::accel::{AccelDesc, Preprocessing};
+use crate::relay::fold::fold_constants;
+use crate::relay::legalize::{legalize, LegalizeConfig};
+use crate::relay::partition::{partition, PartitionedGraph};
+use crate::relay::Graph;
+
+/// Derived frontend configuration.
+#[derive(Debug, Clone)]
+pub struct FrontendConfig {
+    pub legalize: LegalizeConfig,
+    pub supported: std::collections::BTreeSet<String>,
+    /// Run compile-time constant folding (the §4 UMA fix). The naive BYOC
+    /// baseline disables this, reproducing the paper's degraded flow.
+    pub fold_constants: bool,
+}
+
+/// Derive the frontend configuration from the accelerator description.
+pub fn configure(accel: &AccelDesc) -> FrontendConfig {
+    let dense_supported = accel.core_compute("dense").is_some();
+    let conv_supported = accel.core_compute("conv2d").is_some()
+        && accel.preprocessing("conv2d").contains(&Preprocessing::Im2col);
+    let wants_transpose = accel
+        .preprocessing("dense")
+        .contains(&Preprocessing::WeightTranspose);
+    FrontendConfig {
+        legalize: LegalizeConfig {
+            dense: dense_supported,
+            conv2d: conv_supported,
+            insert_weight_transpose: wants_transpose,
+        },
+        supported: accel.supported_ops(),
+        fold_constants: true,
+    }
+}
+
+/// Run the configured frontend over an imported graph.
+pub fn run_frontend(g: &Graph, cfg: &FrontendConfig) -> Result<PartitionedGraph> {
+    let legalized = legalize(g, &cfg.legalize)?;
+    let processed = if cfg.fold_constants {
+        fold_constants(&legalized)?
+    } else {
+        legalized
+    };
+    partition(&processed, &cfg.supported)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::gemmini::gemmini_desc;
+    use crate::relay::legalize::op_histogram;
+    use crate::relay::partition::Target;
+    use crate::relay::quantize::{build_qnn_graph, quantize_mlp, FloatDense};
+    use crate::util::prng::Rng;
+
+    fn mlp_graph() -> Graph {
+        let mut rng = Rng::new(41);
+        let dims = [24usize, 16, 8];
+        let layers: Vec<FloatDense> = dims
+            .windows(2)
+            .enumerate()
+            .map(|(i, w)| FloatDense {
+                weight: (0..w[0] * w[1]).map(|_| rng.f64() as f32 - 0.5).collect(),
+                bias: (0..w[1]).map(|_| rng.f64() as f32 - 0.5).collect(),
+                in_dim: w[0],
+                out_dim: w[1],
+                relu: i == 0,
+            })
+            .collect();
+        let q = quantize_mlp(&layers, &[0.05, 0.07, 0.09]).unwrap();
+        build_qnn_graph(1, &q).unwrap()
+    }
+
+    #[test]
+    fn proposed_flow_fuses_and_folds_everything() {
+        let accel = gemmini_desc().unwrap();
+        let cfg = configure(&accel);
+        assert!(cfg.legalize.dense);
+        assert!(cfg.legalize.insert_weight_transpose);
+        let pg = run_frontend(&mlp_graph(), &cfg).unwrap();
+        let h = op_histogram(&pg.graph);
+        assert_eq!(h.get("accel.dense"), Some(&2));
+        assert_eq!(h.get("transpose"), None); // folded
+        assert_eq!(pg.accel_nodes(), 2);
+        assert_eq!(pg.host_nodes(), 0);
+        assert_eq!(pg.regions.len(), 1);
+    }
+
+    #[test]
+    fn naive_flow_leaves_runtime_preprocessing() {
+        let accel = gemmini_desc().unwrap();
+        let mut cfg = configure(&accel);
+        cfg.fold_constants = false; // the naive BYOC configuration
+        let pg = run_frontend(&mlp_graph(), &cfg).unwrap();
+        let h = op_histogram(&pg.graph);
+        assert_eq!(h.get("accel.dense"), Some(&2));
+        // Weight transposes remain as host-side runtime work.
+        assert_eq!(h.get("transpose"), Some(&2));
+        assert_eq!(pg.host_nodes(), 2);
+        assert!(pg
+            .targets
+            .iter()
+            .zip(&pg.graph.nodes)
+            .any(|(t, n)| *t == Target::Host && n.op.name() == "transpose"));
+    }
+}

@@ -1,0 +1,201 @@
+//! Gemmini-class accelerator ISA.
+//!
+//! The instruction set mirrors the structure of Gemmini's RoCC commands:
+//! explicit DMA between DRAM and the software-managed scratchpad /
+//! accumulator (`MVIN`/`MVOUT`), systolic-array execution split into
+//! `PRELOAD` + `COMPUTE` (weight/output-stationary), configuration
+//! instructions, a hardware tiling loop (`LOOP_WS`, the FSM used by
+//! Gemmini's optimized C functions), and `FENCE`/`FLUSH`.
+//!
+//! Encodings are fixed-width `(funct, rs1, rs2)` triples like RoCC custom
+//! instructions; field packing is our own (documented per instruction) but
+//! width-compatible with a 64-bit ISA. Programs ([`Program`]) are what the
+//! compiler backend and the baselines emit, and what [`crate::sim`]
+//! executes.
+
+pub mod encode;
+pub mod program;
+
+use std::fmt;
+
+use crate::arch::Dataflow;
+
+/// Which on-chip memory a local address points into.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Space {
+    /// Scratchpad (int8 rows of DIM elements).
+    Spad,
+    /// Accumulator (int32 rows of DIM elements).
+    Acc,
+}
+
+/// A local (on-chip) address: a row index in the scratchpad or accumulator.
+/// `accumulate` selects read-modify-write on accumulator writes (Gemmini's
+/// bit 30).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct LocalAddr {
+    pub space: Space,
+    pub row: u32,
+    pub accumulate: bool,
+}
+
+impl LocalAddr {
+    pub fn spad(row: u32) -> LocalAddr {
+        LocalAddr { space: Space::Spad, row, accumulate: false }
+    }
+
+    pub fn acc(row: u32) -> LocalAddr {
+        LocalAddr { space: Space::Acc, row, accumulate: false }
+    }
+
+    pub fn acc_accumulate(row: u32) -> LocalAddr {
+        LocalAddr { space: Space::Acc, row, accumulate: true }
+    }
+}
+
+impl fmt::Display for LocalAddr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let tag = match (self.space, self.accumulate) {
+            (Space::Spad, _) => "sp",
+            (Space::Acc, false) => "acc",
+            (Space::Acc, true) => "acc+",
+        };
+        write!(f, "{tag}[{}]", self.row)
+    }
+}
+
+/// Activation applied on `MVOUT` from the accumulator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Activation {
+    None,
+    Relu,
+    /// Clip to `[lo, hi]` (QNN clip after requantization).
+    Clip { lo: i8, hi: i8 },
+}
+
+/// One accelerator instruction.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Instr {
+    /// Configure the execution pipeline: dataflow and the systolic-array
+    /// input shift (unused in this model but kept for encoding parity).
+    ConfigEx { dataflow: Dataflow },
+    /// Configure the load pipeline: DRAM row stride in elements for `MVIN`.
+    ConfigLd { stride: u32 },
+    /// Configure the store pipeline: DRAM row stride for `MVOUT`, the
+    /// requantization scale (accumulator int32 → int8) and activation.
+    ConfigSt { stride: u32, scale: f32, act: Activation },
+    /// DMA DRAM → scratchpad/accumulator: a `rows × cols` tile
+    /// (`cols ≤ DIM`). `dram` is a byte offset into simulator main memory.
+    Mvin { dram: u64, local: LocalAddr, rows: u16, cols: u16 },
+    /// DMA accumulator/scratchpad → DRAM, applying the configured
+    /// requantization when reading int32 accumulator rows.
+    Mvout { dram: u64, local: LocalAddr, rows: u16, cols: u16 },
+    /// Load a `rows × cols` tile into the PE array's stationary registers
+    /// (the weight tile under WS), and name the destination accumulator
+    /// tile of the following computes. `local = None` preloads zeros.
+    Preload { local: Option<LocalAddr>, dst: LocalAddr, rows: u16, cols: u16 },
+    /// Fire the systolic array on a `rows × cols_a` input tile at `a`
+    /// (scratchpad), optionally adding bias tile `d`. `preloaded = true`
+    /// uses the tile loaded by the last `Preload`
+    /// (`COMPUTE_PRELOADED`); `false` re-uses the resident tile
+    /// (`COMPUTE_ACCUMULATED`).
+    Compute { a: LocalAddr, d: Option<LocalAddr>, rows: u16, cols: u16, preloaded: bool },
+    /// Hardware tiling loop (Gemmini's `LOOP_WS` FSM): expands into a
+    /// double-buffered mvin/preload/compute/mvout sequence over a
+    /// `(ti × tj × tk)` grid of DIM-sized tiles of
+    /// `O[m×n] (+)= A[m×k]·B[k×n]`; a single RoCC issue covers the whole
+    /// loop nest. Strides are DRAM row strides in elements.
+    LoopWs {
+        a_dram: u64,
+        b_dram: u64,
+        c_dram: u64,
+        /// Optional bias, added on the first k-tile.
+        d_dram: Option<u64>,
+        m: u32,
+        n: u32,
+        k: u32,
+        a_stride: u32,
+        b_stride: u32,
+        c_stride: u32,
+    },
+    /// Wait until all in-flight accelerator work has drained.
+    Fence,
+    /// Flush the PE array's stationary state.
+    Flush,
+}
+
+impl Instr {
+    /// Mnemonic for disassembly and metrics bucketing.
+    pub fn mnemonic(&self) -> &'static str {
+        match self {
+            Instr::ConfigEx { .. } => "config_ex",
+            Instr::ConfigLd { .. } => "config_ld",
+            Instr::ConfigSt { .. } => "config_st",
+            Instr::Mvin { .. } => "mvin",
+            Instr::Mvout { .. } => "mvout",
+            Instr::Preload { .. } => "preload",
+            Instr::Compute { preloaded: true, .. } => "compute_preloaded",
+            Instr::Compute { preloaded: false, .. } => "compute_accumulated",
+            Instr::LoopWs { .. } => "loop_ws",
+            Instr::Fence => "fence",
+            Instr::Flush => "flush",
+        }
+    }
+}
+
+impl fmt::Display for Instr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Instr::ConfigEx { dataflow } => write!(f, "config_ex df={dataflow}"),
+            Instr::ConfigLd { stride } => write!(f, "config_ld stride={stride}"),
+            Instr::ConfigSt { stride, scale, act } => {
+                write!(f, "config_st stride={stride} scale={scale:.6} act={act:?}")
+            }
+            Instr::Mvin { dram, local, rows, cols } => {
+                write!(f, "mvin dram+{dram:#x} -> {local} {rows}x{cols}")
+            }
+            Instr::Mvout { dram, local, rows, cols } => {
+                write!(f, "mvout {local} -> dram+{dram:#x} {rows}x{cols}")
+            }
+            Instr::Preload { local, dst, rows, cols } => match local {
+                Some(l) => write!(f, "preload {l} dst={dst} {rows}x{cols}"),
+                None => write!(f, "preload <zeros> dst={dst} {rows}x{cols}"),
+            },
+            Instr::Compute { a, d, rows, cols, preloaded } => {
+                let kind = if *preloaded { "preloaded" } else { "accumulated" };
+                match d {
+                    Some(d) => write!(f, "compute.{kind} a={a} d={d} {rows}x{cols}"),
+                    None => write!(f, "compute.{kind} a={a} {rows}x{cols}"),
+                }
+            }
+            Instr::LoopWs { m, n, k, .. } => write!(f, "loop_ws {m}x{n}x{k}"),
+            Instr::Fence => write!(f, "fence"),
+            Instr::Flush => write!(f, "flush"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn local_addr_display() {
+        assert_eq!(LocalAddr::spad(3).to_string(), "sp[3]");
+        assert_eq!(LocalAddr::acc(7).to_string(), "acc[7]");
+        assert_eq!(LocalAddr::acc_accumulate(7).to_string(), "acc+[7]");
+    }
+
+    #[test]
+    fn mnemonics() {
+        assert_eq!(Instr::Fence.mnemonic(), "fence");
+        let c = Instr::Compute {
+            a: LocalAddr::spad(0),
+            d: None,
+            rows: 16,
+            cols: 16,
+            preloaded: true,
+        };
+        assert_eq!(c.mnemonic(), "compute_preloaded");
+    }
+}

@@ -1,0 +1,306 @@
+//! Deployable programs: a DRAM layout plus an ordered list of accelerator
+//! instructions and host-CPU operations.
+//!
+//! Host ops model the code that runs on the general-purpose core paired
+//! with the accelerator (paper §1: accelerators "are typically paired with
+//! general-purpose processors that manage unsupported tasks"). In the naive
+//! BYOC baseline these include runtime tensor preprocessing — the source of
+//! Table 2's slowdown; in the proposed flow constant-related preprocessing
+//! is folded at compile time and never appears here.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use anyhow::{anyhow, Result};
+
+use super::Instr;
+
+/// A named region of simulator DRAM.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Region {
+    pub name: String,
+    pub offset: u64,
+    pub bytes: u64,
+}
+
+/// DRAM layout: bump-allocated named regions.
+#[derive(Debug, Clone, Default)]
+pub struct DramLayout {
+    regions: Vec<Region>,
+    by_name: BTreeMap<String, usize>,
+    next: u64,
+}
+
+impl DramLayout {
+    pub fn new() -> DramLayout {
+        DramLayout::default()
+    }
+
+    /// Allocate `bytes` (16-byte aligned) under `name`; names are unique.
+    pub fn alloc(&mut self, name: impl Into<String>, bytes: u64) -> Result<&Region> {
+        let name = name.into();
+        if self.by_name.contains_key(&name) {
+            return Err(anyhow!("duplicate DRAM region '{name}'"));
+        }
+        let offset = (self.next + 15) & !15;
+        self.next = offset + bytes;
+        self.by_name.insert(name.clone(), self.regions.len());
+        self.regions.push(Region { name, offset, bytes });
+        Ok(self.regions.last().unwrap())
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Region> {
+        self.by_name
+            .get(name)
+            .map(|&i| &self.regions[i])
+            .ok_or_else(|| anyhow!("unknown DRAM region '{name}'"))
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.next
+    }
+
+    pub fn regions(&self) -> &[Region] {
+        &self.regions
+    }
+}
+
+/// An operation executed by the host CPU over DRAM regions. Offsets are
+/// absolute DRAM byte offsets; shapes are in elements.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum HostOp {
+    /// `dst[j][i] = src[i][j]` over int8 matrices.
+    TransposeI8 { src: u64, dst: u64, rows: usize, cols: usize },
+    /// Quantize float32 → int8: `dst[i] = clamp(round(src[i] / scale))`.
+    QuantizeF32 { src: u64, dst: u64, n: usize, scale: f32 },
+    /// Dequantize int8 → float32: `dst[i] = src[i] * scale`.
+    DequantizeI8 { src: u64, dst: u64, n: usize, scale: f32 },
+    /// Requantize int32 → int8 with saturation:
+    /// `dst[i] = clamp(round(src[i] * scale))`.
+    RequantizeI32 { src: u64, dst: u64, n: usize, scale: f32 },
+    /// Widen int8 → int32 (e.g. staging a bias or a host-side matmul input).
+    WidenI8ToI32 { src: u64, dst: u64, n: usize },
+    /// Plain byte copy.
+    Memcpy { src: u64, dst: u64, bytes: usize },
+    /// Elementwise int32 add: `dst[i] = a[i] + b[i]`.
+    AddI32 { a: u64, b: u64, dst: u64, n: usize },
+    /// Broadcast bias add over rows: `dst[i][j] = x[i][j] + bias[j]`
+    /// (int32, `n` rows of `k`).
+    BiasAddI32 { x: u64, bias: u64, dst: u64, n: usize, k: usize },
+    /// Host-side int8 GEMM with int32 accumulation (fallback path for ops
+    /// the accelerator does not support): `c[nxk] = a[nxc] · b[cxk]`.
+    MatmulI8 { a: u64, b: u64, c: u64, n: usize, c_dim: usize, k: usize },
+    /// Elementwise clip of int8 to `[lo, hi]`.
+    ClipI8 { buf: u64, n: usize, lo: i8, hi: i8 },
+    /// im2col expansion on the host (runtime preprocessing of a
+    /// non-constant conv activation): NHWC int8 → `[N·OH·OW, kh·kw·C]`.
+    Im2col {
+        src: u64,
+        dst: u64,
+        n: usize,
+        h: usize,
+        w: usize,
+        c: usize,
+        kh: usize,
+        kw: usize,
+        stride: usize,
+        pad: usize,
+    },
+}
+
+impl HostOp {
+    /// Number of scalar elements this op touches with ALU work.
+    pub fn alu_elems(&self) -> u64 {
+        match *self {
+            HostOp::TransposeI8 { .. } | HostOp::Memcpy { .. } | HostOp::WidenI8ToI32 { .. } => 0,
+            HostOp::QuantizeF32 { n, .. }
+            | HostOp::DequantizeI8 { n, .. }
+            | HostOp::RequantizeI32 { n, .. }
+            | HostOp::AddI32 { n, .. }
+            | HostOp::ClipI8 { n, .. } => n as u64,
+            HostOp::BiasAddI32 { n, k, .. } => (n * k) as u64,
+            HostOp::MatmulI8 { n, c_dim, k, .. } => (n * c_dim * k) as u64,
+            HostOp::Im2col { .. } => 0,
+        }
+    }
+
+    /// Number of elements moved through the host load/store path.
+    pub fn moved_elems(&self) -> u64 {
+        match *self {
+            HostOp::TransposeI8 { rows, cols, .. } => (rows * cols) as u64,
+            HostOp::QuantizeF32 { n, .. }
+            | HostOp::DequantizeI8 { n, .. }
+            | HostOp::RequantizeI32 { n, .. }
+            | HostOp::WidenI8ToI32 { n, .. }
+            | HostOp::ClipI8 { n, .. } => n as u64,
+            HostOp::Memcpy { bytes, .. } => bytes as u64,
+            HostOp::AddI32 { n, .. } => 2 * n as u64,
+            HostOp::BiasAddI32 { n, k, .. } => (2 * n * k) as u64,
+            HostOp::MatmulI8 { n, c_dim, k, .. } => (n * c_dim + c_dim * k + n * k) as u64,
+            HostOp::Im2col { n, h, w, c, kh, kw, stride, pad, .. } => {
+                let oh = (h + 2 * pad - kh) / stride + 1;
+                let ow = (w + 2 * pad - kw) / stride + 1;
+                (n * oh * ow * kh * kw * c) as u64
+            }
+        }
+    }
+
+    pub fn mnemonic(&self) -> &'static str {
+        match self {
+            HostOp::TransposeI8 { .. } => "host.transpose",
+            HostOp::QuantizeF32 { .. } => "host.quantize",
+            HostOp::DequantizeI8 { .. } => "host.dequantize",
+            HostOp::RequantizeI32 { .. } => "host.requantize",
+            HostOp::WidenI8ToI32 { .. } => "host.widen",
+            HostOp::Memcpy { .. } => "host.memcpy",
+            HostOp::AddI32 { .. } => "host.add",
+            HostOp::BiasAddI32 { .. } => "host.bias_add",
+            HostOp::MatmulI8 { .. } => "host.matmul",
+            HostOp::ClipI8 { .. } => "host.clip",
+            HostOp::Im2col { .. } => "host.im2col",
+        }
+    }
+}
+
+/// One program item: an accelerator instruction or a host operation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Item {
+    Accel(Instr),
+    Host(HostOp),
+}
+
+/// A complete deployable program.
+#[derive(Debug, Clone, Default)]
+pub struct Program {
+    pub name: String,
+    pub layout: DramLayout,
+    pub items: Vec<Item>,
+    /// Initial DRAM image: `(offset, bytes)` blobs staged before the first
+    /// run (constant weights/biases, compile-time-folded preprocessing
+    /// results).
+    pub init: Vec<(u64, Vec<u8>)>,
+}
+
+impl Program {
+    pub fn new(name: impl Into<String>) -> Program {
+        Program {
+            name: name.into(),
+            layout: DramLayout::new(),
+            items: Vec::new(),
+            init: Vec::new(),
+        }
+    }
+
+    /// Record constant data to be staged at `offset` before execution.
+    pub fn add_init(&mut self, offset: u64, bytes: Vec<u8>) {
+        self.init.push((offset, bytes));
+    }
+
+    /// Stage the init image into a DRAM instance.
+    pub fn stage(&self, dram: &mut crate::sim::memory::Dram) -> anyhow::Result<()> {
+        for (off, bytes) in &self.init {
+            let data: Vec<i8> = bytes.iter().map(|&b| b as i8).collect();
+            dram.write_i8_slice(*off, &data)?;
+        }
+        Ok(())
+    }
+
+    /// A DRAM instance sized for this program's layout, with constants
+    /// staged.
+    pub fn make_dram(&self) -> anyhow::Result<crate::sim::memory::Dram> {
+        let mut d = crate::sim::memory::Dram::new(self.layout.total_bytes() as usize + 64);
+        self.stage(&mut d)?;
+        Ok(d)
+    }
+
+    pub fn push(&mut self, i: Instr) {
+        self.items.push(Item::Accel(i));
+    }
+
+    pub fn push_host(&mut self, h: HostOp) {
+        self.items.push(Item::Host(h));
+    }
+
+    /// Count of accelerator instructions (LOOP_WS counts as one: it is a
+    /// single issued command).
+    pub fn accel_insn_count(&self) -> usize {
+        self.items.iter().filter(|i| matches!(i, Item::Accel(_))).count()
+    }
+
+    /// Instruction histogram by mnemonic.
+    pub fn histogram(&self) -> BTreeMap<&'static str, usize> {
+        let mut h = BTreeMap::new();
+        for item in &self.items {
+            let m = match item {
+                Item::Accel(i) => i.mnemonic(),
+                Item::Host(hh) => hh.mnemonic(),
+            };
+            *h.entry(m).or_insert(0) += 1;
+        }
+        h
+    }
+
+    /// Human-readable disassembly.
+    pub fn disassemble(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("; program '{}'\n", self.name));
+        for r in self.layout.regions() {
+            out.push_str(&format!("; region {:<16} +{:#x} {} bytes\n", r.name, r.offset, r.bytes));
+        }
+        for (i, item) in self.items.iter().enumerate() {
+            match item {
+                Item::Accel(ins) => out.push_str(&format!("{i:6}: {ins}\n")),
+                Item::Host(h) => out.push_str(&format!("{i:6}: {h:?}\n")),
+            }
+        }
+        out
+    }
+}
+
+impl fmt::Display for Program {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.disassemble())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::LocalAddr;
+
+    #[test]
+    fn layout_alloc_aligns_and_names() {
+        let mut l = DramLayout::new();
+        let a = l.alloc("a", 3).unwrap().clone();
+        let b = l.alloc("b", 10).unwrap().clone();
+        assert_eq!(a.offset, 0);
+        assert_eq!(b.offset, 16); // aligned past a's 3 bytes
+        assert_eq!(l.get("a").unwrap(), &a);
+        assert!(l.get("zz").is_err());
+        assert!(l.alloc("a", 1).is_err());
+        assert_eq!(l.total_bytes(), 26);
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let mut p = Program::new("t");
+        p.push(Instr::Fence);
+        p.push(Instr::Mvin { dram: 0, local: LocalAddr::spad(0), rows: 1, cols: 1 });
+        p.push(Instr::Fence);
+        p.push_host(HostOp::Memcpy { src: 0, dst: 0, bytes: 4 });
+        let h = p.histogram();
+        assert_eq!(h["fence"], 2);
+        assert_eq!(h["mvin"], 1);
+        assert_eq!(h["host.memcpy"], 1);
+        assert_eq!(p.accel_insn_count(), 3);
+    }
+
+    #[test]
+    fn host_op_cost_elems() {
+        let t = HostOp::TransposeI8 { src: 0, dst: 0, rows: 4, cols: 8 };
+        assert_eq!(t.alu_elems(), 0);
+        assert_eq!(t.moved_elems(), 32);
+        let m = HostOp::MatmulI8 { a: 0, b: 0, c: 0, n: 2, c_dim: 3, k: 4 };
+        assert_eq!(m.alu_elems(), 24);
+    }
+}

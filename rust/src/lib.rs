@@ -1,0 +1,45 @@
+//! # tvm-accel
+//!
+//! A compiler-integration framework for GEMM-based deep-learning
+//! accelerators, reproducing *"A High-Level Compiler Integration Approach for
+//! Deep Learning Accelerators Supporting Abstraction and Optimization"*
+//! (Ahmadifarsani, Mueller-Gritschneder, Schlichtmann, 2025).
+//!
+//! The crate provides, end to end:
+//!
+//! * a compact **accelerator description** (functional + architectural) that
+//!   is the only thing a user writes to integrate a new GEMM accelerator
+//!   ([`accel`], [`arch`]);
+//! * an **extended CoSA scheduler** — constrained optimization over loop
+//!   mappings with instruction-set constraints, uneven memory-share mapping
+//!   and double buffering ([`scheduler`]);
+//! * an automated **integration flow** — frontend configurator, strategy
+//!   generator, hardware-intrinsic generator and mapping generator — that
+//!   turns the description into a working compiler backend ([`frontend`],
+//!   [`backend`], [`pipeline`]);
+//! * the substrates the paper depends on: a compact Relay-like graph IR with
+//!   QNN ops and passes ([`relay`]), a TIR-like loop-nest IR with schedule
+//!   primitives ([`tir`]), a Gemmini-class ISA ([`isa`]) and a cycle-level,
+//!   functionally exact simulator ([`sim`]);
+//! * the paper's two baselines ([`baselines`]) and a PJRT-backed golden
+//!   reference runtime ([`runtime`]).
+//!
+//! See `DESIGN.md` for the module inventory and the experiment index, and
+//! `examples/` for runnable entry points (`quickstart`, `toycar_e2e`,
+//! `custom_accelerator`, `scheduler_explore`).
+
+pub mod accel;
+pub mod arch;
+pub mod backend;
+pub mod baselines;
+pub mod frontend;
+pub mod isa;
+pub mod metrics;
+pub mod pipeline;
+pub mod relay;
+pub mod runtime;
+pub mod scheduler;
+pub mod sim;
+pub mod tir;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,167 @@
+//! `tvm-accel` — command-line driver for the compiler-integration
+//! framework.
+//!
+//! Subcommands:
+//!   schedule  — run the extended-CoSA sweep for a GEMM and print mappings
+//!   compile   — compile a .qmodel and print the chosen schedules/program
+//!   run       — compile + simulate a .qmodel (optionally golden-checked
+//!               against an HLO artifact via PJRT)
+//!   disasm    — compile and dump the instruction stream
+//!
+//! Examples:
+//!   tvm-accel schedule --n 128 --c 128 --k 128
+//!   tvm-accel run --model artifacts/toycar.qmodel --backend proposed \
+//!       --golden artifacts/toycar.hlo.txt --inferences 10
+//!   tvm-accel compile --model artifacts/dense_64.qmodel --backend naive
+
+use anyhow::{bail, Context, Result};
+use tvm_accel::accel::gemmini::{desc_for_arch, gemmini_desc};
+use tvm_accel::accel::AccelDesc;
+use tvm_accel::arch::parse::arch_from_file;
+use tvm_accel::baselines::c_toolchain::compile_c_toolchain;
+use tvm_accel::baselines::naive_byoc::{compile_naive, import_with_weight_chain};
+use tvm_accel::metrics::describe;
+use tvm_accel::pipeline::{Compiler, Deployment};
+use tvm_accel::relay::import::{load_qmodel, QModel};
+use tvm_accel::runtime::{golden_inputs, Runtime};
+use tvm_accel::scheduler::sweep::{sweep, SweepOptions};
+use tvm_accel::sim::Simulator;
+use tvm_accel::util::cli::Args;
+use tvm_accel::util::prng::Rng;
+use tvm_accel::util::table::commafy;
+use tvm_accel::workload::Gemm;
+
+const VALUE_OPTS: &[&str] = &[
+    "n", "c", "k", "model", "backend", "arch", "golden", "inferences", "seed",
+];
+
+fn load_accel(args: &Args) -> Result<AccelDesc> {
+    match args.opt("arch") {
+        None => gemmini_desc(),
+        Some(path) => {
+            let arch = arch_from_file(std::path::Path::new(path))?;
+            let name = arch.name.clone();
+            desc_for_arch(&name, arch)
+        }
+    }
+}
+
+fn build_deployment(args: &Args, accel: &AccelDesc, model: &QModel) -> Result<Deployment> {
+    match args.opt_or("backend", "proposed").as_str() {
+        "proposed" => {
+            let graph = import_with_weight_chain(model)?;
+            Compiler::new(accel.clone()).compile(&graph)
+        }
+        "naive" | "byoc" => compile_naive(accel, model),
+        "c-toolchain" | "c" => compile_c_toolchain(accel, model),
+        other => bail!("unknown backend '{other}' (proposed|naive|c-toolchain)"),
+    }
+}
+
+fn cmd_schedule(args: &Args) -> Result<()> {
+    let g = Gemm::new(
+        args.opt_usize("n", 128)?,
+        args.opt_usize("c", 128)?,
+        args.opt_usize("k", 128)?,
+    );
+    let accel = load_accel(args)?;
+    let r = sweep(&accel.arch, g, &SweepOptions::default());
+    println!("{} config points explored for {g}; top candidates:", r.configs_explored);
+    for (i, s) in r.candidates.iter().enumerate() {
+        println!("  [{i}] {s}");
+    }
+    if let Some(best) = r.candidates.first() {
+        println!("\nCoSA mapping of the best candidate:\n{}", best.to_yaml());
+    }
+    Ok(())
+}
+
+fn cmd_compile(args: &Args) -> Result<()> {
+    let path = args.opt("model").context("--model <file.qmodel> required")?;
+    let model = load_qmodel(std::path::Path::new(path))?;
+    let accel = load_accel(args)?;
+    let dep = build_deployment(args, &accel, &model)?;
+    println!(
+        "compiled '{}' for {}: {} items, {} DRAM bytes",
+        path,
+        accel.name,
+        dep.program.items.len(),
+        commafy(dep.program.layout.total_bytes())
+    );
+    for (name, s, cyc) in &dep.chosen {
+        println!("  {name}: {s} (profiled {cyc:?})");
+    }
+    println!("instruction histogram:");
+    for (m, n) in dep.program.histogram() {
+        println!("  {m:<24} {n}");
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let path = args.opt("model").context("--model <file.qmodel> required")?;
+    let model = load_qmodel(std::path::Path::new(path))?;
+    let accel = load_accel(args)?;
+    let dep = build_deployment(args, &accel, &model)?;
+    let sim = Simulator::new(&accel.arch);
+    let inferences = args.opt_usize("inferences", 1)?;
+    let mut rng = Rng::new(args.opt_usize("seed", 1)? as u64);
+
+    let golden = match args.opt("golden") {
+        Some(g) => {
+            let rt = Runtime::cpu()?;
+            Some(rt.load_hlo_text(std::path::Path::new(g))?)
+        }
+        None => None,
+    };
+
+    let mut total = 0u64;
+    for i in 0..inferences {
+        let x = rng.i8_vec(model.batch * model.layers[0].in_dim);
+        let (out, rep) = dep.run(&sim, &x)?;
+        total += rep.cycles;
+        if let Some(g) = &golden {
+            let want = g.run(&golden_inputs(&model, &x)?)?.to_vec::<i8>()?;
+            if out != want {
+                bail!("inference {i}: output mismatch vs golden model");
+            }
+        }
+        if i == 0 {
+            println!("{}", describe("first inference", &rep, accel.arch.pe_dim));
+        }
+    }
+    println!(
+        "{} inferences, mean latency {} cycles{}",
+        inferences,
+        commafy(total / inferences as u64),
+        if golden.is_some() { ", all golden-checked ✔" } else { "" }
+    );
+    Ok(())
+}
+
+fn cmd_disasm(args: &Args) -> Result<()> {
+    let path = args.opt("model").context("--model <file.qmodel> required")?;
+    let model = load_qmodel(std::path::Path::new(path))?;
+    let accel = load_accel(args)?;
+    let dep = build_deployment(args, &accel, &model)?;
+    print!("{}", dep.program.disassemble());
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env(VALUE_OPTS)?;
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("schedule") => cmd_schedule(&args),
+        Some("compile") => cmd_compile(&args),
+        Some("run") => cmd_run(&args),
+        Some("disasm") => cmd_disasm(&args),
+        _ => {
+            eprintln!(
+                "usage: tvm-accel <schedule|compile|run|disasm> [--model F] \
+                 [--backend proposed|naive|c-toolchain] [--arch F.yaml] \
+                 [--golden F.hlo.txt] [--inferences N] [--n N --c C --k K]"
+            );
+            std::process::exit(2);
+        }
+    }
+}

@@ -1,0 +1,67 @@
+//! Reporting helpers shared by the benches: table rendering of latency
+//! comparisons in the paper's format.
+
+use crate::sim::report::RunReport;
+use crate::util::table::{commafy, Table};
+
+/// One Table-2-style row: a workload and its latency under each backend.
+#[derive(Debug, Clone)]
+pub struct LatencyRow {
+    pub workload: String,
+    pub c_toolchain: u64,
+    pub byoc_uma: u64,
+    pub proposed: u64,
+}
+
+/// Render rows in the layout of the paper's Table 2.
+pub fn table2(rows: &[LatencyRow]) -> Table {
+    let mut t = Table::new("Table 2: Deployment results — Latency (Cycles)").header(&[
+        "Workload",
+        "C-based Toolchain",
+        "Proposed",
+        "BYOC/UMA Backend",
+        "BYOC/Proposed",
+    ]);
+    for r in rows {
+        t.row(vec![
+            r.workload.clone(),
+            commafy(r.c_toolchain),
+            commafy(r.proposed),
+            commafy(r.byoc_uma),
+            format!("{:.2}x", r.byoc_uma as f64 / r.proposed as f64),
+        ]);
+    }
+    t
+}
+
+/// One-line textual summary of a run report.
+pub fn describe(name: &str, rep: &RunReport, pe_dim: usize) -> String {
+    format!(
+        "{name}: {} cycles (host {}), util {:.1}%, dram {}/{} B, {} cmds",
+        commafy(rep.cycles),
+        commafy(rep.host_cycles),
+        rep.utilization(pe_dim) * 100.0,
+        commafy(rep.dram_read_bytes),
+        commafy(rep.dram_write_bytes),
+        commafy(rep.issued_commands),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_formats_ratio() {
+        let rows = vec![LatencyRow {
+            workload: "(64, 64, 64)".into(),
+            c_toolchain: 69_994,
+            byoc_uma: 160_163,
+            proposed: 69_995,
+        }];
+        let t = table2(&rows);
+        let s = t.render();
+        assert!(s.contains("2.29x"));
+        assert!(s.contains("160,163"));
+    }
+}

@@ -1,0 +1,329 @@
+//! Reference interpreter for the graph IR.
+//!
+//! Independent of both the simulator and the XLA runtime, this is the
+//! semantic ground truth the compiled programs are tested against (the
+//! third leg of the validation triangle: graph eval ↔ simulator ↔ XLA).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, ensure, Context, Result};
+
+use crate::isa::Activation;
+use crate::sim::requantize;
+
+use super::{Graph, NodeId, Op, Tensor, TensorData, TensorType};
+
+/// Evaluate `g` on the given input tensors (keyed by input node name).
+pub fn eval(g: &Graph, inputs: &BTreeMap<String, Tensor>) -> Result<Vec<Tensor>> {
+    let mut values: Vec<Option<Tensor>> = vec![None; g.nodes.len()];
+    for n in &g.nodes {
+        let v = match &n.op {
+            Op::Input => inputs
+                .get(&n.name)
+                .cloned()
+                .ok_or_else(|| anyhow!("missing input '{}'", n.name))?,
+            Op::Constant(t) => t.clone(),
+            op => {
+                let ins: Vec<&Tensor> = n
+                    .inputs
+                    .iter()
+                    .map(|&i| values[i].as_ref().expect("topological order"))
+                    .collect();
+                eval_op(op, &ins, &n.ty).with_context(|| format!("node %{} {}", n.id, op.name()))?
+            }
+        };
+        ensure!(
+            v.ty == n.ty,
+            "node %{}: value type {} != node type {}",
+            n.id,
+            v.ty,
+            n.ty
+        );
+        values[n.id] = Some(v);
+    }
+    g.outputs
+        .iter()
+        .map(|&o: &NodeId| {
+            values[o]
+                .clone()
+                .ok_or_else(|| anyhow!("output %{o} not computed"))
+        })
+        .collect()
+}
+
+fn eval_op(op: &Op, ins: &[&Tensor], out_ty: &TensorType) -> Result<Tensor> {
+    let t = match op {
+        Op::QnnDense => {
+            let x = ins[0].data.as_i8()?;
+            let w = ins[1].data.as_i8()?;
+            let (n, c) = (ins[0].ty.shape[0], ins[0].ty.shape[1]);
+            let k = ins[1].ty.shape[0];
+            let mut out = vec![0i32; n * k];
+            for i in 0..n {
+                for j in 0..k {
+                    let mut s = 0i32;
+                    for cc in 0..c {
+                        // TFLite layout: w[j, cc].
+                        s += x[i * c + cc] as i32 * w[j * c + cc] as i32;
+                    }
+                    out[i * k + j] = s;
+                }
+            }
+            Tensor::new(vec![n, k], TensorData::I32(out))?
+        }
+        Op::QnnConv2d { stride, pad } => {
+            let x = ins[0].data.as_i8()?;
+            let w = ins[1].data.as_i8()?;
+            let [n, h, wd, c]: [usize; 4] = ins[0].ty.shape.clone().try_into().unwrap();
+            let [k, kh, kw, _]: [usize; 4] = ins[1].ty.shape.clone().try_into().unwrap();
+            let oh = (h + 2 * pad - kh) / stride + 1;
+            let ow = (wd + 2 * pad - kw) / stride + 1;
+            let mut out = vec![0i32; n * oh * ow * k];
+            for b in 0..n {
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        for kk in 0..k {
+                            let mut s = 0i32;
+                            for dy in 0..kh {
+                                for dx in 0..kw {
+                                    let iy = (oy * stride + dy) as isize - *pad as isize;
+                                    let ix = (ox * stride + dx) as isize - *pad as isize;
+                                    if iy < 0 || ix < 0 || iy >= h as isize || ix >= wd as isize
+                                    {
+                                        continue; // zero padding
+                                    }
+                                    for ch in 0..c {
+                                        let xv = x[((b * h + iy as usize) * wd
+                                            + ix as usize)
+                                            * c
+                                            + ch]
+                                            as i32;
+                                        let wv = w[((kk * kh + dy) * kw + dx) * c + ch] as i32;
+                                        s += xv * wv;
+                                    }
+                                }
+                            }
+                            out[((b * oh + oy) * ow + ox) * k + kk] = s;
+                        }
+                    }
+                }
+            }
+            Tensor::new(vec![n, oh, ow, k], TensorData::I32(out))?
+        }
+        Op::Im2col { kh, kw, stride, pad } => {
+            let x = ins[0].data.as_i8()?;
+            let [n, h, wd, c]: [usize; 4] = ins[0].ty.shape.clone().try_into().unwrap();
+            let oh = (h + 2 * pad - kh) / stride + 1;
+            let ow = (wd + 2 * pad - kw) / stride + 1;
+            let cols = kh * kw * c;
+            let mut out = vec![0i8; n * oh * ow * cols];
+            for b in 0..n {
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        let row = ((b * oh + oy) * ow + ox) * cols;
+                        for dy in 0..*kh {
+                            for dx in 0..*kw {
+                                let iy = (oy * stride + dy) as isize - *pad as isize;
+                                let ix = (ox * stride + dx) as isize - *pad as isize;
+                                if iy < 0 || ix < 0 || iy >= h as isize || ix >= wd as isize {
+                                    continue; // rows pre-zeroed
+                                }
+                                let src = ((b * h + iy as usize) * wd + ix as usize) * c;
+                                let dst = row + (dy * kw + dx) * c;
+                                out[dst..dst + c]
+                                    .copy_from_slice(&x[src..src + c]);
+                            }
+                        }
+                    }
+                }
+            }
+            Tensor::new(vec![n * oh * ow, cols], TensorData::I8(out))?
+        }
+        Op::BiasAdd => {
+            let x = ins[0].data.as_i32()?;
+            let b = ins[1].data.as_i32()?;
+            let k = *ins[0].ty.shape.last().unwrap();
+            let out = x
+                .iter()
+                .enumerate()
+                .map(|(i, &v)| v.wrapping_add(b[i % k]))
+                .collect();
+            Tensor::new(ins[0].ty.shape.clone(), TensorData::I32(out))?
+        }
+        Op::Requantize { scale } => {
+            let x = ins[0].data.as_i32()?;
+            let out = x.iter().map(|&v| requantize(v, *scale, Activation::None)).collect();
+            Tensor::new(ins[0].ty.shape.clone(), TensorData::I8(out))?
+        }
+        Op::Clip { lo, hi } => {
+            let x = ins[0].data.as_i8()?;
+            let out = x.iter().map(|&v| v.clamp(*lo, *hi)).collect();
+            Tensor::new(ins[0].ty.shape.clone(), TensorData::I8(out))?
+        }
+        Op::Relu => {
+            let x = ins[0].data.as_i8()?;
+            let out = x.iter().map(|&v| v.max(0)).collect();
+            Tensor::new(ins[0].ty.shape.clone(), TensorData::I8(out))?
+        }
+        Op::Transpose => {
+            let (r, c) = (ins[0].ty.shape[0], ins[0].ty.shape[1]);
+            match &ins[0].data {
+                TensorData::I8(x) => {
+                    let mut out = vec![0i8; r * c];
+                    for i in 0..r {
+                        for j in 0..c {
+                            out[j * r + i] = x[i * c + j];
+                        }
+                    }
+                    Tensor::new(vec![c, r], TensorData::I8(out))?
+                }
+                TensorData::I32(x) => {
+                    let mut out = vec![0i32; r * c];
+                    for i in 0..r {
+                        for j in 0..c {
+                            out[j * r + i] = x[i * c + j];
+                        }
+                    }
+                    Tensor::new(vec![c, r], TensorData::I32(out))?
+                }
+                TensorData::F32(x) => {
+                    let mut out = vec![0f32; r * c];
+                    for i in 0..r {
+                        for j in 0..c {
+                            out[j * r + i] = x[i * c + j];
+                        }
+                    }
+                    Tensor::new(vec![c, r], TensorData::F32(out))?
+                }
+            }
+        }
+        Op::Reshape { shape } => Tensor::new(shape.clone(), ins[0].data.clone())?,
+        Op::Quantize { scale } => {
+            let x = ins[0].data.as_f32()?;
+            let out = x
+                .iter()
+                .map(|&v| (v / scale).round_ties_even().clamp(-128.0, 127.0) as i8)
+                .collect();
+            Tensor::new(ins[0].ty.shape.clone(), TensorData::I8(out))?
+        }
+        Op::Dequantize { scale } => {
+            let x = ins[0].data.as_i8()?;
+            let out = x.iter().map(|&v| v as f32 * scale).collect();
+            Tensor::new(ins[0].ty.shape.clone(), TensorData::F32(out))?
+        }
+        Op::AccelDense { scale, act, weight_transposed } => {
+            let x = ins[0].data.as_i8()?;
+            let w = ins[1].data.as_i8()?;
+            let b = ins[2].data.as_i32()?;
+            let (n, c) = (ins[0].ty.shape[0], ins[0].ty.shape[1]);
+            let k = if *weight_transposed { ins[1].ty.shape[1] } else { ins[1].ty.shape[0] };
+            let mut out = vec![0i8; n * k];
+            for i in 0..n {
+                for j in 0..k {
+                    let mut s = b[j];
+                    for cc in 0..c {
+                        // [C,K] when transposed, [K,C] in importer layout.
+                        let wv = if *weight_transposed { w[cc * k + j] } else { w[j * c + cc] };
+                        s += x[i * c + cc] as i32 * wv as i32;
+                    }
+                    out[i * k + j] = requantize(s, *scale, *act);
+                }
+            }
+            Tensor::new(vec![n, k], TensorData::I8(out))?
+        }
+        Op::Input | Op::Constant(_) => unreachable!("handled by caller"),
+    };
+    ensure!(&t.ty == out_ty, "eval produced {}, node expects {}", t.ty, out_ty);
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::relay::{DType, GraphBuilder};
+    use crate::util::prng::Rng;
+
+    fn input_map(name: &str, t: Tensor) -> BTreeMap<String, Tensor> {
+        let mut m = BTreeMap::new();
+        m.insert(name.to_string(), t);
+        m
+    }
+
+    #[test]
+    fn qnn_sequence_matches_fused_accel_dense() {
+        // The legalized op must be semantically identical to the sequence.
+        let mut rng = Rng::new(77);
+        let (n, c, k) = (5, 12, 9);
+        let x = Tensor::new(vec![n, c], TensorData::I8(rng.i8_vec(n * c))).unwrap();
+        let w = Tensor::new(vec![k, c], TensorData::I8(rng.i8_vec(k * c))).unwrap();
+        let bias = Tensor::new(
+            vec![k],
+            TensorData::I32((0..k).map(|_| rng.below(100) as i32 - 50).collect()),
+        )
+        .unwrap();
+        let scale = 0.05f32;
+
+        // Graph 1: the fine-grained sequence.
+        let mut b1 = GraphBuilder::new();
+        let xi = b1.input("x", TensorType::new(vec![n, c], DType::I8));
+        let wc = b1.constant("w", w.clone());
+        let bc = b1.constant("b", bias.clone());
+        let d = b1.op("d", Op::QnnDense, &[xi, wc]).unwrap();
+        let ba = b1.op("ba", Op::BiasAdd, &[d, bc]).unwrap();
+        let rq = b1.op("rq", Op::Requantize { scale }, &[ba]).unwrap();
+        let cl = b1.op("cl", Op::Clip { lo: -100, hi: 100 }, &[rq]).unwrap();
+        let g1 = b1.outputs(&[cl]);
+
+        // Graph 2: the generalized accelerator op.
+        let mut b2 = GraphBuilder::new();
+        let xi = b2.input("x", TensorType::new(vec![n, c], DType::I8));
+        let wc = b2.constant("w", w);
+        let bc = b2.constant("b", bias);
+        let ad = b2
+            .op(
+                "ad",
+                Op::AccelDense {
+                    scale,
+                    act: Activation::Clip { lo: -100, hi: 100 },
+                    weight_transposed: false,
+                },
+                &[xi, wc, bc],
+            )
+            .unwrap();
+        let g2 = b2.outputs(&[ad]);
+
+        let o1 = eval(&g1, &input_map("x", x.clone())).unwrap();
+        let o2 = eval(&g2, &input_map("x", x)).unwrap();
+        assert_eq!(o1[0].data, o2[0].data);
+    }
+
+    #[test]
+    fn quantize_dequantize_roundtrip_small_values() {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", TensorType::new(vec![4], DType::F32));
+        let q = b.op("q", Op::Quantize { scale: 0.5 }, &[x]).unwrap();
+        let dq = b.op("dq", Op::Dequantize { scale: 0.5 }, &[q]).unwrap();
+        let g = b.outputs(&[dq]);
+        let t = Tensor::new(vec![4], TensorData::F32(vec![1.0, -2.5, 0.0, 3.0])).unwrap();
+        let out = eval(&g, &input_map("x", t)).unwrap();
+        assert_eq!(out[0].data.as_f32().unwrap(), &[1.0, -2.5, 0.0, 3.0]);
+    }
+
+    #[test]
+    fn transpose_eval() {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", TensorType::new(vec![2, 3], DType::I8));
+        let t = b.op("t", Op::Transpose, &[x]).unwrap();
+        let g = b.outputs(&[t]);
+        let inp = Tensor::new(vec![2, 3], TensorData::I8(vec![1, 2, 3, 4, 5, 6])).unwrap();
+        let out = eval(&g, &input_map("x", inp)).unwrap();
+        assert_eq!(out[0].data.as_i8().unwrap(), &[1, 4, 2, 5, 3, 6]);
+        assert_eq!(out[0].ty.shape, vec![3, 2]);
+    }
+
+    #[test]
+    fn missing_input_is_an_error() {
+        let g = crate::relay::tests::qnn_layer();
+        assert!(eval(&g, &BTreeMap::new()).is_err());
+    }
+}

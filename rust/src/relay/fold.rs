@@ -1,0 +1,192 @@
+//! Constant folding + dead-code elimination.
+//!
+//! The paper's key frontend fix (§4): "TVM typically disables constant
+//! folding for matched operators after graph partitioning, and re-enabling
+//! it is non-trivial. We addressed this by extending UMA's Lower module to
+//! extract and propagate constant parameters correctly." Here the pass runs
+//! over the legalized graph, so constant-related preprocessing — the weight
+//! transposition inserted for `accel.dense` — evaluates at compile time and
+//! never reaches the runtime program. The naive BYOC baseline skips this
+//! pass, reproducing the paper's degraded configuration.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use super::eval::eval;
+use super::{Graph, GraphBuilder, NodeId, Op, Tensor};
+
+/// Fold every op whose inputs are all constants into a `Constant` node,
+/// then drop nodes unreachable from the outputs.
+pub fn fold_constants(g: &Graph) -> Result<Graph> {
+    // Evaluate constant subgraphs node by node.
+    let mut const_val: Vec<Option<Tensor>> = vec![None; g.nodes.len()];
+    for n in &g.nodes {
+        match &n.op {
+            Op::Input => {}
+            Op::Constant(t) => const_val[n.id] = Some(t.clone()),
+            op => {
+                if n.inputs.iter().all(|&i| const_val[i].is_some()) {
+                    // Reuse the interpreter on a one-op subgraph.
+                    let mut b = GraphBuilder::new();
+                    let ins: Vec<NodeId> = n
+                        .inputs
+                        .iter()
+                        .map(|&i| b.constant(format!("c{i}"), const_val[i].clone().unwrap()))
+                        .collect();
+                    let id = b.op("f", op.clone(), &ins)?;
+                    let sub = b.outputs(&[id]);
+                    let mut out = eval(&sub, &BTreeMap::new())?;
+                    const_val[n.id] = Some(out.remove(0));
+                }
+            }
+        }
+    }
+
+    // Rebuild: folded nodes become constants; then DCE by reachability.
+    let mut reachable = vec![false; g.nodes.len()];
+    let mut stack: Vec<NodeId> = g.outputs.clone();
+    while let Some(id) = stack.pop() {
+        if reachable[id] {
+            continue;
+        }
+        reachable[id] = true;
+        // A folded node needs none of its inputs anymore.
+        if const_val[id].is_none() || matches!(g.node(id).op, Op::Constant(_)) {
+            for &i in &g.node(id).inputs {
+                stack.push(i);
+            }
+        }
+    }
+    // Keep graph inputs alive even if unused (interface stability).
+    for &i in &g.inputs {
+        reachable[i] = true;
+    }
+
+    let mut b = GraphBuilder::new();
+    let mut remap: BTreeMap<NodeId, NodeId> = BTreeMap::new();
+    for n in &g.nodes {
+        if !reachable[n.id] {
+            continue;
+        }
+        let new_id = match (&n.op, &const_val[n.id]) {
+            (Op::Input, _) => b.input(n.name.clone(), n.ty.clone()),
+            (Op::Constant(t), _) => b.constant(n.name.clone(), t.clone()),
+            (_, Some(v)) => b.constant(format!("{}_folded", n.name), v.clone()),
+            (op, None) => {
+                let ins: Vec<NodeId> = n.inputs.iter().map(|i| remap[i]).collect();
+                b.op(n.name.clone(), op.clone(), &ins)?
+            }
+        };
+        remap.insert(n.id, new_id);
+    }
+    let outs: Vec<NodeId> = g.outputs.iter().map(|o| remap[o]).collect();
+    let out = b.outputs(&outs);
+    out.validate()?;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Activation;
+    use crate::relay::legalize::{legalize, op_histogram, LegalizeConfig};
+    use crate::relay::{DType, TensorData, TensorType};
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn folds_weight_transpose() {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", TensorType::new(vec![2, 4], DType::I8));
+        let w = b.constant(
+            "w",
+            Tensor::new(vec![3, 4], TensorData::I8((0..12).map(|v| v as i8).collect()))
+                .unwrap(),
+        );
+        let bias =
+            b.constant("b", Tensor::new(vec![3], TensorData::I32(vec![0; 3])).unwrap());
+        let wt = b.op("wt", Op::Transpose, &[w]).unwrap();
+        let ad = b
+            .op(
+                "ad",
+                Op::AccelDense {
+                    scale: 1.0,
+                    act: Activation::None,
+                    weight_transposed: true,
+                },
+                &[x, wt, bias],
+            )
+            .unwrap();
+        let g = b.outputs(&[ad]);
+        let fg = fold_constants(&g).unwrap();
+        let h = op_histogram(&fg);
+        assert_eq!(h.get("transpose"), None, "transpose must fold away:\n{}", fg.dump());
+        assert_eq!(h.get("accel.dense"), Some(&1));
+        // The folded weight constant is in [C,K] layout.
+        let folded = fg
+            .nodes
+            .iter()
+            .find(|n| n.name == "wt_folded")
+            .expect("folded transpose constant");
+        assert_eq!(folded.ty.shape, vec![4, 3]);
+    }
+
+    #[test]
+    fn legalize_then_fold_leaves_only_fused_ops() {
+        // End-to-end frontend: QNN chain -> legalize -> fold gives a graph
+        // of input + constants + accel.dense only.
+        let mut rng = Rng::new(9);
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", TensorType::new(vec![1, 16], DType::I8));
+        let w = b.constant(
+            "w",
+            Tensor::new(vec![8, 16], TensorData::I8(rng.i8_vec(128))).unwrap(),
+        );
+        let bias =
+            b.constant("b", Tensor::new(vec![8], TensorData::I32(vec![5; 8])).unwrap());
+        let d = b.op("d", Op::QnnDense, &[x, w]).unwrap();
+        let a = b.op("a", Op::BiasAdd, &[d, bias]).unwrap();
+        let r = b.op("r", Op::Requantize { scale: 0.1 }, &[a]).unwrap();
+        let g = b.outputs(&[r]);
+
+        let lg = legalize(
+            &g,
+            &LegalizeConfig { dense: true, conv2d: false, insert_weight_transpose: true },
+        )
+        .unwrap();
+        let fg = fold_constants(&lg).unwrap();
+        let h = op_histogram(&fg);
+        assert_eq!(h.get("accel.dense"), Some(&1));
+        assert_eq!(h.get("transpose"), None);
+        assert_eq!(h.get("qnn.dense"), None);
+        // Semantics unchanged.
+        let inp = Tensor::new(vec![1, 16], TensorData::I8(rng.i8_vec(16))).unwrap();
+        let mut m = BTreeMap::new();
+        m.insert("x".to_string(), inp);
+        let o1 = eval(&g, &m).unwrap();
+        let o2 = eval(&fg, &m).unwrap();
+        assert_eq!(o1[0].data, o2[0].data);
+    }
+
+    #[test]
+    fn dce_removes_dead_constants() {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", TensorType::new(vec![2], DType::I8));
+        let _dead =
+            b.constant("dead", Tensor::new(vec![4], TensorData::I8(vec![1; 4])).unwrap());
+        let r = b.op("relu", Op::Relu, &[x]).unwrap();
+        let g = b.outputs(&[r]);
+        let fg = fold_constants(&g).unwrap();
+        assert!(fg.nodes.iter().all(|n| n.name != "dead"));
+    }
+
+    #[test]
+    fn non_constant_paths_untouched() {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", TensorType::new(vec![2, 2], DType::I8));
+        let t = b.op("t", Op::Transpose, &[x]).unwrap();
+        let g = b.outputs(&[t]);
+        let fg = fold_constants(&g).unwrap();
+        assert_eq!(op_histogram(&fg).get("transpose"), Some(&1));
+    }
+}

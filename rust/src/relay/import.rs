@@ -1,0 +1,283 @@
+//! `.qmodel` importer — the DNN-specification input of Fig. 1.
+//!
+//! The Python exporter (`python/compile/export_model.py`) writes quantized
+//! MLP models in a compact little-endian binary format; this importer
+//! reconstructs the fine-grained QNN graph exactly as a TFLite frontend
+//! would parse the model. Format (all little-endian):
+//!
+//! ```text
+//! magic   b"QMDL"            4 bytes
+//! version u8 = 1
+//! n_layers u32, batch u32, input_scale f32
+//! per layer:
+//!   in_dim u32, out_dim u32, requant f32, out_scale f32,
+//!   act u8 (0 = none, 1 = relu, 2 = clip), lo i8, hi i8,
+//!   weights i8[out_dim * in_dim]   (TFLite layout [out, in])
+//!   bias    i32[out_dim]
+//! ```
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::quantize::QuantDense;
+use super::{Graph, GraphBuilder, NodeId, Op, Tensor, TensorData, TensorType};
+use crate::relay::DType;
+
+/// A parsed quantized model.
+#[derive(Debug, Clone)]
+pub struct QModel {
+    pub batch: usize,
+    pub input_scale: f32,
+    pub layers: Vec<QLayer>,
+}
+
+/// One imported layer.
+#[derive(Debug, Clone)]
+pub struct QLayer {
+    pub in_dim: usize,
+    pub out_dim: usize,
+    pub requant: f32,
+    pub out_scale: f32,
+    /// 0 = none, 1 = relu, 2 = clip(lo, hi).
+    pub act: u8,
+    pub lo: i8,
+    pub hi: i8,
+    /// TFLite layout `[out, in]`.
+    pub weight: Vec<i8>,
+    pub bias: Vec<i32>,
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(self.pos + n <= self.buf.len(), "truncated qmodel at byte {}", self.pos);
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn i8(&mut self) -> Result<i8> {
+        Ok(self.take(1)?[0] as i8)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+}
+
+/// Parse a `.qmodel` byte buffer.
+pub fn parse_qmodel(buf: &[u8]) -> Result<QModel> {
+    let mut c = Cursor { buf, pos: 0 };
+    if c.take(4)? != b"QMDL" {
+        bail!("bad qmodel magic");
+    }
+    let version = c.u8()?;
+    ensure!(version == 1, "unsupported qmodel version {version}");
+    let n_layers = c.u32()? as usize;
+    let batch = c.u32()? as usize;
+    let input_scale = c.f32()?;
+    ensure!(n_layers > 0 && n_layers < 1024, "implausible layer count {n_layers}");
+    ensure!(batch > 0, "batch must be positive");
+    let mut layers = Vec::with_capacity(n_layers);
+    for li in 0..n_layers {
+        let in_dim = c.u32()? as usize;
+        let out_dim = c.u32()? as usize;
+        let requant = c.f32()?;
+        let out_scale = c.f32()?;
+        let act = c.u8()?;
+        let lo = c.i8()?;
+        let hi = c.i8()?;
+        ensure!(act <= 2, "layer {li}: bad activation tag {act}");
+        ensure!(in_dim > 0 && out_dim > 0, "layer {li}: zero dim");
+        let wbytes = c.take(out_dim * in_dim)?;
+        let weight: Vec<i8> = wbytes.iter().map(|&b| b as i8).collect();
+        let mut bias = Vec::with_capacity(out_dim);
+        for _ in 0..out_dim {
+            bias.push(i32::from_le_bytes(c.take(4)?.try_into().unwrap()));
+        }
+        layers.push(QLayer { in_dim, out_dim, requant, out_scale, act, lo, hi, weight, bias });
+    }
+    ensure!(c.pos == buf.len(), "trailing bytes in qmodel");
+    // Chain consistency.
+    for w in layers.windows(2) {
+        ensure!(
+            w[0].out_dim == w[1].in_dim,
+            "layer chain mismatch: {} -> {}",
+            w[0].out_dim,
+            w[1].in_dim
+        );
+    }
+    Ok(QModel { batch, input_scale, layers })
+}
+
+/// Load a `.qmodel` file.
+pub fn load_qmodel(path: &std::path::Path) -> Result<QModel> {
+    let buf = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    parse_qmodel(&buf).with_context(|| format!("parsing {}", path.display()))
+}
+
+/// Serialize a model back to bytes (used by tests and by the Rust-side
+/// model tooling; the Python exporter writes the same format).
+pub fn write_qmodel(m: &QModel) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(b"QMDL");
+    out.push(1);
+    out.extend_from_slice(&(m.layers.len() as u32).to_le_bytes());
+    out.extend_from_slice(&(m.batch as u32).to_le_bytes());
+    out.extend_from_slice(&m.input_scale.to_le_bytes());
+    for l in &m.layers {
+        out.extend_from_slice(&(l.in_dim as u32).to_le_bytes());
+        out.extend_from_slice(&(l.out_dim as u32).to_le_bytes());
+        out.extend_from_slice(&l.requant.to_le_bytes());
+        out.extend_from_slice(&l.out_scale.to_le_bytes());
+        out.push(l.act);
+        out.push(l.lo as u8);
+        out.push(l.hi as u8);
+        out.extend(l.weight.iter().map(|&v| v as u8));
+        for &b in &l.bias {
+            out.extend_from_slice(&b.to_le_bytes());
+        }
+    }
+    out
+}
+
+/// Build the fine-grained QNN graph from an imported model (what "TVM's
+/// import module typically parses a quantized operator as", §3.3).
+pub fn to_qnn_graph(m: &QModel) -> Result<Graph> {
+    let mut b = GraphBuilder::new();
+    let mut cur: NodeId =
+        b.input("x", TensorType::new(vec![m.batch, m.layers[0].in_dim], DType::I8));
+    for (i, l) in m.layers.iter().enumerate() {
+        let w = b.constant(
+            format!("w{i}"),
+            Tensor::new(vec![l.out_dim, l.in_dim], TensorData::I8(l.weight.clone()))?,
+        );
+        let bias = b.constant(
+            format!("b{i}"),
+            Tensor::new(vec![l.out_dim], TensorData::I32(l.bias.clone()))?,
+        );
+        let d = b.op(format!("dense{i}"), Op::QnnDense, &[cur, w])?;
+        let a = b.op(format!("bias{i}"), Op::BiasAdd, &[d, bias])?;
+        let r = b.op(format!("requant{i}"), Op::Requantize { scale: l.requant }, &[a])?;
+        cur = match l.act {
+            0 => r,
+            1 => b.op(format!("relu{i}"), Op::Relu, &[r])?,
+            2 => b.op(format!("clip{i}"), Op::Clip { lo: l.lo, hi: l.hi }, &[r])?,
+            _ => unreachable!("validated in parse"),
+        };
+    }
+    let g = b.outputs(&[cur]);
+    g.validate()?;
+    Ok(g)
+}
+
+/// Convert quantizer output ([`QuantDense`]) into a model, for building
+/// `.qmodel`s from Rust (tests, tooling).
+pub fn from_quantized(batch: usize, input_scale: f32, layers: &[QuantDense]) -> QModel {
+    QModel {
+        batch,
+        input_scale,
+        layers: layers
+            .iter()
+            .map(|l| QLayer {
+                in_dim: l.in_dim,
+                out_dim: l.out_dim,
+                requant: l.requant,
+                out_scale: l.out_scale,
+                act: if l.relu { 1 } else { 0 },
+                lo: -128,
+                hi: 127,
+                weight: l.weight_q.clone(),
+                bias: l.bias_q.clone(),
+            })
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn sample_model(rng: &mut Rng) -> QModel {
+        let dims = [12usize, 8, 4];
+        let layers = dims
+            .windows(2)
+            .enumerate()
+            .map(|(i, w)| QLayer {
+                in_dim: w[0],
+                out_dim: w[1],
+                requant: 0.03 + i as f32 * 0.01,
+                out_scale: 0.1,
+                act: if i == 0 { 1 } else { 0 },
+                lo: -128,
+                hi: 127,
+                weight: rng.i8_vec(w[0] * w[1]),
+                bias: (0..w[1]).map(|_| rng.below(100) as i32 - 50).collect(),
+            })
+            .collect();
+        QModel { batch: 2, input_scale: 0.05, layers }
+    }
+
+    #[test]
+    fn roundtrip_write_parse() {
+        let mut rng = Rng::new(31);
+        let m = sample_model(&mut rng);
+        let bytes = write_qmodel(&m);
+        let back = parse_qmodel(&bytes).unwrap();
+        assert_eq!(back.batch, m.batch);
+        assert_eq!(back.layers.len(), 2);
+        for (a, b) in m.layers.iter().zip(&back.layers) {
+            assert_eq!(a.weight, b.weight);
+            assert_eq!(a.bias, b.bias);
+            assert_eq!(a.requant, b.requant);
+            assert_eq!(a.act, b.act);
+        }
+    }
+
+    #[test]
+    fn rejects_corrupt_models() {
+        let mut rng = Rng::new(32);
+        let m = sample_model(&mut rng);
+        let bytes = write_qmodel(&m);
+        assert!(parse_qmodel(&bytes[..bytes.len() - 1]).is_err()); // truncated
+        let mut bad_magic = bytes.clone();
+        bad_magic[0] = b'X';
+        assert!(parse_qmodel(&bad_magic).is_err());
+        let mut extra = bytes.clone();
+        extra.push(0);
+        assert!(parse_qmodel(&extra).is_err()); // trailing bytes
+    }
+
+    #[test]
+    fn qnn_graph_from_model() {
+        let mut rng = Rng::new(33);
+        let m = sample_model(&mut rng);
+        let g = to_qnn_graph(&m).unwrap();
+        let h = crate::relay::legalize::op_histogram(&g);
+        assert_eq!(h["qnn.dense"], 2);
+        assert_eq!(h["relu"], 1);
+        assert_eq!(g.node(g.outputs[0]).ty.shape, vec![2, 4]);
+    }
+
+    #[test]
+    fn chain_mismatch_rejected() {
+        let mut rng = Rng::new(34);
+        let mut m = sample_model(&mut rng);
+        m.layers[1].in_dim = 9;
+        m.layers[1].weight = rng.i8_vec(9 * m.layers[1].out_dim);
+        let bytes = write_qmodel(&m);
+        assert!(parse_qmodel(&bytes).is_err());
+    }
+}

@@ -1,0 +1,366 @@
+//! Legalization pass (paper §3.3, Frontend Configurator).
+//!
+//! TVM imports a quantized dense layer as a *sequence* of fine-grained ops
+//! (QNN dense, bias add, requantize, clip) that cannot lower to a single
+//! TIR function. This pass rewrites each supported sequence into one
+//! generalized operator (`accel.dense`), and — consulting the accelerator's
+//! registered preprocessing — inserts the weight transposition so the
+//! constant-folding pass can fold it at compile time.
+
+use std::collections::BTreeMap;
+
+use anyhow::{ensure, Result};
+
+use crate::isa::Activation;
+
+use super::{Graph, GraphBuilder, Node, NodeId, Op};
+
+/// What the legalizer is allowed to rewrite (derived by the frontend
+/// configurator from the accelerator's functional description).
+#[derive(Debug, Clone, Default)]
+pub struct LegalizeConfig {
+    /// Accept `qnn.dense (+ bias_add) + requantize (+ clip|relu)` chains.
+    pub dense: bool,
+    /// Accept `qnn.conv2d (+ bias_add) + requantize (+ clip|relu)` chains,
+    /// lowering them onto the GEMM path via the registered im2col
+    /// preprocessing (paper §3.2: convolutions reach the accelerator
+    /// through transformations "like transposition, flattening, or
+    /// im2col").
+    pub conv2d: bool,
+    /// Insert the registered weight-layout preprocessing (transpose) so it
+    /// can be constant-folded. The naive BYOC flow sets this too — the
+    /// difference there is that folding never runs.
+    pub insert_weight_transpose: bool,
+}
+
+/// A matched dense sequence.
+struct DenseMatch {
+    dense: NodeId,
+    bias_add: Option<NodeId>,
+    requantize: NodeId,
+    act: Option<NodeId>,
+    /// The final node of the chain (its value is what consumers see).
+    tail: NodeId,
+    scale: f32,
+    activation: Activation,
+}
+
+/// Find maximal dense chains. A chain only matches if every intermediate
+/// value has a single consumer (otherwise fusing would change visible
+/// values).
+fn match_dense_chains(g: &Graph, cfg: &LegalizeConfig) -> Vec<DenseMatch> {
+    let consumers = g.consumers();
+    let single = |id: NodeId| consumers[id].len() == 1;
+    let mut out = Vec::new();
+    for n in &g.nodes {
+        let head_ok = match n.op {
+            Op::QnnDense => cfg.dense,
+            Op::QnnConv2d { .. } => cfg.conv2d,
+            _ => false,
+        };
+        if !head_ok {
+            continue;
+        }
+        let mut cur = n.id;
+        // Optional bias add.
+        let mut bias_add = None;
+        if single(cur) {
+            let next = consumers[cur][0];
+            if matches!(g.node(next).op, Op::BiasAdd)
+                && matches!(g.node(g.node(next).inputs[1]).op, Op::Constant(_))
+            {
+                bias_add = Some(next);
+                cur = next;
+            }
+        }
+        // Mandatory requantize.
+        if !single(cur) {
+            continue;
+        }
+        let rq = consumers[cur][0];
+        let Op::Requantize { scale } = g.node(rq).op else {
+            continue;
+        };
+        cur = rq;
+        // Optional activation.
+        let mut act_node = None;
+        let mut activation = Activation::None;
+        if single(cur) {
+            let next = consumers[cur][0];
+            match g.node(next).op {
+                Op::Clip { lo, hi } => {
+                    act_node = Some(next);
+                    activation = Activation::Clip { lo, hi };
+                }
+                Op::Relu => {
+                    act_node = Some(next);
+                    activation = Activation::Relu;
+                }
+                _ => {}
+            }
+        }
+        let tail = act_node.unwrap_or(rq);
+        out.push(DenseMatch {
+            dense: n.id,
+            bias_add,
+            requantize: rq,
+            act: act_node,
+            tail,
+            scale,
+            activation,
+        });
+    }
+    out
+}
+
+/// Run legalization, returning the rewritten graph. Nodes not involved in
+/// a matched chain are copied unchanged.
+pub fn legalize(g: &Graph, cfg: &LegalizeConfig) -> Result<Graph> {
+    if !cfg.dense && !cfg.conv2d {
+        return Ok(g.clone());
+    }
+    let matches = match_dense_chains(g, cfg);
+    // Nodes absorbed into a fused op (they disappear from the new graph).
+    let mut absorbed: BTreeMap<NodeId, usize> = BTreeMap::new(); // node -> match idx
+    for (mi, m) in matches.iter().enumerate() {
+        absorbed.insert(m.dense, mi);
+        if let Some(b) = m.bias_add {
+            absorbed.insert(b, mi);
+        }
+        absorbed.insert(m.requantize, mi);
+        if let Some(a) = m.act {
+            absorbed.insert(a, mi);
+        }
+    }
+
+    let mut b = GraphBuilder::new();
+    // old id -> new id (for nodes that survive or for chain tails).
+    let mut remap: BTreeMap<NodeId, NodeId> = BTreeMap::new();
+    for n in &g.nodes {
+        if let Some(&mi) = absorbed.get(&n.id) {
+            let m = &matches[mi];
+            if n.id != m.tail {
+                continue; // interior nodes vanish
+            }
+            // Emit the fused op at the tail position.
+            let dense = g.node(m.dense);
+            let mut x = remap[&dense.inputs[0]];
+            let mut w = remap[&dense.inputs[1]];
+            let k_out = *dense.ty.shape.last().unwrap();
+            let bias = match m.bias_add {
+                Some(ba) => remap[&g.node(ba).inputs[1]],
+                None => {
+                    // Synthesize a zero bias so the generalized op has a
+                    // uniform signature.
+                    b.constant(
+                        format!("{}_zero_bias", dense.name),
+                        super::Tensor::new(
+                            vec![k_out],
+                            super::TensorData::I32(vec![0; k_out]),
+                        )?,
+                    )
+                }
+            };
+            // Convolution heads first lower onto the GEMM path: im2col on
+            // the activation (registered preprocessing; host-side when
+            // non-constant) and a flatten of the OHWI weights (folds).
+            let conv_out_shape = if let Op::QnnConv2d { stride, pad } = dense.op {
+                let wshape = g.node(dense.inputs[1]).ty.shape.clone();
+                let (kh, kw) = (wshape[1], wshape[2]);
+                x = b.op(
+                    format!("{}_im2col", dense.name),
+                    Op::Im2col { kh, kw, stride, pad },
+                    &[x],
+                )?;
+                w = b.op(
+                    format!("{}_wflat", dense.name),
+                    Op::Reshape { shape: vec![wshape[0], kh * kw * wshape[3]] },
+                    &[w],
+                )?;
+                Some(dense.ty.shape.clone())
+            } else {
+                None
+            };
+            let mut transposed = false;
+            if cfg.insert_weight_transpose {
+                // Registered preprocessing: accelerator wants W[C,K].
+                w = b.op(format!("{}_wT", dense.name), Op::Transpose, &[w])?;
+                transposed = true;
+            }
+            let mut fused = b.op(
+                format!("{}_fused", dense.name),
+                Op::AccelDense {
+                    scale: m.scale,
+                    act: m.activation,
+                    weight_transposed: transposed,
+                },
+                &[x, w, bias],
+            )?;
+            if let Some(shape) = conv_out_shape {
+                fused = b.op(format!("{}_nhwk", dense.name), Op::Reshape { shape }, &[fused])?;
+            }
+            remap.insert(m.tail, fused);
+            continue;
+        }
+        // Unabsorbed node: copy with remapped inputs.
+        let new_id = match &n.op {
+            Op::Input => b.input(n.name.clone(), n.ty.clone()),
+            Op::Constant(t) => b.constant(n.name.clone(), t.clone()),
+            op => {
+                let ins: Vec<NodeId> = n.inputs.iter().map(|i| remap[i]).collect();
+                b.op(n.name.clone(), op.clone(), &ins)?
+            }
+        };
+        remap.insert(n.id, new_id);
+    }
+    let outs: Vec<NodeId> = g.outputs.iter().map(|o| remap[o]).collect();
+    let out = b.outputs(&outs);
+    out.validate()?;
+    // Shape preservation: the fused tail has the type of the old tail.
+    for (old, new) in &remap {
+        let keep = absorbed.get(old).map(|&mi| matches[mi].tail == *old).unwrap_or(true);
+        if keep {
+            ensure!(
+                g.node(*old).ty == out.node(*new).ty,
+                "legalize changed type of node %{old}"
+            );
+        }
+    }
+    Ok(out)
+}
+
+/// Count nodes per op name (test/diagnostic helper).
+pub fn op_histogram(g: &Graph) -> BTreeMap<&'static str, usize> {
+    let mut h = BTreeMap::new();
+    for n in &g.nodes {
+        *h.entry(n.op.name()).or_insert(0) += 1;
+    }
+    h
+}
+
+#[allow(dead_code)]
+fn _assert_node_sync(_: &Node) {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::relay::eval::eval;
+    use crate::relay::{DType, Tensor, TensorData, TensorType};
+    use crate::util::prng::Rng;
+
+    fn full_cfg() -> LegalizeConfig {
+        LegalizeConfig { dense: true, conv2d: true, insert_weight_transpose: true }
+    }
+
+    /// Build a 2-layer QNN MLP: dense+bias+requant+relu, dense+bias+requant+clip.
+    fn two_layer(rng: &mut Rng) -> (Graph, Tensor) {
+        let (n, c1, c2, c3) = (3, 10, 7, 5);
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", TensorType::new(vec![n, c1], DType::I8));
+        let w1 = b.constant(
+            "w1",
+            Tensor::new(vec![c2, c1], TensorData::I8(rng.i8_vec(c2 * c1))).unwrap(),
+        );
+        let b1 = b.constant(
+            "b1",
+            Tensor::new(
+                vec![c2],
+                TensorData::I32((0..c2).map(|_| rng.below(60) as i32 - 30).collect()),
+            )
+            .unwrap(),
+        );
+        let d1 = b.op("d1", Op::QnnDense, &[x, w1]).unwrap();
+        let a1 = b.op("a1", Op::BiasAdd, &[d1, b1]).unwrap();
+        let r1 = b.op("r1", Op::Requantize { scale: 0.04 }, &[a1]).unwrap();
+        let act1 = b.op("act1", Op::Relu, &[r1]).unwrap();
+        let w2 = b.constant(
+            "w2",
+            Tensor::new(vec![c3, c2], TensorData::I8(rng.i8_vec(c3 * c2))).unwrap(),
+        );
+        let b2 = b.constant(
+            "b2",
+            Tensor::new(
+                vec![c3],
+                TensorData::I32((0..c3).map(|_| rng.below(60) as i32 - 30).collect()),
+            )
+            .unwrap(),
+        );
+        let d2 = b.op("d2", Op::QnnDense, &[act1, w2]).unwrap();
+        let a2 = b.op("a2", Op::BiasAdd, &[d2, b2]).unwrap();
+        let r2 = b.op("r2", Op::Requantize { scale: 0.07 }, &[a2]).unwrap();
+        let act2 = b.op("act2", Op::Clip { lo: -120, hi: 120 }, &[r2]).unwrap();
+        let g = b.outputs(&[act2]);
+        let inp = Tensor::new(vec![n, c1], TensorData::I8(rng.i8_vec(n * c1))).unwrap();
+        (g, inp)
+    }
+
+    #[test]
+    fn fuses_both_layers() {
+        let mut rng = Rng::new(5);
+        let (g, _) = two_layer(&mut rng);
+        let lg = legalize(&g, &full_cfg()).unwrap();
+        let h = op_histogram(&lg);
+        assert_eq!(h.get("accel.dense"), Some(&2));
+        assert_eq!(h.get("qnn.dense"), None);
+        assert_eq!(h.get("qnn.requantize"), None);
+        // Weight transposes inserted for folding.
+        assert_eq!(h.get("transpose"), Some(&2));
+    }
+
+    #[test]
+    fn semantics_preserved() {
+        let mut rng = Rng::new(6);
+        let (g, inp) = two_layer(&mut rng);
+        let lg = legalize(&g, &full_cfg()).unwrap();
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("x".to_string(), inp);
+        let before = eval(&g, &m).unwrap();
+        let after = eval(&lg, &m).unwrap();
+        assert_eq!(before[0].data, after[0].data);
+    }
+
+    #[test]
+    fn dense_without_bias_gets_zero_bias() {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", TensorType::new(vec![2, 4], DType::I8));
+        let w = b.constant(
+            "w",
+            Tensor::new(vec![3, 4], TensorData::I8(vec![1; 12])).unwrap(),
+        );
+        let d = b.op("d", Op::QnnDense, &[x, w]).unwrap();
+        let r = b.op("r", Op::Requantize { scale: 1.0 }, &[d]).unwrap();
+        let g = b.outputs(&[r]);
+        let lg = legalize(&g, &full_cfg()).unwrap();
+        let h = op_histogram(&lg);
+        assert_eq!(h.get("accel.dense"), Some(&1));
+        // Zero bias constant appears.
+        assert!(lg.nodes.iter().any(|n| n.name.ends_with("_zero_bias")));
+    }
+
+    #[test]
+    fn multi_consumer_intermediate_blocks_fusion() {
+        // If the i32 dense output feeds two consumers, fusing would hide a
+        // live value — the chain must not match.
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", TensorType::new(vec![2, 4], DType::I8));
+        let w = b.constant(
+            "w",
+            Tensor::new(vec![3, 4], TensorData::I8(vec![1; 12])).unwrap(),
+        );
+        let d = b.op("d", Op::QnnDense, &[x, w]).unwrap();
+        let r1 = b.op("r1", Op::Requantize { scale: 1.0 }, &[d]).unwrap();
+        let r2 = b.op("r2", Op::Requantize { scale: 0.5 }, &[d]).unwrap();
+        let g = b.outputs(&[r1, r2]);
+        let lg = legalize(&g, &full_cfg()).unwrap();
+        assert_eq!(op_histogram(&lg).get("accel.dense"), None);
+        assert_eq!(op_histogram(&lg).get("qnn.dense"), Some(&1));
+    }
+
+    #[test]
+    fn disabled_config_is_identity() {
+        let mut rng = Rng::new(7);
+        let (g, _) = two_layer(&mut rng);
+        let lg = legalize(&g, &LegalizeConfig::default()).unwrap();
+        assert_eq!(g.nodes.len(), lg.nodes.len());
+    }
+}

@@ -1,0 +1,551 @@
+//! A compact Relay-style graph IR with QNN (quantized) operators.
+//!
+//! This is the substrate for the paper's Frontend Configurator (§3.3): the
+//! importer produces quantized models as *sequences* of fine-grained QNN
+//! ops (dense → bias-add → requantize → clip, as TFLite parses them); the
+//! legalization pass ([`legalize`]) rewrites supported sequences into
+//! generalized accelerator operators; constant folding ([`fold`]) folds
+//! constant-related preprocessing (the UMA fix of §4); and partitioning
+//! ([`partition`]) splits the graph into accelerator and host regions.
+
+pub mod eval;
+pub mod fold;
+pub mod import;
+pub mod legalize;
+pub mod partition;
+pub mod quantize;
+
+use std::fmt;
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::isa::Activation;
+
+/// Element types.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    I8,
+    I32,
+    F32,
+}
+
+impl DType {
+    pub fn bytes(self) -> usize {
+        match self {
+            DType::I8 => 1,
+            DType::I32 | DType::F32 => 4,
+        }
+    }
+}
+
+impl fmt::Display for DType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DType::I8 => write!(f, "i8"),
+            DType::I32 => write!(f, "i32"),
+            DType::F32 => write!(f, "f32"),
+        }
+    }
+}
+
+/// Tensor type: shape + dtype.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorType {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorType {
+    pub fn new(shape: Vec<usize>, dtype: DType) -> TensorType {
+        TensorType { shape, dtype }
+    }
+
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.elems() * self.dtype.bytes()
+    }
+}
+
+impl fmt::Display for TensorType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}[", self.dtype)?;
+        for (i, s) in self.shape.iter().enumerate() {
+            if i > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "{s}")?;
+        }
+        write!(f, "]")
+    }
+}
+
+/// Constant tensor data.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    I8(Vec<i8>),
+    I32(Vec<i32>),
+    F32(Vec<f32>),
+}
+
+impl TensorData {
+    pub fn dtype(&self) -> DType {
+        match self {
+            TensorData::I8(_) => DType::I8,
+            TensorData::I32(_) => DType::I32,
+            TensorData::F32(_) => DType::F32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            TensorData::I8(v) => v.len(),
+            TensorData::I32(v) => v.len(),
+            TensorData::F32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_i8(&self) -> Result<&[i8]> {
+        match self {
+            TensorData::I8(v) => Ok(v),
+            other => Err(anyhow!("expected i8 data, got {}", other.dtype())),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            TensorData::I32(v) => Ok(v),
+            other => Err(anyhow!("expected i32 data, got {}", other.dtype())),
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            TensorData::F32(v) => Ok(v),
+            other => Err(anyhow!("expected f32 data, got {}", other.dtype())),
+        }
+    }
+}
+
+/// A constant tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub ty: TensorType,
+    pub data: TensorData,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: TensorData) -> Result<Tensor> {
+        let elems: usize = shape.iter().product();
+        ensure!(
+            elems == data.len(),
+            "tensor shape {:?} has {elems} elems, data has {}",
+            shape,
+            data.len()
+        );
+        let dtype = data.dtype();
+        Ok(Tensor { ty: TensorType::new(shape, dtype), data })
+    }
+}
+
+/// Graph operators. `Qnn*`, `BiasAdd`, `Requantize`, `Clip` are the
+/// fine-grained ops an importer produces; `AccelDense` is the generalized
+/// operator introduced by legalization (§3.3 Frontend Configurator).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    /// Graph input placeholder.
+    Input,
+    /// Constant (weights, biases).
+    Constant(Tensor),
+    /// Quantized dense: `O[N,K](i32) = Σ_c X[N,C](i8) · Wᵀ` with TFLite
+    /// weight layout `W[K,C]` (i8).
+    QnnDense,
+    /// Quantized 2-D convolution: NHWC activation (i8) × OHWI weights
+    /// `W[K, kh, kw, C]` (i8) → NHWK (i32). Zero padding (symmetric
+    /// quantization: zero point 0).
+    QnnConv2d { stride: usize, pad: usize },
+    /// im2col expansion: NHWC (i8) → `[N·OH·OW, kh·kw·C]` (i8); the
+    /// accelerator-registered preprocessing that lowers convolutions onto
+    /// the GEMM path. Runs on the host when its input is not constant.
+    Im2col { kh: usize, kw: usize, stride: usize, pad: usize },
+    /// `O[N,K](i32) = X[N,K](i32) + B[K](i32)`.
+    BiasAdd,
+    /// int32 → int8 with scale: `round_ties_even(x · scale)` saturated.
+    Requantize { scale: f32 },
+    /// int8 clip to `[lo, hi]`.
+    Clip { lo: i8, hi: i8 },
+    /// int8 relu (`max(x, 0)`).
+    Relu,
+    /// 2-D transpose.
+    Transpose,
+    /// Reshape to a new shape with the same element count.
+    Reshape { shape: Vec<usize> },
+    /// f32 → int8 quantize: `round_ties_even(x / scale)` saturated.
+    Quantize { scale: f32 },
+    /// int8 → f32 dequantize: `x · scale`.
+    Dequantize { scale: f32 },
+    /// Generalized accelerator dense (post-legalization): inputs
+    /// `(X[N,C] i8, W i8, B[K] i32)`, output i8;
+    /// `O = act(requant(X·W(ᵀ) + B, scale))`.
+    ///
+    /// `weight_transposed = false`: W is in importer (TFLite) layout
+    /// `[K, C]`. After the preprocessing pass inserts the registered
+    /// weight transposition (paper Fig. 3a), the flag flips and W is in
+    /// accelerator layout `[C, K]`.
+    AccelDense { scale: f32, act: Activation, weight_transposed: bool },
+}
+
+impl Op {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Op::Input => "input",
+            Op::Constant(_) => "constant",
+            Op::QnnDense => "qnn.dense",
+            Op::QnnConv2d { .. } => "qnn.conv2d",
+            Op::Im2col { .. } => "im2col",
+            Op::BiasAdd => "bias_add",
+            Op::Requantize { .. } => "qnn.requantize",
+            Op::Clip { .. } => "clip",
+            Op::Relu => "relu",
+            Op::Transpose => "transpose",
+            Op::Reshape { .. } => "reshape",
+            Op::Quantize { .. } => "qnn.quantize",
+            Op::Dequantize { .. } => "qnn.dequantize",
+            Op::AccelDense { .. } => "accel.dense",
+        }
+    }
+}
+
+/// Node identifier (index into `Graph::nodes`).
+pub type NodeId = usize;
+
+/// One graph node.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: NodeId,
+    pub name: String,
+    pub op: Op,
+    pub inputs: Vec<NodeId>,
+    pub ty: TensorType,
+}
+
+/// A dataflow graph in topological order (nodes only reference earlier
+/// nodes; enforced at construction).
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    pub nodes: Vec<Node>,
+    pub inputs: Vec<NodeId>,
+    pub outputs: Vec<NodeId>,
+}
+
+impl Graph {
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id]
+    }
+
+    /// Users of each node.
+    pub fn consumers(&self) -> Vec<Vec<NodeId>> {
+        let mut out = vec![Vec::new(); self.nodes.len()];
+        for n in &self.nodes {
+            for &i in &n.inputs {
+                out[i].push(n.id);
+            }
+        }
+        out
+    }
+
+    /// Validate topological order and arities/types.
+    pub fn validate(&self) -> Result<()> {
+        for n in &self.nodes {
+            for &i in &n.inputs {
+                ensure!(i < n.id, "node {} uses later node {}", n.id, i);
+            }
+            if matches!(n.op, Op::Input) {
+                continue;
+            }
+            let inferred = infer_type(&n.op, &self.input_types(n))?;
+            ensure!(
+                inferred == n.ty,
+                "node {} ({}): stored type {} != inferred {}",
+                n.id,
+                n.op.name(),
+                n.ty,
+                inferred
+            );
+        }
+        for &o in &self.outputs {
+            ensure!(o < self.nodes.len(), "output {o} out of range");
+        }
+        Ok(())
+    }
+
+    fn input_types(&self, n: &Node) -> Vec<TensorType> {
+        n.inputs.iter().map(|&i| self.nodes[i].ty.clone()).collect()
+    }
+
+    /// Pretty printer (one line per node).
+    pub fn dump(&self) -> String {
+        let mut s = String::new();
+        for n in &self.nodes {
+            let ins: Vec<String> = n.inputs.iter().map(|i| format!("%{i}")).collect();
+            s.push_str(&format!(
+                "%{} = {}({}) : {}   // {}\n",
+                n.id,
+                n.op.name(),
+                ins.join(", "),
+                n.ty,
+                n.name
+            ));
+        }
+        s.push_str(&format!(
+            "outputs: {}\n",
+            self.outputs.iter().map(|o| format!("%{o}")).collect::<Vec<_>>().join(", ")
+        ));
+        s
+    }
+}
+
+/// Infer the output type of `op` applied to inputs of the given types.
+pub fn infer_type(op: &Op, ins: &[TensorType]) -> Result<TensorType> {
+    let want = |n: usize| -> Result<()> {
+        ensure!(ins.len() == n, "{} expects {n} inputs, got {}", op.name(), ins.len());
+        Ok(())
+    };
+    match op {
+        Op::Input => bail!("input nodes carry their own type"),
+        Op::Constant(t) => {
+            want(0)?;
+            Ok(t.ty.clone())
+        }
+        Op::QnnDense => {
+            want(2)?;
+            let (x, w) = (&ins[0], &ins[1]);
+            ensure!(x.dtype == DType::I8 && w.dtype == DType::I8, "qnn.dense wants i8");
+            ensure!(x.shape.len() == 2 && w.shape.len() == 2, "qnn.dense wants 2-D");
+            ensure!(
+                x.shape[1] == w.shape[1],
+                "qnn.dense reduction mismatch: x {} vs w {}",
+                x.shape[1],
+                w.shape[1]
+            );
+            Ok(TensorType::new(vec![x.shape[0], w.shape[0]], DType::I32))
+        }
+        Op::QnnConv2d { stride, pad } => {
+            want(2)?;
+            let (x, w) = (&ins[0], &ins[1]);
+            ensure!(x.dtype == DType::I8 && w.dtype == DType::I8, "qnn.conv2d wants i8");
+            ensure!(x.shape.len() == 4, "qnn.conv2d wants NHWC input");
+            ensure!(w.shape.len() == 4, "qnn.conv2d wants OHWI weights");
+            let (n, h, wd, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+            let (k, kh, kw, wc) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+            ensure!(c == wc, "qnn.conv2d channel mismatch: {c} vs {wc}");
+            ensure!(*stride >= 1, "stride must be >= 1");
+            ensure!(h + 2 * pad >= kh && wd + 2 * pad >= kw, "kernel larger than input");
+            let oh = (h + 2 * pad - kh) / stride + 1;
+            let ow = (wd + 2 * pad - kw) / stride + 1;
+            Ok(TensorType::new(vec![n, oh, ow, k], DType::I32))
+        }
+        Op::Im2col { kh, kw, stride, pad } => {
+            want(1)?;
+            let x = &ins[0];
+            ensure!(x.dtype == DType::I8, "im2col wants i8");
+            ensure!(x.shape.len() == 4, "im2col wants NHWC input");
+            let (n, h, wd, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+            ensure!(h + 2 * pad >= *kh && wd + 2 * pad >= *kw, "kernel larger than input");
+            let oh = (h + 2 * pad - kh) / stride + 1;
+            let ow = (wd + 2 * pad - kw) / stride + 1;
+            Ok(TensorType::new(vec![n * oh * ow, kh * kw * c], DType::I8))
+        }
+        Op::BiasAdd => {
+            want(2)?;
+            let (x, b) = (&ins[0], &ins[1]);
+            ensure!(x.dtype == DType::I32 && b.dtype == DType::I32, "bias_add wants i32");
+            ensure!(
+                b.shape == vec![*x.shape.last().unwrap()],
+                "bias shape {:?} must match last dim of {:?}",
+                b.shape,
+                x.shape
+            );
+            Ok(x.clone())
+        }
+        Op::Requantize { .. } => {
+            want(1)?;
+            ensure!(ins[0].dtype == DType::I32, "requantize wants i32");
+            Ok(TensorType::new(ins[0].shape.clone(), DType::I8))
+        }
+        Op::Clip { .. } | Op::Relu => {
+            want(1)?;
+            ensure!(ins[0].dtype == DType::I8, "{} wants i8", op.name());
+            Ok(ins[0].clone())
+        }
+        Op::Transpose => {
+            want(1)?;
+            ensure!(ins[0].shape.len() == 2, "transpose wants 2-D");
+            Ok(TensorType::new(
+                vec![ins[0].shape[1], ins[0].shape[0]],
+                ins[0].dtype,
+            ))
+        }
+        Op::Reshape { shape } => {
+            want(1)?;
+            let n: usize = shape.iter().product();
+            ensure!(n == ins[0].elems(), "reshape element count mismatch");
+            Ok(TensorType::new(shape.clone(), ins[0].dtype))
+        }
+        Op::Quantize { .. } => {
+            want(1)?;
+            ensure!(ins[0].dtype == DType::F32, "quantize wants f32");
+            Ok(TensorType::new(ins[0].shape.clone(), DType::I8))
+        }
+        Op::Dequantize { .. } => {
+            want(1)?;
+            ensure!(ins[0].dtype == DType::I8, "dequantize wants i8");
+            Ok(TensorType::new(ins[0].shape.clone(), DType::F32))
+        }
+        Op::AccelDense { weight_transposed, .. } => {
+            want(3)?;
+            let (x, w, b) = (&ins[0], &ins[1], &ins[2]);
+            ensure!(x.dtype == DType::I8 && w.dtype == DType::I8, "accel.dense wants i8");
+            ensure!(b.dtype == DType::I32, "accel.dense bias wants i32");
+            ensure!(
+                x.shape.len() == 2 && w.shape.len() == 2,
+                "accel.dense wants 2-D"
+            );
+            // Importer layout: W[K,C]; accelerator layout: W[C,K].
+            let (red, out) = if *weight_transposed {
+                (w.shape[0], w.shape[1])
+            } else {
+                (w.shape[1], w.shape[0])
+            };
+            ensure!(x.shape[1] == red, "accel.dense reduction mismatch");
+            ensure!(b.shape == vec![out], "accel.dense bias shape");
+            Ok(TensorType::new(vec![x.shape[0], out], DType::I8))
+        }
+    }
+}
+
+/// Convenience builder maintaining topological order and inferred types.
+#[derive(Debug, Default)]
+pub struct GraphBuilder {
+    g: Graph,
+}
+
+impl GraphBuilder {
+    pub fn new() -> GraphBuilder {
+        GraphBuilder::default()
+    }
+
+    pub fn input(&mut self, name: impl Into<String>, ty: TensorType) -> NodeId {
+        let id = self.g.nodes.len();
+        self.g.nodes.push(Node { id, name: name.into(), op: Op::Input, inputs: vec![], ty });
+        self.g.inputs.push(id);
+        id
+    }
+
+    pub fn constant(&mut self, name: impl Into<String>, t: Tensor) -> NodeId {
+        let id = self.g.nodes.len();
+        let ty = t.ty.clone();
+        self.g.nodes.push(Node {
+            id,
+            name: name.into(),
+            op: Op::Constant(t),
+            inputs: vec![],
+            ty,
+        });
+        id
+    }
+
+    pub fn op(&mut self, name: impl Into<String>, op: Op, inputs: &[NodeId]) -> Result<NodeId> {
+        let ins: Vec<TensorType> =
+            inputs.iter().map(|&i| self.g.nodes[i].ty.clone()).collect();
+        let ty = infer_type(&op, &ins)?;
+        let id = self.g.nodes.len();
+        self.g.nodes.push(Node { id, name: name.into(), op, inputs: inputs.to_vec(), ty });
+        Ok(id)
+    }
+
+    /// Peek at a node's type while building.
+    pub fn ty(&self, id: NodeId) -> &TensorType {
+        &self.g.nodes[id].ty
+    }
+
+    pub fn outputs(mut self, outs: &[NodeId]) -> Graph {
+        self.g.outputs = outs.to_vec();
+        self.g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn qnn_layer() -> Graph {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", TensorType::new(vec![4, 8], DType::I8));
+        let w =
+            b.constant("w", Tensor::new(vec![6, 8], TensorData::I8(vec![1; 48])).unwrap());
+        let bias =
+            b.constant("b", Tensor::new(vec![6], TensorData::I32(vec![0; 6])).unwrap());
+        let d = b.op("dense", Op::QnnDense, &[x, w]).unwrap();
+        let ba = b.op("bias", Op::BiasAdd, &[d, bias]).unwrap();
+        let rq = b.op("requant", Op::Requantize { scale: 0.5 }, &[ba]).unwrap();
+        let cl = b.op("clip", Op::Clip { lo: -128, hi: 127 }, &[rq]).unwrap();
+        b.outputs(&[cl])
+    }
+
+    #[test]
+    fn builds_and_validates() {
+        let g = qnn_layer();
+        g.validate().unwrap();
+        assert_eq!(g.nodes.len(), 7);
+        assert_eq!(g.node(g.outputs[0]).ty, TensorType::new(vec![4, 6], DType::I8));
+    }
+
+    #[test]
+    fn type_inference_catches_mismatch() {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", TensorType::new(vec![4, 8], DType::I8));
+        let w =
+            b.constant("w", Tensor::new(vec![6, 9], TensorData::I8(vec![1; 54])).unwrap());
+        assert!(b.op("dense", Op::QnnDense, &[x, w]).is_err());
+    }
+
+    #[test]
+    fn transpose_and_reshape_types() {
+        let mut b = GraphBuilder::new();
+        let w =
+            b.constant("w", Tensor::new(vec![2, 3], TensorData::I8(vec![0; 6])).unwrap());
+        let t = b.op("t", Op::Transpose, &[w]).unwrap();
+        assert_eq!(b.ty(t).shape, vec![3, 2]);
+        let r = b.op("r", Op::Reshape { shape: vec![6] }, &[t]).unwrap();
+        assert_eq!(b.ty(r).shape, vec![6]);
+        assert!(b.op("bad", Op::Reshape { shape: vec![7] }, &[t]).is_err());
+    }
+
+    #[test]
+    fn tensor_shape_data_mismatch() {
+        assert!(Tensor::new(vec![2, 2], TensorData::I8(vec![0; 3])).is_err());
+    }
+
+    #[test]
+    fn dump_mentions_ops() {
+        let g = qnn_layer();
+        let d = g.dump();
+        assert!(d.contains("qnn.dense"));
+        assert!(d.contains("outputs: %6"));
+    }
+
+    #[test]
+    fn consumers_computed() {
+        let g = qnn_layer();
+        let cons = g.consumers();
+        assert_eq!(cons[0], vec![3]); // x feeds dense
+        assert_eq!(cons[3], vec![4]); // dense feeds bias_add
+    }
+}

@@ -1,0 +1,150 @@
+//! Graph partitioning: assign each node to the accelerator or the host
+//! CPU, based on the operator support derived from the accelerator's
+//! functional description (paper §3.3: "the frontend configurator sets up
+//! the graph partitioning ... using predefined supported operators").
+
+use std::collections::BTreeSet;
+
+use anyhow::{ensure, Result};
+
+use super::{Graph, NodeId, Op};
+
+/// Execution target of a node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Target {
+    /// Offloaded to the accelerator.
+    Accel,
+    /// Executed by the host CPU.
+    Host,
+    /// No runtime work (inputs, constants staged in DRAM at load time).
+    None,
+}
+
+/// A partitioned graph: the (unmodified) graph plus per-node targets and
+/// the list of accelerator regions (maximal runs of accel nodes in
+/// topological order).
+#[derive(Debug, Clone)]
+pub struct PartitionedGraph {
+    pub graph: Graph,
+    pub targets: Vec<Target>,
+    pub regions: Vec<Vec<NodeId>>,
+}
+
+impl PartitionedGraph {
+    pub fn accel_nodes(&self) -> usize {
+        self.targets.iter().filter(|t| **t == Target::Accel).count()
+    }
+
+    pub fn host_nodes(&self) -> usize {
+        self.targets.iter().filter(|t| **t == Target::Host).count()
+    }
+}
+
+/// Partition `g` given the set of accelerator-supported operator names
+/// (e.g. `{"accel.dense"}` from the functional description).
+pub fn partition(g: &Graph, supported: &BTreeSet<String>) -> Result<PartitionedGraph> {
+    let mut targets = Vec::with_capacity(g.nodes.len());
+    for n in &g.nodes {
+        let t = match &n.op {
+            Op::Input | Op::Constant(_) => Target::None,
+            op if supported.contains(op.name()) => Target::Accel,
+            _ => Target::Host,
+        };
+        targets.push(t);
+    }
+    // Regions: maximal topological runs of accel nodes (constants between
+    // them do not break a region).
+    let mut regions = Vec::new();
+    let mut cur: Vec<NodeId> = Vec::new();
+    for n in &g.nodes {
+        match targets[n.id] {
+            Target::Accel => cur.push(n.id),
+            Target::Host => {
+                if !cur.is_empty() {
+                    regions.push(std::mem::take(&mut cur));
+                }
+            }
+            Target::None => {}
+        }
+    }
+    if !cur.is_empty() {
+        regions.push(cur);
+    }
+    let pg = PartitionedGraph { graph: g.clone(), targets, regions };
+    ensure!(
+        pg.targets.len() == g.nodes.len(),
+        "partition must cover every node"
+    );
+    Ok(pg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Activation;
+    use crate::relay::{DType, GraphBuilder, Tensor, TensorData, TensorType};
+
+    fn supported() -> BTreeSet<String> {
+        let mut s = BTreeSet::new();
+        s.insert("accel.dense".to_string());
+        s
+    }
+
+    fn accel_dense(b: &mut GraphBuilder, name: &str, x: NodeId, c: usize, k: usize) -> NodeId {
+        let w = b.constant(
+            format!("{name}_w"),
+            Tensor::new(vec![c, k], TensorData::I8(vec![1; c * k])).unwrap(),
+        );
+        let bias = b.constant(
+            format!("{name}_b"),
+            Tensor::new(vec![k], TensorData::I32(vec![0; k])).unwrap(),
+        );
+        b.op(
+            name,
+            Op::AccelDense { scale: 1.0, act: Activation::None, weight_transposed: true },
+            &[x, w, bias],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn contiguous_accel_layers_form_one_region() {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", TensorType::new(vec![1, 8], DType::I8));
+        let l1 = accel_dense(&mut b, "l1", x, 8, 8);
+        let l2 = accel_dense(&mut b, "l2", l1, 8, 4);
+        let g = b.outputs(&[l2]);
+        let pg = partition(&g, &supported()).unwrap();
+        assert_eq!(pg.accel_nodes(), 2);
+        assert_eq!(pg.host_nodes(), 0);
+        assert_eq!(pg.regions.len(), 1);
+        assert_eq!(pg.regions[0].len(), 2);
+    }
+
+    #[test]
+    fn host_op_splits_regions() {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", TensorType::new(vec![8, 8], DType::I8));
+        let l1 = accel_dense(&mut b, "l1", x, 8, 8);
+        // A host-only transpose between the two dense layers.
+        let t = b.op("t", Op::Transpose, &[l1]).unwrap();
+        let l2 = accel_dense(&mut b, "l2", t, 8, 4);
+        let g = b.outputs(&[l2]);
+        let pg = partition(&g, &supported()).unwrap();
+        assert_eq!(pg.regions.len(), 2);
+        assert_eq!(pg.host_nodes(), 1);
+        assert_eq!(pg.targets[t], Target::Host);
+    }
+
+    #[test]
+    fn unsupported_everything_goes_to_host() {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", TensorType::new(vec![2, 2], DType::I8));
+        let t = b.op("t", Op::Transpose, &[x]).unwrap();
+        let g = b.outputs(&[t]);
+        let pg = partition(&g, &BTreeSet::new()).unwrap();
+        assert_eq!(pg.accel_nodes(), 0);
+        assert_eq!(pg.host_nodes(), 1);
+        assert!(pg.regions.is_empty());
+    }
+}

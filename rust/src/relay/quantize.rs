@@ -1,0 +1,223 @@
+//! Post-training symmetric int8 quantization helpers.
+//!
+//! These mirror the quantization performed by the Python exporter
+//! (`python/compile/export_model.py`); keeping both implementations
+//! bit-identical (same scale selection, same round-ties-even) is what lets
+//! the XLA golden model and the Rust compiler agree exactly.
+
+use anyhow::{ensure, Result};
+
+use super::{Graph, GraphBuilder, NodeId, Op, Tensor, TensorData, TensorType};
+use crate::relay::DType;
+
+/// Choose a symmetric scale so `max |x|` maps to 127.
+pub fn symmetric_scale(xs: &[f32]) -> f32 {
+    let maxabs = xs.iter().fold(0f32, |m, &v| m.max(v.abs()));
+    if maxabs == 0.0 {
+        1.0
+    } else {
+        maxabs / 127.0
+    }
+}
+
+/// Quantize to int8 with the given scale (round-ties-even, saturating).
+pub fn quantize_i8(xs: &[f32], scale: f32) -> Vec<i8> {
+    xs.iter()
+        .map(|&v| (v / scale).round_ties_even().clamp(-128.0, 127.0) as i8)
+        .collect()
+}
+
+/// One dense layer of a float MLP.
+#[derive(Debug, Clone)]
+pub struct FloatDense {
+    /// Weights in TFLite layout `[out, in]`.
+    pub weight: Vec<f32>,
+    pub bias: Vec<f32>,
+    pub in_dim: usize,
+    pub out_dim: usize,
+    pub relu: bool,
+}
+
+/// Quantized layer parameters.
+#[derive(Debug, Clone)]
+pub struct QuantDense {
+    pub weight_q: Vec<i8>,
+    pub bias_q: Vec<i32>,
+    pub in_dim: usize,
+    pub out_dim: usize,
+    /// Requantize multiplier `s_in · s_w / s_out`.
+    pub requant: f32,
+    /// Activation scale of this layer's output.
+    pub out_scale: f32,
+    pub relu: bool,
+}
+
+/// Quantize an MLP layer by layer. `act_scales[i]` is the calibration
+/// scale of layer `i`'s *input* activation (so `act_scales[0]` is the model
+/// input scale and `act_scales[n]` the output scale) — in a real flow these
+/// come from calibration data; tests use fixed values.
+pub fn quantize_mlp(layers: &[FloatDense], act_scales: &[f32]) -> Result<Vec<QuantDense>> {
+    ensure!(
+        act_scales.len() == layers.len() + 1,
+        "need one activation scale per boundary"
+    );
+    let mut out = Vec::with_capacity(layers.len());
+    for (i, l) in layers.iter().enumerate() {
+        ensure!(l.weight.len() == l.in_dim * l.out_dim, "weight size");
+        ensure!(l.bias.len() == l.out_dim, "bias size");
+        let s_in = act_scales[i];
+        let s_out = act_scales[i + 1];
+        let s_w = symmetric_scale(&l.weight);
+        let weight_q = quantize_i8(&l.weight, s_w);
+        // Bias scale is s_in · s_w (accumulator domain).
+        let bias_q = l
+            .bias
+            .iter()
+            .map(|&b| (b / (s_in * s_w)).round_ties_even() as i32)
+            .collect();
+        out.push(QuantDense {
+            weight_q,
+            bias_q,
+            in_dim: l.in_dim,
+            out_dim: l.out_dim,
+            requant: s_in * s_w / s_out,
+            out_scale: s_out,
+            relu: l.relu,
+        });
+    }
+    Ok(out)
+}
+
+/// Build the fine-grained QNN graph (dense → bias_add → requantize →
+/// clip/relu per layer) for a quantized MLP — the exact shape a TFLite
+/// importer would produce, and the input to legalization.
+pub fn build_qnn_graph(batch: usize, layers: &[QuantDense]) -> Result<Graph> {
+    ensure!(!layers.is_empty(), "empty model");
+    let mut b = GraphBuilder::new();
+    let mut cur: NodeId =
+        b.input("x", TensorType::new(vec![batch, layers[0].in_dim], DType::I8));
+    for (i, l) in layers.iter().enumerate() {
+        let w = b.constant(
+            format!("w{i}"),
+            Tensor::new(vec![l.out_dim, l.in_dim], TensorData::I8(l.weight_q.clone()))?,
+        );
+        let bias = b.constant(
+            format!("b{i}"),
+            Tensor::new(vec![l.out_dim], TensorData::I32(l.bias_q.clone()))?,
+        );
+        let d = b.op(format!("dense{i}"), Op::QnnDense, &[cur, w])?;
+        let a = b.op(format!("bias{i}"), Op::BiasAdd, &[d, bias])?;
+        let r = b.op(format!("requant{i}"), Op::Requantize { scale: l.requant }, &[a])?;
+        cur = if l.relu {
+            b.op(format!("relu{i}"), Op::Relu, &[r])?
+        } else {
+            r
+        };
+    }
+    let g = b.outputs(&[cur]);
+    g.validate()?;
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::relay::eval::eval;
+    use crate::util::prng::Rng;
+
+    fn random_mlp(rng: &mut Rng, dims: &[usize]) -> Vec<FloatDense> {
+        dims.windows(2)
+            .enumerate()
+            .map(|(i, w)| FloatDense {
+                weight: (0..w[0] * w[1]).map(|_| (rng.f64() as f32 - 0.5) * 0.4).collect(),
+                bias: (0..w[1]).map(|_| (rng.f64() as f32 - 0.5) * 0.2).collect(),
+                in_dim: w[0],
+                out_dim: w[1],
+                relu: i + 2 < dims.len(),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn scale_selection() {
+        assert_eq!(symmetric_scale(&[0.0, 0.0]), 1.0);
+        let s = symmetric_scale(&[-2.54, 1.0]);
+        assert!((s - 2.54 / 127.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn quantize_saturates_and_rounds() {
+        let q = quantize_i8(&[300.0, -300.0, 0.5, -0.5, 1.5], 1.0);
+        // round-ties-even: 0.5 -> 0, -0.5 -> 0, 1.5 -> 2.
+        assert_eq!(q, vec![127, -128, 0, 0, 2]);
+    }
+
+    #[test]
+    fn quantized_mlp_tracks_float_model() {
+        // Quantized inference should approximate the float model within a
+        // few quantization steps.
+        let mut rng = Rng::new(21);
+        let dims = [16usize, 32, 8];
+        let layers = random_mlp(&mut rng, &dims);
+        let act_scales = [0.02f32, 0.05, 0.08];
+        let q = quantize_mlp(&layers, &act_scales).unwrap();
+        let g = build_qnn_graph(1, &q).unwrap();
+
+        // Float reference.
+        let x_f: Vec<f32> = (0..dims[0]).map(|_| rng.f64() as f32 - 0.5).collect();
+        let mut cur = x_f.clone();
+        for l in &layers {
+            let mut next = vec![0f32; l.out_dim];
+            for j in 0..l.out_dim {
+                let mut s = l.bias[j];
+                for c in 0..l.in_dim {
+                    s += cur[c] * l.weight[j * l.in_dim + c];
+                }
+                next[j] = if l.relu { s.max(0.0) } else { s };
+            }
+            cur = next;
+        }
+
+        // Quantized inference through the graph interpreter.
+        let x_q = quantize_i8(&x_f, act_scales[0]);
+        let mut m = std::collections::BTreeMap::new();
+        m.insert(
+            "x".to_string(),
+            Tensor::new(vec![1, dims[0]], TensorData::I8(x_q)).unwrap(),
+        );
+        let out = eval(&g, &m).unwrap();
+        let got: Vec<f32> = out[0]
+            .data
+            .as_i8()
+            .unwrap()
+            .iter()
+            .map(|&v| v as f32 * act_scales[2])
+            .collect();
+        for (a, b) in cur.iter().zip(&got) {
+            assert!(
+                (a - b).abs() < 6.0 * act_scales[2],
+                "float {a} vs quant {b}"
+            );
+        }
+    }
+
+    #[test]
+    fn qnn_graph_has_expected_shape() {
+        let mut rng = Rng::new(3);
+        let layers = random_mlp(&mut rng, &[8, 8, 8]);
+        let q = quantize_mlp(&layers, &[0.1, 0.1, 0.1]).unwrap();
+        let g = build_qnn_graph(4, &q).unwrap();
+        let h = crate::relay::legalize::op_histogram(&g);
+        assert_eq!(h["qnn.dense"], 2);
+        assert_eq!(h["bias_add"], 2);
+        assert_eq!(h["qnn.requantize"], 2);
+        assert_eq!(h["relu"], 1); // only the hidden layer
+    }
+
+    #[test]
+    fn act_scale_arity_checked() {
+        let mut rng = Rng::new(4);
+        let layers = random_mlp(&mut rng, &[4, 4]);
+        assert!(quantize_mlp(&layers, &[0.1]).is_err());
+    }
+}

@@ -1,0 +1,184 @@
+//! XLA/PJRT runtime bridge: load AOT-compiled HLO artifacts (produced by
+//! `python/compile/aot.py` from the JAX + Pallas model) and execute them on
+//! the PJRT CPU client.
+//!
+//! In this system the XLA executables serve as the **golden functional
+//! reference**: the JAX model (whose GEMM hot-spot is the Pallas kernel)
+//! is lowered once at build time to HLO *text* (the interchange format the
+//! pinned xla_extension 0.5.1 accepts — see /opt/xla-example/README.md),
+//! and the Rust side checks every compiled accelerator program's output
+//! against it, closing the loop compiler → simulator ↔ JAX/Pallas.
+//!
+//! Python never runs at deployment time: artifacts are built by
+//! `make artifacts` and this module only loads files.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{ensure, Context, Result};
+
+/// A loaded-and-compiled HLO artifact.
+pub struct GoldenModel {
+    exe: xla::PjRtLoadedExecutable,
+    pub path: PathBuf,
+}
+
+/// The PJRT CPU client (create once, load many artifacts).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it for the CPU.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<GoldenModel> {
+        ensure!(path.exists(), "artifact {} not found — run `make artifacts`", path.display());
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(GoldenModel { exe, path: path.to_path_buf() })
+    }
+}
+
+/// Build an int8 literal of the given shape.
+pub fn literal_i8(data: &[i8], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    ensure!(n == data.len(), "shape {:?} != data len {}", dims, data.len());
+    let mut lit = xla::Literal::create_from_shape(xla::PrimitiveType::S8, dims);
+    lit.copy_raw_from(data).context("filling i8 literal")?;
+    Ok(lit)
+}
+
+/// Build an int32 literal of the given shape.
+pub fn literal_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    ensure!(n == data.len(), "shape {:?} != data len {}", dims, data.len());
+    let mut lit = xla::Literal::create_from_shape(xla::PrimitiveType::S32, dims);
+    lit.copy_raw_from(data).context("filling i32 literal")?;
+    Ok(lit)
+}
+
+/// Build an f32 literal of the given shape.
+pub fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    ensure!(n == data.len(), "shape {:?} != data len {}", dims, data.len());
+    let mut lit = xla::Literal::create_from_shape(xla::PrimitiveType::F32, dims);
+    lit.copy_raw_from(data).context("filling f32 literal")?;
+    Ok(lit)
+}
+
+impl GoldenModel {
+    /// Execute with the given inputs; the artifact returns a 1-tuple (the
+    /// aot exporter lowers with `return_tuple=True`).
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<xla::Literal> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .context("executing golden model")?[0][0]
+            .to_literal_sync()?;
+        Ok(result.to_tuple1()?)
+    }
+
+    /// Execute on int8 inputs, returning the int8 output tensor.
+    pub fn run_i8(&self, inputs: &[(&[i8], &[usize])]) -> Result<Vec<i8>> {
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(d, s)| literal_i8(d, s))
+            .collect::<Result<_>>()?;
+        let out = self.run(&lits)?;
+        Ok(out.to_vec::<i8>()?)
+    }
+}
+
+/// Build the golden model's input literals for a quantized MLP: the int8
+/// activation followed by each layer's `(weight [C,K] i8, bias [K] i32)`
+/// — the parameter order `aot.py` exports.
+pub fn golden_inputs(
+    model: &crate::relay::import::QModel,
+    x: &[i8],
+) -> Result<Vec<xla::Literal>> {
+    ensure!(
+        x.len() == model.batch * model.layers[0].in_dim,
+        "input length mismatch"
+    );
+    let mut lits = vec![literal_i8(x, &[model.batch, model.layers[0].in_dim])?];
+    for l in &model.layers {
+        // .qmodel stores TFLite layout [K,C]; the exported HLO takes [C,K].
+        let mut wt = vec![0i8; l.in_dim * l.out_dim];
+        for k in 0..l.out_dim {
+            for c in 0..l.in_dim {
+                wt[c * l.out_dim + k] = l.weight[k * l.in_dim + c];
+            }
+        }
+        lits.push(literal_i8(&wt, &[l.in_dim, l.out_dim])?);
+        lits.push(literal_i32(&l.bias, &[l.out_dim])?);
+    }
+    Ok(lits)
+}
+
+/// Default artifact directory (`artifacts/` at the repo root, overridable
+/// via `TVM_ACCEL_ARTIFACTS`).
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("TVM_ACCEL_ARTIFACTS") {
+        return PathBuf::from(d);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // These tests need the PJRT CPU client (always available) but not the
+    // Python-built artifacts; artifact round-trips are covered by the
+    // integration tests in rust/tests/ which skip gracefully when
+    // artifacts are absent.
+
+    #[test]
+    fn cpu_client_comes_up() {
+        let rt = Runtime::cpu().unwrap();
+        assert!(rt.platform().to_lowercase().contains("cpu") || !rt.platform().is_empty());
+    }
+
+    #[test]
+    fn i8_literal_roundtrip() {
+        let data: Vec<i8> = (-4..4).collect();
+        let lit = literal_i8(&data, &[2, 4]).unwrap();
+        assert_eq!(lit.to_vec::<i8>().unwrap(), data);
+        assert_eq!(lit.element_count(), 8);
+    }
+
+    #[test]
+    fn f32_literal_roundtrip() {
+        let data = vec![1.0f32, -2.5, 3.25];
+        let lit = literal_f32(&data, &[3]).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), data);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(literal_i8(&[1, 2, 3], &[2, 2]).is_err());
+    }
+
+    #[test]
+    fn missing_artifact_is_a_clean_error() {
+        let rt = Runtime::cpu().unwrap();
+        match rt.load_hlo_text(Path::new("/nonexistent/model.hlo.txt")) {
+            Ok(_) => panic!("load of missing artifact must fail"),
+            Err(e) => assert!(e.to_string().contains("make artifacts")),
+        }
+    }
+}

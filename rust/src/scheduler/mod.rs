@@ -1,0 +1,334 @@
+//! Extended CoSA scheduler (paper §3.1).
+//!
+//! CoSA formulates DNN scheduling for spatial accelerators as constrained
+//! optimization over a binary assignment `X[j, n, i, k]`: prime factor `n`
+//! of loop-bound dimension `j` is mapped to memory/permutation level `i` as
+//! spatial (`k=0`) or temporal (`k=1`). This module implements that
+//! formulation for GEMM workloads with the paper's extensions:
+//!
+//! * **Instruction-set constraint (Eq. 1)** — at the PE-array level the
+//!   spatial *and* temporal bounds per dimension may not exceed `DIM`,
+//!   because one compute instruction covers at most a DIM-sized tile:
+//!   `Σ_{n,k} log(prime_factor_{J,n}) · X_{J,n,I,k} ≤ log(DIM)`.
+//! * **Dataflow constraints** — the spatial dims at the array are fixed by
+//!   the accelerator's dataflow (WS: C×K, OS: N×K), not free variables.
+//! * **Uneven mapping** — CoSA's per-level memory-share array becomes a
+//!   swept tuning parameter: each configuration grants different fractions
+//!   of each on-chip memory to Input/Weight/Output.
+//! * **Double buffering** — when enabled, usable capacity per operand is
+//!   halved so ping/pong tiles both fit.
+//!
+//! The solver ([`solver`]) performs exact branch-and-bound over the
+//! exponent-grouped assignment (equivalent to the MIP, no commercial
+//! solver needed), the analytic cost model lives in [`traffic`], and
+//! [`sweep`] runs the Fig. 2(b) outer loop over dataflows × memory shares
+//! × double buffering, returning candidates for on-hardware (simulator)
+//! profiling.
+
+pub mod solver;
+pub mod sweep;
+pub mod traffic;
+
+use std::fmt;
+
+use crate::arch::{ArchDesc, Dataflow};
+use crate::workload::{Dim, Gemm};
+
+/// Analytic estimates attached to a schedule (used for ranking candidates
+/// before simulator profiling picks the winner).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Estimate {
+    /// Execute-queue busy cycles (preload + compute streaming).
+    pub compute_cycles: f64,
+    /// DMA busy cycles (all operand traffic).
+    pub dma_cycles: f64,
+    /// Host front-end issue cycles.
+    pub issue_cycles: f64,
+    /// Estimated end-to-end latency.
+    pub latency: f64,
+    /// DRAM traffic per operand in bytes (Input, Weight, Output).
+    pub bytes: [f64; 3],
+    /// Spatial utilization of the PE array in [0, 1].
+    pub utilization: f64,
+}
+
+impl Estimate {
+    /// Composite objective (lower is better): latency first, then light
+    /// traffic and engine-occupancy tiebreakers (CoSA's "utilization +
+    /// traffic" style) so overlap-hidden work still prefers fewer
+    /// instructions and less data movement.
+    pub fn cost(&self) -> f64 {
+        self.latency
+            + 1e-3 * (self.bytes[0] + self.bytes[1] + self.bytes[2])
+            + 1e-4 * (self.compute_cycles + self.issue_cycles)
+    }
+}
+
+/// A complete mapping decision for one GEMM on one accelerator
+/// configuration — the information CoSA emits per memory level ("tile
+/// factors and the ordering of tensor dimensions", §3.3 Mapping Generator).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Schedule {
+    pub workload: Gemm,
+    pub dataflow: Dataflow,
+    pub double_buffer: bool,
+    /// Memory shares (Input, Weight, Output) used for this mapping.
+    pub shares: [f64; 3],
+    /// Instruction-level tile `(n0, c0, k0)`: the per-compute-instruction
+    /// bounds; every entry ≤ DIM (Eq. 1).
+    pub insn_tile: [usize; 3],
+    /// On-chip tile `(nt, ct, kt)`: elements resident per operand tile in
+    /// scratchpad/accumulator; multiples of the instruction tile.
+    pub onchip_tile: [usize; 3],
+    /// DRAM-level loop order, outermost first, over on-chip tiles.
+    pub dram_order: [Dim; 3],
+    pub est: Estimate,
+}
+
+impl Schedule {
+    /// Trip count of the DRAM-level loop over dimension `d`.
+    pub fn dram_trips(&self, d: Dim) -> usize {
+        let b = self.workload.bound(d);
+        let t = self.onchip_tile[d.index()];
+        crate::util::ceil_div(b, t)
+    }
+
+    /// Trip count of the on-chip loop over `d` (instruction tiles per
+    /// on-chip tile).
+    pub fn onchip_trips(&self, d: Dim) -> usize {
+        crate::util::ceil_div(self.onchip_tile[d.index()], self.insn_tile[d.index()])
+    }
+
+    /// Validate the schedule against the architecture and workload. These
+    /// are exactly the MIP constraints; property tests check every emitted
+    /// schedule satisfies them.
+    pub fn validate(&self, arch: &ArchDesc) -> anyhow::Result<()> {
+        use anyhow::ensure;
+        let g = &self.workload;
+        for d in Dim::ALL {
+            let j = d.index();
+            // Factor chain: insn | onchip | bound.
+            ensure!(self.insn_tile[j] >= 1, "{d}: empty instruction tile");
+            ensure!(
+                self.onchip_tile[j] % self.insn_tile[j] == 0,
+                "{d}: on-chip tile {} not a multiple of instruction tile {}",
+                self.onchip_tile[j],
+                self.insn_tile[j]
+            );
+            ensure!(
+                self.onchip_tile[j] <= g.bound(d),
+                "{d}: on-chip tile exceeds bound"
+            );
+            // Eq. (1): instruction tile within DIM at the PE-array level.
+            ensure!(
+                self.insn_tile[j] <= arch.constraints.insn_tile_limit,
+                "{d}: instruction tile {} violates Eq.(1) limit {}",
+                self.insn_tile[j],
+                arch.constraints.insn_tile_limit
+            );
+        }
+        // Dataflow: spatial dims live on the array; their instruction tile
+        // is the spatial extent and must fit the physical array.
+        for d in self.dataflow.spatial_dims() {
+            ensure!(
+                self.insn_tile[d.index()] <= arch.pe_dim,
+                "{d}: spatial extent {} exceeds PE dim {}",
+                self.insn_tile[d.index()],
+                arch.pe_dim
+            );
+        }
+        // Capacity constraints (with uneven shares and double buffering).
+        let caps = capacity_rows(arch, &self.shares, self.double_buffer);
+        let rows = footprint_rows(arch, &self.onchip_tile, &self.insn_tile);
+        for (op_idx, (need, cap)) in rows.iter().zip(caps.iter()).enumerate() {
+            ensure!(
+                need <= cap,
+                "operand {op_idx}: tile needs {need} rows, share allows {cap}"
+            );
+        }
+        Ok(())
+    }
+
+    /// Render in CoSA's output style: tile factors + permutation per level.
+    pub fn to_yaml(&self) -> String {
+        let g = &self.workload;
+        let mut s = String::new();
+        s.push_str(&format!("# schedule for GEMM N={} C={} K={}\n", g.n, g.c, g.k));
+        s.push_str(&format!("dataflow: {}\n", self.dataflow));
+        s.push_str(&format!("double_buffer: {}\n", self.double_buffer));
+        s.push_str(&format!(
+            "memory_shares: [{}, {}, {}]\n",
+            self.shares[0], self.shares[1], self.shares[2]
+        ));
+        s.push_str("levels:\n");
+        s.push_str("  - name: PEArray\n");
+        s.push_str(&format!(
+            "    tile: [{}, {}, {}]\n",
+            self.insn_tile[0], self.insn_tile[1], self.insn_tile[2]
+        ));
+        let sd = self.dataflow.spatial_dims();
+        s.push_str(&format!("    spatial: [{}, {}]\n", sd[0], sd[1]));
+        s.push_str("  - name: OnChip\n");
+        s.push_str(&format!(
+            "    tile: [{}, {}, {}]\n",
+            self.onchip_tile[0], self.onchip_tile[1], self.onchip_tile[2]
+        ));
+        s.push_str("  - name: DRAM\n");
+        s.push_str(&format!(
+            "    permutation: [{}, {}, {}]\n",
+            self.dram_order[0], self.dram_order[1], self.dram_order[2]
+        ));
+        s.push_str(&format!(
+            "    trips: [{}, {}, {}]\n",
+            self.dram_trips(self.dram_order[0]),
+            self.dram_trips(self.dram_order[1]),
+            self.dram_trips(self.dram_order[2])
+        ));
+        s
+    }
+}
+
+impl fmt::Display for Schedule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{} {} insn=({},{},{}) onchip=({},{},{}) order={}{}{} db={} est={:.0}cy",
+            self.workload,
+            self.dataflow,
+            self.insn_tile[0],
+            self.insn_tile[1],
+            self.insn_tile[2],
+            self.onchip_tile[0],
+            self.onchip_tile[1],
+            self.onchip_tile[2],
+            self.dram_order[0],
+            self.dram_order[1],
+            self.dram_order[2],
+            self.double_buffer,
+            self.est.latency,
+        )
+    }
+}
+
+/// Per-operand capacity budget in on-chip *rows* (DIM-wide), honoring the
+/// memory-share array and double buffering. Indexed by `Operand::index()`.
+pub fn capacity_rows(arch: &ArchDesc, shares: &[f64; 3], double_buffer: bool) -> [usize; 3] {
+    use crate::workload::Operand;
+    let mut caps = [0usize; 3];
+    for op in Operand::ALL {
+        let li = arch.feed_level(op).expect("validated arch");
+        let level = &arch.levels[li];
+        let row_bytes = arch.pe_dim * level.elem_bytes[op.index()];
+        let total_rows = level.size_bytes / row_bytes;
+        let mut cap = (total_rows as f64 * shares[op.index()]).floor() as usize;
+        if double_buffer {
+            cap /= 2;
+        }
+        caps[op.index()] = cap;
+    }
+    caps
+}
+
+/// Rows occupied by each operand's on-chip tile, matching the codegen's
+/// layout: tiles are stored in column blocks of the *instruction tile*
+/// width (so a compute never straddles blocks). Indexed by
+/// `Operand::index()`. `insn` defaults effectively to DIM-wide blocks when
+/// the instruction tile saturates the array.
+pub fn footprint_rows(arch: &ArchDesc, tile: &[usize; 3], insn: &[usize; 3]) -> [usize; 3] {
+    use crate::util::ceil_div;
+    let _ = arch;
+    let [n, c, k] = *tile;
+    let [_, c0, k0] = *insn;
+    [
+        n * ceil_div(c, c0.max(1)), // Input  n×c int8 rows, c0-wide blocks
+        c * ceil_div(k, k0.max(1)), // Weight c×k int8 rows, k0-wide blocks
+        n * ceil_div(k, k0.max(1)), // Output n×k int32 accumulator rows
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sched(insn: [usize; 3], onchip: [usize; 3]) -> Schedule {
+        Schedule {
+            workload: Gemm::new(64, 64, 64),
+            dataflow: Dataflow::WeightStationary,
+            double_buffer: false,
+            shares: [0.5, 0.5, 1.0],
+            insn_tile: insn,
+            onchip_tile: onchip,
+            dram_order: [Dim::N, Dim::C, Dim::K],
+            est: Estimate::default(),
+        }
+    }
+
+    #[test]
+    fn valid_schedule_passes() {
+        let arch = ArchDesc::gemmini();
+        sched([16, 16, 16], [64, 64, 64]).validate(&arch).unwrap();
+    }
+
+    #[test]
+    fn eq1_violation_caught() {
+        let arch = ArchDesc::gemmini();
+        let s = sched([32, 16, 16], [64, 64, 64]);
+        assert!(s.validate(&arch).is_err());
+    }
+
+    #[test]
+    fn non_multiple_tiles_caught() {
+        let arch = ArchDesc::gemmini();
+        let s = sched([16, 16, 16], [40, 64, 64]);
+        assert!(s.validate(&arch).is_err());
+    }
+
+    #[test]
+    fn capacity_violation_caught() {
+        let arch = ArchDesc::gemmini();
+        // A 512×512 int8 weight tile = 512×32 = 16384 rows > the 8192-row
+        // half-scratchpad share.
+        let s = Schedule {
+            workload: Gemm::new(512, 512, 512),
+            insn_tile: [16, 16, 16],
+            onchip_tile: [16, 512, 512],
+            ..sched([16, 16, 16], [16, 512, 512])
+        };
+        assert!(s.validate(&arch).is_err());
+    }
+
+    #[test]
+    fn capacity_rows_shares_and_db() {
+        let arch = ArchDesc::gemmini();
+        // Scratchpad: 256 KiB / 16 B rows = 16384 rows; accumulator:
+        // 64 KiB / 64 B rows = 1024 rows.
+        let even = capacity_rows(&arch, &[0.5, 0.5, 1.0], false);
+        assert_eq!(even, [8192, 8192, 1024]);
+        let db = capacity_rows(&arch, &[0.5, 0.5, 1.0], true);
+        assert_eq!(db, [4096, 4096, 512]);
+        let uneven = capacity_rows(&arch, &[0.25, 0.75, 1.0], false);
+        assert_eq!(uneven, [4096, 12288, 1024]);
+    }
+
+    #[test]
+    fn footprint_rows_layout() {
+        let arch = ArchDesc::gemmini();
+        // tile (64, 64, 64) with a full 16x16x16 instruction tile: input
+        // 64*ceil(64/16)=256 rows; weight same; output 64*4 = 256 acc rows.
+        let full = [16usize, 16, 16];
+        assert_eq!(footprint_rows(&arch, &[64, 64, 64], &full), [256, 256, 256]);
+        assert_eq!(footprint_rows(&arch, &[1, 640, 128], &full), [40, 5120, 8]);
+        // Narrower instruction tiles waste row space (c0-wide blocks).
+        assert_eq!(footprint_rows(&arch, &[64, 64, 64], &[16, 8, 16]), [512, 256, 256]);
+    }
+
+    #[test]
+    fn yaml_rendering_contains_levels() {
+        let y = sched([16, 16, 16], [64, 64, 64]).to_yaml();
+        assert!(y.contains("PEArray"));
+        assert!(y.contains("permutation"));
+        // And it parses with our own YAML parser.
+        let doc = crate::util::yaml::parse(&y).unwrap();
+        assert_eq!(doc.get("dataflow").unwrap().as_str().unwrap(), "WS");
+    }
+}

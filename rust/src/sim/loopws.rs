@@ -1,0 +1,281 @@
+//! `LOOP_WS` FSM expansion.
+//!
+//! Gemmini's hardware tiling loop takes a full `C[m×n] (+)= A[m×k]·B[k×n]`
+//! problem and generates the mvin/preload/compute/mvout micro-op sequence
+//! itself, double-buffering scratchpad and accumulator tiles. A single RoCC
+//! command therefore replaces thousands of host-issued instructions — this
+//! is the mechanism behind the C toolchain's "efficient loop instruction
+//! invocation" (paper §4). The expansion below reproduces that schedule;
+//! the micro-ops run through the same timing model as ordinary
+//! instructions but with back-to-back issue.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::arch::{ArchDesc, Dataflow};
+use crate::isa::{Activation, Instr, LocalAddr};
+use crate::util::ceil_div;
+
+/// Expand a `LOOP_WS` macro instruction into micro-ops. `st_scale`/`st_act`
+/// are the currently configured requantization parameters, which the FSM
+/// preserves.
+///
+/// Scratchpad layout (rows): A tiles double-buffered at `[0, 2·DIM)`,
+/// B tiles at `[2·DIM, 4·DIM)`. Accumulator tiles double-buffered at
+/// `[0, 2·DIM)`.
+pub fn expand(
+    arch: &ArchDesc,
+    st_scale: f32,
+    st_act: Activation,
+    insn: &Instr,
+) -> Result<Vec<Instr>> {
+    let Instr::LoopWs {
+        a_dram,
+        b_dram,
+        c_dram,
+        d_dram,
+        m,
+        n,
+        k,
+        a_stride,
+        b_stride,
+        c_stride,
+    } = *insn
+    else {
+        bail!("expand() requires a LOOP_WS instruction");
+    };
+    ensure!(m > 0 && n > 0 && k > 0, "LOOP_WS with empty bounds");
+    let dim = arch.pe_dim as u32;
+    let ti = ceil_div(m as usize, dim as usize) as u32;
+    let tj = ceil_div(n as usize, dim as usize) as u32;
+    let tk = ceil_div(k as usize, dim as usize) as u32;
+
+    // Resident-chunk layout (as in Gemmini's sp_tiled_matmul): the whole
+    // A panel (ti×tk DIM-tiles) and B panel (tk×tj DIM-tiles) live in the
+    // scratchpad for the duration of the call; each tile is loaded exactly
+    // once (A when j0 == 0, B when i0 == 0). The caller (tiled_matmul_auto
+    // / the C-toolchain baseline) chooses chunk sizes that fit.
+    let spad_rows = {
+        let lvl = arch
+            .levels
+            .iter()
+            .find(|l| l.name == "Scratchpad")
+            .ok_or_else(|| anyhow::anyhow!("arch has no Scratchpad level"))?;
+        (lvl.size_bytes / arch.pe_dim) as u32
+    };
+    let a_rows = ti * tk * dim;
+    let b_rows = tk * tj * dim;
+    ensure!(
+        a_rows + b_rows <= spad_rows,
+        "LOOP_WS operands exceed scratchpad: {}+{} rows of {spad_rows} —          partition the problem (tiled_matmul_auto)",
+        a_rows,
+        b_rows
+    );
+
+    let mut out = Vec::with_capacity((ti * tj * (3 * tk + 2)) as usize + 4);
+    out.push(Instr::ConfigEx { dataflow: Dataflow::WeightStationary });
+    // Preserve the program-configured requantization; the FSM only fixes
+    // the store stride to the C matrix row stride.
+    out.push(Instr::ConfigSt { stride: c_stride, scale: st_scale, act: st_act });
+
+    let a_slot = |i0: u32, k0: u32| LocalAddr::spad((i0 * tk + k0) * dim);
+    let b_slot = |k0: u32, j0: u32| LocalAddr::spad(a_rows + (k0 * tj + j0) * dim);
+    let acc_slot = |p: u32| p * dim;
+
+    for i0 in 0..ti {
+        let mc = (m - i0 * dim).min(dim) as u16;
+        for j0 in 0..tj {
+            let nc = (n - j0 * dim).min(dim) as u16;
+            let acc_parity = (i0 * tj + j0) % 2;
+            let dst_row = acc_slot(acc_parity);
+            // Bias tile first: Gemmini's repeating-bias mode broadcasts
+            // the [N] int32 vector into every row (DRAM stride 0).
+            let mut has_init = false;
+            if let Some(d) = d_dram {
+                out.push(Instr::ConfigLd { stride: 0 });
+                out.push(Instr::Mvin {
+                    dram: d + j0 as u64 * dim as u64 * 4,
+                    local: LocalAddr::acc(dst_row),
+                    rows: mc,
+                    cols: nc,
+                });
+                has_init = true;
+            }
+            for k0 in 0..tk {
+                let kc = (k - k0 * dim).min(dim) as u16;
+                // A tile: rows mc × cols kc at (i0, k0); loaded once.
+                if j0 == 0 {
+                    out.push(Instr::ConfigLd { stride: a_stride });
+                    out.push(Instr::Mvin {
+                        dram: a_dram
+                            + (i0 as u64 * dim as u64) * a_stride as u64
+                            + k0 as u64 * dim as u64,
+                        local: a_slot(i0, k0),
+                        rows: mc,
+                        cols: kc,
+                    });
+                }
+                // B tile: rows kc × cols nc at (k0, j0); loaded once.
+                if i0 == 0 {
+                    out.push(Instr::ConfigLd { stride: b_stride });
+                    out.push(Instr::Mvin {
+                        dram: b_dram
+                            + (k0 as u64 * dim as u64) * b_stride as u64
+                            + j0 as u64 * dim as u64,
+                        local: b_slot(k0, j0),
+                        rows: kc,
+                        cols: nc,
+                    });
+                }
+                let dst = if has_init || k0 > 0 {
+                    LocalAddr::acc_accumulate(dst_row)
+                } else {
+                    LocalAddr::acc(dst_row)
+                };
+                out.push(Instr::Preload {
+                    local: Some(b_slot(k0, j0)),
+                    dst,
+                    rows: kc,
+                    cols: nc,
+                });
+                out.push(Instr::Compute {
+                    a: a_slot(i0, k0),
+                    d: None,
+                    rows: mc,
+                    cols: kc,
+                    preloaded: true,
+                });
+            }
+            out.push(Instr::Mvout {
+                dram: c_dram + (i0 as u64 * dim as u64) * c_stride as u64 + j0 as u64 * dim as u64,
+                local: LocalAddr::acc(dst_row),
+                rows: mc,
+                cols: nc,
+            });
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::program::Program;
+    use crate::isa::Activation;
+    use crate::sim::memory::Dram;
+    use crate::sim::Simulator;
+    use crate::util::prng::Rng;
+
+    /// Reference int8 GEMM with requantization, mirroring the simulator's
+    /// semantics (bias is a broadcast [n] vector, as in Gemmini's
+    /// repeating-bias mode).
+    fn ref_gemm(
+        a: &[i8],
+        b: &[i8],
+        bias: Option<&[i32]>,
+        m: usize,
+        k: usize,
+        n: usize,
+        scale: f32,
+    ) -> Vec<i8> {
+        let mut out = vec![0i8; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = bias.map_or(0, |d| d[j]);
+                for kk in 0..k {
+                    s += a[i * k + kk] as i32 * b[kk * n + j] as i32;
+                }
+                out[i * n + j] = crate::sim::requantize(s, scale, Activation::None);
+            }
+        }
+        out
+    }
+
+    fn run_loop_ws(m: usize, k: usize, n: usize, bias: bool, seed: u64) {
+        let arch = ArchDesc::gemmini();
+        let sim = Simulator::new(&arch);
+        let mut rng = Rng::new(seed);
+        let a: Vec<i8> = rng.i8_vec(m * k);
+        let b: Vec<i8> = rng.i8_vec(k * n);
+        let d: Vec<i32> = (0..n).map(|_| rng.below(200) as i32 - 100).collect();
+        let scale = 0.03125f32;
+
+        let mut prog = Program::new("loop_ws_test");
+        let ra = prog.layout.alloc("a", (m * k) as u64).unwrap().offset;
+        let rb = prog.layout.alloc("b", (k * n) as u64).unwrap().offset;
+        let rc = prog.layout.alloc("c", (m * n) as u64).unwrap().offset;
+        let rd = prog.layout.alloc("d", (n * 4) as u64).unwrap().offset;
+        let mut dram = Dram::new(prog.layout.total_bytes() as usize + 64);
+        dram.write_i8_slice(ra, &a).unwrap();
+        dram.write_i8_slice(rb, &b).unwrap();
+        dram.write_i32_slice(rd, &d).unwrap();
+
+        prog.push(Instr::ConfigSt { stride: n as u32, scale, act: Activation::None });
+        prog.push(Instr::LoopWs {
+            a_dram: ra,
+            b_dram: rb,
+            c_dram: rc,
+            d_dram: bias.then_some(rd),
+            m: m as u32,
+            n: n as u32,
+            k: k as u32,
+            a_stride: k as u32,
+            b_stride: n as u32,
+            c_stride: n as u32,
+        });
+        prog.push(Instr::Fence);
+        let rep = sim.run(&prog, &mut dram).unwrap();
+
+        let got = dram.read_i8_slice(rc, m * n).unwrap();
+        let want = ref_gemm(&a, &b, bias.then_some(&d).map(|v| &v[..]), m, k, n, scale);
+        assert_eq!(got, want, "loop_ws {m}x{k}x{n} bias={bias}");
+        assert_eq!(rep.macs, (m * k * n) as u64);
+    }
+
+    #[test]
+    fn loop_ws_exact_square() {
+        run_loop_ws(32, 32, 32, false, 1);
+    }
+
+    #[test]
+    fn loop_ws_with_bias() {
+        run_loop_ws(32, 16, 48, true, 2);
+    }
+
+    #[test]
+    fn loop_ws_ragged_edges() {
+        run_loop_ws(33, 17, 19, false, 3);
+        run_loop_ws(7, 70, 5, true, 4);
+        run_loop_ws(1, 640, 128, false, 5);
+    }
+
+    #[test]
+    fn loop_ws_issue_efficiency() {
+        // One LOOP_WS issues far fewer host commands than the equivalent
+        // unrolled program would (that's its entire purpose).
+        let arch = ArchDesc::gemmini();
+        let sim = Simulator::new(&arch);
+        let mut prog = Program::new("eff");
+        let ra = prog.layout.alloc("a", 64 * 64).unwrap().offset;
+        let rb = prog.layout.alloc("b", 64 * 64).unwrap().offset;
+        let rc = prog.layout.alloc("c", 64 * 64).unwrap().offset;
+        let mut dram = Dram::new(prog.layout.total_bytes() as usize + 64);
+        prog.push(Instr::ConfigSt { stride: 64, scale: 1.0, act: Activation::None });
+        prog.push(Instr::LoopWs {
+            a_dram: ra,
+            b_dram: rb,
+            c_dram: rc,
+            d_dram: None,
+            m: 64,
+            n: 64,
+            k: 64,
+            a_stride: 64,
+            b_stride: 64,
+            c_stride: 64,
+        });
+        prog.push(Instr::Fence);
+        let rep = sim.run(&prog, &mut dram).unwrap();
+        assert_eq!(rep.issued_commands, 3); // config_st + loop_ws + fence
+        // Resident panels: each A and B DIM-tile loaded exactly once.
+        assert_eq!(rep.insn_counts["mvin"] as usize, 2 * 4 * 4);
+    }
+}

@@ -1,0 +1,232 @@
+//! Simulator memories: flat byte-addressed DRAM plus the accelerator's
+//! software-managed scratchpad (int8 rows) and accumulator (int32 rows).
+
+use anyhow::{ensure, Result};
+
+/// Byte-addressed main memory with typed little-endian accessors.
+#[derive(Debug, Clone)]
+pub struct Dram {
+    bytes: Vec<u8>,
+}
+
+impl Dram {
+    pub fn new(size: usize) -> Dram {
+        Dram { bytes: vec![0; size] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.bytes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bytes.is_empty()
+    }
+
+    fn check(&self, off: u64, n: usize) -> Result<usize> {
+        let off = off as usize;
+        ensure!(
+            off + n <= self.bytes.len(),
+            "DRAM access out of bounds: +{off:#x}..+{:#x} (size {:#x})",
+            off + n,
+            self.bytes.len()
+        );
+        Ok(off)
+    }
+
+    pub fn read_i8(&self, off: u64) -> Result<i8> {
+        let o = self.check(off, 1)?;
+        Ok(self.bytes[o] as i8)
+    }
+
+    pub fn write_i8(&mut self, off: u64, v: i8) -> Result<()> {
+        let o = self.check(off, 1)?;
+        self.bytes[o] = v as u8;
+        Ok(())
+    }
+
+    pub fn read_i32(&self, off: u64) -> Result<i32> {
+        let o = self.check(off, 4)?;
+        Ok(i32::from_le_bytes(self.bytes[o..o + 4].try_into().unwrap()))
+    }
+
+    pub fn write_i32(&mut self, off: u64, v: i32) -> Result<()> {
+        let o = self.check(off, 4)?;
+        self.bytes[o..o + 4].copy_from_slice(&v.to_le_bytes());
+        Ok(())
+    }
+
+    pub fn read_f32(&self, off: u64) -> Result<f32> {
+        let o = self.check(off, 4)?;
+        Ok(f32::from_le_bytes(self.bytes[o..o + 4].try_into().unwrap()))
+    }
+
+    pub fn write_f32(&mut self, off: u64, v: f32) -> Result<()> {
+        let o = self.check(off, 4)?;
+        self.bytes[o..o + 4].copy_from_slice(&v.to_le_bytes());
+        Ok(())
+    }
+
+    /// Bulk helpers for staging tensors in tests / the runtime bridge.
+    pub fn write_i8_slice(&mut self, off: u64, data: &[i8]) -> Result<()> {
+        let o = self.check(off, data.len())?;
+        for (i, &v) in data.iter().enumerate() {
+            self.bytes[o + i] = v as u8;
+        }
+        Ok(())
+    }
+
+    pub fn read_i8_slice(&self, off: u64, n: usize) -> Result<Vec<i8>> {
+        let o = self.check(off, n)?;
+        Ok(self.bytes[o..o + n].iter().map(|&b| b as i8).collect())
+    }
+
+    pub fn write_i32_slice(&mut self, off: u64, data: &[i32]) -> Result<()> {
+        self.check(off, data.len() * 4)?;
+        for (i, &v) in data.iter().enumerate() {
+            self.write_i32(off + 4 * i as u64, v)?;
+        }
+        Ok(())
+    }
+
+    pub fn read_i32_slice(&self, off: u64, n: usize) -> Result<Vec<i32>> {
+        self.check(off, n * 4)?;
+        (0..n).map(|i| self.read_i32(off + 4 * i as u64)).collect()
+    }
+
+    pub fn write_f32_slice(&mut self, off: u64, data: &[f32]) -> Result<()> {
+        self.check(off, data.len() * 4)?;
+        for (i, &v) in data.iter().enumerate() {
+            self.write_f32(off + 4 * i as u64, v)?;
+        }
+        Ok(())
+    }
+
+    pub fn read_f32_slice(&self, off: u64, n: usize) -> Result<Vec<f32>> {
+        self.check(off, n * 4)?;
+        (0..n).map(|i| self.read_f32(off + 4 * i as u64)).collect()
+    }
+
+    /// Copy `n` bytes within DRAM (regions may not overlap).
+    pub fn copy_bytes(&mut self, src: u64, dst: u64, n: usize) -> Result<()> {
+        let s = self.check(src, n)?;
+        let d = self.check(dst, n)?;
+        ensure!(
+            s + n <= d || d + n <= s || s == d,
+            "overlapping DRAM copy: src {s:#x} dst {d:#x} n {n}"
+        );
+        let tmp: Vec<u8> = self.bytes[s..s + n].to_vec();
+        self.bytes[d..d + n].copy_from_slice(&tmp);
+        Ok(())
+    }
+}
+
+/// On-chip scratchpad: `rows` rows of `dim` int8 elements.
+#[derive(Debug, Clone)]
+pub struct Scratchpad {
+    pub dim: usize,
+    pub rows: usize,
+    data: Vec<i8>,
+}
+
+impl Scratchpad {
+    pub fn new(dim: usize, size_bytes: usize) -> Scratchpad {
+        let rows = size_bytes / dim;
+        Scratchpad { dim, rows, data: vec![0; rows * dim] }
+    }
+
+    pub fn row(&self, r: u32) -> Result<&[i8]> {
+        let r = r as usize;
+        ensure!(r < self.rows, "scratchpad row {r} out of range ({})", self.rows);
+        Ok(&self.data[r * self.dim..(r + 1) * self.dim])
+    }
+
+    pub fn row_mut(&mut self, r: u32) -> Result<&mut [i8]> {
+        let r = r as usize;
+        ensure!(r < self.rows, "scratchpad row {r} out of range ({})", self.rows);
+        Ok(&mut self.data[r * self.dim..(r + 1) * self.dim])
+    }
+}
+
+/// On-chip accumulator: `rows` rows of `dim` int32 partial sums.
+#[derive(Debug, Clone)]
+pub struct Accumulator {
+    pub dim: usize,
+    pub rows: usize,
+    data: Vec<i32>,
+}
+
+impl Accumulator {
+    pub fn new(dim: usize, size_bytes: usize) -> Accumulator {
+        let rows = size_bytes / (dim * 4);
+        Accumulator { dim, rows, data: vec![0; rows * dim] }
+    }
+
+    pub fn row(&self, r: u32) -> Result<&[i32]> {
+        let r = r as usize;
+        ensure!(r < self.rows, "accumulator row {r} out of range ({})", self.rows);
+        Ok(&self.data[r * self.dim..(r + 1) * self.dim])
+    }
+
+    pub fn row_mut(&mut self, r: u32) -> Result<&mut [i32]> {
+        let r = r as usize;
+        ensure!(r < self.rows, "accumulator row {r} out of range ({})", self.rows);
+        Ok(&mut self.data[r * self.dim..(r + 1) * self.dim])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dram_typed_roundtrip() {
+        let mut d = Dram::new(64);
+        d.write_i8(0, -5).unwrap();
+        assert_eq!(d.read_i8(0).unwrap(), -5);
+        d.write_i32(4, -123456).unwrap();
+        assert_eq!(d.read_i32(4).unwrap(), -123456);
+        d.write_f32(8, 3.25).unwrap();
+        assert_eq!(d.read_f32(8).unwrap(), 3.25);
+    }
+
+    #[test]
+    fn dram_bounds_checked() {
+        let mut d = Dram::new(8);
+        assert!(d.read_i32(6).is_err());
+        assert!(d.write_i8(8, 0).is_err());
+        assert!(d.read_i8(7).is_ok());
+    }
+
+    #[test]
+    fn dram_slices() {
+        let mut d = Dram::new(32);
+        d.write_i8_slice(0, &[1, -2, 3]).unwrap();
+        assert_eq!(d.read_i8_slice(0, 3).unwrap(), vec![1, -2, 3]);
+        d.write_i32_slice(4, &[7, -8]).unwrap();
+        assert_eq!(d.read_i32_slice(4, 2).unwrap(), vec![7, -8]);
+    }
+
+    #[test]
+    fn dram_copy_rejects_overlap() {
+        let mut d = Dram::new(32);
+        assert!(d.copy_bytes(0, 4, 8).is_err());
+        assert!(d.copy_bytes(0, 16, 8).is_ok());
+    }
+
+    #[test]
+    fn scratchpad_rows() {
+        let mut sp = Scratchpad::new(16, 256);
+        assert_eq!(sp.rows, 16);
+        sp.row_mut(3).unwrap()[5] = -9;
+        assert_eq!(sp.row(3).unwrap()[5], -9);
+        assert!(sp.row(16).is_err());
+    }
+
+    #[test]
+    fn accumulator_rows() {
+        let mut acc = Accumulator::new(16, 1024);
+        assert_eq!(acc.rows, 16);
+        acc.row_mut(0).unwrap()[0] = 1 << 20;
+        assert_eq!(acc.row(0).unwrap()[0], 1 << 20);
+    }
+}

@@ -1,0 +1,788 @@
+//! Cycle-level, functionally exact simulator for Gemmini-class
+//! accelerators.
+//!
+//! The simulator plays the role of the paper's cycle-accurate Verilator
+//! setup (§4): it executes [`crate::isa::Program`]s *functionally* (real
+//! int8/int32 arithmetic, so outputs can be checked against the XLA golden
+//! model) while a decoupled-queue timing model ([`timing`]) accounts
+//! cycles with the same structural bottlenecks as the RTL — DMA bandwidth,
+//! systolic-array occupancy, per-command issue overhead, hazards on
+//! scratchpad/accumulator rows, and host-side preprocessing cost.
+
+pub mod loopws;
+pub mod memory;
+pub mod report;
+pub mod timing;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::arch::{ArchDesc, Dataflow};
+use crate::isa::program::{HostOp, Item, Program};
+use crate::isa::{Activation, Instr, LocalAddr, Space};
+use crate::util::ceil_div;
+use memory::{Accumulator, Dram, Scratchpad};
+use report::RunReport;
+use timing::{Access, QueueId, Timing};
+
+/// Maximum rows a single `MVIN`/`MVOUT` may move (DMA command limit).
+pub const MAX_DMA_ROWS: u16 = 4096;
+
+/// Requantize an int32 accumulator value to int8 with round-to-nearest-even
+/// (matches `jnp.round`; keep in sync with `python/compile/kernels/ref.py`).
+#[inline]
+pub fn requantize(v: i32, scale: f32, act: Activation) -> i8 {
+    let mut x = (v as f32 * scale).round_ties_even();
+    if let Activation::Relu = act {
+        x = x.max(0.0);
+    }
+    let mut q = x.clamp(-128.0, 127.0) as i32;
+    if let Activation::Clip { lo, hi } = act {
+        q = q.clamp(lo as i32, hi as i32);
+    }
+    q as i8
+}
+
+/// Mutable machine state during execution.
+struct ExecState {
+    dim: usize,
+    spad: Scratchpad,
+    acc: Accumulator,
+    ld_stride: u32,
+    st_stride: u32,
+    st_scale: f32,
+    st_act: Activation,
+    dataflow: Dataflow,
+    /// Stationary tile (weights under WS), row-major dim×dim.
+    b_tile: Vec<i8>,
+    b_rows: u16,
+    b_cols: u16,
+    /// Accumulator destination named by the last PRELOAD.
+    dst: Option<LocalAddr>,
+    /// Under OS: C-tile column count carried by the PRELOAD.
+    os_cols: u16,
+}
+
+impl ExecState {
+    fn new(arch: &ArchDesc) -> Result<ExecState> {
+        let dim = arch.pe_dim;
+        let spad_level = arch
+            .levels
+            .iter()
+            .find(|l| l.name == "Scratchpad")
+            .context("arch has no Scratchpad level")?;
+        let acc_level = arch
+            .levels
+            .iter()
+            .find(|l| l.name == "Accumulator")
+            .context("arch has no Accumulator level")?;
+        Ok(ExecState {
+            dim,
+            spad: Scratchpad::new(dim, spad_level.size_bytes),
+            acc: Accumulator::new(dim, acc_level.size_bytes),
+            ld_stride: 0,
+            st_stride: 0,
+            st_scale: 1.0,
+            st_act: Activation::None,
+            dataflow: Dataflow::WeightStationary,
+            b_tile: vec![0; dim * dim],
+            b_rows: 0,
+            b_cols: 0,
+            dst: None,
+            os_cols: 0,
+        })
+    }
+}
+
+/// The simulator: construct once per architecture, run many programs.
+pub struct Simulator {
+    pub arch: ArchDesc,
+    /// Verify every local access against configured sizes (on by default;
+    /// benches may disable for the perf hot loop once a program is known
+    /// good).
+    pub check_bounds: bool,
+}
+
+impl Simulator {
+    pub fn new(arch: &ArchDesc) -> Simulator {
+        Simulator { arch: arch.clone(), check_bounds: true }
+    }
+
+    /// Execute `prog` against `dram`, returning the timing/traffic report.
+    /// DRAM contents are mutated in place (outputs land in their regions).
+    pub fn run(&self, prog: &Program, dram: &mut Dram) -> Result<RunReport> {
+        let mut st = ExecState::new(&self.arch)?;
+        let mut t = Timing::new(st.spad.rows, st.acc.rows);
+        let mut rep = RunReport::default();
+        let issue = self.arch.host.insn_issue_cycles;
+
+        for (idx, item) in prog.items.iter().enumerate() {
+            match item {
+                Item::Accel(Instr::LoopWs { .. }) => {
+                    let Item::Accel(macro_insn) = item else { unreachable!() };
+                    rep.count("loop_ws");
+                    rep.issued_commands += 1;
+                    let micro = loopws::expand(&self.arch, st.st_scale, st.st_act, macro_insn)
+                        .with_context(|| format!("expanding LOOP_WS at item {idx}"))?;
+                    // The macro command itself takes a few issue slots
+                    // (Gemmini splits LOOP_WS across several RoCC words).
+                    let mut gap = 4 * issue;
+                    for m in &micro {
+                        // FSM-generated micro-ops issue back-to-back.
+                        self.exec_instr(&mut st, dram, &mut t, &mut rep, m, gap, true)
+                            .with_context(|| format!("LOOP_WS micro-op {m}"))?;
+                        gap = 1;
+                    }
+                }
+                Item::Accel(i) => {
+                    rep.issued_commands += 1;
+                    self.exec_instr(&mut st, dram, &mut t, &mut rep, i, issue, false)
+                        .with_context(|| format!("item {idx}: {i}"))?;
+                }
+                Item::Host(h) => {
+                    self.exec_host(dram, &mut t, &mut rep, h)
+                        .with_context(|| format!("item {idx}: {h:?}"))?;
+                }
+            }
+        }
+        // Account trailing in-flight work even without a final fence.
+        rep.cycles = t.now();
+        rep.host_cycles = t.host_cycles;
+        Ok(rep)
+    }
+
+    /// (total latency, engine occupancy) of one DMA transfer: the fixed
+    /// request latency pipelines across transfers; per-row overhead and
+    /// data movement occupy the engine.
+    fn dma_latency(&self, rows: u64, bytes: u64) -> (u64, u64) {
+        let occ = rows * self.arch.dma.per_row_overhead
+            + ceil_div(bytes as usize, self.arch.dma.bytes_per_cycle) as u64;
+        (self.arch.dma.request_latency + occ, occ)
+    }
+
+    fn exec_instr(
+        &self,
+        st: &mut ExecState,
+        dram: &mut Dram,
+        t: &mut Timing,
+        rep: &mut RunReport,
+        i: &Instr,
+        issue_gap: u64,
+        from_fsm: bool,
+    ) -> Result<()> {
+        if !from_fsm {
+            rep.count(i.mnemonic());
+        } else if !matches!(i, Instr::LoopWs { .. }) {
+            rep.count(i.mnemonic());
+        }
+        let dim = st.dim;
+        match *i {
+            Instr::ConfigEx { dataflow } => {
+                st.dataflow = dataflow;
+                t.step(QueueId::Ex, issue_gap, 1, None, &[]);
+            }
+            Instr::ConfigLd { stride } => {
+                st.ld_stride = stride;
+                t.step(QueueId::Load, issue_gap, 1, None, &[]);
+            }
+            Instr::ConfigSt { stride, scale, act } => {
+                st.st_stride = stride;
+                st.st_scale = scale;
+                st.st_act = act;
+                t.step(QueueId::Store, issue_gap, 1, None, &[]);
+            }
+            Instr::Mvin { dram: base, local, rows, cols } => {
+                ensure!(rows > 0 && cols > 0, "empty mvin");
+                ensure!(rows <= MAX_DMA_ROWS, "mvin rows {rows} exceeds DMA limit");
+                ensure!(cols as usize <= dim, "mvin cols {cols} exceeds DIM {dim}");
+                let stride = st.ld_stride as u64;
+                // stride 0 = broadcast: every row reads the same DRAM row
+                // (Gemmini's repeating-bias load).
+                ensure!(
+                    stride == 0 || stride >= cols as u64,
+                    "mvin stride {stride} < cols {cols}"
+                );
+                let bytes = match local.space {
+                    Space::Spad => {
+                        for r in 0..rows as u64 {
+                            let src = base + r * stride;
+                            let data = dram.read_i8_slice(src, cols as usize)?;
+                            let row = st.spad.row_mut(local.row + r as u32)?;
+                            row[..cols as usize].copy_from_slice(&data);
+                            // Zero-fill the remainder of the row so partial
+                            // tiles never read stale data.
+                            row[cols as usize..dim].fill(0);
+                        }
+                        rows as u64 * cols as u64
+                    }
+                    Space::Acc => {
+                        for r in 0..rows as u64 {
+                            let src = base + r * stride * 4;
+                            let data = dram.read_i32_slice(src, cols as usize)?;
+                            let row = st.acc.row_mut(local.row + r as u32)?;
+                            if local.accumulate {
+                                for (dst, v) in row.iter_mut().zip(&data) {
+                                    *dst = dst.wrapping_add(*v);
+                                }
+                            } else {
+                                row[..cols as usize].copy_from_slice(&data);
+                                row[cols as usize..dim].fill(0);
+                            }
+                        }
+                        rows as u64 * cols as u64 * 4
+                    }
+                };
+                rep.dram_read_bytes += bytes;
+                let (lat, occ) = self.dma_latency(rows as u64, bytes);
+                t.step(
+                    QueueId::Load,
+                    issue_gap,
+                    lat,
+                    Some(occ),
+                    &[Access::write(local.space, local.row, rows as u32)],
+                );
+            }
+            Instr::Mvout { dram: base, local, rows, cols } => {
+                ensure!(rows > 0 && cols > 0, "empty mvout");
+                ensure!(cols as usize <= dim, "mvout cols {cols} exceeds DIM {dim}");
+                let stride = st.st_stride as u64;
+                ensure!(stride >= cols as u64, "mvout stride {stride} < cols {cols}");
+                let bytes_onchip = match local.space {
+                    Space::Acc => {
+                        for r in 0..rows as u64 {
+                            let dst = base + r * stride;
+                            let row = st.acc.row(local.row + r as u32)?.to_vec();
+                            for c in 0..cols as usize {
+                                let q = requantize(row[c], st.st_scale, st.st_act);
+                                dram.write_i8(dst + c as u64, q)?;
+                            }
+                        }
+                        rows as u64 * cols as u64 * 4
+                    }
+                    Space::Spad => {
+                        for r in 0..rows as u64 {
+                            let dst = base + r * stride;
+                            let row = st.spad.row(local.row + r as u32)?.to_vec();
+                            for c in 0..cols as usize {
+                                dram.write_i8(dst + c as u64, row[c])?;
+                            }
+                        }
+                        rows as u64 * cols as u64
+                    }
+                };
+                rep.dram_write_bytes += rows as u64 * cols as u64;
+                let (lat, occ) = self.dma_latency(rows as u64, bytes_onchip);
+                t.step(
+                    QueueId::Store,
+                    issue_gap,
+                    lat,
+                    Some(occ),
+                    &[Access::read(local.space, local.row, rows as u32)],
+                );
+            }
+            Instr::Preload { local, dst, rows, cols } => {
+                ensure!(rows as usize <= dim && cols as usize <= dim, "preload tile > DIM");
+                ensure!(dst.space == Space::Acc, "preload dst must be accumulator");
+                let mut accesses = vec![];
+                match (st.dataflow, local) {
+                    (Dataflow::WeightStationary, Some(b)) => {
+                        ensure!(b.space == Space::Spad, "WS preload source must be scratchpad");
+                        st.b_tile.iter_mut().for_each(|v| *v = 0);
+                        for r in 0..rows as u32 {
+                            let row = st.spad.row(b.row + r)?;
+                            st.b_tile[r as usize * dim..r as usize * dim + cols as usize]
+                                .copy_from_slice(&row[..cols as usize]);
+                        }
+                        st.b_rows = rows;
+                        st.b_cols = cols;
+                        accesses.push(Access::read(Space::Spad, b.row, rows as u32));
+                    }
+                    (Dataflow::WeightStationary, None) => {
+                        st.b_tile.iter_mut().for_each(|v| *v = 0);
+                        st.b_rows = rows;
+                        st.b_cols = cols;
+                    }
+                    (Dataflow::OutputStationary, _) => {
+                        // OS: preload names the C tile; zero it unless the
+                        // destination requests accumulation. rows/cols give
+                        // the C tile shape.
+                        st.os_cols = cols;
+                        if !dst.accumulate {
+                            for r in 0..rows as u32 {
+                                let row = st.acc.row_mut(dst.row + r)?;
+                                row.iter_mut().for_each(|v| *v = 0);
+                            }
+                            accesses.push(Access::write(Space::Acc, dst.row, rows as u32));
+                        }
+                    }
+                }
+                st.dst = Some(dst);
+                // WS: the PE array double-buffers its weight registers, so
+                // streaming the next stationary tile overlaps the previous
+                // compute — a preload costs only its issue beat. OS:
+                // binding a new output tile drains the in-PE accumulators
+                // first (a full-DIM cost) — this is why WS is Gemmini's
+                // performant configuration.
+                let lat = match st.dataflow {
+                    Dataflow::WeightStationary => 4,
+                    Dataflow::OutputStationary => rows as u64 + dim as u64,
+                };
+                t.step(QueueId::Ex, issue_gap, lat, None, &accesses);
+            }
+            Instr::Compute { a, d, rows, cols, preloaded } => {
+                ensure!(a.space == Space::Spad, "compute A must come from scratchpad");
+                ensure!(rows as usize <= dim && cols as usize <= dim, "compute tile > DIM");
+                let dst = st.dst.context("compute without preceding preload")?;
+                let _ = preloaded; // B persistence is implicit in st.b_tile.
+                let mut accesses =
+                    vec![Access::read(Space::Spad, a.row, rows as u32)];
+                let os_tile: Vec<i8>;
+                let (b_cols, b_tile): (usize, &[i8]) = match st.dataflow {
+                    Dataflow::WeightStationary => {
+                        ensure!(
+                            cols == st.b_rows,
+                            "compute cols {cols} != preloaded B rows {}",
+                            st.b_rows
+                        );
+                        (st.b_cols as usize, &st.b_tile)
+                    }
+                    Dataflow::OutputStationary => {
+                        // OS: the second operand addresses a B tile in the
+                        // scratchpad (Gemmini's compute rs2 under OS).
+                        let b = d.context("OS compute requires B operand")?;
+                        ensure!(b.space == Space::Spad, "OS compute B must be scratchpad");
+                        let b_rows = cols as usize;
+                        let b_cols = st.os_cols as usize;
+                        let mut tile = vec![0i8; b_rows * dim];
+                        for r in 0..b_rows as u32 {
+                            let row = st.spad.row(b.row + r)?;
+                            tile[r as usize * dim..(r as usize + 1) * dim]
+                                .copy_from_slice(row);
+                        }
+                        accesses.push(Access::read(Space::Spad, b.row, b_rows as u32));
+                        os_tile = tile;
+                        (b_cols, os_tile.as_slice())
+                    }
+                };
+                // Matmul: C[rows × b_cols] (+)= A[rows × cols] · B[cols × b_cols].
+                // k-middle / j-inner loop order so the inner accumulation
+                // vectorizes (hot path: see EXPERIMENTS.md §Perf).
+                let overwrite = !dst.accumulate && st.dataflow == Dataflow::WeightStationary;
+                // Split-borrow scratchpad (A source) and accumulator (C
+                // destination) so no per-compute staging copy is needed.
+                let spad = &st.spad;
+                let acc = &mut st.acc;
+                for r in 0..rows as usize {
+                    let a_row = spad.row(a.row + r as u32)?;
+                    let acc_row = acc.row_mut(dst.row + r as u32)?;
+                    if overwrite {
+                        acc_row.fill(0);
+                    }
+                    for kk in 0..cols as usize {
+                        let av = a_row[kk] as i32;
+                        if av == 0 {
+                            continue;
+                        }
+                        let b_row = &b_tile[kk * dim..kk * dim + b_cols];
+                        for (acc, &bv) in acc_row[..b_cols].iter_mut().zip(b_row) {
+                            *acc = acc.wrapping_add(av * bv as i32);
+                        }
+                    }
+                }
+                // Bias operand under WS (unused by our codegen, which loads
+                // bias via mvin-to-accumulator, but part of the ISA).
+                if st.dataflow == Dataflow::WeightStationary {
+                    if let Some(dd) = d {
+                        ensure!(dd.space == Space::Acc, "WS compute D must be accumulator");
+                        for r in 0..rows as u32 {
+                            let drow = st.acc.row(dd.row + r)?.to_vec();
+                            let crow = st.acc.row_mut(dst.row + r)?;
+                            for j in 0..b_cols {
+                                crow[j] = crow[j].wrapping_add(drow[j]);
+                            }
+                        }
+                        accesses.push(Access::read(Space::Acc, dd.row, rows as u32));
+                    }
+                }
+                accesses.push(Access::write(Space::Acc, dst.row, rows as u32));
+                rep.macs += rows as u64 * cols as u64 * b_cols as u64;
+                // Systolic timing: `rows` beats to stream A plus a small
+                // pipeline overhead. Back-to-back computes keep the array
+                // full, so the full fill/drain cost is not paid per tile
+                // (it shows up in the preload/flush costs instead).
+                let lat = rows as u64 + 8;
+                t.step(QueueId::Ex, issue_gap, lat, None, &accesses);
+            }
+            Instr::LoopWs { .. } => bail!("nested LOOP_WS is not supported"),
+            Instr::Fence => {
+                t.fence(self.arch.host.fence_cycles);
+            }
+            Instr::Flush => {
+                st.b_tile.iter_mut().for_each(|v| *v = 0);
+                st.b_rows = 0;
+                st.b_cols = 0;
+                t.step(QueueId::Ex, issue_gap, dim as u64, None, &[]);
+            }
+        }
+        Ok(())
+    }
+
+    fn exec_host(
+        &self,
+        dram: &mut Dram,
+        t: &mut Timing,
+        rep: &mut RunReport,
+        h: &HostOp,
+    ) -> Result<()> {
+        rep.count(h.mnemonic());
+        // Functional execution.
+        match *h {
+            HostOp::TransposeI8 { src, dst, rows, cols } => {
+                let data = dram.read_i8_slice(src, rows * cols)?;
+                let mut out = vec![0i8; rows * cols];
+                for r in 0..rows {
+                    for c in 0..cols {
+                        out[c * rows + r] = data[r * cols + c];
+                    }
+                }
+                dram.write_i8_slice(dst, &out)?;
+            }
+            HostOp::QuantizeF32 { src, dst, n, scale } => {
+                let v = dram.read_f32_slice(src, n)?;
+                let q: Vec<i8> = v
+                    .iter()
+                    .map(|&x| (x / scale).round_ties_even().clamp(-128.0, 127.0) as i8)
+                    .collect();
+                dram.write_i8_slice(dst, &q)?;
+            }
+            HostOp::DequantizeI8 { src, dst, n, scale } => {
+                let v = dram.read_i8_slice(src, n)?;
+                let f: Vec<f32> = v.iter().map(|&x| x as f32 * scale).collect();
+                dram.write_f32_slice(dst, &f)?;
+            }
+            HostOp::RequantizeI32 { src, dst, n, scale } => {
+                let v = dram.read_i32_slice(src, n)?;
+                let q: Vec<i8> = v
+                    .iter()
+                    .map(|&x| requantize(x, scale, Activation::None))
+                    .collect();
+                dram.write_i8_slice(dst, &q)?;
+            }
+            HostOp::WidenI8ToI32 { src, dst, n } => {
+                for i in 0..n {
+                    let v = dram.read_i8(src + i as u64)?;
+                    dram.write_i32(dst + 4 * i as u64, v as i32)?;
+                }
+            }
+            HostOp::Memcpy { src, dst, bytes } => {
+                dram.copy_bytes(src, dst, bytes)?;
+            }
+            HostOp::AddI32 { a, b, dst, n } => {
+                for i in 0..n {
+                    let x = dram.read_i32(a + 4 * i as u64)?;
+                    let y = dram.read_i32(b + 4 * i as u64)?;
+                    dram.write_i32(dst + 4 * i as u64, x.wrapping_add(y))?;
+                }
+            }
+            HostOp::BiasAddI32 { x, bias, dst, n, k } => {
+                for i in 0..n {
+                    for j in 0..k {
+                        let v = dram.read_i32(x + 4 * (i * k + j) as u64)?;
+                        let b = dram.read_i32(bias + 4 * j as u64)?;
+                        dram.write_i32(dst + 4 * (i * k + j) as u64, v.wrapping_add(b))?;
+                    }
+                }
+            }
+            HostOp::MatmulI8 { a, b, c, n, c_dim, k } => {
+                for i in 0..n {
+                    for j in 0..k {
+                        let mut s = 0i32;
+                        for kk in 0..c_dim {
+                            let x = dram.read_i8(a + (i * c_dim + kk) as u64)? as i32;
+                            let y = dram.read_i8(b + (kk * k + j) as u64)? as i32;
+                            s += x * y;
+                        }
+                        dram.write_i32(c + 4 * (i * k + j) as u64, s)?;
+                    }
+                }
+            }
+            HostOp::ClipI8 { buf, n, lo, hi } => {
+                for i in 0..n {
+                    let v = dram.read_i8(buf + i as u64)?;
+                    dram.write_i8(buf + i as u64, v.clamp(lo, hi))?;
+                }
+            }
+            HostOp::Im2col { src, dst, n, h, w, c, kh, kw, stride, pad } => {
+                let x = dram.read_i8_slice(src, n * h * w * c)?;
+                let oh = (h + 2 * pad - kh) / stride + 1;
+                let ow = (w + 2 * pad - kw) / stride + 1;
+                let cols = kh * kw * c;
+                let mut out = vec![0i8; n * oh * ow * cols];
+                for b in 0..n {
+                    for oy in 0..oh {
+                        for ox in 0..ow {
+                            let row = ((b * oh + oy) * ow + ox) * cols;
+                            for dy in 0..kh {
+                                for dx in 0..kw {
+                                    let iy = (oy * stride + dy) as isize - pad as isize;
+                                    let ix = (ox * stride + dx) as isize - pad as isize;
+                                    if iy < 0
+                                        || ix < 0
+                                        || iy >= h as isize
+                                        || ix >= w as isize
+                                    {
+                                        continue; // zero padding
+                                    }
+                                    let s = ((b * h + iy as usize) * w + ix as usize) * c;
+                                    let d = row + (dy * kw + dx) * c;
+                                    out[d..d + c].copy_from_slice(&x[s..s + c]);
+                                }
+                            }
+                        }
+                    }
+                }
+                dram.write_i8_slice(dst, &out)?;
+            }
+        }
+        // Timing: fixed dispatch overhead plus per-element costs.
+        let cost = 10
+            + h.alu_elems() * self.arch.host.cycles_per_elem_alu
+            + h.moved_elems() * self.arch.host.cycles_per_elem_move;
+        t.host(cost);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::program::Program;
+
+    fn arch() -> ArchDesc {
+        ArchDesc::gemmini()
+    }
+
+    /// Hand-written single-tile GEMM: C[2x2] = A[2x3] · B[3x2], requantize
+    /// scale 1.0 (identity), checked element-exactly.
+    #[test]
+    fn single_tile_matmul_ws() {
+        let a = arch();
+        let sim = Simulator::new(&a);
+        let mut prog = Program::new("tile");
+        let ra = prog.layout.alloc("a", 6).unwrap().offset;
+        let rb = prog.layout.alloc("b", 6).unwrap().offset;
+        let rc = prog.layout.alloc("c", 4).unwrap().offset;
+        let mut dram = Dram::new(prog.layout.total_bytes() as usize + 64);
+        // A = [[1,2,3],[4,5,6]]; B = [[1,0],[0,1],[1,1]]
+        dram.write_i8_slice(ra, &[1, 2, 3, 4, 5, 6]).unwrap();
+        dram.write_i8_slice(rb, &[1, 0, 0, 1, 1, 1]).unwrap();
+        prog.push(Instr::ConfigEx { dataflow: Dataflow::WeightStationary });
+        prog.push(Instr::ConfigLd { stride: 3 });
+        prog.push(Instr::Mvin { dram: ra, local: LocalAddr::spad(0), rows: 2, cols: 3 });
+        prog.push(Instr::ConfigLd { stride: 2 });
+        prog.push(Instr::Mvin { dram: rb, local: LocalAddr::spad(8), rows: 3, cols: 2 });
+        prog.push(Instr::Preload {
+            local: Some(LocalAddr::spad(8)),
+            dst: LocalAddr::acc(0),
+            rows: 3,
+            cols: 2,
+        });
+        prog.push(Instr::Compute {
+            a: LocalAddr::spad(0),
+            d: None,
+            rows: 2,
+            cols: 3,
+            preloaded: true,
+        });
+        prog.push(Instr::ConfigSt { stride: 2, scale: 1.0, act: Activation::None });
+        prog.push(Instr::Mvout { dram: rc, local: LocalAddr::acc(0), rows: 2, cols: 2 });
+        prog.push(Instr::Fence);
+        let rep = sim.run(&prog, &mut dram).unwrap();
+        // C = [[1*1+3*1, 2+3],[4+6, 5+6]] = [[4,5],[10,11]]
+        assert_eq!(dram.read_i8_slice(rc, 4).unwrap(), vec![4, 5, 10, 11]);
+        assert!(rep.cycles > 0);
+        assert_eq!(rep.macs, 2 * 3 * 2);
+    }
+
+    /// K-tiled accumulation across two compute instructions.
+    #[test]
+    fn k_tiled_accumulation() {
+        let a = arch();
+        let sim = Simulator::new(&a);
+        let mut prog = Program::new("ktile");
+        let ra = prog.layout.alloc("a", 2).unwrap().offset;
+        let rb = prog.layout.alloc("b", 2).unwrap().offset;
+        let rc = prog.layout.alloc("c", 1).unwrap().offset;
+        let mut dram = Dram::new(64);
+        dram.write_i8_slice(ra, &[3, 5]).unwrap(); // A = [3 | 5] split in k
+        dram.write_i8_slice(rb, &[2, 7]).unwrap(); // B = [2 ; 7]
+        prog.push(Instr::ConfigEx { dataflow: Dataflow::WeightStationary });
+        prog.push(Instr::ConfigLd { stride: 1 });
+        // k-slice 0
+        prog.push(Instr::Mvin { dram: ra, local: LocalAddr::spad(0), rows: 1, cols: 1 });
+        prog.push(Instr::Mvin { dram: rb, local: LocalAddr::spad(1), rows: 1, cols: 1 });
+        prog.push(Instr::Preload {
+            local: Some(LocalAddr::spad(1)),
+            dst: LocalAddr::acc(0),
+            rows: 1,
+            cols: 1,
+        });
+        prog.push(Instr::Compute {
+            a: LocalAddr::spad(0),
+            d: None,
+            rows: 1,
+            cols: 1,
+            preloaded: true,
+        });
+        // k-slice 1 accumulates
+        prog.push(Instr::Mvin { dram: ra + 1, local: LocalAddr::spad(2), rows: 1, cols: 1 });
+        prog.push(Instr::Mvin { dram: rb + 1, local: LocalAddr::spad(3), rows: 1, cols: 1 });
+        prog.push(Instr::Preload {
+            local: Some(LocalAddr::spad(3)),
+            dst: LocalAddr::acc_accumulate(0),
+            rows: 1,
+            cols: 1,
+        });
+        prog.push(Instr::Compute {
+            a: LocalAddr::spad(2),
+            d: None,
+            rows: 1,
+            cols: 1,
+            preloaded: true,
+        });
+        prog.push(Instr::ConfigSt { stride: 1, scale: 1.0, act: Activation::None });
+        prog.push(Instr::Mvout { dram: rc, local: LocalAddr::acc(0), rows: 1, cols: 1 });
+        prog.push(Instr::Fence);
+        sim.run(&prog, &mut dram).unwrap();
+        // 3*2 + 5*7 = 41
+        assert_eq!(dram.read_i8(rc).unwrap(), 41);
+    }
+
+    #[test]
+    fn requantize_semantics() {
+        assert_eq!(requantize(100, 0.5, Activation::None), 50);
+        assert_eq!(requantize(-300, 1.0, Activation::None), -128); // saturate
+        assert_eq!(requantize(300, 1.0, Activation::None), 127);
+        assert_eq!(requantize(-40, 1.0, Activation::Relu), 0);
+        assert_eq!(requantize(99, 1.0, Activation::Clip { lo: -10, hi: 10 }), 10);
+        // Round-half-to-even: 2.5 -> 2, 3.5 -> 4.
+        assert_eq!(requantize(5, 0.5, Activation::None), 2);
+        assert_eq!(requantize(7, 0.5, Activation::None), 4);
+    }
+
+    #[test]
+    fn relu_applied_on_mvout() {
+        let a = arch();
+        let sim = Simulator::new(&a);
+        let mut prog = Program::new("relu");
+        let ra = prog.layout.alloc("a", 1).unwrap().offset;
+        let rb = prog.layout.alloc("b", 1).unwrap().offset;
+        let rc = prog.layout.alloc("c", 1).unwrap().offset;
+        let mut dram = Dram::new(64);
+        dram.write_i8(ra, -3).unwrap();
+        dram.write_i8(rb, 5).unwrap();
+        prog.push(Instr::ConfigEx { dataflow: Dataflow::WeightStationary });
+        prog.push(Instr::ConfigLd { stride: 1 });
+        prog.push(Instr::Mvin { dram: ra, local: LocalAddr::spad(0), rows: 1, cols: 1 });
+        prog.push(Instr::Mvin { dram: rb, local: LocalAddr::spad(1), rows: 1, cols: 1 });
+        prog.push(Instr::Preload {
+            local: Some(LocalAddr::spad(1)),
+            dst: LocalAddr::acc(0),
+            rows: 1,
+            cols: 1,
+        });
+        prog.push(Instr::Compute {
+            a: LocalAddr::spad(0),
+            d: None,
+            rows: 1,
+            cols: 1,
+            preloaded: true,
+        });
+        prog.push(Instr::ConfigSt { stride: 1, scale: 1.0, act: Activation::Relu });
+        prog.push(Instr::Mvout { dram: rc, local: LocalAddr::acc(0), rows: 1, cols: 1 });
+        prog.push(Instr::Fence);
+        sim.run(&prog, &mut dram).unwrap();
+        assert_eq!(dram.read_i8(rc).unwrap(), 0); // relu(-15) = 0
+    }
+
+    #[test]
+    fn bias_via_accumulator_mvin() {
+        let a = arch();
+        let sim = Simulator::new(&a);
+        let mut prog = Program::new("bias");
+        let ra = prog.layout.alloc("a", 1).unwrap().offset;
+        let rb = prog.layout.alloc("b", 1).unwrap().offset;
+        let rbias = prog.layout.alloc("bias", 4).unwrap().offset;
+        let rc = prog.layout.alloc("c", 1).unwrap().offset;
+        let mut dram = Dram::new(64);
+        dram.write_i8(ra, 4).unwrap();
+        dram.write_i8(rb, 6).unwrap();
+        dram.write_i32(rbias, 100).unwrap();
+        prog.push(Instr::ConfigEx { dataflow: Dataflow::WeightStationary });
+        prog.push(Instr::ConfigLd { stride: 1 });
+        // Load bias into the accumulator first, then accumulate the matmul.
+        prog.push(Instr::Mvin { dram: rbias, local: LocalAddr::acc(0), rows: 1, cols: 1 });
+        prog.push(Instr::Mvin { dram: ra, local: LocalAddr::spad(0), rows: 1, cols: 1 });
+        prog.push(Instr::Mvin { dram: rb, local: LocalAddr::spad(1), rows: 1, cols: 1 });
+        prog.push(Instr::Preload {
+            local: Some(LocalAddr::spad(1)),
+            dst: LocalAddr::acc_accumulate(0),
+            rows: 1,
+            cols: 1,
+        });
+        prog.push(Instr::Compute {
+            a: LocalAddr::spad(0),
+            d: None,
+            rows: 1,
+            cols: 1,
+            preloaded: true,
+        });
+        prog.push(Instr::ConfigSt { stride: 1, scale: 1.0, act: Activation::None });
+        prog.push(Instr::Mvout { dram: rc, local: LocalAddr::acc(0), rows: 1, cols: 1 });
+        prog.push(Instr::Fence);
+        sim.run(&prog, &mut dram).unwrap();
+        assert_eq!(dram.read_i8(rc).unwrap(), 124); // 100 + 24
+    }
+
+    #[test]
+    fn host_ops_functional() {
+        let a = arch();
+        let sim = Simulator::new(&a);
+        let mut prog = Program::new("host");
+        let rsrc = prog.layout.alloc("src", 6).unwrap().offset;
+        let rdst = prog.layout.alloc("dst", 6).unwrap().offset;
+        let mut dram = Dram::new(64);
+        dram.write_i8_slice(rsrc, &[1, 2, 3, 4, 5, 6]).unwrap();
+        prog.push_host(HostOp::TransposeI8 { src: rsrc, dst: rdst, rows: 2, cols: 3 });
+        let rep = sim.run(&prog, &mut dram).unwrap();
+        assert_eq!(dram.read_i8_slice(rdst, 6).unwrap(), vec![1, 4, 2, 5, 3, 6]);
+        assert!(rep.host_cycles > 0);
+        assert_eq!(rep.cycles, rep.host_cycles);
+    }
+
+    #[test]
+    fn mvin_rejects_bad_stride() {
+        let a = arch();
+        let sim = Simulator::new(&a);
+        let mut prog = Program::new("bad");
+        prog.push(Instr::ConfigLd { stride: 2 });
+        prog.push(Instr::Mvin { dram: 0, local: LocalAddr::spad(0), rows: 1, cols: 4 });
+        let mut dram = Dram::new(64);
+        assert!(sim.run(&prog, &mut dram).is_err());
+    }
+
+    #[test]
+    fn compute_without_preload_fails() {
+        let a = arch();
+        let sim = Simulator::new(&a);
+        let mut prog = Program::new("bad2");
+        prog.push(Instr::Compute {
+            a: LocalAddr::spad(0),
+            d: None,
+            rows: 1,
+            cols: 1,
+            preloaded: true,
+        });
+        let mut dram = Dram::new(64);
+        assert!(sim.run(&prog, &mut dram).is_err());
+    }
+}

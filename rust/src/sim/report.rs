@@ -1,0 +1,86 @@
+//! Run reports: cycle counts, traffic and utilization counters produced by
+//! a simulation, used by the benches to regenerate the paper's tables.
+
+use std::collections::BTreeMap;
+
+use crate::util::table::commafy;
+
+/// Counters collected over one program execution.
+#[derive(Debug, Clone, Default)]
+pub struct RunReport {
+    /// Total latency in accelerator cycles (the paper's Table 2 metric).
+    pub cycles: u64,
+    /// Cycles spent in host-CPU operations (preprocessing etc.).
+    pub host_cycles: u64,
+    /// Bytes moved DRAM → on-chip.
+    pub dram_read_bytes: u64,
+    /// Bytes moved on-chip → DRAM.
+    pub dram_write_bytes: u64,
+    /// Multiply-accumulates performed by the PE array.
+    pub macs: u64,
+    /// Instruction counts by mnemonic (LOOP_WS micro-ops counted under
+    /// their own mnemonics, the macro under `loop_ws`).
+    pub insn_counts: BTreeMap<&'static str, u64>,
+    /// Commands issued by the host front-end (one per RoCC instruction).
+    pub issued_commands: u64,
+}
+
+impl RunReport {
+    pub fn count(&mut self, mnemonic: &'static str) {
+        *self.insn_counts.entry(mnemonic).or_insert(0) += 1;
+    }
+
+    /// PE-array utilization: achieved MACs over peak MACs for the run.
+    pub fn utilization(&self, pe_dim: usize) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        self.macs as f64 / ((pe_dim * pe_dim) as f64 * self.cycles as f64)
+    }
+
+    /// Arithmetic intensity in MACs per DRAM byte.
+    pub fn arithmetic_intensity(&self) -> f64 {
+        let traffic = self.dram_read_bytes + self.dram_write_bytes;
+        if traffic == 0 {
+            return 0.0;
+        }
+        self.macs as f64 / traffic as f64
+    }
+
+    /// One-line summary for logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "cycles={} (host {}) macs={} dram r/w={}/{} util-denom-pending issued={}",
+            commafy(self.cycles),
+            commafy(self.host_cycles),
+            commafy(self.macs),
+            commafy(self.dram_read_bytes),
+            commafy(self.dram_write_bytes),
+            commafy(self.issued_commands),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn utilization_math() {
+        let r = RunReport { cycles: 1000, macs: 128_000, ..Default::default() };
+        // 128k MACs over 1000 cycles on a 16x16 array = 0.5 utilization.
+        assert!((r.utilization(16) - 0.5).abs() < 1e-12);
+        assert_eq!(RunReport::default().utilization(16), 0.0);
+    }
+
+    #[test]
+    fn intensity_math() {
+        let r = RunReport {
+            macs: 4096,
+            dram_read_bytes: 1024,
+            dram_write_bytes: 1024,
+            ..Default::default()
+        };
+        assert!((r.arithmetic_intensity() - 2.0).abs() < 1e-12);
+    }
+}

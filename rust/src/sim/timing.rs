@@ -1,0 +1,345 @@
+//! Cycle-level timing model: decoupled load / execute / store queues with
+//! an address-range scoreboard, mirroring Gemmini's ROB + three controller
+//! queues.
+//!
+//! Instructions are issued in program order (the host front-end can issue
+//! at most one command per `issue_gap` cycles and stalls when the target
+//! queue is full), then execute in order *within* their queue while the
+//! three queues proceed concurrently. Cross-queue hazards are resolved by a
+//! per-row scoreboard over the scratchpad and accumulator (RAW / WAR / WAW
+//! on row ranges), exactly the granularity Gemmini's ROB tracks.
+
+use crate::isa::Space;
+
+/// Which controller queue an instruction dispatches to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QueueId {
+    Load,
+    Ex,
+    Store,
+}
+
+/// One on-chip access for hazard tracking.
+#[derive(Debug, Clone, Copy)]
+pub struct Access {
+    pub space: Space,
+    pub row: u32,
+    pub rows: u32,
+    pub write: bool,
+}
+
+impl Access {
+    pub fn read(space: Space, row: u32, rows: u32) -> Access {
+        Access { space, row, rows, write: false }
+    }
+
+    pub fn write(space: Space, row: u32, rows: u32) -> Access {
+        Access { space, row, rows, write: true }
+    }
+}
+
+/// Per-row last-reader / last-writer completion times for one memory.
+#[derive(Debug)]
+struct RowTracker {
+    last_write: Vec<u64>,
+    last_read: Vec<u64>,
+}
+
+impl RowTracker {
+    fn new(rows: usize) -> RowTracker {
+        RowTracker { last_write: vec![0; rows], last_read: vec![0; rows] }
+    }
+
+    fn range(&self, a: &Access) -> std::ops::Range<usize> {
+        let lo = (a.row as usize).min(self.last_write.len());
+        let hi = ((a.row + a.rows) as usize).min(self.last_write.len());
+        lo..hi
+    }
+
+    /// Earliest time `a` may start given recorded hazards.
+    fn ready(&self, a: &Access) -> u64 {
+        let mut t = 0;
+        for i in self.range(a) {
+            // RAW: any access waits for the last writer.
+            t = t.max(self.last_write[i]);
+            if a.write {
+                // WAR: writers also wait for the last reader.
+                t = t.max(self.last_read[i]);
+            }
+        }
+        t
+    }
+
+    fn record(&mut self, a: &Access, finish: u64) {
+        for i in self.range(a) {
+            if a.write {
+                self.last_write[i] = self.last_write[i].max(finish);
+            } else {
+                self.last_read[i] = self.last_read[i].max(finish);
+            }
+        }
+    }
+}
+
+/// One in-order controller queue with bounded occupancy.
+#[derive(Debug)]
+struct Queue {
+    depth: usize,
+    /// Completion times of in-flight entries, oldest first.
+    inflight: std::collections::VecDeque<u64>,
+    last_finish: u64,
+}
+
+impl Queue {
+    fn new(depth: usize) -> Queue {
+        Queue { depth, inflight: std::collections::VecDeque::new(), last_finish: 0 }
+    }
+
+    /// Earliest time a new entry can be accepted (oldest entry must have
+    /// retired if the queue is full by then).
+    fn slot_ready(&self) -> u64 {
+        if self.inflight.len() < self.depth {
+            0
+        } else {
+            self.inflight[self.inflight.len() - self.depth]
+        }
+    }
+
+    fn push(&mut self, finish: u64) {
+        self.inflight.push_back(finish);
+        // Keep only what matters for future slot_ready queries.
+        while self.inflight.len() > 2 * self.depth {
+            self.inflight.pop_front();
+        }
+        self.last_finish = self.last_finish.max(finish);
+    }
+}
+
+/// The whole timing engine.
+#[derive(Debug)]
+pub struct Timing {
+    issue_cursor: u64,
+    load: Queue,
+    ex: Queue,
+    store: Queue,
+    spad: RowTracker,
+    acc: RowTracker,
+    /// Busy-until time of the single DMA engine shared by load and store.
+    dma_busy: u64,
+    pub host_cycles: u64,
+}
+
+/// Default queue depth (Gemmini's reservation station holds 16 entries
+/// split across the three controllers).
+pub const QUEUE_DEPTH: usize = 8;
+
+impl Timing {
+    pub fn new(spad_rows: usize, acc_rows: usize) -> Timing {
+        Timing {
+            issue_cursor: 0,
+            load: Queue::new(QUEUE_DEPTH),
+            ex: Queue::new(QUEUE_DEPTH),
+            store: Queue::new(QUEUE_DEPTH),
+            spad: RowTracker::new(spad_rows),
+            acc: RowTracker::new(acc_rows),
+            dma_busy: 0,
+            host_cycles: 0,
+        }
+    }
+
+    fn queue_mut(&mut self, q: QueueId) -> &mut Queue {
+        match q {
+            QueueId::Load => &mut self.load,
+            QueueId::Ex => &mut self.ex,
+            QueueId::Store => &mut self.store,
+        }
+    }
+
+    fn tracker(&self, s: Space) -> &RowTracker {
+        match s {
+            Space::Spad => &self.spad,
+            Space::Acc => &self.acc,
+        }
+    }
+
+    fn tracker_mut(&mut self, s: Space) -> &mut RowTracker {
+        match s {
+            Space::Spad => &mut self.spad,
+            Space::Acc => &mut self.acc,
+        }
+    }
+
+    /// Account one instruction: issued after `issue_gap` cycles of
+    /// front-end work, dispatched to `q`, running for `latency` cycles once
+    /// its queue is free and all hazards in `accesses` are resolved.
+    ///
+    /// `dma_occupancy` models a pipelined DMA engine: the engine is held
+    /// for only the data-movement portion of the transfer, while the fixed
+    /// request latency (included in `latency`) overlaps with the next
+    /// request — multiple outstanding requests, as in Gemmini's RTL DMA.
+    /// Returns (start, finish).
+    pub fn step(
+        &mut self,
+        q: QueueId,
+        issue_gap: u64,
+        latency: u64,
+        dma_occupancy: Option<u64>,
+        accesses: &[Access],
+    ) -> (u64, u64) {
+        self.issue_cursor += issue_gap;
+        let issue_t = self.issue_cursor.max(self.queue_mut(q).slot_ready());
+
+        let mut ready = issue_t.max(self.queue_mut(q).last_finish);
+        for a in accesses {
+            ready = ready.max(self.tracker(a.space).ready(a));
+        }
+        if dma_occupancy.is_some() {
+            ready = ready.max(self.dma_busy);
+        }
+        let start = ready;
+        let finish = start + latency;
+        if let Some(occ) = dma_occupancy {
+            self.dma_busy = start + occ.min(latency);
+        }
+        for a in accesses {
+            self.tracker_mut(a.space).record(a, finish);
+        }
+        self.queue_mut(q).push(finish);
+        // The front-end is blocked until the command was accepted.
+        self.issue_cursor = self.issue_cursor.max(issue_t);
+        (start, finish)
+    }
+
+    /// Time at which every queue has drained.
+    pub fn drained(&self) -> u64 {
+        self.load
+            .last_finish
+            .max(self.ex.last_finish)
+            .max(self.store.last_finish)
+            .max(self.issue_cursor)
+    }
+
+    /// A full fence: block issue until drained, plus `extra` cycles.
+    pub fn fence(&mut self, extra: u64) -> u64 {
+        let t = self.drained() + extra;
+        self.issue_cursor = t;
+        t
+    }
+
+    /// A host-CPU operation of `cost` cycles; the host cannot overlap with
+    /// outstanding accelerator work it just fenced (conservative: host ops
+    /// serialize, see DESIGN.md).
+    pub fn host(&mut self, cost: u64) -> u64 {
+        let t = self.drained() + cost;
+        self.issue_cursor = t;
+        self.host_cycles += cost;
+        t
+    }
+
+    pub fn now(&self) -> u64 {
+        self.drained()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn independent_queues_overlap() {
+        let mut t = Timing::new(64, 64);
+        // A load and a compute touching disjoint rows overlap fully.
+        let (_, f1) = t.step(
+            QueueId::Load,
+            1,
+            100,
+            Some(100),
+            &[Access::write(Space::Spad, 0, 4)],
+        );
+        let (s2, f2) = t.step(
+            QueueId::Ex,
+            1,
+            50,
+            None,
+            &[Access::read(Space::Spad, 32, 4)],
+        );
+        assert_eq!(f1, 101);
+        assert!(s2 <= 2, "compute should start immediately, started {s2}");
+        assert!(f2 < f1);
+    }
+
+    #[test]
+    fn raw_hazard_serializes() {
+        let mut t = Timing::new(64, 64);
+        let (_, f1) = t.step(QueueId::Load, 1, 100, Some(100), &[Access::write(Space::Spad, 0, 4)]);
+        // Compute reading the loaded rows must wait for the load.
+        let (s2, _) = t.step(QueueId::Ex, 1, 10, None, &[Access::read(Space::Spad, 2, 1)]);
+        assert!(s2 >= f1, "RAW violated: start {s2} < load finish {f1}");
+    }
+
+    #[test]
+    fn war_hazard_blocks_overwrite() {
+        let mut t = Timing::new(64, 64);
+        // Long-running compute reads rows 0..4.
+        let (_, f1) = t.step(QueueId::Ex, 1, 200, None, &[Access::read(Space::Spad, 0, 4)]);
+        // A load overwriting those rows must wait (WAR).
+        let (s2, _) = t.step(QueueId::Load, 1, 10, Some(10), &[Access::write(Space::Spad, 0, 4)]);
+        assert!(s2 >= f1);
+    }
+
+    #[test]
+    fn queue_capacity_stalls_issue() {
+        let mut t = Timing::new(1024, 64);
+        // Fill the load queue with long operations on disjoint rows; DMA is
+        // serial so they chain anyway; use no-DMA ex ops to test capacity.
+        let mut finishes = Vec::new();
+        for i in 0..(QUEUE_DEPTH as u32 + 2) {
+            let (_, f) = t.step(
+                QueueId::Ex,
+                0,
+                1000,
+                None,
+                &[Access::read(Space::Spad, i * 8, 1)],
+            );
+            finishes.push(f);
+        }
+        // In-order queue: op i starts after op i-1 finishes regardless; the
+        // interesting assertion is monotone finishing.
+        for w in finishes.windows(2) {
+            assert!(w[1] > w[0]);
+        }
+    }
+
+    #[test]
+    fn dma_is_shared_between_load_and_store() {
+        let mut t = Timing::new(64, 64);
+        // 100-cycle transfer of which 80 is engine occupancy (20 request
+        // latency pipelines with the next transfer).
+        let (_, f1) =
+            t.step(QueueId::Load, 1, 100, Some(80), &[Access::write(Space::Spad, 0, 1)]);
+        let (s2, _) =
+            t.step(QueueId::Store, 1, 100, Some(80), &[Access::read(Space::Acc, 0, 1)]);
+        assert!(s2 >= f1 - 20, "DMA data movement must serialize");
+        assert!(s2 < f1, "request latency must pipeline");
+    }
+
+    #[test]
+    fn fence_drains_everything() {
+        let mut t = Timing::new(64, 64);
+        t.step(QueueId::Load, 1, 500, Some(500), &[Access::write(Space::Spad, 0, 1)]);
+        let ft = t.fence(20);
+        assert_eq!(ft, 501 + 20);
+        // Subsequent work starts after the fence.
+        let (s, _) = t.step(QueueId::Ex, 0, 1, None, &[]);
+        assert!(s >= ft);
+    }
+
+    #[test]
+    fn host_serializes_and_accumulates() {
+        let mut t = Timing::new(64, 64);
+        t.step(QueueId::Load, 1, 100, Some(100), &[Access::write(Space::Spad, 0, 1)]);
+        let ht = t.host(40);
+        assert_eq!(ht, 101 + 40);
+        assert_eq!(t.host_cycles, 40);
+    }
+}

@@ -1,0 +1,289 @@
+//! A compact Tensor-IR: loop nests over GEMM workloads with memory-staging
+//! and tensorization nodes.
+//!
+//! The paper's backend does all scheduling "at the TIR level via the
+//! Mapping Generator" (§3.3) — UMA bypasses TE scheduling, so loop
+//! transformations (multi-level tiling, reordering), cache staging and
+//! intrinsic rewriting all happen here. [`schedule`] provides the
+//! primitives (`split`, `reorder`, `insert_stages`, `tensorize`,
+//! `set_double_buffer`); [`crate::backend::codegen`] walks the scheduled
+//! tree and emits accelerator instructions.
+
+pub mod schedule;
+
+use std::fmt;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::isa::Activation;
+use crate::workload::{Dim, Gemm, Operand};
+
+/// Loop nesting level, mirroring the memory hierarchy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum LoopLevel {
+    /// Iterates on-chip tiles over DRAM-resident data (outermost).
+    Dram,
+    /// Iterates instruction tiles within an on-chip tile.
+    OnChip,
+    /// Iterates elements within an instruction tile (absorbed by
+    /// tensorization).
+    Insn,
+}
+
+/// One loop.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LoopInfo {
+    pub dim: Dim,
+    pub level: LoopLevel,
+    /// Trip count.
+    pub extent: usize,
+    /// Elements advanced per trip (tile size at this level).
+    pub step: usize,
+}
+
+/// TIR nodes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TirNode {
+    Loop { info: LoopInfo, body: Vec<TirNode> },
+    /// Stage an operand tile into its on-chip memory (lowered to MVINs).
+    /// `double_buffer` selects ping-pong slots.
+    CacheRead { operand: Operand, double_buffer: bool },
+    /// Load the bias vector into the accumulator tile (lowered to a
+    /// broadcast MVIN).
+    LoadBias,
+    /// Write the finished output tile back to DRAM (lowered to MVOUTs with
+    /// the fused requantize/activation).
+    CacheWrite,
+    /// A tensorized instruction-tile computation (PRELOAD + COMPUTE).
+    Tensorize { intrinsic: String, tile: [usize; 3] },
+    /// The unscheduled scalar GEMM body.
+    GemmBody,
+}
+
+/// Quantization attributes fused into the output stage.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantAttrs {
+    pub scale: f32,
+    pub act: Activation,
+}
+
+/// A TIR function: one GEMM layer plus its loop nest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TirFunc {
+    pub name: String,
+    pub gemm: Gemm,
+    pub quant: QuantAttrs,
+    pub body: Vec<TirNode>,
+}
+
+impl TirFunc {
+    /// The unscheduled form the strategy generator produces: a perfect
+    /// `N, C, K` DRAM-level nest around the scalar body.
+    pub fn unscheduled(name: impl Into<String>, gemm: Gemm, quant: QuantAttrs) -> TirFunc {
+        let mk = |dim: Dim, inner: TirNode| TirNode::Loop {
+            info: LoopInfo { dim, level: LoopLevel::Dram, extent: gemm.bound(dim), step: 1 },
+            body: vec![inner],
+        };
+        let body = mk(Dim::N, mk(Dim::C, mk(Dim::K, TirNode::GemmBody)));
+        TirFunc { name: name.into(), gemm, quant, body: vec![body] }
+    }
+
+    /// Collect the perfect loop chain (outermost first). Errors if the
+    /// nest branches before its innermost loop.
+    pub fn loop_chain(&self) -> Result<Vec<LoopInfo>> {
+        let mut out = Vec::new();
+        let mut cur: &[TirNode] = &self.body;
+        loop {
+            let loops: Vec<&TirNode> =
+                cur.iter().filter(|n| matches!(n, TirNode::Loop { .. })).collect();
+            match loops.len() {
+                0 => break,
+                1 => {
+                    let TirNode::Loop { info, body } = loops[0] else { unreachable!() };
+                    out.push(*info);
+                    cur = body;
+                }
+                _ => bail!("loop nest branches (not a perfect nest)"),
+            }
+        }
+        Ok(out)
+    }
+
+    /// Structural validation of a *scheduled* function (after
+    /// `insert_stages` + `tensorize`):
+    /// * per dim, levels nest Dram ⊃ OnChip (⊃ Insn, pre-tensorize);
+    /// * tile chain per dim multiplies back to ≥ the bound;
+    /// * the DRAM-level C loop (extent > 1) is the innermost DRAM loop
+    ///   (outputs must finish in the accumulator — no int32 spills).
+    pub fn validate(&self) -> Result<()> {
+        let chain = self.loop_chain()?;
+        for d in Dim::ALL {
+            let levels: Vec<(LoopLevel, usize, usize)> = chain
+                .iter()
+                .filter(|l| l.dim == d)
+                .map(|l| (l.level, l.extent, l.step))
+                .collect();
+            ensure!(!levels.is_empty(), "dim {d} has no loop");
+            // Outer → inner must be strictly increasing level (Dram before
+            // OnChip before Insn).
+            for w in levels.windows(2) {
+                ensure!(
+                    w[0].0 < w[1].0,
+                    "dim {d}: level {:?} nested inside {:?}",
+                    w[1].0,
+                    w[0].0
+                );
+            }
+            // Tile chain covers the bound.
+            let covered: usize = levels[0].1 * levels[0].2;
+            ensure!(
+                covered >= self.gemm.bound(d),
+                "dim {d}: loops cover {covered} < bound {}",
+                self.gemm.bound(d)
+            );
+            // step of an outer loop equals extent×step of the next level.
+            for w in levels.windows(2) {
+                ensure!(
+                    w[0].2 == w[1].1 * w[1].2,
+                    "dim {d}: step {} != inner extent x step {}",
+                    w[0].2,
+                    w[1].1 * w[1].2
+                );
+            }
+        }
+        // Once staged (CacheWrite present), the DRAM C loop must be the
+        // innermost DRAM loop if it iterates: an output tile must finish in
+        // the accumulator before the next one starts (no int32 spills).
+        let staged = self.count(&|n| matches!(n, TirNode::CacheWrite)) > 0;
+        if staged {
+            let dram: Vec<&LoopInfo> =
+                chain.iter().filter(|l| l.level == LoopLevel::Dram).collect();
+            if let Some(cpos) = dram.iter().position(|l| l.dim == Dim::C) {
+                let c_trips = dram[cpos].extent;
+                if c_trips > 1 {
+                    ensure!(
+                        cpos == dram.len() - 1,
+                        "DRAM C loop (extent {c_trips}) must be innermost among DRAM loops"
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Count nodes matching a predicate (diagnostics/tests).
+    pub fn count(&self, pred: &dyn Fn(&TirNode) -> bool) -> usize {
+        fn walk(nodes: &[TirNode], pred: &dyn Fn(&TirNode) -> bool, acc: &mut usize) {
+            for n in nodes {
+                if pred(n) {
+                    *acc += 1;
+                }
+                if let TirNode::Loop { body, .. } = n {
+                    walk(body, pred, acc);
+                }
+            }
+        }
+        let mut acc = 0;
+        walk(&self.body, pred, &mut acc);
+        acc
+    }
+
+    /// TVMScript-style pretty printer.
+    pub fn script(&self) -> String {
+        fn emit(nodes: &[TirNode], indent: usize, out: &mut String) {
+            let pad = "  ".repeat(indent);
+            for n in nodes {
+                match n {
+                    TirNode::Loop { info, body } => {
+                        let lvl = match info.level {
+                            LoopLevel::Dram => "dram",
+                            LoopLevel::OnChip => "onchip",
+                            LoopLevel::Insn => "insn",
+                        };
+                        out.push_str(&format!(
+                            "{pad}for {}_{} in range({}):  # step {} [{}]\n",
+                            info.dim.to_string().to_lowercase(),
+                            lvl,
+                            info.extent,
+                            info.step,
+                            lvl
+                        ));
+                        emit(body, indent + 1, out);
+                    }
+                    TirNode::CacheRead { operand, double_buffer } => {
+                        out.push_str(&format!(
+                            "{pad}cache_read({operand}{})\n",
+                            if *double_buffer { ", double_buffer" } else { "" }
+                        ));
+                    }
+                    TirNode::LoadBias => out.push_str(&format!("{pad}load_bias()\n")),
+                    TirNode::CacheWrite => out.push_str(&format!("{pad}cache_write()\n")),
+                    TirNode::Tensorize { intrinsic, tile } => out.push_str(&format!(
+                        "{pad}{intrinsic}(tile=({}, {}, {}))\n",
+                        tile[0], tile[1], tile[2]
+                    )),
+                    TirNode::GemmBody => {
+                        out.push_str(&format!("{pad}O[n,k] += In[n,c] * W[c,k]\n"))
+                    }
+                }
+            }
+        }
+        let mut s = format!(
+            "def {}(In: i8[{}x{}], W: i8[{}x{}], B: i32[{}]) -> i8[{}x{}]:\n",
+            self.name,
+            self.gemm.n,
+            self.gemm.c,
+            self.gemm.c,
+            self.gemm.k,
+            self.gemm.k,
+            self.gemm.n,
+            self.gemm.k
+        );
+        emit(&self.body, 1, &mut s);
+        s
+    }
+}
+
+impl fmt::Display for TirFunc {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.script())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quant() -> QuantAttrs {
+        QuantAttrs { scale: 0.5, act: Activation::None }
+    }
+
+    #[test]
+    fn unscheduled_is_perfect_nest() {
+        let f = TirFunc::unscheduled("l0", Gemm::new(8, 4, 2), quant());
+        let chain = f.loop_chain().unwrap();
+        assert_eq!(chain.len(), 3);
+        assert_eq!(chain[0].dim, Dim::N);
+        assert_eq!(chain[0].extent, 8);
+        assert!(chain.iter().all(|l| l.level == LoopLevel::Dram && l.step == 1));
+        f.validate().unwrap();
+    }
+
+    #[test]
+    fn script_renders() {
+        let f = TirFunc::unscheduled("layer", Gemm::new(4, 4, 4), quant());
+        let s = f.script();
+        assert!(s.contains("def layer"));
+        assert!(s.contains("O[n,k] += In[n,c] * W[c,k]"));
+    }
+
+    #[test]
+    fn validate_rejects_uncovered_bound() {
+        let mut f = TirFunc::unscheduled("bad", Gemm::new(8, 4, 2), quant());
+        // Shrink the N loop so it no longer covers the bound.
+        if let TirNode::Loop { info, .. } = &mut f.body[0] {
+            info.extent = 4;
+        }
+        assert!(f.validate().is_err());
+    }
+}

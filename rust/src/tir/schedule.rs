@@ -1,0 +1,343 @@
+//! TIR schedule primitives.
+//!
+//! These are the transformations the Mapping Generator applies (paper
+//! §3.3): multi-level tiling (`split`), loop reordering (`reorder`),
+//! tensorization (`tensorize`, rewriting the instruction-tile nest into a
+//! hardware-intrinsic call), memory staging (`insert_stages`) and
+//! double-buffer annotation (`set_double_buffer`).
+//!
+//! Primitive order: `split`* → `reorder` → `tensorize` → `insert_stages`
+//! (→ `set_double_buffer`); each step checks its preconditions.
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::util::ceil_div;
+use crate::workload::{Dim, Operand};
+
+use super::{LoopInfo, LoopLevel, TirFunc, TirNode};
+
+/// Extract the (perfect) chain and the leaf nodes under the innermost
+/// loop. Errors if stages were already inserted.
+fn chain_and_leaf(f: &TirFunc) -> Result<(Vec<LoopInfo>, Vec<TirNode>)> {
+    let mut chain = Vec::new();
+    let mut cur: &[TirNode] = &f.body;
+    loop {
+        let n_loops = cur.iter().filter(|n| matches!(n, TirNode::Loop { .. })).count();
+        match n_loops {
+            0 => return Ok((chain, cur.to_vec())),
+            1 => {
+                ensure!(
+                    cur.len() == 1,
+                    "stages already inserted; primitives that rebuild the nest must run first"
+                );
+                let TirNode::Loop { info, body } = &cur[0] else { unreachable!() };
+                chain.push(*info);
+                cur = body;
+            }
+            _ => bail!("loop nest branches"),
+        }
+    }
+}
+
+/// Rebuild a perfect nest from a chain and leaf nodes.
+fn rebuild(f: &TirFunc, chain: &[LoopInfo], leaf: Vec<TirNode>) -> TirFunc {
+    let mut body = leaf;
+    for info in chain.iter().rev() {
+        body = vec![TirNode::Loop { info: *info, body }];
+    }
+    TirFunc { name: f.name.clone(), gemm: f.gemm, quant: f.quant, body }
+}
+
+/// Multi-level tiling: split `dim`'s DRAM loop into a
+/// DRAM → OnChip → Insn chain with the given tile sizes
+/// (`onchip` elements per DRAM trip, `insn` per OnChip trip).
+pub fn split(f: &TirFunc, dim: Dim, onchip: usize, insn: usize) -> Result<TirFunc> {
+    ensure!(insn >= 1 && onchip >= insn, "bad split factors ({onchip}, {insn})");
+    let (chain, leaf) = chain_and_leaf(f)?;
+    let pos = chain
+        .iter()
+        .position(|l| l.dim == dim && l.level == LoopLevel::Dram && l.step == 1)
+        .ok_or_else(|| anyhow!("dim {dim} has no unsplit DRAM loop"))?;
+    let bound = chain[pos].extent;
+    ensure!(onchip <= bound, "on-chip tile {onchip} exceeds bound {bound}");
+    let mut new_chain = chain.clone();
+    new_chain[pos] = LoopInfo {
+        dim,
+        level: LoopLevel::Dram,
+        extent: ceil_div(bound, onchip),
+        step: onchip,
+    };
+    new_chain.insert(
+        pos + 1,
+        LoopInfo { dim, level: LoopLevel::OnChip, extent: ceil_div(onchip, insn), step: insn },
+    );
+    new_chain.insert(
+        pos + 2,
+        LoopInfo { dim, level: LoopLevel::Insn, extent: insn, step: 1 },
+    );
+    Ok(rebuild(f, &new_chain, leaf))
+}
+
+/// Reorder the nest to the given total order of `(dim, level)` pairs.
+/// Every loop in the nest must appear exactly once.
+pub fn reorder(f: &TirFunc, order: &[(Dim, LoopLevel)]) -> Result<TirFunc> {
+    let (chain, leaf) = chain_and_leaf(f)?;
+    ensure!(
+        order.len() == chain.len(),
+        "reorder lists {} loops, nest has {}",
+        order.len(),
+        chain.len()
+    );
+    let mut new_chain = Vec::with_capacity(chain.len());
+    for &(d, lv) in order {
+        let info = chain
+            .iter()
+            .find(|l| l.dim == d && l.level == lv)
+            .ok_or_else(|| anyhow!("no loop ({d}, {lv:?}) in nest"))?;
+        new_chain.push(*info);
+    }
+    // No duplicates (find-based lookup would silently alias).
+    for i in 0..order.len() {
+        for j in i + 1..order.len() {
+            ensure!(order[i] != order[j], "duplicate loop {:?}", order[i]);
+        }
+    }
+    Ok(rebuild(f, &new_chain, leaf))
+}
+
+/// Tensorize: replace the three innermost `Insn` loops (and the scalar
+/// body) with a hardware-intrinsic call. The loops must be innermost and
+/// their extents become the intrinsic tile (checked against `max_tile`,
+/// the Eq. (1) instruction limit).
+pub fn tensorize(f: &TirFunc, intrinsic: &str, max_tile: usize) -> Result<TirFunc> {
+    let (chain, leaf) = chain_and_leaf(f)?;
+    ensure!(
+        leaf.iter().any(|n| matches!(n, TirNode::GemmBody)),
+        "nothing to tensorize (body already rewritten?)"
+    );
+    let n_insn = chain.iter().filter(|l| l.level == LoopLevel::Insn).count();
+    ensure!(n_insn == 3, "expect 3 Insn loops (run split first), found {n_insn}");
+    let split_at = chain.len() - 3;
+    let (outer, inner) = chain.split_at(split_at);
+    ensure!(
+        inner.iter().all(|l| l.level == LoopLevel::Insn),
+        "Insn loops must be innermost before tensorize"
+    );
+    let mut tile = [0usize; 3];
+    for l in inner {
+        ensure!(
+            l.extent <= max_tile,
+            "insn loop {} extent {} exceeds instruction limit {max_tile} (Eq. 1)",
+            l.dim,
+            l.extent
+        );
+        tile[l.dim.index()] = l.extent;
+    }
+    let leaf = vec![TirNode::Tensorize { intrinsic: intrinsic.to_string(), tile }];
+    Ok(rebuild(f, outer, leaf))
+}
+
+/// Insert memory staging at canonical positions:
+///
+/// ```text
+/// for dram₀ { for dram₁ {
+///     load_bias()
+///     for dramC {            # innermost DRAM loop (C)
+///         cache_read(Input); cache_read(Weight)
+///         <onchip loops ... tensorize>
+///     }
+///     cache_write()
+/// } }
+/// ```
+///
+/// Requires the DRAM loops outermost with C innermost among them (the
+/// canonical form the mapping generator produces).
+pub fn insert_stages(f: &TirFunc, double_buffer: bool) -> Result<TirFunc> {
+    let (chain, leaf) = chain_and_leaf(f)?;
+    let dram: Vec<&LoopInfo> = chain.iter().filter(|l| l.level == LoopLevel::Dram).collect();
+    ensure!(dram.len() == 3, "expect 3 DRAM loops, found {}", dram.len());
+    ensure!(
+        chain[..3].iter().all(|l| l.level == LoopLevel::Dram),
+        "DRAM loops must be outermost"
+    );
+    ensure!(
+        chain[2].dim == Dim::C,
+        "DRAM C loop must be innermost among DRAM loops (got {})",
+        chain[2].dim
+    );
+
+    // Innermost part: on-chip (and possibly insn) loops + leaf.
+    let mut inner = leaf;
+    for info in chain[3..].iter().rev() {
+        inner = vec![TirNode::Loop { info: *info, body: inner }];
+    }
+    // C-loop body: cache reads then the compute nest.
+    let mut c_body = vec![
+        TirNode::CacheRead { operand: Operand::Input, double_buffer },
+        TirNode::CacheRead { operand: Operand::Weight, double_buffer },
+    ];
+    c_body.extend(inner);
+    let c_loop = TirNode::Loop { info: *dram[2], body: c_body };
+    // dram₁ body: bias, C loop, writeback.
+    let d1_body = vec![TirNode::LoadBias, c_loop, TirNode::CacheWrite];
+    let d1 = TirNode::Loop { info: *dram[1], body: d1_body };
+    let d0 = TirNode::Loop { info: *dram[0], body: vec![d1] };
+    let out = TirFunc { name: f.name.clone(), gemm: f.gemm, quant: f.quant, body: vec![d0] };
+    out.validate()?;
+    Ok(out)
+}
+
+/// Toggle double-buffer annotations on all cache reads (post-staging).
+pub fn set_double_buffer(f: &mut TirFunc, value: bool) {
+    fn walk(nodes: &mut [TirNode], value: bool) {
+        for n in nodes {
+            match n {
+                TirNode::CacheRead { double_buffer, .. } => *double_buffer = value,
+                TirNode::Loop { body, .. } => walk(body, value),
+                _ => {}
+            }
+        }
+    }
+    walk(&mut f.body, value);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Activation;
+    use crate::tir::QuantAttrs;
+    use crate::workload::Gemm;
+
+    fn base(n: usize, c: usize, k: usize) -> TirFunc {
+        TirFunc::unscheduled(
+            "t",
+            Gemm::new(n, c, k),
+            QuantAttrs { scale: 1.0, act: Activation::None },
+        )
+    }
+
+    fn full_order() -> Vec<(Dim, LoopLevel)> {
+        vec![
+            (Dim::N, LoopLevel::Dram),
+            (Dim::K, LoopLevel::Dram),
+            (Dim::C, LoopLevel::Dram),
+            (Dim::K, LoopLevel::OnChip),
+            (Dim::C, LoopLevel::OnChip),
+            (Dim::N, LoopLevel::OnChip),
+            (Dim::N, LoopLevel::Insn),
+            (Dim::C, LoopLevel::Insn),
+            (Dim::K, LoopLevel::Insn),
+        ]
+    }
+
+    fn scheduled() -> TirFunc {
+        let f = base(64, 64, 64);
+        let f = split(&f, Dim::N, 32, 16).unwrap();
+        let f = split(&f, Dim::C, 32, 16).unwrap();
+        let f = split(&f, Dim::K, 32, 16).unwrap();
+        let f = reorder(&f, &full_order()).unwrap();
+        let f = tensorize(&f, "gemmini_matmul", 16).unwrap();
+        insert_stages(&f, true).unwrap()
+    }
+
+    #[test]
+    fn split_produces_three_levels() {
+        let f = split(&base(64, 64, 64), Dim::N, 32, 16).unwrap();
+        let chain = f.loop_chain().unwrap();
+        assert_eq!(chain.len(), 5);
+        assert_eq!(chain[0], LoopInfo { dim: Dim::N, level: LoopLevel::Dram, extent: 2, step: 32 });
+        assert_eq!(
+            chain[1],
+            LoopInfo { dim: Dim::N, level: LoopLevel::OnChip, extent: 2, step: 16 }
+        );
+        assert_eq!(chain[2], LoopInfo { dim: Dim::N, level: LoopLevel::Insn, extent: 16, step: 1 });
+    }
+
+    #[test]
+    fn split_handles_ragged_bounds() {
+        let f = split(&base(100, 64, 64), Dim::N, 48, 16).unwrap();
+        let chain = f.loop_chain().unwrap();
+        assert_eq!(chain[0].extent, 3); // ceil(100/48)
+        f.validate().unwrap();
+    }
+
+    #[test]
+    fn reorder_then_tensorize_and_stage() {
+        let f = scheduled();
+        f.validate().unwrap();
+        assert_eq!(f.count(&|n| matches!(n, TirNode::Tensorize { .. })), 1);
+        assert_eq!(f.count(&|n| matches!(n, TirNode::CacheRead { .. })), 2);
+        assert_eq!(f.count(&|n| matches!(n, TirNode::LoadBias)), 1);
+        assert_eq!(f.count(&|n| matches!(n, TirNode::CacheWrite)), 1);
+        assert_eq!(f.count(&|n| matches!(n, TirNode::GemmBody)), 0);
+        let s = f.script();
+        assert!(s.contains("gemmini_matmul(tile=(16, 16, 16))"));
+        assert!(s.contains("double_buffer"));
+    }
+
+    #[test]
+    fn tensorize_enforces_eq1() {
+        let f = base(64, 64, 64);
+        let f = split(&f, Dim::N, 64, 32).unwrap(); // insn tile 32 > 16
+        let f = split(&f, Dim::C, 32, 16).unwrap();
+        let f = split(&f, Dim::K, 32, 16).unwrap();
+        let f = reorder(&f, &full_order()).unwrap();
+        assert!(tensorize(&f, "gemmini_matmul", 16).is_err());
+    }
+
+    #[test]
+    fn reorder_rejects_missing_or_duplicate() {
+        let f = split(&base(64, 64, 64), Dim::N, 32, 16).unwrap();
+        assert!(reorder(&f, &[(Dim::N, LoopLevel::Dram)]).is_err());
+        let f2 = base(8, 8, 8);
+        assert!(reorder(
+            &f2,
+            &[(Dim::N, LoopLevel::Dram), (Dim::N, LoopLevel::Dram), (Dim::C, LoopLevel::Dram)]
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn insert_stages_requires_c_innermost() {
+        let f = base(64, 64, 64);
+        let f = split(&f, Dim::N, 32, 16).unwrap();
+        let f = split(&f, Dim::C, 32, 16).unwrap();
+        let f = split(&f, Dim::K, 32, 16).unwrap();
+        let bad_order = vec![
+            (Dim::C, LoopLevel::Dram),
+            (Dim::N, LoopLevel::Dram),
+            (Dim::K, LoopLevel::Dram),
+            (Dim::K, LoopLevel::OnChip),
+            (Dim::C, LoopLevel::OnChip),
+            (Dim::N, LoopLevel::OnChip),
+            (Dim::N, LoopLevel::Insn),
+            (Dim::C, LoopLevel::Insn),
+            (Dim::K, LoopLevel::Insn),
+        ];
+        let f = reorder(&f, &bad_order).unwrap();
+        let f = tensorize(&f, "gemmini_matmul", 16).unwrap();
+        assert!(insert_stages(&f, false).is_err());
+    }
+
+    #[test]
+    fn double_buffer_toggle() {
+        let mut f = scheduled();
+        set_double_buffer(&mut f, false);
+        assert_eq!(
+            f.count(&|n| matches!(n, TirNode::CacheRead { double_buffer: true, .. })),
+            0
+        );
+        set_double_buffer(&mut f, true);
+        assert_eq!(
+            f.count(&|n| matches!(n, TirNode::CacheRead { double_buffer: true, .. })),
+            2
+        );
+    }
+
+    #[test]
+    fn primitives_after_staging_are_rejected() {
+        let f = scheduled();
+        assert!(split(&f, Dim::N, 16, 16).is_err());
+        assert!(reorder(&f, &full_order()).is_err());
+    }
+}

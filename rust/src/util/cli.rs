@@ -1,0 +1,104 @@
+//! A tiny CLI argument parser (stand-in for `clap`, unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional arguments.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+/// Parsed command-line arguments.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    /// `value_opts` lists option names that consume a following value.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, value_opts: &[&str]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if value_opts.contains(&body) {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| anyhow!("option --{body} expects a value"))?;
+                    out.options.insert(body.to_string(), v);
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse the process's own arguments.
+    pub fn from_env(value_opts: &[&str]) -> Result<Args> {
+        Self::parse(std::env::args().skip(1), value_opts)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or(&self, name: &str, default: &str) -> String {
+        self.opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow!("option --{name} expects an integer, got '{s}'")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn mixed_args() {
+        let a = Args::parse(
+            argv(&["compile", "--dim", "16", "--verbose", "--out=prog.bin", "model.json"]),
+            &["dim", "out"],
+        )
+        .unwrap();
+        assert_eq!(a.positional, vec!["compile", "model.json"]);
+        assert_eq!(a.opt("dim"), Some("16"));
+        assert_eq!(a.opt("out"), Some("prog.bin"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(argv(&["--dim"]), &["dim"]).is_err());
+    }
+
+    #[test]
+    fn opt_usize_parses() {
+        let a = Args::parse(argv(&["--n", "42"]), &["n"]).unwrap();
+        assert_eq!(a.opt_usize("n", 7).unwrap(), 42);
+        assert_eq!(a.opt_usize("m", 7).unwrap(), 7);
+        let bad = Args::parse(argv(&["--n", "xyz"]), &["n"]).unwrap();
+        assert!(bad.opt_usize("n", 0).is_err());
+    }
+}

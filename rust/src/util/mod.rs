@@ -1,0 +1,67 @@
+//! Infrastructure utilities: a YAML-subset parser, a seeded PRNG, a
+//! property-testing harness, plain-text table rendering and a tiny CLI
+//! argument parser.
+//!
+//! These exist because the build environment is offline and the crate set is
+//! limited to `xla` + `anyhow` (see DESIGN.md §Offline-environment notes);
+//! they replace serde_yaml / proptest / clap / criterion respectively.
+
+pub mod cli;
+pub mod prng;
+pub mod prop;
+pub mod table;
+pub mod yaml;
+
+/// Integer ceiling division.
+#[inline]
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0);
+    (a + b - 1) / b
+}
+
+/// Round `a` up to the next multiple of `b`.
+#[inline]
+pub fn round_up(a: usize, b: usize) -> usize {
+    ceil_div(a, b) * b
+}
+
+/// log2 of a power-of-two usize; panics otherwise (used for address math).
+#[inline]
+pub fn log2_exact(v: usize) -> u32 {
+    assert!(v.is_power_of_two(), "log2_exact({v}): not a power of two");
+    v.trailing_zeros()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basic() {
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(4, 4), 1);
+        assert_eq!(ceil_div(5, 4), 2);
+    }
+
+    #[test]
+    fn round_up_basic() {
+        assert_eq!(round_up(0, 16), 0);
+        assert_eq!(round_up(1, 16), 16);
+        assert_eq!(round_up(16, 16), 16);
+        assert_eq!(round_up(17, 16), 32);
+    }
+
+    #[test]
+    fn log2_exact_basic() {
+        assert_eq!(log2_exact(1), 0);
+        assert_eq!(log2_exact(16), 4);
+        assert_eq!(log2_exact(1 << 20), 20);
+    }
+
+    #[test]
+    #[should_panic]
+    fn log2_exact_rejects_non_pow2() {
+        log2_exact(12);
+    }
+}

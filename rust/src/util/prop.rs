@@ -1,0 +1,76 @@
+//! A minimal property-based testing harness (stand-in for `proptest`, which
+//! is unavailable offline — see DESIGN.md).
+//!
+//! Usage (doctest disabled: the sandbox cannot load shared libs for
+//! rustdoc binaries):
+//! ```text
+//! use tvm_accel::util::{prop, prng::Rng};
+//! prop::check("addition commutes", 100, |rng: &mut Rng| {
+//!     let a = rng.range(0, 1000);
+//!     let b = rng.range(0, 1000);
+//!     prop::assert_prop(a + b == b + a, format!("a={a} b={b}"))
+//! });
+//! ```
+//!
+//! Each case receives a deterministically seeded [`Rng`]; on failure the
+//! harness reports the case index and seed so the case can be replayed.
+
+use super::prng::Rng;
+
+/// Result of a single property case: `Ok(())` or a failure description.
+pub type CaseResult = Result<(), String>;
+
+/// Assert helper producing a [`CaseResult`].
+pub fn assert_prop(cond: bool, msg: impl Into<String>) -> CaseResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Run `cases` random cases of property `f`, panicking with a replayable
+/// seed on the first failure.
+pub fn check(name: &str, cases: u64, mut f: impl FnMut(&mut Rng) -> CaseResult) {
+    check_seeded(name, 0xC0DE_CAFE, cases, &mut f);
+}
+
+/// Like [`check`] but with an explicit base seed (use to replay a failure).
+pub fn check_seeded(
+    name: &str,
+    base_seed: u64,
+    cases: u64,
+    f: &mut impl FnMut(&mut Rng) -> CaseResult,
+) {
+    for i in 0..cases {
+        let seed = base_seed.wrapping_add(i).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!(
+                "property '{name}' failed at case {i} (replay: base_seed={base_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("trivial", 50, |rng| {
+            let v = rng.range(0, 10);
+            assert_prop(v <= 10, "bounded")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'must fail'")]
+    fn failing_property_reports() {
+        check("must fail", 50, |rng| {
+            let v = rng.range(0, 10);
+            assert_prop(v < 5, format!("v={v}"))
+        });
+    }
+}

@@ -1,0 +1,131 @@
+//! Plain-text table rendering for benchmark and report output, matching the
+//! row/column layout of the paper's tables.
+
+/// A simple column-aligned text table.
+#[derive(Debug, Default, Clone)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>) -> Self {
+        Table { title: title.into(), header: Vec::new(), rows: Vec::new() }
+    }
+
+    pub fn header(mut self, cols: &[&str]) -> Self {
+        self.header = cols.iter().map(|s| s.to_string()).collect();
+        self
+    }
+
+    pub fn row(&mut self, cols: Vec<String>) -> &mut Self {
+        assert_eq!(
+            cols.len(),
+            self.header.len(),
+            "row width must match header width"
+        );
+        self.rows.push(cols);
+        self
+    }
+
+    /// Render with column alignment; numeric-looking cells right-aligned.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let sep: String = widths
+            .iter()
+            .map(|w| "-".repeat(w + 2))
+            .collect::<Vec<_>>()
+            .join("+");
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| {
+                    let numeric = c
+                        .chars()
+                        .all(|ch| ch.is_ascii_digit() || ",.%x~".contains(ch))
+                        && !c.is_empty();
+                    if numeric {
+                        format!(" {:>width$} ", c, width = widths[i])
+                    } else {
+                        format!(" {:<width$} ", c, width = widths[i])
+                    }
+                })
+                .collect::<Vec<_>>()
+                .join("|")
+        };
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("## {}\n", self.title));
+        }
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+}
+
+/// Format an integer with thousands separators, as the paper prints cycles
+/// (e.g. `69,994`).
+pub fn commafy(v: u64) -> String {
+    let s = v.to_string();
+    let mut out = String::with_capacity(s.len() + s.len() / 3);
+    let bytes = s.as_bytes();
+    for (i, b) in bytes.iter().enumerate() {
+        if i > 0 && (bytes.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(*b as char);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn commafy_cases() {
+        assert_eq!(commafy(0), "0");
+        assert_eq!(commafy(999), "999");
+        assert_eq!(commafy(1000), "1,000");
+        assert_eq!(commafy(69994), "69,994");
+        assert_eq!(commafy(21508629), "21,508,629");
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Deployment results").header(&["Workload", "Cycles"]);
+        t.row(vec!["(64,64,64)".into(), commafy(69994)]);
+        t.row(vec!["ToyCar".into(), commafy(50064)]);
+        let r = t.render();
+        assert!(r.contains("Deployment results"));
+        assert!(r.contains("69,994"));
+        // All data lines have the same width.
+        let lines: Vec<&str> = r.lines().skip(1).collect();
+        let w = lines[0].len();
+        assert!(lines.iter().all(|l| l.len() == w));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_mismatch_panics() {
+        let mut t = Table::new("t").header(&["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+}

@@ -1,0 +1,503 @@
+//! A YAML-subset parser sufficient for CoSA-style architecture and
+//! constraint configuration files (stand-in for `serde_yaml`, unavailable
+//! offline — see DESIGN.md).
+//!
+//! Supported subset:
+//! * block mappings (`key: value`, nesting by indentation),
+//! * block sequences (`- item`, including `- key: value` item mappings),
+//! * inline (flow) sequences `[a, b, c]`,
+//! * scalars: integers, floats, booleans, strings (bare or quoted),
+//! * `#` comments and blank lines.
+//!
+//! Anchors, aliases, multi-document streams, flow mappings and block scalars
+//! are intentionally unsupported; config files in `configs/` stay within the
+//! subset.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Parsed YAML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Yaml {
+    Null,
+    Bool(bool),
+    Int(i64),
+    Float(f64),
+    Str(String),
+    Seq(Vec<Yaml>),
+    /// Ordered map (BTreeMap keeps deterministic iteration for tests).
+    Map(BTreeMap<String, Yaml>),
+}
+
+impl fmt::Display for Yaml {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Yaml::Null => write!(f, "null"),
+            Yaml::Bool(b) => write!(f, "{b}"),
+            Yaml::Int(i) => write!(f, "{i}"),
+            Yaml::Float(x) => write!(f, "{x}"),
+            Yaml::Str(s) => write!(f, "{s}"),
+            Yaml::Seq(items) => {
+                write!(f, "[")?;
+                for (i, it) in items.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{it}")?;
+                }
+                write!(f, "]")
+            }
+            Yaml::Map(m) => {
+                write!(f, "{{")?;
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{k}: {v}")?;
+                }
+                write!(f, "}}")
+            }
+        }
+    }
+}
+
+impl Yaml {
+    pub fn as_map(&self) -> Result<&BTreeMap<String, Yaml>> {
+        match self {
+            Yaml::Map(m) => Ok(m),
+            other => Err(anyhow!("expected mapping, got {other}")),
+        }
+    }
+
+    pub fn as_seq(&self) -> Result<&[Yaml]> {
+        match self {
+            Yaml::Seq(s) => Ok(s),
+            other => Err(anyhow!("expected sequence, got {other}")),
+        }
+    }
+
+    pub fn as_i64(&self) -> Result<i64> {
+        match self {
+            Yaml::Int(i) => Ok(*i),
+            other => Err(anyhow!("expected integer, got {other}")),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        let v = self.as_i64()?;
+        usize::try_from(v).map_err(|_| anyhow!("expected non-negative integer, got {v}"))
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Yaml::Float(x) => Ok(*x),
+            Yaml::Int(i) => Ok(*i as f64),
+            other => Err(anyhow!("expected number, got {other}")),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Yaml::Bool(b) => Ok(*b),
+            other => Err(anyhow!("expected boolean, got {other}")),
+        }
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Yaml::Str(s) => Ok(s),
+            other => Err(anyhow!("expected string, got {other}")),
+        }
+    }
+
+    /// Map lookup with a contextual error.
+    pub fn get(&self, key: &str) -> Result<&Yaml> {
+        self.as_map()?
+            .get(key)
+            .ok_or_else(|| anyhow!("missing key '{key}'"))
+    }
+
+    /// Map lookup returning `None` when the key is absent.
+    pub fn get_opt(&self, key: &str) -> Option<&Yaml> {
+        match self {
+            Yaml::Map(m) => m.get(key),
+            _ => None,
+        }
+    }
+}
+
+/// One meaningful line after comment/blank stripping.
+#[derive(Debug)]
+struct Line {
+    indent: usize,
+    text: String,
+    lineno: usize,
+}
+
+fn strip_comment(s: &str) -> &str {
+    // A '#' starts a comment unless inside quotes.
+    let mut in_s = false;
+    let mut in_d = false;
+    for (i, ch) in s.char_indices() {
+        match ch {
+            '\'' if !in_d => in_s = !in_s,
+            '"' if !in_s => in_d = !in_d,
+            '#' if !in_s && !in_d => {
+                // Require preceding whitespace or start-of-line per YAML.
+                if i == 0 || s.as_bytes()[i - 1].is_ascii_whitespace() {
+                    return &s[..i];
+                }
+            }
+            _ => {}
+        }
+    }
+    s
+}
+
+fn lex(src: &str) -> Result<Vec<Line>> {
+    let mut out = Vec::new();
+    for (i, raw) in src.lines().enumerate() {
+        if raw.contains('\t') {
+            bail!("line {}: tabs are not allowed in YAML indentation", i + 1);
+        }
+        let no_comment = strip_comment(raw);
+        let trimmed = no_comment.trim_end();
+        if trimmed.trim().is_empty() {
+            continue;
+        }
+        let indent = trimmed.len() - trimmed.trim_start().len();
+        out.push(Line { indent, text: trimmed.trim_start().to_string(), lineno: i + 1 });
+    }
+    Ok(out)
+}
+
+/// Parse a scalar token into a typed value.
+fn parse_scalar(tok: &str) -> Yaml {
+    let t = tok.trim();
+    if t.is_empty() || t == "~" || t == "null" {
+        return Yaml::Null;
+    }
+    if (t.starts_with('"') && t.ends_with('"') && t.len() >= 2)
+        || (t.starts_with('\'') && t.ends_with('\'') && t.len() >= 2)
+    {
+        return Yaml::Str(t[1..t.len() - 1].to_string());
+    }
+    match t {
+        "true" | "True" => return Yaml::Bool(true),
+        "false" | "False" => return Yaml::Bool(false),
+        _ => {}
+    }
+    if let Ok(i) = t.parse::<i64>() {
+        return Yaml::Int(i);
+    }
+    if let Ok(x) = t.parse::<f64>() {
+        return Yaml::Float(x);
+    }
+    if t.starts_with('[') && t.ends_with(']') {
+        let inner = &t[1..t.len() - 1];
+        if inner.trim().is_empty() {
+            return Yaml::Seq(Vec::new());
+        }
+        let items = split_flow(inner).into_iter().map(|s| parse_scalar(&s)).collect();
+        return Yaml::Seq(items);
+    }
+    Yaml::Str(t.to_string())
+}
+
+/// Split a flow-sequence body on commas, honoring nested brackets/quotes.
+fn split_flow(s: &str) -> Vec<String> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_s = false;
+    let mut in_d = false;
+    let mut cur = String::new();
+    for ch in s.chars() {
+        match ch {
+            '\'' if !in_d => in_s = !in_s,
+            '"' if !in_s => in_d = !in_d,
+            '[' if !in_s && !in_d => depth += 1,
+            ']' if !in_s && !in_d => depth = depth.saturating_sub(1),
+            ',' if depth == 0 && !in_s && !in_d => {
+                parts.push(std::mem::take(&mut cur));
+                continue;
+            }
+            _ => {}
+        }
+        cur.push(ch);
+    }
+    parts.push(cur);
+    parts
+}
+
+/// Split `key: value` at the first top-level colon. Returns `None` when the
+/// line is not a mapping entry.
+fn split_key(line: &str) -> Option<(&str, &str)> {
+    let mut in_s = false;
+    let mut in_d = false;
+    let bytes = line.as_bytes();
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '\'' if !in_d => in_s = !in_s,
+            '"' if !in_s => in_d = !in_d,
+            ':' if !in_s && !in_d => {
+                let after_ok = i + 1 >= bytes.len() || bytes[i + 1].is_ascii_whitespace();
+                if after_ok {
+                    return Some((line[..i].trim(), line[i + 1..].trim()));
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+struct Parser<'a> {
+    lines: &'a [Line],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn peek(&self) -> Option<&'a Line> {
+        self.lines.get(self.pos)
+    }
+
+    fn parse_block(&mut self, indent: usize) -> Result<Yaml> {
+        let first = match self.peek() {
+            Some(l) if l.indent >= indent => l,
+            _ => return Ok(Yaml::Null),
+        };
+        if first.text.starts_with("- ") || first.text == "-" {
+            self.parse_seq(first.indent)
+        } else {
+            self.parse_map(first.indent)
+        }
+    }
+
+    fn parse_map(&mut self, indent: usize) -> Result<Yaml> {
+        let mut map = BTreeMap::new();
+        while let Some(line) = self.peek() {
+            if line.indent < indent {
+                break;
+            }
+            if line.indent > indent {
+                bail!("line {}: unexpected indentation", line.lineno);
+            }
+            let (key, rest) = split_key(&line.text).ok_or_else(|| {
+                anyhow!("line {}: expected 'key: value', got '{}'", line.lineno, line.text)
+            })?;
+            self.pos += 1;
+            let value = if rest.is_empty() {
+                // Nested block (map or sequence) or null.
+                match self.peek() {
+                    Some(next) if next.indent > indent => self.parse_block(next.indent)?,
+                    // A sequence may be written at the same indent as its key.
+                    Some(next)
+                        if next.indent == indent
+                            && (next.text.starts_with("- ") || next.text == "-") =>
+                    {
+                        self.parse_seq(indent)?
+                    }
+                    _ => Yaml::Null,
+                }
+            } else {
+                parse_scalar(rest)
+            };
+            if map.insert(key.to_string(), value).is_some() {
+                bail!("line {}: duplicate key '{key}'", line.lineno);
+            }
+        }
+        Ok(Yaml::Map(map))
+    }
+
+    fn parse_seq(&mut self, indent: usize) -> Result<Yaml> {
+        let mut items = Vec::new();
+        while let Some(line) = self.peek() {
+            if line.indent != indent || !(line.text.starts_with("- ") || line.text == "-") {
+                if line.indent >= indent && !line.text.starts_with('-') {
+                    break;
+                }
+                if line.indent < indent {
+                    break;
+                }
+                bail!("line {}: malformed sequence item", line.lineno);
+            }
+            let body = line.text[1..].trim().to_string();
+            let lineno = line.lineno;
+            self.pos += 1;
+            if body.is_empty() {
+                // "-" alone: nested block item.
+                let item = match self.peek() {
+                    Some(next) if next.indent > indent => self.parse_block(next.indent)?,
+                    _ => Yaml::Null,
+                };
+                items.push(item);
+            } else if let Some((key, rest)) = split_key(&body) {
+                // "- key: value" starts an item mapping whose further keys
+                // sit at indent + 2.
+                let mut map = BTreeMap::new();
+                let value = if rest.is_empty() {
+                    match self.peek() {
+                        Some(next) if next.indent > indent + 2 => {
+                            self.parse_block(next.indent)?
+                        }
+                        _ => Yaml::Null,
+                    }
+                } else {
+                    parse_scalar(rest)
+                };
+                map.insert(key.to_string(), value);
+                while let Some(next) = self.peek() {
+                    if next.indent != indent + 2 {
+                        break;
+                    }
+                    let (k, r) = split_key(&next.text).ok_or_else(|| {
+                        anyhow!("line {}: expected 'key: value' in item map", next.lineno)
+                    })?;
+                    self.pos += 1;
+                    let v = if r.is_empty() {
+                        match self.peek() {
+                            Some(n2) if n2.indent > indent + 2 => self.parse_block(n2.indent)?,
+                            _ => Yaml::Null,
+                        }
+                    } else {
+                        parse_scalar(r)
+                    };
+                    if map.insert(k.to_string(), v).is_some() {
+                        bail!("line {}: duplicate key '{k}'", lineno);
+                    }
+                }
+                items.push(Yaml::Map(map));
+            } else {
+                items.push(parse_scalar(&body));
+            }
+        }
+        Ok(Yaml::Seq(items))
+    }
+}
+
+/// Parse a YAML document from a string.
+pub fn parse(src: &str) -> Result<Yaml> {
+    let lines = lex(src)?;
+    if lines.is_empty() {
+        return Ok(Yaml::Null);
+    }
+    let mut p = Parser { lines: &lines, pos: 0 };
+    let v = p.parse_block(0)?;
+    if let Some(left) = p.peek() {
+        bail!("line {}: trailing content '{}'", left.lineno, left.text);
+    }
+    Ok(v)
+}
+
+/// Parse a YAML document from a file.
+pub fn parse_file(path: &std::path::Path) -> Result<Yaml> {
+    let src = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    parse(&src).with_context(|| format!("parsing {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars() {
+        assert_eq!(parse("a: 1").unwrap().get("a").unwrap(), &Yaml::Int(1));
+        assert_eq!(parse("a: 1.5").unwrap().get("a").unwrap(), &Yaml::Float(1.5));
+        assert_eq!(parse("a: true").unwrap().get("a").unwrap(), &Yaml::Bool(true));
+        assert_eq!(
+            parse("a: hello").unwrap().get("a").unwrap(),
+            &Yaml::Str("hello".into())
+        );
+        assert_eq!(
+            parse("a: \"quoted: str\"").unwrap().get("a").unwrap(),
+            &Yaml::Str("quoted: str".into())
+        );
+        assert_eq!(parse("a: ~").unwrap().get("a").unwrap(), &Yaml::Null);
+    }
+
+    #[test]
+    fn nested_maps() {
+        let doc = parse(
+            "arch:\n  pe_array:\n    dim: 16\n    dataflow: WS\n  memory:\n    size: 262144\n",
+        )
+        .unwrap();
+        let dim = doc.get("arch").unwrap().get("pe_array").unwrap().get("dim").unwrap();
+        assert_eq!(dim, &Yaml::Int(16));
+        let size = doc.get("arch").unwrap().get("memory").unwrap().get("size").unwrap();
+        assert_eq!(size, &Yaml::Int(262144));
+    }
+
+    #[test]
+    fn block_sequences() {
+        let doc = parse("dims:\n  - N\n  - C\n  - K\n").unwrap();
+        let seq = doc.get("dims").unwrap().as_seq().unwrap();
+        assert_eq!(seq.len(), 3);
+        assert_eq!(seq[0], Yaml::Str("N".into()));
+    }
+
+    #[test]
+    fn sequence_of_maps() {
+        let src = "levels:\n  - name: Scratchpad\n    size: 262144\n  - name: Accumulator\n    size: 65536\n";
+        let doc = parse(src).unwrap();
+        let levels = doc.get("levels").unwrap().as_seq().unwrap();
+        assert_eq!(levels.len(), 2);
+        assert_eq!(
+            levels[0].get("name").unwrap(),
+            &Yaml::Str("Scratchpad".into())
+        );
+        assert_eq!(levels[1].get("size").unwrap(), &Yaml::Int(65536));
+    }
+
+    #[test]
+    fn flow_sequences() {
+        let doc = parse("shares: [0.25, 0.25, 0.5]\nnames: [in, w, out]\n").unwrap();
+        let s = doc.get("shares").unwrap().as_seq().unwrap();
+        assert_eq!(s[2], Yaml::Float(0.5));
+        let n = doc.get("names").unwrap().as_seq().unwrap();
+        assert_eq!(n[1], Yaml::Str("w".into()));
+    }
+
+    #[test]
+    fn comments_and_blanks() {
+        let src = "# top comment\na: 1  # trailing\n\nb: 2\n";
+        let doc = parse(src).unwrap();
+        assert_eq!(doc.get("a").unwrap(), &Yaml::Int(1));
+        assert_eq!(doc.get("b").unwrap(), &Yaml::Int(2));
+    }
+
+    #[test]
+    fn duplicate_key_rejected() {
+        assert!(parse("a: 1\na: 2\n").is_err());
+    }
+
+    #[test]
+    fn tabs_rejected() {
+        assert!(parse("a:\n\tb: 1\n").is_err());
+    }
+
+    #[test]
+    fn nested_seq_under_item_map() {
+        let src = "constraints:\n  - level: PE\n    dims:\n      - C\n      - K\n";
+        let doc = parse(src).unwrap();
+        let c = &doc.get("constraints").unwrap().as_seq().unwrap()[0];
+        let dims = c.get("dims").unwrap().as_seq().unwrap();
+        assert_eq!(dims.len(), 2);
+    }
+
+    #[test]
+    fn empty_doc_is_null() {
+        assert_eq!(parse("").unwrap(), Yaml::Null);
+        assert_eq!(parse("# only comments\n").unwrap(), Yaml::Null);
+    }
+
+    #[test]
+    fn type_errors_are_reported() {
+        let doc = parse("a: 1").unwrap();
+        assert!(doc.get("a").unwrap().as_str().is_err());
+        assert!(doc.get("missing").is_err());
+        assert!(doc.get("a").unwrap().as_map().is_err());
+    }
+}

@@ -1,0 +1,153 @@
+//! Prime factorization of loop bounds.
+//!
+//! CoSA's mapping variables assign *prime factors* of each loop bound to
+//! (memory level, spatial/temporal) slots; we represent a bound as the
+//! multiset of its prime factors grouped by prime (`2^7 · 5^1` for 640).
+
+use std::fmt;
+
+/// Prime factorization of a loop bound, grouped as `(prime, exponent)`
+/// pairs in increasing prime order.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Factorization {
+    pub value: usize,
+    pub factors: Vec<(usize, u32)>,
+}
+
+impl Factorization {
+    /// Factorize `v` by trial division (bounds are small: ≤ a few thousand).
+    pub fn of(v: usize) -> Factorization {
+        assert!(v > 0, "cannot factorize 0");
+        let mut factors = Vec::new();
+        let mut rest = v;
+        let mut p = 2;
+        while p * p <= rest {
+            if rest % p == 0 {
+                let mut e = 0;
+                while rest % p == 0 {
+                    rest /= p;
+                    e += 1;
+                }
+                factors.push((p, e));
+            }
+            p += if p == 2 { 1 } else { 2 };
+        }
+        if rest > 1 {
+            factors.push((rest, 1));
+        }
+        Factorization { value: v, factors }
+    }
+
+    /// Total number of prime factors counted with multiplicity
+    /// (the `n` axis size of CoSA's X matrix for this dimension).
+    pub fn num_prime_factors(&self) -> u32 {
+        self.factors.iter().map(|&(_, e)| e).sum()
+    }
+
+    /// Flat list of primes with multiplicity, e.g. 12 → [2, 2, 3].
+    pub fn flat(&self) -> Vec<usize> {
+        let mut out = Vec::new();
+        for &(p, e) in &self.factors {
+            for _ in 0..e {
+                out.push(p);
+            }
+        }
+        out
+    }
+
+    /// All divisors of the value, sorted ascending.
+    pub fn divisors(&self) -> Vec<usize> {
+        let mut divs = vec![1usize];
+        for &(p, e) in &self.factors {
+            let mut next = Vec::with_capacity(divs.len() * (e as usize + 1));
+            for &d in &divs {
+                let mut pe = 1usize;
+                for _ in 0..=e {
+                    next.push(d * pe);
+                    pe *= p;
+                }
+            }
+            divs = next;
+        }
+        divs.sort_unstable();
+        divs
+    }
+}
+
+impl fmt::Display for Factorization {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} = ", self.value)?;
+        for (i, (p, e)) in self.factors.iter().enumerate() {
+            if i > 0 {
+                write!(f, " · ")?;
+            }
+            if *e == 1 {
+                write!(f, "{p}")?;
+            } else {
+                write!(f, "{p}^{e}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prng::Rng, prop};
+
+    #[test]
+    fn small_factorizations() {
+        assert_eq!(Factorization::of(1).factors, vec![]);
+        assert_eq!(Factorization::of(2).factors, vec![(2, 1)]);
+        assert_eq!(Factorization::of(12).factors, vec![(2, 2), (3, 1)]);
+        assert_eq!(Factorization::of(640).factors, vec![(2, 7), (5, 1)]);
+        assert_eq!(Factorization::of(97).factors, vec![(97, 1)]);
+    }
+
+    #[test]
+    fn flat_and_counts() {
+        let f = Factorization::of(360); // 2^3 · 3^2 · 5
+        assert_eq!(f.num_prime_factors(), 6);
+        assert_eq!(f.flat(), vec![2, 2, 2, 3, 3, 5]);
+    }
+
+    #[test]
+    fn divisors_of_64() {
+        assert_eq!(Factorization::of(64).divisors(), vec![1, 2, 4, 8, 16, 32, 64]);
+    }
+
+    #[test]
+    fn divisors_of_12() {
+        assert_eq!(Factorization::of(12).divisors(), vec![1, 2, 3, 4, 6, 12]);
+    }
+
+    #[test]
+    fn prop_product_of_factors_reconstructs_value() {
+        prop::check("factor product == value", 500, |rng: &mut Rng| {
+            let v = rng.range(1, 5000);
+            let f = Factorization::of(v);
+            let prod: usize = f.flat().iter().product();
+            prop::assert_prop(prod == v, format!("v={v} prod={prod}"))
+        });
+    }
+
+    #[test]
+    fn prop_divisors_divide() {
+        prop::check("all divisors divide", 200, |rng: &mut Rng| {
+            let v = rng.range(1, 2000);
+            let f = Factorization::of(v);
+            for d in f.divisors() {
+                if v % d != 0 {
+                    return Err(format!("v={v} d={d}"));
+                }
+            }
+            // Count check: τ(v) = Π (e_i + 1).
+            let tau: usize = f.factors.iter().map(|&(_, e)| e as usize + 1).product();
+            prop::assert_prop(
+                f.divisors().len() == tau,
+                format!("v={v} τ mismatch"),
+            )
+        });
+    }
+}

@@ -1,0 +1,249 @@
+//! Workload definitions: the tensor-operation shapes the scheduler and
+//! compiler operate on (GEMM and 2-D convolution), prime factorization of
+//! loop bounds, and the benchmark suites used in the paper's evaluation.
+
+pub mod factor;
+pub mod suites;
+
+use std::fmt;
+
+/// The three GEMM dimensions, following the paper's convention:
+/// `In ∈ R^{N×C}`, `W ∈ R^{C×K}`, `O ∈ R^{N×K}`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Dim {
+    /// Output rows (batch / spatial positions).
+    N,
+    /// Reduction (input channels).
+    C,
+    /// Output columns (output channels).
+    K,
+}
+
+impl Dim {
+    pub const ALL: [Dim; 3] = [Dim::N, Dim::C, Dim::K];
+
+    pub fn index(self) -> usize {
+        match self {
+            Dim::N => 0,
+            Dim::C => 1,
+            Dim::K => 2,
+        }
+    }
+
+    pub fn from_index(i: usize) -> Dim {
+        Dim::ALL[i]
+    }
+
+    pub fn parse(s: &str) -> Option<Dim> {
+        match s {
+            "N" | "n" => Some(Dim::N),
+            "C" | "c" => Some(Dim::C),
+            "K" | "k" => Some(Dim::K),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Dim {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Dim::N => write!(f, "N"),
+            Dim::C => write!(f, "C"),
+            Dim::K => write!(f, "K"),
+        }
+    }
+}
+
+/// The three GEMM operands.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Operand {
+    Input,
+    Weight,
+    Output,
+}
+
+impl Operand {
+    pub const ALL: [Operand; 3] = [Operand::Input, Operand::Weight, Operand::Output];
+
+    pub fn index(self) -> usize {
+        match self {
+            Operand::Input => 0,
+            Operand::Weight => 1,
+            Operand::Output => 2,
+        }
+    }
+
+    /// Which GEMM dimensions this operand's footprint depends on.
+    /// (Input: N×C, Weight: C×K, Output: N×K.)
+    pub fn dims(self) -> [Dim; 2] {
+        match self {
+            Operand::Input => [Dim::N, Dim::C],
+            Operand::Weight => [Dim::C, Dim::K],
+            Operand::Output => [Dim::N, Dim::K],
+        }
+    }
+
+    /// Whether this operand's footprint depends on `d`.
+    pub fn uses(self, d: Dim) -> bool {
+        self.dims().contains(&d)
+    }
+
+    /// The dimension this operand is *reused over* (the GEMM dim it does not
+    /// depend on): temporal iteration over that dim revisits the operand.
+    pub fn reuse_dim(self) -> Dim {
+        match self {
+            Operand::Input => Dim::K,
+            Operand::Weight => Dim::N,
+            Operand::Output => Dim::C,
+        }
+    }
+}
+
+impl fmt::Display for Operand {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Operand::Input => write!(f, "Input"),
+            Operand::Weight => write!(f, "Weight"),
+            Operand::Output => write!(f, "Output"),
+        }
+    }
+}
+
+/// A GEMM workload: `O[N,K] = In[N,C] · W[C,K]` (plus bias / requantize in
+/// the quantized pipeline). Convolutions are lowered to this via im2col.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Gemm {
+    pub n: usize,
+    pub c: usize,
+    pub k: usize,
+}
+
+impl Gemm {
+    pub fn new(n: usize, c: usize, k: usize) -> Gemm {
+        assert!(n > 0 && c > 0 && k > 0, "GEMM dims must be positive");
+        Gemm { n, c, k }
+    }
+
+    pub fn bound(&self, d: Dim) -> usize {
+        match d {
+            Dim::N => self.n,
+            Dim::C => self.c,
+            Dim::K => self.k,
+        }
+    }
+
+    /// Total multiply-accumulate count.
+    pub fn macs(&self) -> u64 {
+        self.n as u64 * self.c as u64 * self.k as u64
+    }
+
+    /// Byte footprint of an operand tile with the given per-dim tile sizes,
+    /// at `elem_bytes` bytes per element.
+    pub fn operand_bytes(op: Operand, tile: &[usize; 3], elem_bytes: usize) -> usize {
+        let [a, b] = op.dims();
+        tile[a.index()] * tile[b.index()] * elem_bytes
+    }
+}
+
+impl fmt::Display for Gemm {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "({}, {}, {})", self.n, self.k, self.c)
+    }
+}
+
+/// A 2-D convolution workload (NHWC, OHWI weights), lowered to GEMM by
+/// im2col: N' = batch·out_h·out_w, C' = kh·kw·in_c, K' = out_c.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Conv2d {
+    pub batch: usize,
+    pub in_h: usize,
+    pub in_w: usize,
+    pub in_c: usize,
+    pub out_c: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+impl Conv2d {
+    pub fn out_h(&self) -> usize {
+        (self.in_h + 2 * self.pad - self.kh) / self.stride + 1
+    }
+
+    pub fn out_w(&self) -> usize {
+        (self.in_w + 2 * self.pad - self.kw) / self.stride + 1
+    }
+
+    /// The GEMM this convolution lowers to via im2col.
+    pub fn to_gemm(&self) -> Gemm {
+        Gemm::new(
+            self.batch * self.out_h() * self.out_w(),
+            self.kh * self.kw * self.in_c,
+            self.out_c,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn operand_dim_relations() {
+        assert!(Operand::Input.uses(Dim::N) && Operand::Input.uses(Dim::C));
+        assert!(!Operand::Input.uses(Dim::K));
+        assert_eq!(Operand::Input.reuse_dim(), Dim::K);
+        assert_eq!(Operand::Weight.reuse_dim(), Dim::N);
+        assert_eq!(Operand::Output.reuse_dim(), Dim::C);
+        for op in Operand::ALL {
+            // reuse dim is exactly the dim not used.
+            assert!(!op.uses(op.reuse_dim()));
+        }
+    }
+
+    #[test]
+    fn gemm_macs_and_bounds() {
+        let g = Gemm::new(64, 128, 256);
+        assert_eq!(g.bound(Dim::N), 64);
+        assert_eq!(g.bound(Dim::C), 128);
+        assert_eq!(g.bound(Dim::K), 256);
+        assert_eq!(g.macs(), 64 * 128 * 256);
+    }
+
+    #[test]
+    fn operand_bytes_footprint() {
+        let tile = [16usize, 32, 8]; // n, c, k
+        assert_eq!(Gemm::operand_bytes(Operand::Input, &tile, 1), 16 * 32);
+        assert_eq!(Gemm::operand_bytes(Operand::Weight, &tile, 1), 32 * 8);
+        assert_eq!(Gemm::operand_bytes(Operand::Output, &tile, 4), 16 * 8 * 4);
+    }
+
+    #[test]
+    fn conv_im2col() {
+        let c = Conv2d {
+            batch: 1,
+            in_h: 8,
+            in_w: 8,
+            in_c: 3,
+            out_c: 16,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            pad: 1,
+        };
+        assert_eq!(c.out_h(), 8);
+        assert_eq!(c.out_w(), 8);
+        let g = c.to_gemm();
+        assert_eq!(g, Gemm::new(64, 27, 16));
+    }
+
+    #[test]
+    fn dim_roundtrip() {
+        for d in Dim::ALL {
+            assert_eq!(Dim::from_index(d.index()), d);
+            assert_eq!(Dim::parse(&d.to_string()), Some(d));
+        }
+        assert_eq!(Dim::parse("Q"), None);
+    }
+}

@@ -1,0 +1,60 @@
+//! Benchmark workload suites matching the paper's evaluation (§4).
+
+use super::Gemm;
+
+/// The single-dense-layer shapes of Table 2: square (N, K, C) GEMMs.
+pub fn table2_single_layers() -> Vec<(String, Gemm)> {
+    [64usize, 128, 256, 512]
+        .iter()
+        .map(|&s| (format!("({s}, {s}, {s})"), Gemm::new(s, s, s)))
+        .collect()
+}
+
+/// Dense-layer stack of the MLPerf-Tiny ToyCar anomaly-detection
+/// autoencoder (fully-connected 640-128-128-128-128-8-128-128-128-128-640).
+/// Each entry is (layer name, GEMM with batch N=1).
+pub fn toycar_layers() -> Vec<(String, Gemm)> {
+    let widths = [640usize, 128, 128, 128, 128, 8, 128, 128, 128, 128, 640];
+    widths
+        .windows(2)
+        .enumerate()
+        .map(|(i, w)| (format!("fc{}_{}x{}", i, w[0], w[1]), Gemm::new(1, w[0], w[1])))
+        .collect()
+}
+
+/// The hidden widths of the ToyCar autoencoder, input first.
+pub fn toycar_widths() -> Vec<usize> {
+    vec![640, 128, 128, 128, 128, 8, 128, 128, 128, 128, 640]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_suite_shapes() {
+        let s = table2_single_layers();
+        assert_eq!(s.len(), 4);
+        assert_eq!(s[0].1, Gemm::new(64, 64, 64));
+        assert_eq!(s[3].1, Gemm::new(512, 512, 512));
+    }
+
+    #[test]
+    fn toycar_has_ten_dense_layers() {
+        let layers = toycar_layers();
+        assert_eq!(layers.len(), 10);
+        // Encoder input layer 640 -> 128, bottleneck 128 -> 8, decoder output 128 -> 640.
+        assert_eq!(layers[0].1, Gemm::new(1, 640, 128));
+        assert_eq!(layers[4].1, Gemm::new(1, 128, 8));
+        assert_eq!(layers[9].1, Gemm::new(1, 128, 640));
+    }
+
+    #[test]
+    fn toycar_macs_are_small() {
+        // The network is tiny: ~ a quarter-million MACs total. This is what
+        // makes per-layer host-side preprocessing overhead catastrophic in
+        // the naive BYOC backend (Table 2's ~200x ToyCar gap).
+        let total: u64 = toycar_layers().iter().map(|(_, g)| g.macs()).sum();
+        assert!(total < 600_000, "total={total}");
+    }
+}

@@ -1,0 +1,124 @@
+//! Integration: the compiled accelerator programs must agree
+//! element-exactly with the XLA golden models built by `make artifacts`
+//! (the JAX + Pallas computations loaded through PJRT).
+//!
+//! These tests skip with a notice when artifacts are absent so `cargo
+//! test` works on a fresh checkout; `make test` always builds them first.
+
+use tvm_accel::accel::gemmini::gemmini_desc;
+use tvm_accel::baselines::c_toolchain::compile_c_toolchain;
+use tvm_accel::baselines::naive_byoc::compile_naive;
+use tvm_accel::pipeline::Compiler;
+use tvm_accel::relay::import::load_qmodel;
+use tvm_accel::runtime::{artifacts_dir, golden_inputs, Runtime};
+use tvm_accel::sim::Simulator;
+use tvm_accel::util::prng::Rng;
+
+fn have_artifacts() -> bool {
+    let ok = artifacts_dir().join("toycar.qmodel").exists();
+    if !ok {
+        eprintln!("skipping golden test: run `make artifacts` first");
+    }
+    ok
+}
+
+fn check_model(name: &str, inferences: usize, seed: u64) {
+    let dir = artifacts_dir();
+    let model = load_qmodel(&dir.join(format!("{name}.qmodel"))).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let golden = rt.load_hlo_text(&dir.join(format!("{name}.hlo.txt"))).unwrap();
+
+    let accel = gemmini_desc().unwrap();
+    let sim = Simulator::new(&accel.arch);
+    let graph = tvm_accel::relay::import::to_qnn_graph(&model).unwrap();
+    let dep = Compiler::new(accel.clone()).compile(&graph).unwrap();
+
+    let mut rng = Rng::new(seed);
+    for i in 0..inferences {
+        let x = rng.i8_vec(model.batch * model.layers[0].in_dim);
+        let want = golden
+            .run(&golden_inputs(&model, &x).unwrap())
+            .unwrap()
+            .to_vec::<i8>()
+            .unwrap();
+        let (got, _) = dep.run(&sim, &x).unwrap();
+        assert_eq!(got, want, "{name}: inference {i} mismatch vs XLA golden");
+    }
+}
+
+#[test]
+fn toycar_matches_xla_golden() {
+    if !have_artifacts() {
+        return;
+    }
+    check_model("toycar", 5, 11);
+}
+
+#[test]
+fn dense64_matches_xla_golden() {
+    if !have_artifacts() {
+        return;
+    }
+    check_model("dense_64", 3, 12);
+}
+
+#[test]
+fn dense128_matches_xla_golden() {
+    if !have_artifacts() {
+        return;
+    }
+    check_model("dense_128", 2, 13);
+}
+
+#[test]
+fn pallas_and_ref_hlo_agree() {
+    // The Pallas-kernel HLO and the pure-jnp oracle HLO are different
+    // programs; both must produce identical outputs through PJRT.
+    if !have_artifacts() {
+        return;
+    }
+    let dir = artifacts_dir();
+    let model = load_qmodel(&dir.join("toycar.qmodel")).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let pallas = rt.load_hlo_text(&dir.join("toycar.hlo.txt")).unwrap();
+    let oracle = rt.load_hlo_text(&dir.join("toycar_ref.hlo.txt")).unwrap();
+    let mut rng = Rng::new(14);
+    for _ in 0..3 {
+        let x = rng.i8_vec(model.batch * model.layers[0].in_dim);
+        let ins = golden_inputs(&model, &x).unwrap();
+        let a = pallas.run(&ins).unwrap().to_vec::<i8>().unwrap();
+        let ins2 = golden_inputs(&model, &x).unwrap();
+        let b = oracle.run(&ins2).unwrap().to_vec::<i8>().unwrap();
+        assert_eq!(a, b, "Pallas HLO != oracle HLO");
+    }
+}
+
+#[test]
+fn all_backends_match_golden_on_toycar() {
+    if !have_artifacts() {
+        return;
+    }
+    let dir = artifacts_dir();
+    let model = load_qmodel(&dir.join("toycar.qmodel")).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let golden = rt.load_hlo_text(&dir.join("toycar.hlo.txt")).unwrap();
+    let accel = gemmini_desc().unwrap();
+    let sim = Simulator::new(&accel.arch);
+
+    let graph = tvm_accel::baselines::naive_byoc::import_with_weight_chain(&model).unwrap();
+    let proposed = Compiler::new(accel.clone()).compile(&graph).unwrap();
+    let ct = compile_c_toolchain(&accel, &model).unwrap();
+    let nb = compile_naive(&accel, &model).unwrap();
+
+    let mut rng = Rng::new(15);
+    let x = rng.i8_vec(model.batch * model.layers[0].in_dim);
+    let want = golden
+        .run(&golden_inputs(&model, &x).unwrap())
+        .unwrap()
+        .to_vec::<i8>()
+        .unwrap();
+    for (name, dep) in [("proposed", &proposed), ("c_toolchain", &ct), ("naive", &nb)] {
+        let (got, _) = dep.run(&sim, &x).unwrap();
+        assert_eq!(got, want, "{name} != golden");
+    }
+}
