@@ -49,17 +49,17 @@ fn total(paths: &[&str]) -> usize {
 
 fn main() {
     // Manual integration: everything the configurators generate/automate.
-    let manual_frontend = total(&["rust/src/relay/legalize.rs", "rust/src/frontend/mod.rs"]);
+    let manual_frontend = total(&["src/relay/legalize.rs", "src/frontend/mod.rs"]);
     let manual_backend = total(&[
-        "rust/src/backend/strategy.rs",
-        "rust/src/backend/intrin.rs",
-        "rust/src/backend/mapping.rs",
+        "src/backend/strategy.rs",
+        "src/backend/intrin.rs",
+        "src/backend/mapping.rs",
     ]);
-    let manual_sched = total(&["rust/src/backend/codegen.rs", "rust/src/tir/schedule.rs"]);
+    let manual_sched = total(&["src/backend/codegen.rs", "src/tir/schedule.rs"]);
     let manual = manual_frontend + manual_backend + manual_sched;
 
     // Proposed: what a user writes for one accelerator.
-    let proposed = total(&["rust/src/accel/gemmini.rs", "configs/gemmini.yaml"]);
+    let proposed = total(&["src/accel/gemmini.rs", "configs/gemmini.yaml"]);
 
     let reduction = 100.0 * (1.0 - proposed as f64 / manual as f64);
 

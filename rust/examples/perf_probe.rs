@@ -38,10 +38,37 @@ fn main() {
     let (_, repc) = ct.run(&sim, &x).unwrap();
     println!("c-toolchain 512^3: sim {:?} ({} cycles)", t0.elapsed(), repc.cycles);
 
+    let shapes = [
+        ("512^3", Gemm::new(512, 512, 512)),
+        ("toycar-layer", Gemm::new(1, 640, 128)),
+    ];
+    for (name, g) in shapes {
+        let t0 = Instant::now();
+        let serial =
+            sweep(&accel.arch, g, &SweepOptions { parallel: false, ..Default::default() });
+        let t_serial = t0.elapsed();
+        let t0 = Instant::now();
+        let parallel = sweep(&accel.arch, g, &SweepOptions::default());
+        let t_parallel = t0.elapsed();
+        assert_eq!(serial.candidates, parallel.candidates);
+        println!(
+            "sweep {name}: serial {t_serial:?} vs parallel {t_parallel:?} \
+             ({} candidates, identical)",
+            parallel.candidates.len()
+        );
+    }
+
+    // Schedule cache: the second compile of the same model runs no sweeps.
+    let compiler = tvm_accel::pipeline::Compiler::new(accel.clone());
+    let graph = tvm_accel::relay::import::to_qnn_graph(&model).unwrap();
     let t0 = Instant::now();
-    let r = sweep(&accel.arch, Gemm::new(512,512,512), &SweepOptions::default());
-    println!("sweep 512^3: {:?} ({} candidates)", t0.elapsed(), r.candidates.len());
+    compiler.compile(&graph).unwrap();
+    let cold = t0.elapsed();
     let t0 = Instant::now();
-    let r2 = sweep(&accel.arch, Gemm::new(1,640,128), &SweepOptions::default());
-    println!("sweep toycar-layer: {:?} ({} candidates)", t0.elapsed(), r2.candidates.len());
+    compiler.compile(&graph).unwrap();
+    let warm = t0.elapsed();
+    println!(
+        "compile 512^3 dense: cold {cold:?} vs cached {warm:?} ({} sweeps total)",
+        compiler.sweeps_run()
+    );
 }

@@ -39,10 +39,13 @@ fn main() -> Result<()> {
     let graph = to_qnn_graph(&model)?;
     println!("\nimported QNN graph:\n{}", graph.dump());
 
-    // 3. Compile: frontend configurator -> extended CoSA -> mapping
-    //    generator -> codegen, with simulator-profiled schedule selection.
+    // 3. Compile through the staged session: frontend configurator ->
+    //    partition -> extended CoSA (cache + parallel sweep) -> mapping
+    //    generator -> codegen -> link, with per-stage timings.
     let compiler = Compiler::new(accel.clone());
-    let deployment = compiler.compile(&graph)?;
+    let session = compiler.compile_with_report(&graph)?;
+    println!("pipeline stages:\n{}", session.render_stages());
+    let deployment = &session.deployment;
     println!("chosen schedules:");
     for (name, sched, cycles) in &deployment.chosen {
         println!("  {name}: {sched}");
@@ -51,11 +54,22 @@ fn main() -> Result<()> {
         }
     }
 
-    // 4. Run one batch on the cycle-level simulator.
+    // Recompiling reuses every schedule from the compiler's cache.
+    compiler.compile(&graph)?;
+    let cache = compiler.cache_stats();
+    println!(
+        "\nrecompile: {} sweeps total, cache {} hits / {} entries",
+        compiler.sweeps_run(),
+        cache.hits,
+        cache.entries
+    );
+
+    // 4. Run a batch on the cycle-level simulator (constants staged once).
     let sim = Simulator::new(&accel.arch);
-    let input = rng.i8_vec(8 * dims[0]);
-    let (output, report) = deployment.run(&sim, &input)?;
-    println!("\n{}", describe("inference", &report, accel.arch.pe_dim));
-    println!("first 10 outputs: {:?}", &output[..10]);
+    let inputs: Vec<Vec<i8>> = (0..4).map(|_| rng.i8_vec(8 * dims[0])).collect();
+    let refs: Vec<&[i8]> = inputs.iter().map(|v| v.as_slice()).collect();
+    let (outputs, reports) = deployment.run_batch(&sim, &refs)?;
+    println!("\n{}", describe("inference", &reports[0], accel.arch.pe_dim));
+    println!("batch of {}: first 10 outputs of run 0: {:?}", outputs.len(), &outputs[0][..10]);
     Ok(())
 }

@@ -4,6 +4,7 @@
 //! the simulator to pick the measured best.
 //!
 //! Run with: `cargo run --release --example scheduler_explore -- --n 128 --c 128 --k 128`
+//! (add `--serial` to disable the parallel sweep)
 
 use anyhow::Result;
 use tvm_accel::accel::gemmini::gemmini_desc;
@@ -28,7 +29,13 @@ fn main() -> Result<()> {
     let accel = gemmini_desc()?;
     println!("extended-CoSA sweep for GEMM {g} on {}\n", accel.name);
 
-    let opts = SweepOptions { max_candidates: 8, ..Default::default() };
+    // `--serial` forces the reference single-threaded sweep (the parallel
+    // default returns the identical candidate list, just faster).
+    let opts = SweepOptions {
+        max_candidates: 8,
+        parallel: !args.flag("serial"),
+        ..Default::default()
+    };
     let result = sweep(&accel.arch, g, &opts);
     println!(
         "{} configuration points explored, {} candidates kept\n",

@@ -53,29 +53,34 @@ fn main() -> Result<()> {
     let naive = compile_naive(&accel, &model)?;
 
     // --- Run batched inferences, golden-checking every output -------------
+    // `run_batch` stages each deployment's constants once for the whole
+    // batch instead of once per inference.
     let mut rng = Rng::new(2026);
+    let inputs: Vec<Vec<i8>> =
+        (0..INFERENCES).map(|_| rng.i8_vec(model.batch * model.layers[0].in_dim)).collect();
+    let input_refs: Vec<&[i8]> = inputs.iter().map(|v| v.as_slice()).collect();
+
+    let (outs_p, reps_p) = proposed.run_batch(&sim, &input_refs)?;
+    let (outs_c, reps_c) = c_tool.run_batch(&sim, &input_refs)?;
+    let (outs_n, reps_n) = naive.run_batch(&sim, &input_refs)?;
+
     let mut rows = [0u64; 3];
     let mut total_macs = 0u64;
     for i in 0..INFERENCES {
-        let x = rng.i8_vec(model.batch * model.layers[0].in_dim);
-        let want = golden.run(&golden_inputs(&model, &x)?)?.to_vec::<i8>()?;
+        let want = golden.run(&golden_inputs(&model, &inputs[i])?)?.to_vec::<i8>()?;
+        ensure!(outs_p[i] == want, "inference {i}: proposed != golden");
+        ensure!(outs_c[i] == want, "inference {i}: c-toolchain != golden");
+        ensure!(outs_n[i] == want, "inference {i}: naive BYOC != golden");
 
-        let (out_p, rep_p) = proposed.run(&sim, &x)?;
-        ensure!(out_p == want, "inference {i}: proposed != golden");
-        let (out_c, rep_c) = c_tool.run(&sim, &x)?;
-        ensure!(out_c == want, "inference {i}: c-toolchain != golden");
-        let (out_n, rep_n) = naive.run(&sim, &x)?;
-        ensure!(out_n == want, "inference {i}: naive BYOC != golden");
-
-        rows[0] += rep_c.cycles;
-        rows[1] += rep_p.cycles;
-        rows[2] += rep_n.cycles;
-        total_macs += rep_p.macs;
+        rows[0] += reps_c[i].cycles;
+        rows[1] += reps_p[i].cycles;
+        rows[2] += reps_n[i].cycles;
+        total_macs += reps_p[i].macs;
         if i == 0 {
             println!("\nper-inference reports (first inference):");
-            println!("  {}", describe("c-toolchain", &rep_c, accel.arch.pe_dim));
-            println!("  {}", describe("proposed   ", &rep_p, accel.arch.pe_dim));
-            println!("  {}", describe("naive BYOC ", &rep_n, accel.arch.pe_dim));
+            println!("  {}", describe("c-toolchain", &reps_c[i], accel.arch.pe_dim));
+            println!("  {}", describe("proposed   ", &reps_p[i], accel.arch.pe_dim));
+            println!("  {}", describe("naive BYOC ", &reps_n[i], accel.arch.pe_dim));
         }
     }
     println!(

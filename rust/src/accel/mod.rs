@@ -206,6 +206,33 @@ impl AccelDesc {
         self.core.values().map(|c| c.relay_op.clone()).collect()
     }
 
+    /// Stable textual representation of the functional description, used
+    /// for schedule-cache fingerprinting: registered core computes,
+    /// preprocessing, and the intrinsic registry with its role bindings.
+    /// Intrinsic *behavior* is a function pointer and cannot be hashed
+    /// portably; registered names + classes are the proxy, so two
+    /// descriptions that bind different implementations under the same
+    /// names are indistinguishable here (document accordingly).
+    pub fn functional_repr(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        for (tag, c) in &self.core {
+            let _ = write!(s, "core({tag},{},{});", c.einsum, c.relay_op);
+        }
+        for (tag, ps) in &self.preprocessing {
+            let _ = write!(s, "prep({tag},{ps:?});");
+        }
+        for (name, i) in &self.intrinsics {
+            let _ = write!(s, "intr({name},{:?});", i.class);
+        }
+        let _ = write!(
+            s,
+            "roles({},{},{},{})",
+            self.compute_intrinsic, self.load_intrinsic, self.store_intrinsic, self.config_intrinsic
+        );
+        s
+    }
+
     pub fn core_compute(&self, tag: &str) -> Option<&CoreCompute> {
         self.core.get(tag)
     }

@@ -62,6 +62,7 @@ pub fn naive_options() -> CompileOptions {
         use_scheduler: false,
         fold_constants: false,
         profile_candidates: 0,
+        schedule_cache: false,
         sweep: SweepOptions::default(),
     }
 }
@@ -150,7 +151,12 @@ mod tests {
         assert_eq!(out_n, out_c);
         assert_eq!(out_n, out_p);
         // Performance ordering: naive ≫ {proposed, c-toolchain}.
-        assert!(rep_n.cycles > 2 * rep_p.cycles, "naive {} vs proposed {}", rep_n.cycles, rep_p.cycles);
+        assert!(
+            rep_n.cycles > 2 * rep_p.cycles,
+            "naive {} vs proposed {}",
+            rep_n.cycles,
+            rep_p.cycles
+        );
         assert!(rep_n.cycles > rep_c.cycles);
     }
 }

@@ -45,14 +45,21 @@ pub fn configure(accel: &AccelDesc) -> FrontendConfig {
     }
 }
 
+/// The graph-rewriting half of the frontend (legalize + optional constant
+/// fold), without partitioning. The session pipeline times this as its own
+/// stage; [`run_frontend`] composes it with partitioning.
+pub fn run_frontend_passes(g: &Graph, cfg: &FrontendConfig) -> Result<Graph> {
+    let legalized = legalize(g, &cfg.legalize)?;
+    if cfg.fold_constants {
+        fold_constants(&legalized)
+    } else {
+        Ok(legalized)
+    }
+}
+
 /// Run the configured frontend over an imported graph.
 pub fn run_frontend(g: &Graph, cfg: &FrontendConfig) -> Result<PartitionedGraph> {
-    let legalized = legalize(g, &cfg.legalize)?;
-    let processed = if cfg.fold_constants {
-        fold_constants(&legalized)?
-    } else {
-        legalized
-    };
+    let processed = run_frontend_passes(g, cfg)?;
     partition(&processed, &cfg.supported)
 }
 

@@ -22,7 +22,8 @@
 //!   primitives ([`tir`]), a Gemmini-class ISA ([`isa`]) and a cycle-level,
 //!   functionally exact simulator ([`sim`]);
 //! * the paper's two baselines ([`baselines`]) and a PJRT-backed golden
-//!   reference runtime ([`runtime`]).
+//!   reference runtime (`runtime`, behind the off-by-default `xla-runtime`
+//!   cargo feature: it needs the pinned `xla_extension` 0.5.1 toolchain).
 //!
 //! See `DESIGN.md` for the module inventory and the experiment index, and
 //! `examples/` for runnable entry points (`quickstart`, `toycar_e2e`,
@@ -37,6 +38,7 @@ pub mod isa;
 pub mod metrics;
 pub mod pipeline;
 pub mod relay;
+#[cfg(feature = "xla-runtime")]
 pub mod runtime;
 pub mod scheduler;
 pub mod sim;

@@ -23,6 +23,7 @@ use tvm_accel::baselines::naive_byoc::{compile_naive, import_with_weight_chain};
 use tvm_accel::metrics::describe;
 use tvm_accel::pipeline::{Compiler, Deployment};
 use tvm_accel::relay::import::{load_qmodel, QModel};
+#[cfg(feature = "xla-runtime")]
 use tvm_accel::runtime::{golden_inputs, Runtime};
 use tvm_accel::scheduler::sweep::{sweep, SweepOptions};
 use tvm_accel::sim::Simulator;
@@ -105,8 +106,10 @@ fn cmd_run(args: &Args) -> Result<()> {
     let dep = build_deployment(args, &accel, &model)?;
     let sim = Simulator::new(&accel.arch);
     let inferences = args.opt_usize("inferences", 1)?;
+    anyhow::ensure!(inferences > 0, "--inferences must be at least 1");
     let mut rng = Rng::new(args.opt_usize("seed", 1)? as u64);
 
+    #[cfg(feature = "xla-runtime")]
     let golden = match args.opt("golden") {
         Some(g) => {
             let rt = Runtime::cpu()?;
@@ -114,18 +117,30 @@ fn cmd_run(args: &Args) -> Result<()> {
         }
         None => None,
     };
+    #[cfg(not(feature = "xla-runtime"))]
+    if args.opt("golden").is_some() {
+        bail!(
+            "--golden needs the PJRT golden runtime: add the `xla` dependency \
+             and build with `--features xla-runtime` (see rust/Cargo.toml)"
+        );
+    }
+    #[cfg(not(feature = "xla-runtime"))]
+    let golden: Option<()> = None;
 
     let mut total = 0u64;
     for i in 0..inferences {
         let x = rng.i8_vec(model.batch * model.layers[0].in_dim);
         let (out, rep) = dep.run(&sim, &x)?;
         total += rep.cycles;
+        #[cfg(feature = "xla-runtime")]
         if let Some(g) = &golden {
             let want = g.run(&golden_inputs(&model, &x)?)?.to_vec::<i8>()?;
             if out != want {
                 bail!("inference {i}: output mismatch vs golden model");
             }
         }
+        #[cfg(not(feature = "xla-runtime"))]
+        let _ = &out;
         if i == 0 {
             println!("{}", describe("first inference", &rep, accel.arch.pe_dim));
         }

@@ -1,29 +1,43 @@
 //! The end-to-end compiler façade (paper Fig. 1): model + accelerator
 //! description → deployable program.
 //!
-//! The pipeline chains the configurators: frontend (legalize → fold →
-//! partition), strategy generator, extended-CoSA sweep, simulator-in-the-
-//! loop schedule selection ("the generated schedules ... are evaluated on
-//! the hardware to determine the most efficient configuration based on
-//! real execution profiling", §3.1), mapping generator and codegen. Host
-//! nodes lower to host-CPU operations.
+//! The heavy lifting lives in [`session`]: a [`CompilerSession`] chains
+//! the configurators as six explicit stages (frontend → partition →
+//! schedule → mapping → codegen → link), each producing an inspectable
+//! artifact plus timing/diagnostics. [`Compiler::compile`] is a thin
+//! wrapper that runs a session and returns just the [`Deployment`];
+//! [`Compiler::compile_with_report`] additionally returns the per-stage
+//! [`StageReport`]s.
+//!
+//! Schedule selection ("the generated schedules ... are evaluated on the
+//! hardware to determine the most efficient configuration based on real
+//! execution profiling", §3.1) is memoized in a content-addressed
+//! [`ScheduleCache`]: repeated layer shapes — within one model and across
+//! models compiled by a long-lived `Compiler` — skip the Fig. 2(b) sweep
+//! and the simulator profiling entirely. On a miss the sweep fans out
+//! across scoped worker threads and the top-K candidates are profiled in
+//! parallel, with deterministic, serial-identical results.
 
-use anyhow::{bail, ensure, Context, Result};
+pub mod session;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{ensure, Result};
 
 use crate::accel::AccelDesc;
 use crate::backend::codegen::{generate, LayerBufs};
 use crate::backend::mapping::apply_schedule;
-use crate::backend::strategy::generate_strategy_typed;
-use crate::frontend::{configure, run_frontend};
-use crate::isa::program::{HostOp, Program};
+use crate::isa::program::Program;
 use crate::isa::Instr;
-use crate::relay::partition::{PartitionedGraph, Target};
-use crate::relay::{Graph, Op, TensorData};
+use crate::relay::Graph;
+use crate::scheduler::cache::{CacheKey, CacheStats, CachedSelection, ScheduleCache, SearchKey};
 use crate::scheduler::sweep::{sweep, SweepOptions};
 use crate::scheduler::Schedule;
 use crate::sim::report::RunReport;
 use crate::sim::Simulator;
 use crate::workload::{Dim, Gemm};
+
+pub use session::{CompilerSession, ScheduleStats, SessionOutput, StageReport};
 
 /// Compilation options.
 #[derive(Debug, Clone)]
@@ -37,6 +51,9 @@ pub struct CompileOptions {
     /// How many top sweep candidates to profile on the simulator before
     /// picking (0 = trust the analytic model).
     pub profile_candidates: usize,
+    /// Memoize schedule selections in the compiler's content-addressed
+    /// cache (keyed by arch fingerprint + GEMM shape + search options).
+    pub schedule_cache: bool,
     pub sweep: SweepOptions,
 }
 
@@ -46,9 +63,21 @@ impl Default for CompileOptions {
             use_scheduler: true,
             fold_constants: true,
             profile_candidates: 6,
+            schedule_cache: true,
             sweep: SweepOptions::default(),
         }
     }
+}
+
+/// Where a layer's schedule came from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScheduleSource {
+    /// The naive default schedule (`use_scheduler = false`).
+    Naive,
+    /// Served from the schedule cache — no sweep, no profiling.
+    Cache,
+    /// Full sweep + profiling ran for this shape.
+    Search,
 }
 
 /// A compiled deployment.
@@ -82,21 +111,90 @@ impl Deployment {
         let out = dram.read_i8_slice(self.output_offset, self.output_elems)?;
         Ok((out, rep))
     }
+
+    /// Run many inferences back to back, amortizing the DRAM allocation
+    /// and constant staging across the batch: the init image is staged
+    /// once and only the input region is rewritten per inference. Outputs
+    /// and reports are element-identical to `inputs.len()` separate
+    /// [`Deployment::run`] calls (the program fully rewrites every region
+    /// it reads each run).
+    pub fn run_batch(
+        &self,
+        sim: &Simulator,
+        inputs: &[&[i8]],
+    ) -> Result<(Vec<Vec<i8>>, Vec<RunReport>)> {
+        let mut dram = self.program.make_dram()?;
+        let mut outputs = Vec::with_capacity(inputs.len());
+        let mut reports = Vec::with_capacity(inputs.len());
+        for (i, input) in inputs.iter().enumerate() {
+            ensure!(
+                input.len() == self.input_elems,
+                "batch input {i} has {} elems, model wants {}",
+                input.len(),
+                self.input_elems
+            );
+            dram.write_i8_slice(self.input_offset, input)?;
+            let rep = sim.run(&self.program, &mut dram)?;
+            outputs.push(dram.read_i8_slice(self.output_offset, self.output_elems)?);
+            reports.push(rep);
+        }
+        Ok((outputs, reports))
+    }
 }
 
-/// The compiler: construct once per accelerator description.
+/// The compiler: construct once per accelerator description. Long-lived
+/// compilers accumulate schedule-cache entries across `compile` calls, so
+/// recompiling a model (or compiling another model with shared layer
+/// shapes) skips the scheduling search.
 pub struct Compiler {
     pub accel: AccelDesc,
     pub options: CompileOptions,
+    /// Content-addressed schedule memoization (see [`ScheduleCache`]).
+    cache: ScheduleCache,
+    /// Number of schedule sweeps actually executed (cache misses).
+    sweeps_run: AtomicU64,
 }
 
 impl Compiler {
     pub fn new(accel: AccelDesc) -> Compiler {
-        Compiler { accel, options: CompileOptions::default() }
+        Compiler::with_options(accel, CompileOptions::default())
     }
 
     pub fn with_options(accel: AccelDesc, options: CompileOptions) -> Compiler {
-        Compiler { accel, options }
+        Compiler { accel, options, cache: ScheduleCache::new(), sweeps_run: AtomicU64::new(0) }
+    }
+
+    /// Compile a (QNN) graph into a deployment (thin façade over a
+    /// [`CompilerSession`]).
+    pub fn compile(&self, graph: &Graph) -> Result<Deployment> {
+        Ok(CompilerSession::new(self).run(graph)?.deployment)
+    }
+
+    /// Compile and return the per-stage reports alongside the deployment.
+    pub fn compile_with_report(&self, graph: &Graph) -> Result<SessionOutput> {
+        CompilerSession::new(self).run(graph)
+    }
+
+    /// How many Fig. 2(b) sweeps this compiler has executed (schedule
+    /// selections that were not cache hits or naive defaults).
+    pub fn sweeps_run(&self) -> u64 {
+        self.sweeps_run.load(Ordering::Relaxed)
+    }
+
+    /// Schedule-cache counters.
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    /// Drop all cached schedule selections. Rarely needed: the cache key
+    /// covers the accelerator fingerprint (architecture + functional
+    /// description) and the search options, all recomputed per lookup, so
+    /// mutating `accel` or `options` in place changes keys rather than
+    /// serving stale entries. The one blind spot is re-registering a
+    /// *different implementation* under an unchanged intrinsic name —
+    /// call this if you do that.
+    pub fn clear_schedule_cache(&self) {
+        self.cache.clear();
     }
 
     /// The naive default schedule (UMA/BYOC without CoSA): the TE-default
@@ -125,32 +223,98 @@ impl Compiler {
         }
     }
 
-    /// Pick the schedule for one layer: sweep + (optional) simulator
-    /// profiling of the top candidates.
-    fn select_schedule(&self, g: Gemm) -> Result<(Schedule, Option<u64>)> {
+    /// Pick the schedule for one layer: cache lookup, then sweep +
+    /// (optional) simulator profiling of the top candidates on a miss.
+    /// `accel_fp` is [`crate::scheduler::cache::accel_fingerprint`] of
+    /// `self.accel`, computed once per session rather than per layer.
+    pub(crate) fn select_schedule(
+        &self,
+        g: Gemm,
+        accel_fp: u64,
+    ) -> Result<(Schedule, Option<u64>, ScheduleSource)> {
         if !self.options.use_scheduler {
-            return Ok((self.naive_schedule(g), None));
+            return Ok((self.naive_schedule(g), None, ScheduleSource::Naive));
         }
+        let key = CacheKey {
+            arch: accel_fp,
+            gemm: g,
+            search: SearchKey::new(&self.options.sweep, self.options.profile_candidates),
+        };
+        if self.options.schedule_cache {
+            if let Some(hit) = self.cache.get(&key) {
+                return Ok((hit.schedule, hit.profiled_cycles, ScheduleSource::Cache));
+            }
+        }
+
+        self.sweeps_run.fetch_add(1, Ordering::Relaxed);
         let result = sweep(&self.accel.arch, g, &self.options.sweep);
         ensure!(
             !result.candidates.is_empty(),
             "scheduler found no valid mapping for {g:?}"
         );
-        if self.options.profile_candidates == 0 {
-            return Ok((result.candidates[0].clone(), None));
+        let (schedule, cycles) = if self.options.profile_candidates == 0 {
+            (result.candidates[0].clone(), None)
+        } else {
+            // Fig. 2(b): evaluate the refined candidates on the (simulated)
+            // hardware and keep the measured best.
+            let top = self.options.profile_candidates.min(result.candidates.len());
+            let (s, c) = self.profile_top_candidates(&result.candidates[..top])?;
+            (s, Some(c))
+        };
+        if self.options.schedule_cache {
+            self.cache.insert(
+                key,
+                CachedSelection { schedule: schedule.clone(), profiled_cycles: cycles },
+            );
         }
-        // Fig. 2(b): evaluate the refined candidates on the (simulated)
-        // hardware and keep the measured best.
-        let sim = Simulator::new(&self.accel.arch);
-        let mut best: Option<(Schedule, u64)> = None;
-        for s in result.candidates.iter().take(self.options.profile_candidates) {
-            let cycles = self.profile_layer(&sim, s)?;
-            if best.as_ref().map(|(_, c)| cycles < *c).unwrap_or(true) {
-                best = Some((s.clone(), cycles));
+        Ok((schedule, cycles, ScheduleSource::Search))
+    }
+
+    /// Profile the candidates on scoped worker threads (contiguous chunks
+    /// capped at the available parallelism, one simulator per worker —
+    /// timing is data-independent and deterministic) and return the
+    /// measured best. Ties break toward the lower index, exactly like the
+    /// serial loop this replaced.
+    fn profile_top_candidates(&self, candidates: &[Schedule]) -> Result<(Schedule, u64)> {
+        assert!(!candidates.is_empty());
+        let measured: Vec<Result<u64>> = if candidates.len() == 1 {
+            let sim = Simulator::new(&self.accel.arch);
+            vec![self.profile_layer(&sim, &candidates[0])]
+        } else {
+            let workers = std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+                .min(candidates.len());
+            let chunk_len = crate::util::ceil_div(candidates.len(), workers);
+            let mut out = Vec::with_capacity(candidates.len());
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = candidates
+                    .chunks(chunk_len)
+                    .map(|chunk| {
+                        scope.spawn(move || {
+                            let sim = Simulator::new(&self.accel.arch);
+                            chunk
+                                .iter()
+                                .map(|s| self.profile_layer(&sim, s))
+                                .collect::<Vec<_>>()
+                        })
+                    })
+                    .collect();
+                for h in handles {
+                    out.extend(h.join().expect("profiling worker panicked"));
+                }
+            });
+            out
+        };
+        let mut best: Option<(usize, u64)> = None;
+        for (i, r) in measured.into_iter().enumerate() {
+            let cycles = r?;
+            if best.map(|(_, c)| cycles < c).unwrap_or(true) {
+                best = Some((i, cycles));
             }
         }
-        let (s, c) = best.unwrap();
-        Ok((s, Some(c)))
+        let (i, c) = best.expect("measured at least one candidate");
+        Ok((candidates[i].clone(), c))
     }
 
     /// Measure one candidate schedule by compiling and simulating the
@@ -171,177 +335,6 @@ impl Compiler {
         prog.push(Instr::Fence);
         let mut dram = prog.make_dram()?;
         Ok(sim.run(&prog, &mut dram)?.cycles)
-    }
-
-    /// Compile a (QNN) graph into a deployment.
-    pub fn compile(&self, graph: &Graph) -> Result<Deployment> {
-        let mut fcfg = configure(&self.accel);
-        fcfg.fold_constants = self.options.fold_constants;
-        let pg: PartitionedGraph = run_frontend(graph, &fcfg)?;
-        let g = &pg.graph;
-        ensure!(g.inputs.len() == 1, "exactly one graph input supported");
-        ensure!(g.outputs.len() == 1, "exactly one graph output supported");
-
-        let mut prog = Program::new("deployment");
-        // One DRAM region per node value.
-        let mut region: Vec<u64> = Vec::with_capacity(g.nodes.len());
-        for n in &g.nodes {
-            let r = prog
-                .layout
-                .alloc(format!("n{}_{}", n.id, n.name), n.ty.bytes() as u64)?
-                .offset;
-            region.push(r);
-            if let Op::Constant(t) = &n.op {
-                let bytes = match &t.data {
-                    TensorData::I8(v) => v.iter().map(|&x| x as u8).collect(),
-                    TensorData::I32(v) => {
-                        v.iter().flat_map(|x| x.to_le_bytes()).collect::<Vec<u8>>()
-                    }
-                    TensorData::F32(v) => {
-                        v.iter().flat_map(|x| x.to_le_bytes()).collect::<Vec<u8>>()
-                    }
-                };
-                prog.add_init(r, bytes);
-            }
-        }
-
-        let mut chosen = Vec::new();
-        for n in &g.nodes {
-            match pg.targets[n.id] {
-                Target::None => {}
-                Target::Accel => {
-                    let shapes: Vec<Vec<usize>> =
-                        n.inputs.iter().map(|&i| g.node(i).ty.shape.clone()).collect();
-                    let strat = generate_strategy_typed(&self.accel, n, &shapes)?;
-                    let (sched, cycles) = self.select_schedule(strat.gemm)?;
-                    let scheduled = apply_schedule(&self.accel, &strat.tir, &sched)?;
-                    let bufs = LayerBufs {
-                        x: region[n.inputs[0]],
-                        w: region[n.inputs[1]],
-                        bias: region[n.inputs[2]],
-                        out: region[n.id],
-                    };
-                    generate(&self.accel, &scheduled, &sched, &bufs, &mut prog)
-                        .with_context(|| format!("codegen for layer '{}'", n.name))?;
-                    // Drain before anything consumes this layer's DRAM
-                    // output (the timing model tracks on-chip hazards only).
-                    prog.push(Instr::Fence);
-                    chosen.push((n.name.clone(), sched, cycles));
-                }
-                Target::Host => {
-                    self.emit_host(g, n, &region, &mut prog)
-                        .with_context(|| format!("host lowering for '{}'", n.name))?;
-                }
-            }
-        }
-
-        let in_node = g.node(g.inputs[0]);
-        let out_node = g.node(g.outputs[0]);
-        Ok(Deployment {
-            input_offset: region[in_node.id],
-            input_elems: in_node.ty.elems(),
-            output_offset: region[out_node.id],
-            output_elems: out_node.ty.elems(),
-            program: prog,
-            graph: pg.graph,
-            chosen,
-        })
-    }
-
-    /// Lower one host-assigned node to host ops.
-    fn emit_host(&self, g: &Graph, n: &crate::relay::Node, region: &[u64], prog: &mut Program) -> Result<()> {
-        let src = |i: usize| region[n.inputs[i]];
-        let dst = region[n.id];
-        match &n.op {
-            Op::Transpose => {
-                let s = &g.node(n.inputs[0]).ty.shape;
-                prog.push_host(HostOp::TransposeI8 { src: src(0), dst, rows: s[0], cols: s[1] });
-            }
-            Op::Im2col { kh, kw, stride, pad } => {
-                let s = &g.node(n.inputs[0]).ty.shape;
-                prog.push_host(HostOp::Im2col {
-                    src: src(0),
-                    dst,
-                    n: s[0],
-                    h: s[1],
-                    w: s[2],
-                    c: s[3],
-                    kh: *kh,
-                    kw: *kw,
-                    stride: *stride,
-                    pad: *pad,
-                });
-            }
-            Op::Reshape { .. } => {
-                prog.push_host(HostOp::Memcpy {
-                    src: src(0),
-                    dst,
-                    bytes: n.ty.bytes(),
-                });
-            }
-            Op::Quantize { scale } => prog.push_host(HostOp::QuantizeF32 {
-                src: src(0),
-                dst,
-                n: n.ty.elems(),
-                scale: *scale,
-            }),
-            Op::Dequantize { scale } => prog.push_host(HostOp::DequantizeI8 {
-                src: src(0),
-                dst,
-                n: n.ty.elems(),
-                scale: *scale,
-            }),
-            Op::Requantize { scale } => prog.push_host(HostOp::RequantizeI32 {
-                src: src(0),
-                dst,
-                n: n.ty.elems(),
-                scale: *scale,
-            }),
-            Op::Clip { lo, hi } => {
-                prog.push_host(HostOp::Memcpy { src: src(0), dst, bytes: n.ty.bytes() });
-                prog.push_host(HostOp::ClipI8 { buf: dst, n: n.ty.elems(), lo: *lo, hi: *hi });
-            }
-            Op::Relu => {
-                prog.push_host(HostOp::Memcpy { src: src(0), dst, bytes: n.ty.bytes() });
-                prog.push_host(HostOp::ClipI8 { buf: dst, n: n.ty.elems(), lo: 0, hi: 127 });
-            }
-            Op::BiasAdd => {
-                let s = &g.node(n.inputs[0]).ty.shape;
-                prog.push_host(HostOp::BiasAddI32 {
-                    x: src(0),
-                    bias: src(1),
-                    dst,
-                    n: s[0],
-                    k: s[1],
-                });
-            }
-            Op::QnnDense => {
-                // Host fallback: transpose TFLite-layout weights into a
-                // scratch region, then int8 GEMM.
-                let x = &g.node(n.inputs[0]).ty.shape;
-                let w = &g.node(n.inputs[1]).ty.shape;
-                let scratch = prog
-                    .layout
-                    .alloc(format!("n{}_wT_scratch", n.id), (w[0] * w[1]) as u64)?
-                    .offset;
-                prog.push_host(HostOp::TransposeI8 {
-                    src: src(1),
-                    dst: scratch,
-                    rows: w[0],
-                    cols: w[1],
-                });
-                prog.push_host(HostOp::MatmulI8 {
-                    a: src(0),
-                    b: scratch,
-                    c: dst,
-                    n: x[0],
-                    c_dim: x[1],
-                    k: w[0],
-                });
-            }
-            other => bail!("no host lowering for operator '{}'", other.name()),
-        }
-        Ok(())
     }
 }
 
@@ -374,7 +367,12 @@ mod tests {
 
     /// Compile + simulate must agree element-exactly with the graph
     /// interpreter (semantic ground truth).
-    fn check_deployment(opts: CompileOptions, dims: &[usize], batch: usize, seed: u64) -> RunReport {
+    fn check_deployment(
+        opts: CompileOptions,
+        dims: &[usize],
+        batch: usize,
+        seed: u64,
+    ) -> RunReport {
         let mut rng = Rng::new(seed);
         let model = mlp_model(&mut rng, dims, batch);
         let graph = to_qnn_graph(&model).unwrap();
@@ -446,5 +444,110 @@ mod tests {
             1,
             4,
         );
+    }
+
+    #[test]
+    fn second_compile_of_same_graph_runs_zero_sweeps() {
+        // The acceptance bar for the schedule cache: compiling a graph
+        // twice through one Compiler performs zero sweeps the second time.
+        let mut rng = Rng::new(5);
+        let model = mlp_model(&mut rng, &[32, 48, 16], 4);
+        let graph = to_qnn_graph(&model).unwrap();
+        let compiler = Compiler::new(gemmini_desc().unwrap());
+
+        let first = compiler.compile(&graph).unwrap();
+        let sweeps_after_first = compiler.sweeps_run();
+        assert_eq!(sweeps_after_first, 2, "one sweep per distinct layer shape");
+
+        let second = compiler.compile(&graph).unwrap();
+        assert_eq!(
+            compiler.sweeps_run(),
+            sweeps_after_first,
+            "second compile must be served entirely from the cache"
+        );
+        assert_eq!(first.program.items, second.program.items);
+        let stats = compiler.cache_stats();
+        assert_eq!(stats.entries, 2);
+        assert_eq!(stats.hits, 2, "both layers hit on the second compile");
+    }
+
+    #[test]
+    fn repeated_shapes_within_one_model_share_sweeps() {
+        // ToyCar-style trunk: 6 layers but only 5 distinct GEMM shapes —
+        // the repeated (1,16,16) layer must not sweep twice.
+        let mut rng = Rng::new(6);
+        let model = mlp_model(&mut rng, &[40, 16, 16, 8, 16, 16, 40], 1);
+        let graph = to_qnn_graph(&model).unwrap();
+        let compiler = Compiler::new(gemmini_desc().unwrap());
+        let out = compiler.compile_with_report(&graph).unwrap();
+        assert_eq!(out.schedule_stats.layers, 6);
+        assert_eq!(compiler.sweeps_run(), 5);
+        assert_eq!(out.schedule_stats.cache_hits, 1);
+        assert_eq!(out.schedule_stats.searched, 5);
+    }
+
+    #[test]
+    fn cache_can_be_disabled() {
+        let mut rng = Rng::new(7);
+        let model = mlp_model(&mut rng, &[16, 16, 16], 2);
+        let graph = to_qnn_graph(&model).unwrap();
+        let opts = CompileOptions { schedule_cache: false, ..Default::default() };
+        let compiler = Compiler::with_options(gemmini_desc().unwrap(), opts);
+        compiler.compile(&graph).unwrap();
+        compiler.compile(&graph).unwrap();
+        // Two layers with the same shape, compiled twice, all swept.
+        assert_eq!(compiler.sweeps_run(), 4);
+        assert_eq!(compiler.cache_stats().entries, 0);
+    }
+
+    #[test]
+    fn cached_compile_is_deterministic_with_fresh_compiler() {
+        // A cache hit must reproduce exactly what a cold compiler produces.
+        let mut rng = Rng::new(8);
+        let model = mlp_model(&mut rng, &[24, 24, 24], 2);
+        let graph = to_qnn_graph(&model).unwrap();
+        let warm = Compiler::new(gemmini_desc().unwrap());
+        warm.compile(&graph).unwrap();
+        let warm_dep = warm.compile(&graph).unwrap(); // all cache hits
+        let cold_dep = Compiler::new(gemmini_desc().unwrap()).compile(&graph).unwrap();
+        assert_eq!(warm_dep.program.items, cold_dep.program.items);
+        for (a, b) in warm_dep.chosen.iter().zip(&cold_dep.chosen) {
+            assert_eq!(a.1, b.1);
+            assert_eq!(a.2, b.2);
+        }
+    }
+
+    #[test]
+    fn run_batch_matches_individual_runs() {
+        let mut rng = Rng::new(9);
+        let model = mlp_model(&mut rng, &[32, 24, 8], 4);
+        let graph = to_qnn_graph(&model).unwrap();
+        let accel = gemmini_desc().unwrap();
+        let dep = Compiler::new(accel.clone()).compile(&graph).unwrap();
+        let sim = Simulator::new(&accel.arch);
+
+        let inputs: Vec<Vec<i8>> = (0..5).map(|_| rng.i8_vec(4 * 32)).collect();
+        let refs: Vec<&[i8]> = inputs.iter().map(|v| v.as_slice()).collect();
+        let (batch_outs, batch_reps) = dep.run_batch(&sim, &refs).unwrap();
+        assert_eq!(batch_outs.len(), 5);
+
+        for (i, input) in inputs.iter().enumerate() {
+            let (out, rep) = dep.run(&sim, input).unwrap();
+            assert_eq!(batch_outs[i], out, "inference {i} output diverged");
+            assert_eq!(batch_reps[i].cycles, rep.cycles, "inference {i} timing diverged");
+            assert_eq!(batch_reps[i].macs, rep.macs);
+        }
+    }
+
+    #[test]
+    fn run_batch_rejects_bad_input_length() {
+        let mut rng = Rng::new(12);
+        let model = mlp_model(&mut rng, &[16, 8], 2);
+        let graph = to_qnn_graph(&model).unwrap();
+        let accel = gemmini_desc().unwrap();
+        let dep = Compiler::new(accel.clone()).compile(&graph).unwrap();
+        let sim = Simulator::new(&accel.arch);
+        let short = vec![0i8; 3];
+        assert!(dep.run_batch(&sim, &[short.as_slice()]).is_err());
     }
 }

@@ -1,0 +1,454 @@
+//! The staged compiler session: the paper's Fig. 1 configurator chain made
+//! explicit.
+//!
+//! [`Compiler::compile`] used to be one opaque function; a
+//! [`CompilerSession`] runs the same flow as six observable stages —
+//!
+//! ```text
+//! frontend → partition → schedule → mapping → codegen → link
+//! ```
+//!
+//! — each producing an inspectable artifact plus a [`StageReport`] with
+//! wall-clock timing and diagnostics. The schedule stage consults the
+//! compiler's content-addressed schedule cache and runs the Fig. 2(b)
+//! sweep + simulator profiling only on misses. `Compiler::compile` is now
+//! a thin façade over this module; callers that want the per-stage
+//! breakdown use [`Compiler::compile_with_report`].
+//!
+//! See `ARCHITECTURE.md` (next to this file) for the stage graph and the
+//! cache-keying rules.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::backend::codegen::{generate, LayerBufs};
+use crate::backend::mapping::apply_schedule;
+use crate::backend::strategy::{generate_strategy_typed, Strategy};
+use crate::frontend::{configure, run_frontend_passes};
+use crate::isa::program::{HostOp, Program};
+use crate::isa::Instr;
+use crate::relay::partition::{partition, PartitionedGraph, Target};
+use crate::relay::{Graph, Node, Op, TensorData};
+use crate::scheduler::cache::accel_fingerprint;
+use crate::scheduler::Schedule;
+use crate::tir::TirFunc;
+
+use super::{Compiler, Deployment, ScheduleSource};
+
+/// Timing + diagnostics for one pipeline stage.
+#[derive(Debug, Clone)]
+pub struct StageReport {
+    pub name: &'static str,
+    pub elapsed: Duration,
+    /// Human-readable diagnostics (counts, cache statistics, sizes).
+    pub notes: Vec<String>,
+}
+
+/// Counters from the schedule-selection stage.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ScheduleStats {
+    /// Accelerator layers scheduled.
+    pub layers: usize,
+    /// Layers satisfied from the schedule cache (no sweep, no profiling).
+    pub cache_hits: usize,
+    /// Layers that ran the full sweep + profiling.
+    pub searched: usize,
+    /// Layers given the naive default schedule (`use_scheduler = false`).
+    pub naive: usize,
+}
+
+/// Everything a session produces: the deployment plus the per-stage
+/// reports and schedule-selection counters.
+#[derive(Debug, Clone)]
+pub struct SessionOutput {
+    pub deployment: Deployment,
+    pub stages: Vec<StageReport>,
+    pub schedule_stats: ScheduleStats,
+}
+
+impl SessionOutput {
+    /// Render the stage reports as an indented summary (for CLIs/examples).
+    pub fn render_stages(&self) -> String {
+        let mut out = String::new();
+        for s in &self.stages {
+            out.push_str(&format!("{:<10} {:>8} µs", s.name, s.elapsed.as_micros()));
+            if let Some(first) = s.notes.first() {
+                out.push_str(&format!("  {first}"));
+            }
+            out.push('\n');
+            for note in s.notes.iter().skip(1) {
+                out.push_str(&format!("{:22}{note}\n", ""));
+            }
+        }
+        out
+    }
+}
+
+/// Per-accelerator-layer plan produced by the schedule stage and consumed
+/// by mapping/codegen.
+struct LayerPlan {
+    strategy: Strategy,
+    schedule: Schedule,
+    profiled_cycles: Option<u64>,
+}
+
+/// One compilation run through the staged pipeline. Construct with
+/// [`CompilerSession::new`], consume with [`CompilerSession::run`].
+pub struct CompilerSession<'a> {
+    compiler: &'a Compiler,
+    stages: Vec<StageReport>,
+}
+
+impl<'a> CompilerSession<'a> {
+    pub fn new(compiler: &'a Compiler) -> CompilerSession<'a> {
+        CompilerSession { compiler, stages: Vec::new() }
+    }
+
+    fn finish_stage(&mut self, name: &'static str, started: Instant, notes: Vec<String>) {
+        self.stages.push(StageReport { name, elapsed: started.elapsed(), notes });
+    }
+
+    /// Run every stage over `graph`, producing the deployment and reports.
+    pub fn run(mut self, graph: &Graph) -> Result<SessionOutput> {
+        let c = self.compiler;
+
+        // --- Stage 1: frontend (legalize + constant fold) ----------------
+        let t0 = Instant::now();
+        let mut fcfg = configure(&c.accel);
+        fcfg.fold_constants = c.options.fold_constants;
+        let processed = run_frontend_passes(graph, &fcfg)?;
+        self.finish_stage(
+            "frontend",
+            t0,
+            vec![format!(
+                "{} nodes in, {} after legalize{}",
+                graph.nodes.len(),
+                processed.nodes.len(),
+                if fcfg.fold_constants { "+fold" } else { " (folding off)" }
+            )],
+        );
+
+        // --- Stage 2: partition ------------------------------------------
+        let t0 = Instant::now();
+        let pg: PartitionedGraph = partition(&processed, &fcfg.supported)?;
+        ensure!(pg.graph.inputs.len() == 1, "exactly one graph input supported");
+        ensure!(pg.graph.outputs.len() == 1, "exactly one graph output supported");
+        self.finish_stage(
+            "partition",
+            t0,
+            vec![format!(
+                "{} accel / {} host nodes in {} offload region(s)",
+                pg.accel_nodes(),
+                pg.host_nodes(),
+                pg.regions.len()
+            )],
+        );
+        let g = &pg.graph;
+
+        // --- Stage 3: per-layer schedule selection (cache + sweep) -------
+        let t0 = Instant::now();
+        let mut plans: Vec<Option<LayerPlan>> = Vec::new();
+        plans.resize_with(g.nodes.len(), || None);
+        let mut stats = ScheduleStats::default();
+        let accel_fp = accel_fingerprint(&c.accel);
+        for n in &g.nodes {
+            if pg.targets[n.id] != Target::Accel {
+                continue;
+            }
+            let shapes: Vec<Vec<usize>> =
+                n.inputs.iter().map(|&i| g.node(i).ty.shape.clone()).collect();
+            let strategy = generate_strategy_typed(&c.accel, n, &shapes)?;
+            let (schedule, profiled_cycles, source) = c
+                .select_schedule(strategy.gemm, accel_fp)
+                .with_context(|| format!("schedule selection for layer '{}'", n.name))?;
+            stats.layers += 1;
+            match source {
+                ScheduleSource::Cache => stats.cache_hits += 1,
+                ScheduleSource::Search => stats.searched += 1,
+                ScheduleSource::Naive => stats.naive += 1,
+            }
+            plans[n.id] = Some(LayerPlan { strategy, schedule, profiled_cycles });
+        }
+        let cache = c.cache_stats();
+        self.finish_stage(
+            "schedule",
+            t0,
+            vec![
+                format!(
+                    "{} layer(s): {} cache hit(s), {} searched, {} naive",
+                    stats.layers, stats.cache_hits, stats.searched, stats.naive
+                ),
+                format!(
+                    "cache: {} entries, {} hits / {} misses lifetime",
+                    cache.entries, cache.hits, cache.misses
+                ),
+            ],
+        );
+
+        // --- Stage 4: mapping (apply TIR schedules) ----------------------
+        let t0 = Instant::now();
+        let mut lowered: Vec<Option<TirFunc>> = Vec::new();
+        lowered.resize_with(g.nodes.len(), || None);
+        let mut mapped = 0usize;
+        for n in &g.nodes {
+            if let Some(plan) = &plans[n.id] {
+                let f = apply_schedule(&c.accel, &plan.strategy.tir, &plan.schedule)
+                    .with_context(|| format!("mapping for layer '{}'", n.name))?;
+                lowered[n.id] = Some(f);
+                mapped += 1;
+            }
+        }
+        self.finish_stage("mapping", t0, vec![format!("{mapped} TIR function(s) scheduled")]);
+
+        // --- Stage 5: codegen (allocate + emit) --------------------------
+        let t0 = Instant::now();
+        let mut prog = Program::new("deployment");
+        let region = allocate_regions(g, &mut prog)?;
+        let mut chosen = Vec::new();
+        for n in &g.nodes {
+            match pg.targets[n.id] {
+                Target::None => {}
+                Target::Accel => {
+                    let plan = plans[n.id].as_ref().expect("scheduled accel layer");
+                    let scheduled = lowered[n.id].as_ref().expect("mapped accel layer");
+                    let bufs = LayerBufs {
+                        x: region[n.inputs[0]],
+                        w: region[n.inputs[1]],
+                        bias: region[n.inputs[2]],
+                        out: region[n.id],
+                    };
+                    generate(&c.accel, scheduled, &plan.schedule, &bufs, &mut prog)
+                        .with_context(|| format!("codegen for layer '{}'", n.name))?;
+                    // Drain before anything consumes this layer's DRAM
+                    // output (the timing model tracks on-chip hazards only).
+                    prog.push(Instr::Fence);
+                    chosen.push((n.name.clone(), plan.schedule.clone(), plan.profiled_cycles));
+                }
+                Target::Host => {
+                    lower_host_node(g, n, &region, &mut prog)
+                        .with_context(|| format!("host lowering for '{}'", n.name))?;
+                }
+            }
+        }
+        self.finish_stage(
+            "codegen",
+            t0,
+            vec![format!(
+                "{} program item(s), {} DRAM bytes",
+                prog.items.len(),
+                prog.layout.total_bytes()
+            )],
+        );
+
+        // --- Stage 6: link (bind I/O, wrap the deployment) ---------------
+        let t0 = Instant::now();
+        let in_node = g.node(g.inputs[0]);
+        let out_node = g.node(g.outputs[0]);
+        let deployment = Deployment {
+            input_offset: region[in_node.id],
+            input_elems: in_node.ty.elems(),
+            output_offset: region[out_node.id],
+            output_elems: out_node.ty.elems(),
+            program: prog,
+            graph: pg.graph,
+            chosen,
+        };
+        self.finish_stage(
+            "link",
+            t0,
+            vec![format!(
+                "input {} elem(s) @ {:#x}, output {} elem(s) @ {:#x}",
+                deployment.input_elems,
+                deployment.input_offset,
+                deployment.output_elems,
+                deployment.output_offset
+            )],
+        );
+
+        Ok(SessionOutput { deployment, stages: self.stages, schedule_stats: stats })
+    }
+}
+
+/// Allocate one DRAM region per node value and stage constant contents
+/// into the program's init image.
+fn allocate_regions(g: &Graph, prog: &mut Program) -> Result<Vec<u64>> {
+    let mut region: Vec<u64> = Vec::with_capacity(g.nodes.len());
+    for n in &g.nodes {
+        let r = prog
+            .layout
+            .alloc(format!("n{}_{}", n.id, n.name), n.ty.bytes() as u64)?
+            .offset;
+        region.push(r);
+        if let Op::Constant(t) = &n.op {
+            let bytes = match &t.data {
+                TensorData::I8(v) => v.iter().map(|&x| x as u8).collect(),
+                TensorData::I32(v) => {
+                    v.iter().flat_map(|x| x.to_le_bytes()).collect::<Vec<u8>>()
+                }
+                TensorData::F32(v) => {
+                    v.iter().flat_map(|x| x.to_le_bytes()).collect::<Vec<u8>>()
+                }
+            };
+            prog.add_init(r, bytes);
+        }
+    }
+    Ok(region)
+}
+
+/// Lower one host-assigned node to host ops.
+fn lower_host_node(g: &Graph, n: &Node, region: &[u64], prog: &mut Program) -> Result<()> {
+    let src = |i: usize| region[n.inputs[i]];
+    let dst = region[n.id];
+    match &n.op {
+        Op::Transpose => {
+            let s = &g.node(n.inputs[0]).ty.shape;
+            prog.push_host(HostOp::TransposeI8 { src: src(0), dst, rows: s[0], cols: s[1] });
+        }
+        Op::Im2col { kh, kw, stride, pad } => {
+            let s = &g.node(n.inputs[0]).ty.shape;
+            prog.push_host(HostOp::Im2col {
+                src: src(0),
+                dst,
+                n: s[0],
+                h: s[1],
+                w: s[2],
+                c: s[3],
+                kh: *kh,
+                kw: *kw,
+                stride: *stride,
+                pad: *pad,
+            });
+        }
+        Op::Reshape { .. } => {
+            prog.push_host(HostOp::Memcpy {
+                src: src(0),
+                dst,
+                bytes: n.ty.bytes(),
+            });
+        }
+        Op::Quantize { scale } => prog.push_host(HostOp::QuantizeF32 {
+            src: src(0),
+            dst,
+            n: n.ty.elems(),
+            scale: *scale,
+        }),
+        Op::Dequantize { scale } => prog.push_host(HostOp::DequantizeI8 {
+            src: src(0),
+            dst,
+            n: n.ty.elems(),
+            scale: *scale,
+        }),
+        Op::Requantize { scale } => prog.push_host(HostOp::RequantizeI32 {
+            src: src(0),
+            dst,
+            n: n.ty.elems(),
+            scale: *scale,
+        }),
+        Op::Clip { lo, hi } => {
+            prog.push_host(HostOp::Memcpy { src: src(0), dst, bytes: n.ty.bytes() });
+            prog.push_host(HostOp::ClipI8 { buf: dst, n: n.ty.elems(), lo: *lo, hi: *hi });
+        }
+        Op::Relu => {
+            prog.push_host(HostOp::Memcpy { src: src(0), dst, bytes: n.ty.bytes() });
+            prog.push_host(HostOp::ClipI8 { buf: dst, n: n.ty.elems(), lo: 0, hi: 127 });
+        }
+        Op::BiasAdd => {
+            let s = &g.node(n.inputs[0]).ty.shape;
+            prog.push_host(HostOp::BiasAddI32 {
+                x: src(0),
+                bias: src(1),
+                dst,
+                n: s[0],
+                k: s[1],
+            });
+        }
+        Op::QnnDense => {
+            // Host fallback: transpose TFLite-layout weights into a
+            // scratch region, then int8 GEMM.
+            let x = &g.node(n.inputs[0]).ty.shape;
+            let w = &g.node(n.inputs[1]).ty.shape;
+            let scratch = prog
+                .layout
+                .alloc(format!("n{}_wT_scratch", n.id), (w[0] * w[1]) as u64)?
+                .offset;
+            prog.push_host(HostOp::TransposeI8 {
+                src: src(1),
+                dst: scratch,
+                rows: w[0],
+                cols: w[1],
+            });
+            prog.push_host(HostOp::MatmulI8 {
+                a: src(0),
+                b: scratch,
+                c: dst,
+                n: x[0],
+                c_dim: x[1],
+                k: w[0],
+            });
+        }
+        other => bail!("no host lowering for operator '{}'", other.name()),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::gemmini::gemmini_desc;
+    use crate::relay::import::{from_quantized, to_qnn_graph};
+    use crate::relay::quantize::{quantize_mlp, FloatDense};
+    use crate::util::prng::Rng;
+
+    fn small_graph(dims: &[usize], batch: usize, seed: u64) -> Graph {
+        let mut rng = Rng::new(seed);
+        let layers: Vec<FloatDense> = dims
+            .windows(2)
+            .enumerate()
+            .map(|(i, w)| FloatDense {
+                weight: (0..w[0] * w[1]).map(|_| (rng.f64() as f32 - 0.5) * 0.3).collect(),
+                bias: (0..w[1]).map(|_| (rng.f64() as f32 - 0.5) * 0.1).collect(),
+                in_dim: w[0],
+                out_dim: w[1],
+                relu: i + 2 < dims.len(),
+            })
+            .collect();
+        let scales: Vec<f32> = (0..dims.len()).map(|i| 0.02 + 0.01 * i as f32).collect();
+        let q = quantize_mlp(&layers, &scales).unwrap();
+        to_qnn_graph(&from_quantized(batch, scales[0], &q)).unwrap()
+    }
+
+    #[test]
+    fn session_reports_every_stage_in_order() {
+        let graph = small_graph(&[32, 16, 8], 2, 9);
+        let compiler = Compiler::new(gemmini_desc().unwrap());
+        let out = CompilerSession::new(&compiler).run(&graph).unwrap();
+        let names: Vec<&str> = out.stages.iter().map(|s| s.name).collect();
+        assert_eq!(
+            names,
+            ["frontend", "partition", "schedule", "mapping", "codegen", "link"]
+        );
+        for s in &out.stages {
+            assert!(!s.notes.is_empty(), "stage {} has no diagnostics", s.name);
+        }
+        assert_eq!(out.schedule_stats.layers, 2);
+        assert_eq!(out.schedule_stats.searched + out.schedule_stats.cache_hits, 2);
+        assert!(!out.render_stages().is_empty());
+    }
+
+    #[test]
+    fn session_deployment_identical_to_facade() {
+        let graph = small_graph(&[24, 24, 24], 3, 10);
+        let compiler = Compiler::new(gemmini_desc().unwrap());
+        let via_session = CompilerSession::new(&compiler).run(&graph).unwrap().deployment;
+        let via_facade = compiler.compile(&graph).unwrap();
+        assert_eq!(via_session.program.items, via_facade.program.items);
+        assert_eq!(via_session.input_offset, via_facade.input_offset);
+        assert_eq!(via_session.output_offset, via_facade.output_offset);
+        assert_eq!(via_session.chosen.len(), via_facade.chosen.len());
+        for (a, b) in via_session.chosen.iter().zip(&via_facade.chosen) {
+            assert_eq!(a.0, b.0);
+            assert_eq!(a.1, b.1);
+        }
+    }
+}

@@ -129,13 +129,14 @@ pub fn golden_inputs(
     Ok(lits)
 }
 
-/// Default artifact directory (`artifacts/` at the repo root, overridable
-/// via `TVM_ACCEL_ARTIFACTS`).
+/// Default artifact directory (`artifacts/` at the repo root — one level
+/// above the cargo package — matching `python/compile/aot.py`'s default
+/// output; overridable via `TVM_ACCEL_ARTIFACTS`).
 pub fn artifacts_dir() -> PathBuf {
     if let Ok(d) = std::env::var("TVM_ACCEL_ARTIFACTS") {
         return PathBuf::from(d);
     }
-    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../artifacts")
 }
 
 #[cfg(test)]

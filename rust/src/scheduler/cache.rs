@@ -1,0 +1,280 @@
+//! Content-addressed schedule cache.
+//!
+//! Schedule selection (Fig. 2(b) sweep + simulator profiling) is the
+//! compile-time hot path: for ToyCar-class edge models most layers share a
+//! handful of `Gemm` shapes, and a long-lived [`crate::pipeline::Compiler`]
+//! sees the same shapes again across models. The selected schedule depends
+//! only on the *architecture*, the *workload shape* and the *search
+//! options*, so the cache key is exactly that triple:
+//!
+//! * [`accel_fingerprint`] — a hash over every description parameter that
+//!   can influence scheduling: the architectural half (PE dim, dataflows,
+//!   memory levels, DMA/host timing, constraints) plus the functional half
+//!   (registered computes/preprocessing and intrinsic role bindings, which
+//!   the profiling path compiles through). The accelerator's display name
+//!   is deliberately excluded: two differently-named descriptions of the
+//!   same machine share entries, while any parameter change moves to a
+//!   fresh key.
+//! * the [`Gemm`] shape;
+//! * a [`SearchKey`] of the sweep options plus the profiling depth.
+//!
+//! Whether the sweep runs serially or in parallel is *not* part of the key:
+//! the parallel sweep is guaranteed (and tested) to return the identical
+//! candidate list as the serial one.
+
+use std::collections::HashMap;
+use std::fmt::Write as _;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::accel::AccelDesc;
+use crate::arch::ArchDesc;
+use crate::workload::Gemm;
+
+use super::sweep::SweepOptions;
+use super::Schedule;
+
+fn hash_str(s: &str) -> u64 {
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    s.hash(&mut h);
+    h.finish()
+}
+
+/// Textual form of the scheduling-relevant architectural parameters.
+fn arch_repr(arch: &ArchDesc) -> String {
+    let mut repr = String::new();
+    let _ = write!(repr, "pe={};dataflows={:?};", arch.pe_dim, arch.dataflows);
+    for l in &arch.levels {
+        let _ = write!(
+            repr,
+            "level({},{:?},{},{:?},{:?});",
+            l.name, l.kind, l.size_bytes, l.residents, l.elem_bytes
+        );
+    }
+    let _ = write!(
+        repr,
+        "dma={:?};host={:?};constraints={:?}",
+        arch.dma, arch.host, arch.constraints
+    );
+    repr
+}
+
+/// Hash of the scheduling-relevant architectural parameters.
+pub fn arch_fingerprint(arch: &ArchDesc) -> u64 {
+    hash_str(&arch_repr(arch))
+}
+
+/// Hash of everything about an accelerator description that can influence
+/// a schedule selection: the architectural parameters plus the functional
+/// description (registered computes/preprocessing and intrinsic role
+/// bindings — profiling compiles the layer through those intrinsics).
+/// Intrinsic implementations are function pointers and enter only by
+/// registered name/class.
+pub fn accel_fingerprint(accel: &AccelDesc) -> u64 {
+    hash_str(&format!("{}##{}", arch_repr(&accel.arch), accel.functional_repr()))
+}
+
+/// The search-option half of the cache key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SearchKey {
+    pub top_k_per_config: usize,
+    pub max_candidates: usize,
+    pub uneven_mapping: bool,
+    pub double_buffering: bool,
+    /// How many top candidates were profiled on the simulator.
+    pub profile_candidates: usize,
+}
+
+impl SearchKey {
+    pub fn new(sweep: &SweepOptions, profile_candidates: usize) -> SearchKey {
+        SearchKey {
+            top_k_per_config: sweep.top_k_per_config,
+            max_candidates: sweep.max_candidates,
+            uneven_mapping: sweep.uneven_mapping,
+            double_buffering: sweep.double_buffering,
+            profile_candidates,
+        }
+    }
+}
+
+/// Full cache key: accelerator fingerprint + workload shape + search
+/// options (see [`accel_fingerprint`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    pub arch: u64,
+    pub gemm: Gemm,
+    pub search: SearchKey,
+}
+
+/// A cached selection: the winning schedule and, when profiling ran, its
+/// measured cycle count.
+#[derive(Debug, Clone)]
+pub struct CachedSelection {
+    pub schedule: Schedule,
+    pub profiled_cycles: Option<u64>,
+}
+
+/// Hit/miss counters (monotonic over the cache's lifetime).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub entries: usize,
+}
+
+/// Thread-safe schedule cache. Interior mutability so the compiler can
+/// consult it from `&self` (and from profiling worker threads).
+#[derive(Debug, Default)]
+pub struct ScheduleCache {
+    map: Mutex<HashMap<CacheKey, CachedSelection>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl ScheduleCache {
+    pub fn new() -> ScheduleCache {
+        ScheduleCache::default()
+    }
+
+    /// Look up a selection, counting the hit or miss.
+    pub fn get(&self, key: &CacheKey) -> Option<CachedSelection> {
+        let found = self.map.lock().expect("schedule cache poisoned").get(key).cloned();
+        match &found {
+            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
+            None => self.misses.fetch_add(1, Ordering::Relaxed),
+        };
+        found
+    }
+
+    pub fn insert(&self, key: CacheKey, value: CachedSelection) {
+        self.map.lock().expect("schedule cache poisoned").insert(key, value);
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.lock().expect("schedule cache poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn clear(&self) {
+        self.map.lock().expect("schedule cache poisoned").clear();
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            entries: self.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Dataflow;
+    use crate::scheduler::Estimate;
+    use crate::workload::Dim;
+
+    fn dummy_schedule(g: Gemm) -> Schedule {
+        Schedule {
+            workload: g,
+            dataflow: Dataflow::WeightStationary,
+            double_buffer: false,
+            shares: [0.5, 0.5, 1.0],
+            insn_tile: [1, 1, 1],
+            onchip_tile: [1, 1, 1],
+            dram_order: [Dim::N, Dim::C, Dim::K],
+            est: Estimate::default(),
+        }
+    }
+
+    fn key(arch: u64, g: Gemm) -> CacheKey {
+        CacheKey { arch, gemm: g, search: SearchKey::new(&SweepOptions::default(), 6) }
+    }
+
+    #[test]
+    fn hit_and_miss_semantics() {
+        let cache = ScheduleCache::new();
+        let g = Gemm::new(8, 8, 8);
+        assert!(cache.get(&key(1, g)).is_none());
+        cache.insert(
+            key(1, g),
+            CachedSelection { schedule: dummy_schedule(g), profiled_cycles: Some(42) },
+        );
+        let hit = cache.get(&key(1, g)).expect("hit");
+        assert_eq!(hit.profiled_cycles, Some(42));
+        assert_eq!(hit.schedule.workload, g);
+        // Different shape, different arch, different options: all misses.
+        assert!(cache.get(&key(1, Gemm::new(8, 8, 16))).is_none());
+        assert!(cache.get(&key(2, g)).is_none());
+        let mut k = key(1, g);
+        k.search.profile_candidates = 0;
+        assert!(cache.get(&k).is_none());
+        let stats = cache.stats();
+        assert_eq!(stats.hits, 1);
+        assert_eq!(stats.misses, 4);
+        assert_eq!(stats.entries, 1);
+    }
+
+    #[test]
+    fn fingerprint_ignores_name_but_not_parameters() {
+        let a = ArchDesc::gemmini();
+        let mut renamed = a.clone();
+        renamed.name = "other".into();
+        assert_eq!(arch_fingerprint(&a), arch_fingerprint(&renamed));
+
+        let mut bigger = a.clone();
+        bigger.pe_dim = 32;
+        assert_ne!(arch_fingerprint(&a), arch_fingerprint(&bigger));
+
+        let mut more_mem = a.clone();
+        more_mem.levels[2].size_bytes *= 2;
+        assert_ne!(arch_fingerprint(&a), arch_fingerprint(&more_mem));
+
+        let mut no_db = a;
+        no_db.constraints.supports_double_buffering = false;
+        assert_ne!(arch_fingerprint(&no_db), arch_fingerprint(&ArchDesc::gemmini()));
+    }
+
+    #[test]
+    fn accel_fingerprint_covers_functional_description() {
+        use crate::accel::gemmini::{desc_for_arch, gemmini_desc};
+
+        let a = gemmini_desc().unwrap();
+        // Same registrations + same arch under a different display name:
+        // identical fingerprint.
+        let renamed = desc_for_arch("other-name", ArchDesc::gemmini()).unwrap();
+        assert_eq!(accel_fingerprint(&a), accel_fingerprint(&renamed));
+
+        // A different architecture moves the fingerprint.
+        let mut arch = ArchDesc::gemmini();
+        arch.pe_dim = 8;
+        arch.constraints.insn_tile_limit = 8;
+        let smaller = desc_for_arch("gemmini", arch).unwrap();
+        assert_ne!(accel_fingerprint(&a), accel_fingerprint(&smaller));
+
+        // Rebinding an intrinsic role moves the fingerprint even with the
+        // architecture unchanged (profiling depends on the bound intrinsic).
+        let mut rebound = gemmini_desc().unwrap();
+        rebound.compute_intrinsic = "gemmini_mvin".into();
+        assert_ne!(accel_fingerprint(&a), accel_fingerprint(&rebound));
+    }
+
+    #[test]
+    fn clear_drops_entries_but_keeps_counters() {
+        let cache = ScheduleCache::new();
+        let g = Gemm::new(4, 4, 4);
+        cache.insert(
+            key(7, g),
+            CachedSelection { schedule: dummy_schedule(g), profiled_cycles: None },
+        );
+        assert_eq!(cache.len(), 1);
+        cache.clear();
+        assert!(cache.is_empty());
+        assert!(cache.get(&key(7, g)).is_none());
+    }
+}

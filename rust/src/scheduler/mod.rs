@@ -25,6 +25,7 @@
 //! × double buffering, returning candidates for on-hardware (simulator)
 //! profiling.
 
+pub mod cache;
 pub mod solver;
 pub mod sweep;
 pub mod traffic;

@@ -21,6 +21,10 @@ pub struct SweepOptions {
     pub uneven_mapping: bool,
     /// Explore double buffering (halved capacity, overlapped execution).
     pub double_buffering: bool,
+    /// Solve the configuration points on scoped worker threads. The result
+    /// is byte-identical to the serial sweep (tested), so this is purely a
+    /// compile-time speed knob and is not part of the schedule-cache key.
+    pub parallel: bool,
 }
 
 impl Default for SweepOptions {
@@ -30,6 +34,7 @@ impl Default for SweepOptions {
             max_candidates: 8,
             uneven_mapping: true,
             double_buffering: true,
+            parallel: true,
         }
     }
 }
@@ -43,8 +48,11 @@ pub struct SweepResult {
     pub configs_explored: usize,
 }
 
-/// Run the sweep for one GEMM workload.
-pub fn sweep(arch: &ArchDesc, g: Gemm, opts: &SweepOptions) -> SweepResult {
+/// The ordered grid of configuration points (dataflow × memory shares ×
+/// double buffering) the sweep explores. Both the serial and the parallel
+/// sweep walk this exact order, which is what makes their outputs
+/// identical: the final sort is stable, so ties keep grid order.
+fn config_points(arch: &ArchDesc, opts: &SweepOptions) -> Vec<SolverConfig> {
     let even = [0.5f64, 0.5, 1.0];
     let mut share_configs: Vec<[f64; 3]> = vec![even];
     if opts.uneven_mapping {
@@ -54,29 +62,85 @@ pub fn sweep(arch: &ArchDesc, g: Gemm, opts: &SweepOptions) -> SweepResult {
             }
         }
     }
-    let db_configs: Vec<bool> = if opts.double_buffering && arch.constraints.supports_double_buffering
-    {
-        vec![false, true]
-    } else {
-        vec![false]
-    };
+    let explore_db = opts.double_buffering && arch.constraints.supports_double_buffering;
+    let db_configs: Vec<bool> = if explore_db { vec![false, true] } else { vec![false] };
 
-    let mut candidates = Vec::new();
-    let mut configs_explored = 0;
+    let mut points = Vec::new();
     for &dataflow in &arch.dataflows {
         for shares in &share_configs {
             for &db in &db_configs {
-                configs_explored += 1;
-                let cfg = SolverConfig {
+                points.push(SolverConfig {
                     dataflow,
                     shares: *shares,
                     double_buffer: db,
                     top_k: opts.top_k_per_config,
-                };
-                candidates.extend(solve(arch, g, &cfg));
+                });
             }
         }
     }
+    points
+}
+
+/// Run the sweep for one GEMM workload. Dispatches to the parallel
+/// implementation when `opts.parallel` is set; both paths return the
+/// identical result.
+pub fn sweep(arch: &ArchDesc, g: Gemm, opts: &SweepOptions) -> SweepResult {
+    if opts.parallel {
+        sweep_parallel(arch, g, opts)
+    } else {
+        sweep_serial(arch, g, opts)
+    }
+}
+
+/// The reference serial sweep (Fig. 2(b) outer loop).
+pub fn sweep_serial(arch: &ArchDesc, g: Gemm, opts: &SweepOptions) -> SweepResult {
+    let points = config_points(arch, opts);
+    let mut candidates = Vec::new();
+    for cfg in &points {
+        candidates.extend(solve(arch, g, cfg));
+    }
+    finalize(candidates, points.len(), opts)
+}
+
+/// Parallel sweep: fan the configuration points out across scoped worker
+/// threads (contiguous chunks, results concatenated in grid order), so the
+/// candidate list is byte-identical to [`sweep_serial`]'s.
+pub fn sweep_parallel(arch: &ArchDesc, g: Gemm, opts: &SweepOptions) -> SweepResult {
+    let points = config_points(arch, opts);
+    if points.len() < 2 {
+        return sweep_serial(arch, g, opts);
+    }
+    let workers = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(points.len());
+    let chunk_len = crate::util::ceil_div(points.len(), workers);
+
+    let mut per_point: Vec<Vec<Schedule>> = Vec::with_capacity(points.len());
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = points
+            .chunks(chunk_len)
+            .map(|chunk| {
+                scope.spawn(move || {
+                    chunk.iter().map(|cfg| solve(arch, g, cfg)).collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        for h in handles {
+            per_point.extend(h.join().expect("sweep worker panicked"));
+        }
+    });
+
+    let candidates: Vec<Schedule> = per_point.into_iter().flatten().collect();
+    finalize(candidates, points.len(), opts)
+}
+
+/// Rank, dedup and truncate the raw per-config candidates.
+fn finalize(
+    mut candidates: Vec<Schedule>,
+    configs_explored: usize,
+    opts: &SweepOptions,
+) -> SweepResult {
     candidates.sort_by(|a, b| a.est.cost().partial_cmp(&b.est.cost()).unwrap());
     // Global dedup: different share configs often produce the same mapping;
     // keep the first (cheapest) instance so the shortlist stays diverse.
@@ -133,6 +197,39 @@ mod tests {
         let r = sweep(&arch, Gemm::new(512, 512, 512), &opts);
         assert!(r.candidates.iter().any(|s| s.double_buffer));
         assert!(r.candidates.iter().any(|s| !s.double_buffer));
+    }
+
+    #[test]
+    fn parallel_sweep_identical_to_serial() {
+        // The acceptance bar: for the ToyCar layer shapes (and a couple of
+        // streaming-scale shapes) the parallel sweep must return the exact
+        // candidate list — same schedules, same order, same estimates — as
+        // the serial reference.
+        let arch = ArchDesc::gemmini();
+        let shapes = [
+            Gemm::new(1, 640, 128), // ToyCar input layer
+            Gemm::new(1, 128, 128), // ToyCar trunk
+            Gemm::new(1, 128, 8),   // ToyCar bottleneck
+            Gemm::new(1, 8, 128),
+            Gemm::new(1, 128, 640), // ToyCar output layer
+            Gemm::new(64, 64, 64),
+            Gemm::new(512, 512, 512),
+        ];
+        for g in shapes {
+            let serial = sweep_serial(&arch, g, &SweepOptions::default());
+            let parallel = sweep_parallel(&arch, g, &SweepOptions::default());
+            assert_eq!(serial.configs_explored, parallel.configs_explored, "{g:?}");
+            assert_eq!(serial.candidates, parallel.candidates, "{g:?}");
+        }
+    }
+
+    #[test]
+    fn parallel_flag_routes_both_ways() {
+        let arch = ArchDesc::gemmini();
+        let g = Gemm::new(96, 96, 96);
+        let on = sweep(&arch, g, &SweepOptions { parallel: true, ..Default::default() });
+        let off = sweep(&arch, g, &SweepOptions { parallel: false, ..Default::default() });
+        assert_eq!(on.candidates, off.candidates);
     }
 
     #[test]

@@ -195,6 +195,45 @@ fn knobs_affect_cycles_not_results() {
     assert!(configs[0].1 <= configs[3].1);
 }
 
+/// The staged session pipeline: full ToyCar-width compile with stage
+/// reports, schedule-cache reuse across layers and across compiles, and
+/// batched inference agreeing with individual runs.
+#[test]
+fn session_pipeline_cache_and_batch_on_toycar_widths() {
+    let mut rng = Rng::new(1005);
+    let widths = [640usize, 128, 128, 128, 128, 8, 128, 128, 128, 128, 640];
+    let model = mk_model(&mut rng, &widths, 1);
+    let accel = gemmini_desc().unwrap();
+    let graph = import_with_weight_chain(&model).unwrap();
+
+    let compiler = Compiler::new(accel.clone());
+    let out = compiler.compile_with_report(&graph).unwrap();
+    let names: Vec<&str> = out.stages.iter().map(|s| s.name).collect();
+    assert_eq!(names, ["frontend", "partition", "schedule", "mapping", "codegen", "link"]);
+
+    // 10 dense layers, but only 5 distinct GEMM shapes: the repeated
+    // trunk layers must come from the cache within one compile.
+    assert_eq!(out.schedule_stats.layers, 10);
+    assert_eq!(compiler.sweeps_run(), 5, "one sweep per distinct layer shape");
+    assert_eq!(out.schedule_stats.cache_hits, 5);
+
+    // A second compile of the same graph performs zero additional sweeps.
+    let again = compiler.compile(&graph).unwrap();
+    assert_eq!(compiler.sweeps_run(), 5);
+    assert_eq!(again.program.items, out.deployment.program.items);
+
+    // Batched inference matches individual runs element- and cycle-exactly.
+    let sim = Simulator::new(&accel.arch);
+    let inputs: Vec<Vec<i8>> = (0..3).map(|_| rng.i8_vec(640)).collect();
+    let refs: Vec<&[i8]> = inputs.iter().map(|v| v.as_slice()).collect();
+    let (batch_outs, batch_reps) = out.deployment.run_batch(&sim, &refs).unwrap();
+    for (i, x) in inputs.iter().enumerate() {
+        let (o, r) = out.deployment.run(&sim, x).unwrap();
+        assert_eq!(batch_outs[i], o);
+        assert_eq!(batch_reps[i].cycles, r.cycles);
+    }
+}
+
 /// Convolution support (paper Table 1 covers "2D convolution and dense"):
 /// a QNN conv2d chain legalizes onto the GEMM path via the registered
 /// im2col preprocessing; compiled output matches the direct-convolution
