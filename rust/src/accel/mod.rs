@@ -23,6 +23,8 @@
 //! never requires touching the compiler's internals — the point of the
 //! paper.
 
+#![warn(missing_docs)]
+
 pub mod gemmini;
 
 use std::collections::{BTreeMap, BTreeSet};
@@ -36,8 +38,11 @@ use crate::isa::{Activation, Instr, LocalAddr};
 /// and configuration intrinsics").
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum IntrinsicClass {
+    /// Fires the PE array (e.g. preload + matmul).
     Compute,
+    /// Moves tiles between DRAM and on-chip memories.
     Memory,
+    /// Sets machine state (dataflow, strides, requantization).
     Config,
 }
 
@@ -84,23 +89,34 @@ impl CoreCompute {
 /// instruction-tile GEMM `dst[rows×cols] (+)= A[rows×red] · B[red×cols]`.
 #[derive(Debug, Clone, Copy)]
 pub struct ComputeArgs {
+    /// On-chip address of the streamed operand tile A.
     pub a: LocalAddr,
+    /// On-chip address of the stationary operand tile B.
     pub b: LocalAddr,
+    /// Accumulator destination tile.
     pub dst: LocalAddr,
+    /// Rows of A (and of the destination).
     pub rows: u16,
+    /// Reduction extent (cols of A / rows of B).
     pub red: u16,
+    /// Cols of B (and of the destination).
     pub cols: u16,
     /// Whether the stationary tile must be (re)loaded into the array.
     pub preload: bool,
+    /// Active dataflow (decides which operand is stationary).
     pub dataflow: Dataflow,
 }
 
 /// Arguments for a memory intrinsic (one strided tile transfer).
 #[derive(Debug, Clone, Copy)]
 pub struct MemArgs {
+    /// DRAM byte offset of the tile's first row.
     pub dram: u64,
+    /// On-chip address of the tile.
     pub local: LocalAddr,
+    /// Rows to transfer.
     pub rows: u16,
+    /// Elements per row.
     pub cols: u16,
     /// DRAM row stride in elements (0 = broadcast the same row).
     pub stride: u32,
@@ -109,9 +125,13 @@ pub struct MemArgs {
 /// Arguments for configuration intrinsics.
 #[derive(Debug, Clone, Copy)]
 pub struct ConfigArgs {
+    /// Dataflow to configure the PE array for.
     pub dataflow: Dataflow,
+    /// Output (store-pipeline) row stride in elements.
     pub st_stride: u32,
+    /// Requantization scale applied on store.
     pub scale: f32,
+    /// Activation fused into the store pipeline.
     pub act: Activation,
 }
 
@@ -119,8 +139,11 @@ pub struct ConfigArgs {
 /// arguments to an instruction sequence.
 #[derive(Clone, Copy)]
 pub enum IntrinsicImpl {
+    /// Emits one instruction-tile compute.
     Compute(fn(&ComputeArgs) -> Vec<Instr>),
+    /// Emits one strided tile transfer.
     Memory(fn(&MemArgs) -> Vec<Instr>),
+    /// Emits a configuration sequence.
     Config(fn(&ConfigArgs) -> Vec<Instr>),
 }
 
@@ -137,12 +160,16 @@ impl std::fmt::Debug for IntrinsicImpl {
 /// A registered hardware intrinsic (Fig. 3c/3d).
 #[derive(Debug, Clone)]
 pub struct HwIntrinsic {
+    /// Registered name (referenced by the codegen role bindings).
     pub name: String,
+    /// Which of the three intrinsic categories this belongs to.
     pub class: IntrinsicClass,
+    /// The emitting function.
     pub implementation: IntrinsicImpl,
 }
 
 impl HwIntrinsic {
+    /// Register a compute intrinsic (Fig. 3c).
     pub fn compute(name: &str, f: fn(&ComputeArgs) -> Vec<Instr>) -> HwIntrinsic {
         HwIntrinsic {
             name: name.to_string(),
@@ -151,6 +178,7 @@ impl HwIntrinsic {
         }
     }
 
+    /// Register a memory intrinsic (Fig. 3d).
     pub fn memory(name: &str, f: fn(&MemArgs) -> Vec<Instr>) -> HwIntrinsic {
         HwIntrinsic {
             name: name.to_string(),
@@ -159,6 +187,7 @@ impl HwIntrinsic {
         }
     }
 
+    /// Register a configuration intrinsic.
     pub fn config(name: &str, f: fn(&ConfigArgs) -> Vec<Instr>) -> HwIntrinsic {
         HwIntrinsic {
             name: name.to_string(),
@@ -171,19 +200,25 @@ impl HwIntrinsic {
 /// The complete accelerator description: functional + architectural.
 #[derive(Debug, Clone)]
 pub struct AccelDesc {
+    /// Display name of the accelerator (not part of the cache fingerprint).
     pub name: String,
+    /// The architectural half (array size, memories, timing, constraints).
     pub arch: ArchDesc,
     core: BTreeMap<String, CoreCompute>,
     preprocessing: BTreeMap<String, Vec<Preprocessing>>,
     intrinsics: BTreeMap<String, HwIntrinsic>,
-    /// Names of the intrinsics codegen uses for each role.
+    /// Name of the intrinsic codegen uses to fire the PE array.
     pub compute_intrinsic: String,
+    /// Name of the intrinsic codegen uses for DRAM → on-chip loads.
     pub load_intrinsic: String,
+    /// Name of the intrinsic codegen uses for on-chip → DRAM stores.
     pub store_intrinsic: String,
+    /// Name of the intrinsic codegen uses for per-layer configuration.
     pub config_intrinsic: String,
 }
 
 impl AccelDesc {
+    /// Start building a description (the decorator-API analogue).
     pub fn builder(name: &str, arch: ArchDesc) -> AccelDescBuilder {
         AccelDescBuilder {
             desc: AccelDesc {
@@ -233,20 +268,24 @@ impl AccelDesc {
         s
     }
 
+    /// The core compute registered under `tag` ("dense", "conv2d"), if any.
     pub fn core_compute(&self, tag: &str) -> Option<&CoreCompute> {
         self.core.get(tag)
     }
 
+    /// The preprocessing steps registered for `tag` (empty if none).
     pub fn preprocessing(&self, tag: &str) -> &[Preprocessing] {
         self.preprocessing.get(tag).map(|v| v.as_slice()).unwrap_or(&[])
     }
 
+    /// Look up a registered intrinsic by name.
     pub fn intrinsic(&self, name: &str) -> Result<&HwIntrinsic> {
         self.intrinsics
             .get(name)
             .ok_or_else(|| anyhow::anyhow!("intrinsic '{name}' not registered"))
     }
 
+    /// All registered intrinsics, in name order.
     pub fn intrinsics(&self) -> impl Iterator<Item = &HwIntrinsic> {
         self.intrinsics.values()
     }
@@ -336,6 +375,8 @@ impl AccelDescBuilder {
         self
     }
 
+    /// Validate and finish the description (all four codegen roles must be
+    /// bound and the architecture must be well-formed).
     pub fn build(self) -> Result<AccelDesc> {
         self.desc.validate()?;
         Ok(self.desc)

@@ -45,6 +45,25 @@ pub fn configure(accel: &AccelDesc) -> FrontendConfig {
     }
 }
 
+/// Derive one frontend configuration covering a *set* of candidate
+/// accelerators (the multi-target compile path): legalization is enabled
+/// for an operator when **any** candidate supports it, and the supported
+/// set is the union — per-node target choice then happens in the
+/// cost-driven partitioner against each candidate's own set. With a single
+/// candidate this is exactly [`configure`].
+pub fn configure_all(accels: &[&AccelDesc]) -> FrontendConfig {
+    let mut iter = accels.iter();
+    let mut cfg = configure(iter.next().expect("at least one accelerator"));
+    for a in iter {
+        let c = configure(a);
+        cfg.legalize.dense |= c.legalize.dense;
+        cfg.legalize.conv2d |= c.legalize.conv2d;
+        cfg.legalize.insert_weight_transpose |= c.legalize.insert_weight_transpose;
+        cfg.supported.extend(c.supported);
+    }
+    cfg
+}
+
 /// The graph-rewriting half of the frontend (legalize + optional constant
 /// fold), without partitioning. The session pipeline times this as its own
 /// stage; [`run_frontend`] composes it with partitioning.

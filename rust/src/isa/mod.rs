@@ -9,9 +9,9 @@
 //!
 //! Encodings are fixed-width `(funct, rs1, rs2)` triples like RoCC custom
 //! instructions; field packing is our own (documented per instruction) but
-//! width-compatible with a 64-bit ISA. Programs ([`Program`]) are what the
-//! compiler backend and the baselines emit, and what [`crate::sim`]
-//! executes.
+//! width-compatible with a 64-bit ISA. Programs ([`program::Program`]) are
+//! what the compiler backend and the baselines emit, and what
+//! [`crate::sim`] executes.
 
 pub mod encode;
 pub mod program;

@@ -16,7 +16,13 @@
 //! * an automated **integration flow** — frontend configurator, strategy
 //!   generator, hardware-intrinsic generator and mapping generator — that
 //!   turns the description into a working compiler backend ([`frontend`],
-//!   [`backend`], [`pipeline`]);
+//!   [`backend`], [`pipeline`]), staged as an observable six-stage
+//!   [`pipeline::CompilerSession`] with a content-addressed schedule cache;
+//! * **cost-driven multi-accelerator partitioning** — one compile can
+//!   target a *set* of descriptions, placing each layer on the candidate
+//!   with the cheapest profiled schedule and linking a single deployment
+//!   that drives every target's instruction stream
+//!   ([`pipeline::MultiCompiler`]);
 //! * the substrates the paper depends on: a compact Relay-like graph IR with
 //!   QNN ops and passes ([`relay`]), a TIR-like loop-nest IR with schedule
 //!   primitives ([`tir`]), a Gemmini-class ISA ([`isa`]) and a cycle-level,
@@ -25,9 +31,51 @@
 //!   reference runtime (`runtime`, behind the off-by-default `xla-runtime`
 //!   cargo feature: it needs the pinned `xla_extension` 0.5.1 toolchain).
 //!
-//! See `DESIGN.md` for the module inventory and the experiment index, and
-//! `examples/` for runnable entry points (`quickstart`, `toycar_e2e`,
-//! `custom_accelerator`, `scheduler_explore`).
+//! See the repository `README.md` for build/test instructions and
+//! `src/pipeline/ARCHITECTURE.md` for the stage graph; `examples/` has
+//! runnable entry points (`quickstart`, `heterogeneous`,
+//! `custom_accelerator`, `scheduler_explore`, `perf_probe`).
+//!
+//! ## Quickstart
+//!
+//! Describe the accelerator, compile a quantized model, run it on the
+//! cycle-level simulator:
+//!
+//! ```
+//! use tvm_accel::accel::gemmini::gemmini_desc;
+//! use tvm_accel::pipeline::Compiler;
+//! use tvm_accel::relay::import::{from_quantized, to_qnn_graph};
+//! use tvm_accel::relay::quantize::{quantize_mlp, FloatDense};
+//! use tvm_accel::sim::Simulator;
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! // A one-layer quantized model (what a TFLite import would give us).
+//! let layer = FloatDense {
+//!     weight: vec![0.1; 8 * 4],
+//!     bias: vec![0.0; 4],
+//!     in_dim: 8,
+//!     out_dim: 4,
+//!     relu: false,
+//! };
+//! let q = quantize_mlp(&[layer], &[0.05, 0.05])?;
+//! let graph = to_qnn_graph(&from_quantized(1, 0.05, &q))?;
+//!
+//! // The accelerator description is the whole integration effort.
+//! let accel = gemmini_desc()?;
+//! let deployment = Compiler::new(accel.clone()).compile(&graph)?;
+//!
+//! // Execute one inference, functionally exact and cycle-accounted.
+//! let sim = Simulator::new(&accel.arch);
+//! let (output, report) = deployment.run(&sim, &[1i8; 8])?;
+//! assert_eq!(output.len(), 4);
+//! assert!(report.cycles > 0);
+//! # Ok(()) }
+//! ```
+//!
+//! To target several accelerators in one deployment, swap the compiler
+//! construction for `Compiler::with_targets(&[desc_a, desc_b])?` and run
+//! the resulting [`pipeline::MultiDeployment`] directly (it owns one
+//! simulator per target) — see `examples/heterogeneous.rs`.
 
 pub mod accel;
 pub mod arch;

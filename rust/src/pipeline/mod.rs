@@ -17,10 +17,21 @@
 //! and the simulator profiling entirely. On a miss the sweep fans out
 //! across scoped worker threads and the top-K candidates are profiled in
 //! parallel, with deterministic, serial-identical results.
+//!
+//! A compile can also target *several* accelerator descriptions at once:
+//! [`Compiler::with_targets`] builds a [`MultiCompiler`] whose partition
+//! stage places each supported layer on the candidate with the cheapest
+//! profiled schedule (host fallback otherwise) and links one
+//! [`MultiDeployment`] driving per-target instruction streams — see
+//! [`multi`].
 
+#![warn(missing_docs)]
+
+pub mod multi;
 pub mod session;
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 use anyhow::{ensure, Result};
 
@@ -37,6 +48,9 @@ use crate::sim::report::RunReport;
 use crate::sim::Simulator;
 use crate::workload::{Dim, Gemm};
 
+pub use multi::{
+    LayerAssignment, MultiCompiler, MultiDeployment, MultiSessionOutput, ProgramSegment,
+};
 pub use session::{CompilerSession, ScheduleStats, SessionOutput, StageReport};
 
 /// Compilation options.
@@ -54,6 +68,7 @@ pub struct CompileOptions {
     /// Memoize schedule selections in the compiler's content-addressed
     /// cache (keyed by arch fingerprint + GEMM shape + search options).
     pub schedule_cache: bool,
+    /// Knobs of the Fig. 2(b) sweep grid.
     pub sweep: SweepOptions,
 }
 
@@ -83,12 +98,17 @@ pub enum ScheduleSource {
 /// A compiled deployment.
 #[derive(Debug, Clone)]
 pub struct Deployment {
+    /// The deployable program (instructions + host ops + DRAM image).
     pub program: Program,
     /// The processed (post-frontend) graph.
     pub graph: Graph,
+    /// DRAM byte offset of the int8 input region.
     pub input_offset: u64,
+    /// Number of int8 input elements.
     pub input_elems: usize,
+    /// DRAM byte offset of the int8 output region.
     pub output_offset: u64,
+    /// Number of int8 output elements.
     pub output_elems: usize,
     /// Chosen schedule per accelerator layer (name, schedule, profiled
     /// cycles if profiling ran).
@@ -147,21 +167,47 @@ impl Deployment {
 /// recompiling a model (or compiling another model with shared layer
 /// shapes) skips the scheduling search.
 pub struct Compiler {
+    /// The accelerator this compiler targets (functional + architectural
+    /// description).
     pub accel: AccelDesc,
+    /// Compilation options shared by every `compile` call.
     pub options: CompileOptions,
     /// Content-addressed schedule memoization (see [`ScheduleCache`]).
-    cache: ScheduleCache,
+    /// Shared (`Arc`) so a [`MultiCompiler`] can pool selections across
+    /// its candidate targets — the cache key includes the accelerator
+    /// fingerprint, so entries never cross machines by accident.
+    cache: Arc<ScheduleCache>,
     /// Number of schedule sweeps actually executed (cache misses).
     sweeps_run: AtomicU64,
 }
 
 impl Compiler {
+    /// A compiler for one accelerator with default [`CompileOptions`].
     pub fn new(accel: AccelDesc) -> Compiler {
         Compiler::with_options(accel, CompileOptions::default())
     }
 
+    /// A compiler for one accelerator with explicit options.
     pub fn with_options(accel: AccelDesc, options: CompileOptions) -> Compiler {
-        Compiler { accel, options, cache: ScheduleCache::new(), sweeps_run: AtomicU64::new(0) }
+        Compiler::with_shared_cache(accel, options, Arc::new(ScheduleCache::new()))
+    }
+
+    /// A compiler wired to an externally owned schedule cache (the
+    /// building block of [`MultiCompiler`], whose targets pool one cache).
+    pub(crate) fn with_shared_cache(
+        accel: AccelDesc,
+        options: CompileOptions,
+        cache: Arc<ScheduleCache>,
+    ) -> Compiler {
+        Compiler { accel, options, cache, sweeps_run: AtomicU64::new(0) }
+    }
+
+    /// A cost-driven multi-accelerator compiler over a *set* of candidate
+    /// descriptions (plus the implicit host fallback): each supported
+    /// layer is placed on the candidate whose profiled schedule is
+    /// cheapest. See [`MultiCompiler`]. Fails on an empty slice.
+    pub fn with_targets(targets: &[AccelDesc]) -> Result<MultiCompiler> {
+        MultiCompiler::new(targets.to_vec())
     }
 
     /// Compile a (QNN) graph into a deployment (thin façade over a

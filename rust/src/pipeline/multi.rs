@@ -1,0 +1,450 @@
+//! Cost-driven multi-accelerator compilation.
+//!
+//! One compile can target a *set* of accelerator descriptions plus the
+//! implicit host fallback (the ROADMAP's multi-backend partitioning item,
+//! following BYOC's partitioning model and MATCH's per-layer target
+//! selection by profiled cost):
+//!
+//! ```text
+//! MultiCompiler::new(vec![gemmini, bigarray_os])
+//!     └─ partition: probe each layer on every supporting candidate via
+//!        the shared schedule cache → assign to the cheapest target
+//!     └─ schedule/mapping/codegen: per-layer against the assigned target
+//!     └─ link: one MultiDeployment with per-target instruction-stream
+//!        segments over a single shared DRAM image
+//! ```
+//!
+//! The candidates pool one content-addressed [`ScheduleCache`], keyed by
+//! accelerator fingerprint + GEMM shape + search options — so the cost
+//! probes in the partition stage are exactly the searches the schedule
+//! stage would run, and repeated shapes (per target) are searched once.
+//! Two candidates describing the same machine even share entries.
+//!
+//! Execution is a serial handoff: each [`ProgramSegment`] runs on its
+//! target's simulator, all segments share one DRAM, and the per-segment
+//! reports are summed. Overlapping execution across target boundaries is
+//! a ROADMAP follow-on.
+
+use std::sync::Arc;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::accel::AccelDesc;
+use crate::isa::program::Program;
+use crate::relay::Graph;
+use crate::scheduler::cache::{CacheStats, ScheduleCache};
+use crate::scheduler::Schedule;
+use crate::sim::report::RunReport;
+use crate::sim::Simulator;
+
+use super::session::{render_stage_reports, ScheduleStats, StageReport};
+use super::{CompileOptions, Compiler, CompilerSession};
+
+/// One contiguous run of program items emitted for (and executed by) a
+/// single target. `target` indexes the deployment's target list; host ops
+/// inside the range are executed by the host CPU as usual.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ProgramSegment {
+    /// Index into [`MultiDeployment::targets`].
+    pub target: usize,
+    /// First item index (inclusive).
+    pub start: usize,
+    /// One past the last item index (exclusive).
+    pub end: usize,
+}
+
+/// Which accelerator one layer landed on, and at what cost.
+#[derive(Debug, Clone)]
+pub struct LayerAssignment {
+    /// Graph-node name of the layer.
+    pub layer: String,
+    /// Index of the chosen accelerator in the deployment's target list.
+    pub target: usize,
+    /// Display name of the chosen accelerator.
+    pub target_name: String,
+    /// The schedule selected for the layer on that target.
+    pub schedule: Schedule,
+    /// Profiled cycle cost of that schedule, when profiling ran.
+    pub cycles: Option<u64>,
+}
+
+/// A compiled multi-accelerator deployment: one program over one shared
+/// DRAM image, split into per-target instruction-stream segments.
+#[derive(Debug, Clone)]
+pub struct MultiDeployment {
+    /// The candidate accelerator descriptions, in the order given to the
+    /// compiler (segment/assignment indices point into this list).
+    pub targets: Vec<AccelDesc>,
+    /// The deployable program (instructions of *all* targets plus host
+    /// ops, one DRAM layout + init image).
+    pub program: Program,
+    /// Per-target segments covering `program.items` in execution order.
+    pub segments: Vec<ProgramSegment>,
+    /// The processed (post-frontend) graph.
+    pub graph: Graph,
+    /// DRAM byte offset of the int8 input region.
+    pub input_offset: u64,
+    /// Number of int8 input elements.
+    pub input_elems: usize,
+    /// DRAM byte offset of the int8 output region.
+    pub output_offset: u64,
+    /// Number of int8 output elements.
+    pub output_elems: usize,
+    /// Per-layer target choice + schedule (codegen order).
+    pub assignments: Vec<LayerAssignment>,
+}
+
+impl MultiDeployment {
+    fn simulators(&self) -> Vec<Simulator> {
+        self.targets.iter().map(|t| Simulator::new(&t.arch)).collect()
+    }
+
+    fn run_segments(
+        &self,
+        sims: &[Simulator],
+        dram: &mut crate::sim::memory::Dram,
+    ) -> Result<RunReport> {
+        let mut rep = RunReport::default();
+        for seg in &self.segments {
+            let sim = sims
+                .get(seg.target)
+                .with_context(|| format!("segment names unknown target {}", seg.target))?;
+            let r = sim.run_slice(&self.program, dram, seg.start..seg.end).with_context(|| {
+                format!(
+                    "items {}..{} on target '{}'",
+                    seg.start, seg.end, self.targets[seg.target].name
+                )
+            })?;
+            rep.merge(&r);
+        }
+        Ok(rep)
+    }
+
+    /// Run one inference: stage constants into a fresh DRAM, write the
+    /// int8 input, execute each segment on its target's simulator (serial
+    /// handoff over the shared DRAM), and read the int8 output. The
+    /// report is the sum over segments.
+    pub fn run(&self, input: &[i8]) -> Result<(Vec<i8>, RunReport)> {
+        ensure!(
+            input.len() == self.input_elems,
+            "input has {} elems, model wants {}",
+            input.len(),
+            self.input_elems
+        );
+        let sims = self.simulators();
+        let mut dram = self.program.make_dram()?;
+        dram.write_i8_slice(self.input_offset, input)?;
+        let rep = self.run_segments(&sims, &mut dram)?;
+        let out = dram.read_i8_slice(self.output_offset, self.output_elems)?;
+        Ok((out, rep))
+    }
+
+    /// Run many inferences back to back, staging the DRAM image once
+    /// (mirrors [`super::Deployment::run_batch`]).
+    pub fn run_batch(&self, inputs: &[&[i8]]) -> Result<(Vec<Vec<i8>>, Vec<RunReport>)> {
+        let sims = self.simulators();
+        let mut dram = self.program.make_dram()?;
+        let mut outputs = Vec::with_capacity(inputs.len());
+        let mut reports = Vec::with_capacity(inputs.len());
+        for (i, input) in inputs.iter().enumerate() {
+            ensure!(
+                input.len() == self.input_elems,
+                "batch input {i} has {} elems, model wants {}",
+                input.len(),
+                self.input_elems
+            );
+            dram.write_i8_slice(self.input_offset, input)?;
+            reports.push(self.run_segments(&sims, &mut dram)?);
+            outputs.push(dram.read_i8_slice(self.output_offset, self.output_elems)?);
+        }
+        Ok((outputs, reports))
+    }
+
+    /// Number of layers assigned to accelerator `target`.
+    pub fn nodes_on_target(&self, target: usize) -> usize {
+        self.assignments.iter().filter(|a| a.target == target).count()
+    }
+
+    /// Render the per-layer target choices as an indented summary.
+    pub fn render_assignments(&self) -> String {
+        let mut out = String::new();
+        for a in &self.assignments {
+            let cost = match a.cycles {
+                Some(c) => format!("{c} cycles"),
+                None => "unprofiled".to_string(),
+            };
+            out.push_str(&format!("{:<12} -> {:<12} {cost}\n", a.layer, a.target_name));
+        }
+        out
+    }
+}
+
+/// Everything a multi-target session produces: the deployment plus the
+/// per-stage reports (the partition stage lists the chosen target and its
+/// cost per layer) and schedule-selection counters.
+#[derive(Debug, Clone)]
+pub struct MultiSessionOutput {
+    /// The compiled multi-accelerator deployment.
+    pub deployment: MultiDeployment,
+    /// Per-stage timing + diagnostics, in execution order.
+    pub stages: Vec<StageReport>,
+    /// Schedule-selection counters from the schedule stage.
+    pub schedule_stats: ScheduleStats,
+}
+
+impl MultiSessionOutput {
+    /// Render the stage reports as an indented summary (for CLIs/examples).
+    pub fn render_stages(&self) -> String {
+        render_stage_reports(&self.stages)
+    }
+}
+
+/// The cost-driven multi-accelerator compiler: one compile places each
+/// supported layer on the cheapest of several candidate accelerators
+/// (host fallback for layers no candidate supports). Construct with
+/// [`Compiler::with_targets`] or [`MultiCompiler::new`]. All candidates
+/// share one [`ScheduleCache`], so cost probes double as the schedule
+/// search and long-lived compilers amortize it across compiles.
+///
+/// With a single candidate the emitted program is byte-identical to
+/// [`Compiler::new`] + [`Compiler::compile`] for that accelerator.
+pub struct MultiCompiler {
+    compilers: Vec<Compiler>,
+}
+
+impl MultiCompiler {
+    /// A multi-target compiler with default [`CompileOptions`]. Fails on
+    /// an empty target list.
+    pub fn new(targets: Vec<AccelDesc>) -> Result<MultiCompiler> {
+        MultiCompiler::with_options(targets, CompileOptions::default())
+    }
+
+    /// A multi-target compiler with explicit options (shared by every
+    /// candidate; the search options are part of the schedule-cache key).
+    pub fn with_options(targets: Vec<AccelDesc>, options: CompileOptions) -> Result<MultiCompiler> {
+        ensure!(!targets.is_empty(), "need at least one accelerator description");
+        let cache = Arc::new(ScheduleCache::new());
+        let compilers = targets
+            .into_iter()
+            .map(|accel| Compiler::with_shared_cache(accel, options.clone(), cache.clone()))
+            .collect();
+        Ok(MultiCompiler { compilers })
+    }
+
+    /// The candidate accelerator descriptions, in target-index order.
+    pub fn targets(&self) -> impl Iterator<Item = &AccelDesc> {
+        self.compilers.iter().map(|c| &c.accel)
+    }
+
+    /// Compile a (QNN) graph into a multi-accelerator deployment.
+    pub fn compile(&self, graph: &Graph) -> Result<MultiDeployment> {
+        Ok(self.compile_with_report(graph)?.deployment)
+    }
+
+    /// Compile and return the per-stage reports alongside the deployment.
+    pub fn compile_with_report(&self, graph: &Graph) -> Result<MultiSessionOutput> {
+        CompilerSession::multi(self.compilers.iter().collect()).run_multi(graph)
+    }
+
+    /// Total Fig. 2(b) sweeps executed across all candidates.
+    pub fn sweeps_run(&self) -> u64 {
+        self.compilers.iter().map(|c| c.sweeps_run()).sum()
+    }
+
+    /// Counters of the schedule cache shared by all candidates.
+    pub fn cache_stats(&self) -> CacheStats {
+        self.compilers[0].cache_stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::gemmini::{desc_for_arch, gemmini_desc};
+    use crate::arch::ArchDesc;
+    use crate::relay::eval::eval;
+    use crate::relay::import::{from_quantized, to_qnn_graph};
+    use crate::relay::quantize::{quantize_mlp, FloatDense};
+    use crate::relay::{Tensor, TensorData};
+    use crate::util::prng::Rng;
+    use std::collections::BTreeMap;
+
+    fn mlp_graph(rng: &mut Rng, dims: &[usize], batch: usize) -> Graph {
+        let layers: Vec<FloatDense> = dims
+            .windows(2)
+            .enumerate()
+            .map(|(i, w)| FloatDense {
+                weight: (0..w[0] * w[1]).map(|_| (rng.f64() as f32 - 0.5) * 0.3).collect(),
+                bias: (0..w[1]).map(|_| (rng.f64() as f32 - 0.5) * 0.1).collect(),
+                in_dim: w[0],
+                out_dim: w[1],
+                relu: i + 2 < dims.len(),
+            })
+            .collect();
+        let scales: Vec<f32> = (0..dims.len()).map(|i| 0.02 + 0.01 * i as f32).collect();
+        let q = quantize_mlp(&layers, &scales).unwrap();
+        to_qnn_graph(&from_quantized(batch, scales[0], &q)).unwrap()
+    }
+
+    fn bigarray_desc() -> AccelDesc {
+        let mut arch = ArchDesc::gemmini();
+        arch.name = "bigarray-os".into();
+        arch.pe_dim = 32;
+        arch.constraints.insn_tile_limit = 32;
+        arch.dataflows = vec![crate::arch::Dataflow::OutputStationary];
+        arch.levels[1].size_bytes = 131072; // accumulator
+        arch.levels[2].size_bytes = 524288; // scratchpad
+        arch.dma.bytes_per_cycle = 32;
+        desc_for_arch("bigarray-os", arch).unwrap()
+    }
+
+    #[test]
+    fn single_target_multi_compiler_matches_plain_compiler() {
+        let mut rng = Rng::new(21);
+        let graph = mlp_graph(&mut rng, &[32, 48, 16], 4);
+        let accel = gemmini_desc().unwrap();
+        let multi = Compiler::with_targets(std::slice::from_ref(&accel)).unwrap();
+        let md = multi.compile(&graph).unwrap();
+        let plain = Compiler::new(accel).compile(&graph).unwrap();
+        assert_eq!(md.program.items, plain.program.items, "single-target must be byte-identical");
+        assert_eq!(md.input_offset, plain.input_offset);
+        assert_eq!(md.output_offset, plain.output_offset);
+        let all = ProgramSegment { target: 0, start: 0, end: md.program.items.len() };
+        assert_eq!(md.segments, vec![all]);
+    }
+
+    #[test]
+    fn heterogeneous_compile_is_exact_and_reports_targets() {
+        let mut rng = Rng::new(22);
+        let dims = [64usize, 96, 32];
+        let batch = 8;
+        let graph = mlp_graph(&mut rng, &dims, batch);
+        let multi =
+            Compiler::with_targets(&[gemmini_desc().unwrap(), bigarray_desc()]).unwrap();
+        let out = multi.compile_with_report(&graph).unwrap();
+        let dep = &out.deployment;
+
+        // Every dense layer got a target, cost, and a partition note.
+        assert_eq!(dep.assignments.len(), 2);
+        let partition = out.stages.iter().find(|s| s.name == "partition").unwrap();
+        assert!(partition.notes.len() >= 3, "per-layer notes expected: {:?}", partition.notes);
+        for a in &dep.assignments {
+            assert!(a.cycles.is_some(), "profiled cost recorded for {}", a.layer);
+            assert!(partition.notes.iter().any(|n| n.contains(&a.layer)));
+        }
+
+        // Execution agrees element-exactly with the interpreter.
+        let input = rng.i8_vec(batch * dims[0]);
+        let (got, rep) = dep.run(&input).unwrap();
+        let mut m = BTreeMap::new();
+        m.insert(
+            "x".to_string(),
+            Tensor::new(vec![batch, dims[0]], TensorData::I8(input.clone())).unwrap(),
+        );
+        let want = eval(&graph, &m).unwrap();
+        assert_eq!(TensorData::I8(got), want[0].data);
+        assert!(rep.cycles > 0);
+
+        // Batch runs agree with individual runs.
+        let inputs: Vec<Vec<i8>> = (0..3).map(|_| rng.i8_vec(batch * dims[0])).collect();
+        let refs: Vec<&[i8]> = inputs.iter().map(|v| v.as_slice()).collect();
+        let (bouts, breps) = dep.run_batch(&refs).unwrap();
+        for (i, x) in inputs.iter().enumerate() {
+            let (o, r) = dep.run(x).unwrap();
+            assert_eq!(bouts[i], o);
+            assert_eq!(breps[i].cycles, r.cycles);
+        }
+    }
+
+    #[test]
+    fn identical_candidates_tie_break_to_first_and_share_cache() {
+        let mut rng = Rng::new(23);
+        let graph = mlp_graph(&mut rng, &[32, 32, 32], 4);
+        // Two descriptions of the same machine: identical fingerprints, so
+        // the shared cache serves the second candidate's probes and every
+        // equal-cost tie breaks to target 0.
+        let a = gemmini_desc().unwrap();
+        let b = desc_for_arch("gemmini-clone", ArchDesc::gemmini()).unwrap();
+        let multi = Compiler::with_targets(&[a.clone(), b]).unwrap();
+        let dep = multi.compile(&graph).unwrap();
+        for asg in &dep.assignments {
+            assert_eq!(asg.target, 0, "{} must tie-break to target 0", asg.layer);
+        }
+        // One sweep per distinct shape, not per (shape, candidate).
+        assert_eq!(multi.sweeps_run(), 1, "identical fingerprints must share cache entries");
+        // And the result is byte-identical to the single-target compile.
+        let plain = Compiler::new(a).compile(&graph).unwrap();
+        assert_eq!(dep.program.items, plain.program.items);
+    }
+
+    #[test]
+    fn all_host_graph_still_links_and_runs() {
+        use crate::relay::{DType, GraphBuilder, Op, TensorType};
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", TensorType::new(vec![4, 6], DType::I8));
+        let t = b.op("t", Op::Transpose, &[x]).unwrap();
+        let g = b.outputs(&[t]);
+
+        let multi =
+            Compiler::with_targets(&[gemmini_desc().unwrap(), bigarray_desc()]).unwrap();
+        let dep = multi.compile(&g).unwrap();
+        assert!(dep.assignments.is_empty());
+        assert_eq!(dep.segments.len(), 1, "all-host program is one segment");
+
+        let mut rng = Rng::new(24);
+        let input = rng.i8_vec(24);
+        let (got, rep) = dep.run(&input).unwrap();
+        let mut m = BTreeMap::new();
+        m.insert(
+            "x".to_string(),
+            Tensor::new(vec![4, 6], TensorData::I8(input)).unwrap(),
+        );
+        let want = eval(&g, &m).unwrap();
+        assert_eq!(TensorData::I8(got), want[0].data);
+        assert_eq!(rep.cycles, rep.host_cycles, "no accelerator work");
+        assert_eq!(multi.sweeps_run(), 0);
+    }
+
+    #[test]
+    fn unsupported_node_between_layers_falls_back_to_host() {
+        use crate::isa::Activation;
+        use crate::relay::{DType, GraphBuilder, Op, TensorType};
+        // accel.dense -> transpose (host-only) -> accel.dense.
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", TensorType::new(vec![8, 8], DType::I8));
+        let mk_dense = |b: &mut GraphBuilder, name: &str, x, c: usize, k: usize| {
+            let w = b
+                .constant(
+                    format!("{name}_w"),
+                    Tensor::new(vec![c, k], TensorData::I8(vec![1; c * k])).unwrap(),
+                );
+            let bias = b.constant(
+                format!("{name}_b"),
+                Tensor::new(vec![k], TensorData::I32(vec![0; k])).unwrap(),
+            );
+            b.op(
+                name,
+                Op::AccelDense { scale: 1.0, act: Activation::None, weight_transposed: true },
+                &[x, w, bias],
+            )
+            .unwrap()
+        };
+        let l1 = mk_dense(&mut b, "l1", x, 8, 8);
+        let t = b.op("t", Op::Transpose, &[l1]).unwrap();
+        let l2 = mk_dense(&mut b, "l2", t, 8, 8);
+        let g = b.outputs(&[l2]);
+
+        let multi =
+            Compiler::with_targets(&[gemmini_desc().unwrap(), bigarray_desc()]).unwrap();
+        let dep = multi.compile(&g).unwrap();
+        assert_eq!(dep.assignments.len(), 2, "both dense layers offloaded");
+        let (got, rep) = dep.run(&[1i8; 64]).unwrap();
+        assert_eq!(got.len(), 64);
+        assert!(rep.host_cycles > 0, "transpose must run on the host");
+        assert!(
+            rep.insn_counts.contains_key("host.transpose"),
+            "host fallback executed: {:?}",
+            rep.insn_counts
+        );
+    }
+}

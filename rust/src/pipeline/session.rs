@@ -15,34 +15,67 @@
 //! a thin façade over this module; callers that want the per-stage
 //! breakdown use [`Compiler::compile_with_report`].
 //!
+//! The same staged core also serves the multi-accelerator path
+//! ([`crate::pipeline::MultiCompiler`]): with several candidate targets
+//! the partition stage becomes cost-driven — every supported layer is
+//! probed against each candidate's (cached) schedule search and assigned
+//! to the cheapest one — and codegen tracks contiguous per-target
+//! instruction-stream segments. With exactly one target the session takes
+//! the classic single-target path, byte-identical to the pre-multi
+//! pipeline (the existing integration tests are the guard).
+//!
 //! See `ARCHITECTURE.md` (next to this file) for the stage graph and the
 //! cache-keying rules.
 
+use std::collections::BTreeSet;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, ensure, Context, Result};
 
+use crate::accel::AccelDesc;
 use crate::backend::codegen::{generate, LayerBufs};
 use crate::backend::mapping::apply_schedule;
 use crate::backend::strategy::{generate_strategy_typed, Strategy};
-use crate::frontend::{configure, run_frontend_passes};
+use crate::frontend::{configure_all, run_frontend_passes};
 use crate::isa::program::{HostOp, Program};
 use crate::isa::Instr;
-use crate::relay::partition::{partition, PartitionedGraph, Target};
+use crate::relay::partition::{partition, partition_multi, PartitionedGraph, Target};
 use crate::relay::{Graph, Node, Op, TensorData};
 use crate::scheduler::cache::accel_fingerprint;
 use crate::scheduler::Schedule;
 use crate::tir::TirFunc;
 
+use super::multi::{LayerAssignment, MultiDeployment, MultiSessionOutput, ProgramSegment};
 use super::{Compiler, Deployment, ScheduleSource};
 
 /// Timing + diagnostics for one pipeline stage.
 #[derive(Debug, Clone)]
 pub struct StageReport {
+    /// Stage name (`"frontend"`, `"partition"`, …).
     pub name: &'static str,
+    /// Wall-clock time the stage took.
     pub elapsed: Duration,
-    /// Human-readable diagnostics (counts, cache statistics, sizes).
+    /// Human-readable diagnostics (counts, cache statistics, sizes; the
+    /// multi-target partition stage lists the chosen target and its cost
+    /// per layer here).
     pub notes: Vec<String>,
+}
+
+/// Render a list of stage reports as an indented summary (for
+/// CLIs/examples).
+pub(crate) fn render_stage_reports(stages: &[StageReport]) -> String {
+    let mut out = String::new();
+    for s in stages {
+        out.push_str(&format!("{:<10} {:>8} µs", s.name, s.elapsed.as_micros()));
+        if let Some(first) = s.notes.first() {
+            out.push_str(&format!("  {first}"));
+        }
+        out.push('\n');
+        for note in s.notes.iter().skip(1) {
+            out.push_str(&format!("{:22}{note}\n", ""));
+        }
+    }
+    out
 }
 
 /// Counters from the schedule-selection stage.
@@ -62,26 +95,18 @@ pub struct ScheduleStats {
 /// reports and schedule-selection counters.
 #[derive(Debug, Clone)]
 pub struct SessionOutput {
+    /// The compiled single-target deployment.
     pub deployment: Deployment,
+    /// Per-stage timing + diagnostics, in execution order.
     pub stages: Vec<StageReport>,
+    /// Schedule-selection counters from the schedule stage.
     pub schedule_stats: ScheduleStats,
 }
 
 impl SessionOutput {
     /// Render the stage reports as an indented summary (for CLIs/examples).
     pub fn render_stages(&self) -> String {
-        let mut out = String::new();
-        for s in &self.stages {
-            out.push_str(&format!("{:<10} {:>8} µs", s.name, s.elapsed.as_micros()));
-            if let Some(first) = s.notes.first() {
-                out.push_str(&format!("  {first}"));
-            }
-            out.push('\n');
-            for note in s.notes.iter().skip(1) {
-                out.push_str(&format!("{:22}{note}\n", ""));
-            }
-        }
-        out
+        render_stage_reports(&self.stages)
     }
 }
 
@@ -91,18 +116,29 @@ struct LayerPlan {
     strategy: Strategy,
     schedule: Schedule,
     profiled_cycles: Option<u64>,
+    /// Index of the assigned accelerator (into the session's target list).
+    target: usize,
 }
 
 /// One compilation run through the staged pipeline. Construct with
-/// [`CompilerSession::new`], consume with [`CompilerSession::run`].
+/// [`CompilerSession::new`] (one target) or via
+/// [`crate::pipeline::MultiCompiler`] (several), consume with
+/// [`CompilerSession::run`].
 pub struct CompilerSession<'a> {
-    compiler: &'a Compiler,
+    compilers: Vec<&'a Compiler>,
     stages: Vec<StageReport>,
 }
 
 impl<'a> CompilerSession<'a> {
+    /// A session compiling for a single accelerator.
     pub fn new(compiler: &'a Compiler) -> CompilerSession<'a> {
-        CompilerSession { compiler, stages: Vec::new() }
+        CompilerSession { compilers: vec![compiler], stages: Vec::new() }
+    }
+
+    /// A session over several candidate targets (cost-driven partition).
+    pub(crate) fn multi(compilers: Vec<&'a Compiler>) -> CompilerSession<'a> {
+        assert!(!compilers.is_empty(), "session needs at least one target");
+        CompilerSession { compilers, stages: Vec::new() }
     }
 
     fn finish_stage(&mut self, name: &'static str, started: Instant, notes: Vec<String>) {
@@ -110,13 +146,67 @@ impl<'a> CompilerSession<'a> {
     }
 
     /// Run every stage over `graph`, producing the deployment and reports.
-    pub fn run(mut self, graph: &Graph) -> Result<SessionOutput> {
-        let c = self.compiler;
+    /// This is the single-target entry point; multi-target sessions go
+    /// through [`crate::pipeline::MultiCompiler::compile_with_report`].
+    pub fn run(self, graph: &Graph) -> Result<SessionOutput> {
+        ensure!(
+            self.compilers.len() == 1,
+            "CompilerSession::run compiles for one target; use MultiCompiler for {}",
+            self.compilers.len()
+        );
+        let (dep, stages, schedule_stats) = self.run_core(graph)?;
+        let MultiDeployment {
+            program,
+            graph,
+            input_offset,
+            input_elems,
+            output_offset,
+            output_elems,
+            assignments,
+            ..
+        } = dep;
+        let chosen = assignments.into_iter().map(|a| (a.layer, a.schedule, a.cycles)).collect();
+        Ok(SessionOutput {
+            deployment: Deployment {
+                program,
+                graph,
+                input_offset,
+                input_elems,
+                output_offset,
+                output_elems,
+                chosen,
+            },
+            stages,
+            schedule_stats,
+        })
+    }
+
+    /// Run every stage, keeping the segmented multi-target deployment.
+    pub(crate) fn run_multi(self, graph: &Graph) -> Result<MultiSessionOutput> {
+        let (deployment, stages, schedule_stats) = self.run_core(graph)?;
+        Ok(MultiSessionOutput { deployment, stages, schedule_stats })
+    }
+
+    /// The staged core shared by the single- and multi-target paths. With
+    /// one target, partition is the plain supported-op split and the
+    /// emitted program is byte-identical to the pre-multi pipeline; with
+    /// several, partition turns cost-driven and codegen records
+    /// per-target instruction-stream segments.
+    fn run_core(
+        mut self,
+        graph: &Graph,
+    ) -> Result<(MultiDeployment, Vec<StageReport>, ScheduleStats)> {
+        let lead = self.compilers[0];
+        let is_multi = self.compilers.len() > 1;
 
         // --- Stage 1: frontend (legalize + constant fold) ----------------
         let t0 = Instant::now();
-        let mut fcfg = configure(&c.accel);
-        fcfg.fold_constants = c.options.fold_constants;
+        let fcfg = {
+            let accels: Vec<&AccelDesc> = self.compilers.iter().map(|c| &c.accel).collect();
+            let mut fcfg = configure_all(&accels);
+            fcfg.fold_constants = lead.options.fold_constants;
+            fcfg
+        };
         let processed = run_frontend_passes(graph, &fcfg)?;
         self.finish_stage(
             "frontend",
@@ -131,19 +221,68 @@ impl<'a> CompilerSession<'a> {
 
         // --- Stage 2: partition ------------------------------------------
         let t0 = Instant::now();
-        let pg: PartitionedGraph = partition(&processed, &fcfg.supported)?;
+        let fps: Vec<u64> = self.compilers.iter().map(|c| accel_fingerprint(&c.accel)).collect();
+        let mut infeasible: Vec<String> = Vec::new();
+        let pg: PartitionedGraph = if !is_multi {
+            partition(&processed, &fcfg.supported)?
+        } else {
+            // Cost-driven placement: probe each supporting candidate's
+            // (cached, parallel) schedule search and keep the cheapest. A
+            // candidate that cannot actually bind or schedule the layer
+            // (support is op-name-granular, feasibility is shape-level) is
+            // skipped rather than failing the compile; the skips surface
+            // in the stage notes.
+            let supported: Vec<BTreeSet<String>> =
+                self.compilers.iter().map(|c| c.accel.supported_ops()).collect();
+            let compilers = &self.compilers;
+            partition_multi(&processed, &supported, |node, t| {
+                let shapes: Vec<Vec<usize>> =
+                    node.inputs.iter().map(|&i| processed.node(i).ty.shape.clone()).collect();
+                let c = compilers[t];
+                let probe = generate_strategy_typed(&c.accel, node, &shapes)
+                    .and_then(|strategy| c.select_schedule(strategy.gemm, fps[t]));
+                match probe {
+                    // Profiled cycles when profiling ran; the analytic cost
+                    // otherwise (0 for the naive default schedule, which
+                    // then tie-breaks toward the first target).
+                    Ok((schedule, profiled, _)) => {
+                        Ok(Some(profiled.unwrap_or_else(|| schedule.est.cost() as u64)))
+                    }
+                    Err(e) => {
+                        infeasible.push(format!(
+                            "{} infeasible on {}: {:#}",
+                            node.name, c.accel.name, e
+                        ));
+                        Ok(None)
+                    }
+                }
+            })?
+        };
         ensure!(pg.graph.inputs.len() == 1, "exactly one graph input supported");
         ensure!(pg.graph.outputs.len() == 1, "exactly one graph output supported");
-        self.finish_stage(
-            "partition",
-            t0,
-            vec![format!(
-                "{} accel / {} host nodes in {} offload region(s)",
-                pg.accel_nodes(),
-                pg.host_nodes(),
-                pg.regions.len()
-            )],
-        );
+        let mut notes = vec![format!(
+            "{} accel / {} host nodes in {} offload region(s)",
+            pg.accel_nodes(),
+            pg.host_nodes(),
+            pg.regions.len()
+        )];
+        if is_multi {
+            for n in &pg.graph.nodes {
+                if pg.targets[n.id] == Target::Accel {
+                    let t = pg.accel_of[n.id].expect("accel node has a target");
+                    let cost = match pg.costs[n.id] {
+                        Some(c) => format!("{c} cycles"),
+                        None => "unprofiled".to_string(),
+                    };
+                    notes.push(format!(
+                        "{} -> {} ({cost})",
+                        n.name, self.compilers[t].accel.name
+                    ));
+                }
+            }
+            notes.append(&mut infeasible);
+        }
+        self.finish_stage("partition", t0, notes);
         let g = &pg.graph;
 
         // --- Stage 3: per-layer schedule selection (cache + sweep) -------
@@ -151,16 +290,17 @@ impl<'a> CompilerSession<'a> {
         let mut plans: Vec<Option<LayerPlan>> = Vec::new();
         plans.resize_with(g.nodes.len(), || None);
         let mut stats = ScheduleStats::default();
-        let accel_fp = accel_fingerprint(&c.accel);
         for n in &g.nodes {
             if pg.targets[n.id] != Target::Accel {
                 continue;
             }
+            let target = pg.accel_of[n.id].expect("accel node has a target");
+            let c = self.compilers[target];
             let shapes: Vec<Vec<usize>> =
                 n.inputs.iter().map(|&i| g.node(i).ty.shape.clone()).collect();
             let strategy = generate_strategy_typed(&c.accel, n, &shapes)?;
             let (schedule, profiled_cycles, source) = c
-                .select_schedule(strategy.gemm, accel_fp)
+                .select_schedule(strategy.gemm, fps[target])
                 .with_context(|| format!("schedule selection for layer '{}'", n.name))?;
             stats.layers += 1;
             match source {
@@ -168,9 +308,9 @@ impl<'a> CompilerSession<'a> {
                 ScheduleSource::Search => stats.searched += 1,
                 ScheduleSource::Naive => stats.naive += 1,
             }
-            plans[n.id] = Some(LayerPlan { strategy, schedule, profiled_cycles });
+            plans[n.id] = Some(LayerPlan { strategy, schedule, profiled_cycles, target });
         }
-        let cache = c.cache_stats();
+        let cache = lead.cache_stats();
         self.finish_stage(
             "schedule",
             t0,
@@ -193,7 +333,8 @@ impl<'a> CompilerSession<'a> {
         let mut mapped = 0usize;
         for n in &g.nodes {
             if let Some(plan) = &plans[n.id] {
-                let f = apply_schedule(&c.accel, &plan.strategy.tir, &plan.schedule)
+                let accel = &self.compilers[plan.target].accel;
+                let f = apply_schedule(accel, &plan.strategy.tir, &plan.schedule)
                     .with_context(|| format!("mapping for layer '{}'", n.name))?;
                 lowered[n.id] = Some(f);
                 mapped += 1;
@@ -205,12 +346,20 @@ impl<'a> CompilerSession<'a> {
         let t0 = Instant::now();
         let mut prog = Program::new("deployment");
         let region = allocate_regions(g, &mut prog)?;
-        let mut chosen = Vec::new();
+        let mut assignments: Vec<LayerAssignment> = Vec::new();
+        // Segment boundaries: (first item index, target). A new boundary
+        // opens whenever the emitting accelerator changes; host items fall
+        // into the surrounding segment.
+        let mut seg_starts: Vec<(usize, usize)> = Vec::new();
         for n in &g.nodes {
             match pg.targets[n.id] {
                 Target::None => {}
                 Target::Accel => {
                     let plan = plans[n.id].as_ref().expect("scheduled accel layer");
+                    let accel = &self.compilers[plan.target].accel;
+                    if seg_starts.last().map(|&(_, t)| t) != Some(plan.target) {
+                        seg_starts.push((prog.items.len(), plan.target));
+                    }
                     let scheduled = lowered[n.id].as_ref().expect("mapped accel layer");
                     let bufs = LayerBufs {
                         x: region[n.inputs[0]],
@@ -218,12 +367,18 @@ impl<'a> CompilerSession<'a> {
                         bias: region[n.inputs[2]],
                         out: region[n.id],
                     };
-                    generate(&c.accel, scheduled, &plan.schedule, &bufs, &mut prog)
+                    generate(accel, scheduled, &plan.schedule, &bufs, &mut prog)
                         .with_context(|| format!("codegen for layer '{}'", n.name))?;
                     // Drain before anything consumes this layer's DRAM
                     // output (the timing model tracks on-chip hazards only).
                     prog.push(Instr::Fence);
-                    chosen.push((n.name.clone(), plan.schedule.clone(), plan.profiled_cycles));
+                    assignments.push(LayerAssignment {
+                        layer: n.name.clone(),
+                        target: plan.target,
+                        target_name: accel.name.clone(),
+                        schedule: plan.schedule.clone(),
+                        cycles: plan.profiled_cycles,
+                    });
                 }
                 Target::Host => {
                     lower_host_node(g, n, &region, &mut prog)
@@ -231,28 +386,47 @@ impl<'a> CompilerSession<'a> {
                 }
             }
         }
-        self.finish_stage(
-            "codegen",
-            t0,
-            vec![format!(
-                "{} program item(s), {} DRAM bytes",
-                prog.items.len(),
-                prog.layout.total_bytes()
-            )],
-        );
+        // Materialize segments so they cover every item (leading host items
+        // join the first segment; an all-host program is one segment on
+        // target 0).
+        let mut segments: Vec<ProgramSegment> = Vec::new();
+        for (i, &(start, target)) in seg_starts.iter().enumerate() {
+            let end = seg_starts.get(i + 1).map(|&(s, _)| s).unwrap_or(prog.items.len());
+            segments.push(ProgramSegment { target, start, end });
+        }
+        if segments.is_empty() {
+            segments.push(ProgramSegment { target: 0, start: 0, end: prog.items.len() });
+        } else {
+            segments[0].start = 0;
+        }
+        let mut notes = vec![format!(
+            "{} program item(s), {} DRAM bytes",
+            prog.items.len(),
+            prog.layout.total_bytes()
+        )];
+        if is_multi {
+            notes.push(format!(
+                "{} instruction-stream segment(s) across {} target(s)",
+                segments.len(),
+                self.compilers.len()
+            ));
+        }
+        self.finish_stage("codegen", t0, notes);
 
         // --- Stage 6: link (bind I/O, wrap the deployment) ---------------
         let t0 = Instant::now();
         let in_node = g.node(g.inputs[0]);
         let out_node = g.node(g.outputs[0]);
-        let deployment = Deployment {
+        let deployment = MultiDeployment {
+            targets: self.compilers.iter().map(|c| c.accel.clone()).collect(),
             input_offset: region[in_node.id],
             input_elems: in_node.ty.elems(),
             output_offset: region[out_node.id],
             output_elems: out_node.ty.elems(),
             program: prog,
+            segments,
             graph: pg.graph,
-            chosen,
+            assignments,
         };
         self.finish_stage(
             "link",
@@ -266,7 +440,7 @@ impl<'a> CompilerSession<'a> {
             )],
         );
 
-        Ok(SessionOutput { deployment, stages: self.stages, schedule_stats: stats })
+        Ok((deployment, self.stages, stats))
     }
 }
 

@@ -1,18 +1,38 @@
-//! Graph partitioning: assign each node to the accelerator or the host
+//! Graph partitioning: assign each node to an accelerator or the host
 //! CPU, based on the operator support derived from the accelerator's
 //! functional description (paper §3.3: "the frontend configurator sets up
 //! the graph partitioning ... using predefined supported operators").
+//!
+//! Two entry points:
+//!
+//! * [`partition`] — the classic BYOC split against a *single* supported
+//!   operator set: every supported node goes to the one accelerator,
+//!   everything else to the host.
+//! * [`partition_multi`] — cost-driven placement across a *set* of
+//!   candidate accelerators (MATCH-style per-layer target selection): for
+//!   every node, each candidate that supports the operator is asked for a
+//!   cost (the session supplies profiled cycles from the cached schedule
+//!   search), and the node is assigned to the cheapest target. Ties break
+//!   deterministically toward the lower target index; a node no candidate
+//!   supports falls back to the host.
+//!
+//! Both produce a [`PartitionedGraph`] whose `regions` are the maximal
+//! topological runs of accelerator nodes *on the same target* — the unit
+//! that later becomes one contiguous instruction-stream segment.
+
+#![warn(missing_docs)]
 
 use std::collections::BTreeSet;
 
 use anyhow::{ensure, Result};
 
-use super::{Graph, NodeId, Op};
+use super::{Graph, Node, NodeId, Op};
 
 /// Execution target of a node.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Target {
-    /// Offloaded to the accelerator.
+    /// Offloaded to an accelerator (see [`PartitionedGraph::accel_of`] for
+    /// which one).
     Accel,
     /// Executed by the host CPU.
     Host,
@@ -21,48 +41,66 @@ pub enum Target {
 }
 
 /// A partitioned graph: the (unmodified) graph plus per-node targets and
-/// the list of accelerator regions (maximal runs of accel nodes in
-/// topological order).
+/// the list of accelerator regions (maximal runs of accel nodes on the
+/// same target, in topological order).
 #[derive(Debug, Clone)]
 pub struct PartitionedGraph {
+    /// The graph that was partitioned (unmodified).
     pub graph: Graph,
+    /// Per-node execution target, indexed by [`NodeId`].
     pub targets: Vec<Target>,
+    /// Index of the chosen accelerator for each [`Target::Accel`] node
+    /// (into the candidate list handed to [`partition_multi`]; always
+    /// `Some(0)` from single-target [`partition`]), `None` otherwise.
+    pub accel_of: Vec<Option<usize>>,
+    /// Cost of the chosen target per node, when the partitioner evaluated
+    /// one (cost-driven [`partition_multi`] only; `None` from
+    /// [`partition`] and for host/no-work nodes).
+    pub costs: Vec<Option<u64>>,
+    /// Maximal topological runs of accel nodes on the same target
+    /// (constants between them do not break a region).
     pub regions: Vec<Vec<NodeId>>,
 }
 
 impl PartitionedGraph {
+    /// Number of nodes offloaded to any accelerator.
     pub fn accel_nodes(&self) -> usize {
         self.targets.iter().filter(|t| **t == Target::Accel).count()
     }
 
+    /// Number of nodes executed by the host CPU.
     pub fn host_nodes(&self) -> usize {
         self.targets.iter().filter(|t| **t == Target::Host).count()
     }
+
+    /// Number of nodes assigned to accelerator `target` (an index into the
+    /// candidate list given to [`partition_multi`]).
+    pub fn nodes_on(&self, target: usize) -> usize {
+        self.accel_of.iter().filter(|t| **t == Some(target)).count()
+    }
 }
 
-/// Partition `g` given the set of accelerator-supported operator names
-/// (e.g. `{"accel.dense"}` from the functional description).
-pub fn partition(g: &Graph, supported: &BTreeSet<String>) -> Result<PartitionedGraph> {
-    let mut targets = Vec::with_capacity(g.nodes.len());
-    for n in &g.nodes {
-        let t = match &n.op {
-            Op::Input | Op::Constant(_) => Target::None,
-            op if supported.contains(op.name()) => Target::Accel,
-            _ => Target::Host,
-        };
-        targets.push(t);
-    }
-    // Regions: maximal topological runs of accel nodes (constants between
-    // them do not break a region).
+/// Regions: maximal topological runs of accel nodes that share a target.
+/// Host nodes break a region; constants/inputs do not.
+fn build_regions(g: &Graph, targets: &[Target], accel_of: &[Option<usize>]) -> Vec<Vec<NodeId>> {
     let mut regions = Vec::new();
     let mut cur: Vec<NodeId> = Vec::new();
+    let mut cur_target: Option<usize> = None;
     for n in &g.nodes {
         match targets[n.id] {
-            Target::Accel => cur.push(n.id),
+            Target::Accel => {
+                let t = accel_of[n.id];
+                if cur_target.is_some() && cur_target != t && !cur.is_empty() {
+                    regions.push(std::mem::take(&mut cur));
+                }
+                cur_target = t;
+                cur.push(n.id);
+            }
             Target::Host => {
                 if !cur.is_empty() {
                     regions.push(std::mem::take(&mut cur));
                 }
+                cur_target = None;
             }
             Target::None => {}
         }
@@ -70,12 +108,86 @@ pub fn partition(g: &Graph, supported: &BTreeSet<String>) -> Result<PartitionedG
     if !cur.is_empty() {
         regions.push(cur);
     }
-    let pg = PartitionedGraph { graph: g.clone(), targets, regions };
+    regions
+}
+
+/// Partition `g` given the set of accelerator-supported operator names
+/// (e.g. `{"accel.dense"}` from the functional description).
+pub fn partition(g: &Graph, supported: &BTreeSet<String>) -> Result<PartitionedGraph> {
+    let mut targets = Vec::with_capacity(g.nodes.len());
+    let mut accel_of = Vec::with_capacity(g.nodes.len());
+    for n in &g.nodes {
+        let t = match &n.op {
+            Op::Input | Op::Constant(_) => Target::None,
+            op if supported.contains(op.name()) => Target::Accel,
+            _ => Target::Host,
+        };
+        accel_of.push(if t == Target::Accel { Some(0) } else { None });
+        targets.push(t);
+    }
+    let regions = build_regions(g, &targets, &accel_of);
+    let costs = vec![None; g.nodes.len()];
+    let pg = PartitionedGraph { graph: g.clone(), targets, accel_of, costs, regions };
     ensure!(
         pg.targets.len() == g.nodes.len(),
         "partition must cover every node"
     );
     Ok(pg)
+}
+
+/// Cost-driven partition across several candidate accelerators.
+///
+/// `supported[t]` is the operator set of candidate `t`; `cost(node, t)` is
+/// queried for **every** candidate that supports the node (so a caching
+/// caller pays each (shape, target) search once and serves repeats from
+/// its cache). It returns `Ok(Some(cost))` with a comparable cost — the
+/// session passes profiled cycles from the schedule search — or
+/// `Ok(None)` when the candidate turns out to be infeasible for this
+/// particular node (op support is name-granular, feasibility is
+/// shape-level: e.g. memories too small for the layer's minimal tile);
+/// infeasible candidates are simply skipped. The node is assigned to the
+/// cheapest feasible candidate; ties break toward the lower index, so the
+/// assignment is deterministic. A node that no candidate supports (or
+/// that every candidate reports infeasible) falls back to
+/// [`Target::Host`]. An `Err` from `cost` aborts the partition.
+pub fn partition_multi(
+    g: &Graph,
+    supported: &[BTreeSet<String>],
+    mut cost: impl FnMut(&Node, usize) -> Result<Option<u64>>,
+) -> Result<PartitionedGraph> {
+    ensure!(!supported.is_empty(), "need at least one candidate accelerator");
+    let mut targets = Vec::with_capacity(g.nodes.len());
+    let mut accel_of = Vec::with_capacity(g.nodes.len());
+    let mut costs = Vec::with_capacity(g.nodes.len());
+    for n in &g.nodes {
+        let (t, chosen, c) = match &n.op {
+            Op::Input | Op::Constant(_) => (Target::None, None, None),
+            op => {
+                let mut best: Option<(usize, u64)> = None;
+                for (idx, s) in supported.iter().enumerate() {
+                    if !s.contains(op.name()) {
+                        continue;
+                    }
+                    let Some(c) = cost(n, idx)? else {
+                        continue; // supported by name, infeasible for this node
+                    };
+                    // Strict `<` keeps the lowest index on equal cost.
+                    if best.map(|(_, bc)| c < bc).unwrap_or(true) {
+                        best = Some((idx, c));
+                    }
+                }
+                match best {
+                    Some((idx, c)) => (Target::Accel, Some(idx), Some(c)),
+                    None => (Target::Host, None, None),
+                }
+            }
+        };
+        targets.push(t);
+        accel_of.push(chosen);
+        costs.push(c);
+    }
+    let regions = build_regions(g, &targets, &accel_of);
+    Ok(PartitionedGraph { graph: g.clone(), targets, accel_of, costs, regions })
 }
 
 #[cfg(test)]
@@ -119,6 +231,8 @@ mod tests {
         assert_eq!(pg.host_nodes(), 0);
         assert_eq!(pg.regions.len(), 1);
         assert_eq!(pg.regions[0].len(), 2);
+        assert_eq!(pg.nodes_on(0), 2);
+        assert_eq!(pg.accel_of[l1], Some(0));
     }
 
     #[test]
@@ -146,5 +260,101 @@ mod tests {
         assert_eq!(pg.accel_nodes(), 0);
         assert_eq!(pg.host_nodes(), 1);
         assert!(pg.regions.is_empty());
+    }
+
+    fn two_layer_graph() -> (Graph, NodeId, NodeId) {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", TensorType::new(vec![1, 8], DType::I8));
+        let l1 = accel_dense(&mut b, "l1", x, 8, 8);
+        let l2 = accel_dense(&mut b, "l2", l1, 8, 4);
+        (b.outputs(&[l2]), l1, l2)
+    }
+
+    #[test]
+    fn multi_assigns_each_node_to_cheapest_target() {
+        let (g, l1, l2) = two_layer_graph();
+        let sets = vec![supported(), supported()];
+        // Target 0 cheaper for l1, target 1 cheaper for l2.
+        let pg = partition_multi(&g, &sets, |n, t| {
+            Ok(Some(match (n.name.as_str(), t) {
+                ("l1", 0) => 10,
+                ("l1", 1) => 20,
+                ("l2", 0) => 30,
+                ("l2", 1) => 5,
+                _ => unreachable!(),
+            }))
+        })
+        .unwrap();
+        assert_eq!(pg.accel_of[l1], Some(0));
+        assert_eq!(pg.accel_of[l2], Some(1));
+        assert_eq!(pg.costs[l1], Some(10));
+        assert_eq!(pg.costs[l2], Some(5));
+        // Different targets split the region even without a host node.
+        assert_eq!(pg.regions.len(), 2);
+    }
+
+    #[test]
+    fn multi_tie_breaks_toward_lower_index() {
+        let (g, l1, l2) = two_layer_graph();
+        let sets = vec![supported(), supported(), supported()];
+        let pg = partition_multi(&g, &sets, |_, _| Ok(Some(42))).unwrap();
+        assert_eq!(pg.accel_of[l1], Some(0));
+        assert_eq!(pg.accel_of[l2], Some(0));
+        assert_eq!(pg.regions.len(), 1, "same target keeps one region");
+    }
+
+    #[test]
+    fn multi_unsupported_node_falls_back_to_host() {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", TensorType::new(vec![8, 8], DType::I8));
+        let l1 = accel_dense(&mut b, "l1", x, 8, 8);
+        let t = b.op("t", Op::Transpose, &[l1]).unwrap();
+        let g = b.outputs(&[t]);
+        // Neither candidate supports transpose; candidate 1 supports
+        // nothing at all.
+        let sets = vec![supported(), BTreeSet::new()];
+        let mut queried = Vec::new();
+        let pg = partition_multi(&g, &sets, |n, t| {
+            queried.push((n.name.clone(), t));
+            Ok(Some(7))
+        })
+        .unwrap();
+        assert_eq!(pg.targets[t], Target::Host);
+        assert_eq!(pg.accel_of[t], None);
+        assert_eq!(pg.accel_of[l1], Some(0));
+        // Cost is only queried for supporting candidates.
+        assert_eq!(queried, vec![("l1".to_string(), 0)]);
+    }
+
+    #[test]
+    fn multi_skips_infeasible_candidates() {
+        let (g, l1, l2) = two_layer_graph();
+        let sets = vec![supported(), supported()];
+        // Candidate 0 is cheaper but infeasible for l2 (shape-level):
+        // l2 must land on candidate 1; a node infeasible everywhere
+        // falls back to the host.
+        let pg = partition_multi(&g, &sets, |n, t| {
+            Ok(match (n.name.as_str(), t) {
+                ("l1", 0) => Some(1),
+                ("l1", 1) => Some(2),
+                ("l2", 0) => None,
+                ("l2", 1) => Some(9),
+                _ => unreachable!(),
+            })
+        })
+        .unwrap();
+        assert_eq!(pg.accel_of[l1], Some(0));
+        assert_eq!(pg.accel_of[l2], Some(1));
+
+        let all_infeasible = partition_multi(&g, &sets, |_, _| Ok(None)).unwrap();
+        assert_eq!(all_infeasible.targets[l1], Target::Host);
+        assert_eq!(all_infeasible.targets[l2], Target::Host);
+        assert_eq!(all_infeasible.accel_nodes(), 0);
+    }
+
+    #[test]
+    fn multi_with_no_candidates_rejected() {
+        let (g, _, _) = two_layer_graph();
+        assert!(partition_multi(&g, &[], |_, _| Ok(None)).is_err());
     }
 }

@@ -21,6 +21,14 @@
 //! Whether the sweep runs serially or in parallel is *not* part of the key:
 //! the parallel sweep is guaranteed (and tested) to return the identical
 //! candidate list as the serial one.
+//!
+//! Because the accelerator enters the key only through its fingerprint,
+//! one cache instance can serve *several* accelerator descriptions at
+//! once: a [`crate::pipeline::MultiCompiler`] shares a single cache across
+//! its candidate targets, so the cost probes its partition stage runs per
+//! (layer, candidate) are the same searches its schedule stage would run,
+//! and each is paid once. Two candidates that describe the same machine
+//! (identical fingerprints) even share entries outright.
 
 use std::collections::HashMap;
 use std::fmt::Write as _;
@@ -78,15 +86,20 @@ pub fn accel_fingerprint(accel: &AccelDesc) -> u64 {
 /// The search-option half of the cache key.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct SearchKey {
+    /// Candidates kept per sweep configuration point.
     pub top_k_per_config: usize,
+    /// Global cap on candidates returned by the sweep.
     pub max_candidates: usize,
+    /// Whether uneven memory shares were explored.
     pub uneven_mapping: bool,
+    /// Whether double buffering was explored.
     pub double_buffering: bool,
     /// How many top candidates were profiled on the simulator.
     pub profile_candidates: usize,
 }
 
 impl SearchKey {
+    /// The key half derived from the sweep options + profiling depth.
     pub fn new(sweep: &SweepOptions, profile_candidates: usize) -> SearchKey {
         SearchKey {
             top_k_per_config: sweep.top_k_per_config,
@@ -102,8 +115,11 @@ impl SearchKey {
 /// options (see [`accel_fingerprint`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct CacheKey {
+    /// [`accel_fingerprint`] of the target description.
     pub arch: u64,
+    /// The layer's workload shape.
     pub gemm: Gemm,
+    /// The search options used for the selection.
     pub search: SearchKey,
 }
 
@@ -111,15 +127,20 @@ pub struct CacheKey {
 /// measured cycle count.
 #[derive(Debug, Clone)]
 pub struct CachedSelection {
+    /// The winning schedule.
     pub schedule: Schedule,
+    /// Measured cycles of that schedule, when profiling ran.
     pub profiled_cycles: Option<u64>,
 }
 
 /// Hit/miss counters (monotonic over the cache's lifetime).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CacheStats {
+    /// Lookups served from the cache.
     pub hits: u64,
+    /// Lookups that missed (and typically triggered a search).
     pub misses: u64,
+    /// Selections currently stored.
     pub entries: usize,
 }
 
@@ -133,6 +154,7 @@ pub struct ScheduleCache {
 }
 
 impl ScheduleCache {
+    /// An empty cache with zeroed counters.
     pub fn new() -> ScheduleCache {
         ScheduleCache::default()
     }
@@ -147,22 +169,27 @@ impl ScheduleCache {
         found
     }
 
+    /// Store a selection under `key` (overwrites an existing entry).
     pub fn insert(&self, key: CacheKey, value: CachedSelection) {
         self.map.lock().expect("schedule cache poisoned").insert(key, value);
     }
 
+    /// Number of stored selections.
     pub fn len(&self) -> usize {
         self.map.lock().expect("schedule cache poisoned").len()
     }
 
+    /// Whether the cache holds no selections.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Drop every stored selection (counters are kept).
     pub fn clear(&self) {
         self.map.lock().expect("schedule cache poisoned").clear();
     }
 
+    /// Snapshot of the hit/miss/entry counters.
     pub fn stats(&self) -> CacheStats {
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),

@@ -25,6 +25,8 @@
 //! × double buffering, returning candidates for on-hardware (simulator)
 //! profiling.
 
+#![warn(missing_docs)]
+
 pub mod cache;
 pub mod solver;
 pub mod sweep;
@@ -70,8 +72,11 @@ impl Estimate {
 /// factors and the ordering of tensor dimensions", §3.3 Mapping Generator).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Schedule {
+    /// The GEMM this schedule maps.
     pub workload: Gemm,
+    /// Dataflow of the PE array for this mapping (fixes the spatial dims).
     pub dataflow: Dataflow,
+    /// Whether ping/pong tile buffers overlap transfer with compute.
     pub double_buffer: bool,
     /// Memory shares (Input, Weight, Output) used for this mapping.
     pub shares: [f64; 3],
@@ -83,6 +88,7 @@ pub struct Schedule {
     pub onchip_tile: [usize; 3],
     /// DRAM-level loop order, outermost first, over on-chip tiles.
     pub dram_order: [Dim; 3],
+    /// Analytic cost estimates the sweep attached to this candidate.
     pub est: Estimate,
 }
 

@@ -28,14 +28,19 @@ use super::{capacity_rows, footprint_rows, Estimate, Schedule};
 /// One scheduling configuration (a point of the Fig. 2(b) outer sweep).
 #[derive(Debug, Clone, Copy)]
 pub struct SolverConfig {
+    /// PE-array dataflow to solve for (fixes the spatial dims).
     pub dataflow: Dataflow,
+    /// Memory shares (Input, Weight, Output) granted to each operand.
     pub shares: [f64; 3],
+    /// Solve with double buffering (halved usable capacity per operand).
     pub double_buffer: bool,
     /// How many top candidates to keep (by analytic cost).
     pub top_k: usize,
 }
 
 impl SolverConfig {
+    /// A configuration for `dataflow` with even shares, no double
+    /// buffering and the default `top_k`.
     pub fn new(dataflow: Dataflow) -> SolverConfig {
         SolverConfig { dataflow, shares: [0.5, 0.5, 1.0], double_buffer: false, top_k: 4 }
     }

@@ -16,11 +16,17 @@ use super::Estimate;
 /// Inputs to the cost model (a schedule candidate before packaging).
 #[derive(Debug, Clone, Copy)]
 pub struct Candidate {
+    /// The GEMM being mapped.
     pub workload: Gemm,
+    /// PE-array dataflow of the candidate mapping.
     pub dataflow: Dataflow,
+    /// Whether transfers overlap compute via ping/pong buffers.
     pub double_buffer: bool,
+    /// Per-compute-instruction tile `(n0, c0, k0)`.
     pub insn_tile: [usize; 3],
+    /// On-chip-resident tile `(nt, ct, kt)`.
     pub onchip_tile: [usize; 3],
+    /// DRAM-level loop order, outermost first.
     pub dram_order: [Dim; 3],
 }
 

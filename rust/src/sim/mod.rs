@@ -2,7 +2,7 @@
 //! accelerators.
 //!
 //! The simulator plays the role of the paper's cycle-accurate Verilator
-//! setup (§4): it executes [`crate::isa::Program`]s *functionally* (real
+//! setup (§4): it executes [`crate::isa::program::Program`]s *functionally* (real
 //! int8/int32 arithmetic, so outputs can be checked against the XLA golden
 //! model) while a decoupled-queue timing model ([`timing`]) accounts
 //! cycles with the same structural bottlenecks as the RTL — DMA bandwidth,
@@ -110,12 +110,38 @@ impl Simulator {
     /// Execute `prog` against `dram`, returning the timing/traffic report.
     /// DRAM contents are mutated in place (outputs land in their regions).
     pub fn run(&self, prog: &Program, dram: &mut Dram) -> Result<RunReport> {
+        self.run_slice(prog, dram, 0..prog.items.len())
+    }
+
+    /// Execute one contiguous slice of `prog`'s items against `dram` with a
+    /// fresh machine state (scratchpad/accumulator cleared, queues empty).
+    ///
+    /// This is the execution primitive behind heterogeneous deployments: a
+    /// [`crate::pipeline::MultiDeployment`] routes each program segment to
+    /// the simulator of its assigned accelerator while all segments share
+    /// one DRAM. Slices must therefore start at points where no on-chip
+    /// state is live across the boundary — the compiler guarantees this by
+    /// splitting only at layer boundaries, after the fence that drains each
+    /// layer's output to DRAM.
+    pub fn run_slice(
+        &self,
+        prog: &Program,
+        dram: &mut Dram,
+        range: std::ops::Range<usize>,
+    ) -> Result<RunReport> {
+        ensure!(range.start <= range.end, "inverted item range {range:?}");
+        ensure!(
+            range.end <= prog.items.len(),
+            "item range {range:?} exceeds program length {}",
+            prog.items.len()
+        );
         let mut st = ExecState::new(&self.arch)?;
         let mut t = Timing::new(st.spad.rows, st.acc.rows);
         let mut rep = RunReport::default();
         let issue = self.arch.host.insn_issue_cycles;
 
-        for (idx, item) in prog.items.iter().enumerate() {
+        for (off, item) in prog.items[range.clone()].iter().enumerate() {
+            let idx = range.start + off;
             match item {
                 Item::Accel(Instr::LoopWs { .. }) => {
                     let Item::Accel(macro_insn) = item else { unreachable!() };

@@ -30,6 +30,22 @@ impl RunReport {
         *self.insn_counts.entry(mnemonic).or_insert(0) += 1;
     }
 
+    /// Fold another report into this one (cycles and traffic add, counters
+    /// merge). Used by heterogeneous deployments, which execute a program
+    /// as serial segments — one per accelerator handoff — and report the
+    /// sum as the end-to-end run.
+    pub fn merge(&mut self, other: &RunReport) {
+        self.cycles += other.cycles;
+        self.host_cycles += other.host_cycles;
+        self.dram_read_bytes += other.dram_read_bytes;
+        self.dram_write_bytes += other.dram_write_bytes;
+        self.macs += other.macs;
+        self.issued_commands += other.issued_commands;
+        for (&m, &n) in &other.insn_counts {
+            *self.insn_counts.entry(m).or_insert(0) += n;
+        }
+    }
+
     /// PE-array utilization: achieved MACs over peak MACs for the run.
     pub fn utilization(&self, pe_dim: usize) -> f64 {
         if self.cycles == 0 {

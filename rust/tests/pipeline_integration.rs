@@ -234,6 +234,65 @@ fn session_pipeline_cache_and_batch_on_toycar_widths() {
     }
 }
 
+/// Heterogeneous compile: the ToyCar stack against the *set* of shipped
+/// accelerator configs (Gemmini 16x16 WS + bigarray-os 32x32 OS) in one
+/// deployment. Partition is cost-driven per layer, the stage report names
+/// each layer's target and cost, execution (per-target instruction-stream
+/// segments over shared DRAM) matches the interpreter element-exactly, and
+/// a single-target multi compile stays byte-identical to the plain path.
+#[test]
+fn heterogeneous_toycar_across_shipped_configs() {
+    use tvm_accel::arch::parse::arch_from_file;
+
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs");
+    let mut targets = Vec::new();
+    for file in ["gemmini.yaml", "bigarray_os.yaml"] {
+        let arch = arch_from_file(&dir.join(file)).unwrap();
+        let name = arch.name.clone();
+        targets.push(desc_for_arch(&name, arch).unwrap());
+    }
+
+    let mut rng = Rng::new(1006);
+    let widths = [640usize, 128, 128, 128, 128, 8, 128, 128, 128, 128, 640];
+    let model = mk_model(&mut rng, &widths, 1);
+    let graph = import_with_weight_chain(&model).unwrap();
+    let x = rng.i8_vec(640);
+
+    let multi = Compiler::with_targets(&targets).unwrap();
+    let out = multi.compile_with_report(&graph).unwrap();
+    let dep = &out.deployment;
+    assert_eq!(dep.assignments.len(), 10, "every dense layer placed");
+    for a in &dep.assignments {
+        assert!(a.cycles.is_some(), "layer {} has a profiled cost", a.layer);
+    }
+    // The partition report lists target + cost per layer.
+    let partition = out.stages.iter().find(|s| s.name == "partition").unwrap();
+    assert!(
+        partition.notes.len() >= 11,
+        "headline + one note per layer, got {:?}",
+        partition.notes
+    );
+    // 5 distinct shapes x 2 candidates: every probe beyond that is a
+    // cache hit, and the schedule stage re-runs none of them.
+    assert_eq!(multi.sweeps_run(), 10, "one sweep per (shape, candidate)");
+
+    let mut inputs = BTreeMap::new();
+    inputs.insert(
+        "x".to_string(),
+        Tensor::new(vec![1, 640], TensorData::I8(x.clone())).unwrap(),
+    );
+    let want = eval(&graph, &inputs).unwrap();
+    let (got, rep) = dep.run(&x).unwrap();
+    assert_eq!(TensorData::I8(got), want[0].data);
+    assert!(rep.macs > 0);
+
+    // Single-target compiles stay byte-identical to the plain compiler.
+    let solo = Compiler::with_targets(&targets[..1]).unwrap().compile(&graph).unwrap();
+    let plain = Compiler::new(targets[0].clone()).compile(&graph).unwrap();
+    assert_eq!(solo.program.items, plain.program.items);
+    assert_eq!(solo.segments.len(), 1);
+}
+
 /// Convolution support (paper Table 1 covers "2D convolution and dense"):
 /// a QNN conv2d chain legalizes onto the GEMM path via the registered
 /// im2col preprocessing; compiled output matches the direct-convolution
