@@ -68,8 +68,16 @@ fn main() -> Result<()> {
     let sim = Simulator::new(&accel.arch);
     let inputs: Vec<Vec<i8>> = (0..4).map(|_| rng.i8_vec(8 * dims[0])).collect();
     let refs: Vec<&[i8]> = inputs.iter().map(|v| v.as_slice()).collect();
-    let (outputs, reports) = deployment.run_batch(&sim, &refs)?;
-    println!("\n{}", describe("inference", &reports[0], accel.arch.pe_dim));
-    println!("batch of {}: first 10 outputs of run 0: {:?}", outputs.len(), &outputs[0][..10]);
+    let batch = deployment.run_batch(&sim, &refs)?;
+    println!("\n{}", describe("inference", &batch.reports[0], accel.arch.pe_dim));
+    println!(
+        "batch of {}: first 10 outputs of run 0: {:?}",
+        batch.outputs.len(),
+        &batch.outputs[0][..10]
+    );
+    println!(
+        "batch timing: {} cycles serial, {} pipelined",
+        batch.serial_cycles, batch.pipelined_cycles
+    );
     Ok(())
 }

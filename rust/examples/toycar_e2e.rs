@@ -60,9 +60,12 @@ fn main() -> Result<()> {
         (0..INFERENCES).map(|_| rng.i8_vec(model.batch * model.layers[0].in_dim)).collect();
     let input_refs: Vec<&[i8]> = inputs.iter().map(|v| v.as_slice()).collect();
 
-    let (outs_p, reps_p) = proposed.run_batch(&sim, &input_refs)?;
-    let (outs_c, reps_c) = c_tool.run_batch(&sim, &input_refs)?;
-    let (outs_n, reps_n) = naive.run_batch(&sim, &input_refs)?;
+    let batch_p = proposed.run_batch(&sim, &input_refs)?;
+    let batch_c = c_tool.run_batch(&sim, &input_refs)?;
+    let batch_n = naive.run_batch(&sim, &input_refs)?;
+    let (outs_p, reps_p) = (&batch_p.outputs, &batch_p.reports);
+    let (outs_c, reps_c) = (&batch_c.outputs, &batch_c.reports);
+    let (outs_n, reps_n) = (&batch_n.outputs, &batch_n.reports);
 
     let mut rows = [0u64; 3];
     let mut total_macs = 0u64;

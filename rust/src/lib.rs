@@ -23,6 +23,13 @@
 //!   with the cheapest profiled schedule and linking a single deployment
 //!   that drives every target's instruction stream
 //!   ([`pipeline::MultiCompiler`]);
+//! * a **compile service** — a long-lived [`service::CompileServer`] over
+//!   a persistent, content-addressed schedule cache
+//!   ([`scheduler::persist`]): repeat compiles — across requests,
+//!   processes and the `tvm-accel serve` Unix-socket front door — skip
+//!   the schedule search entirely, with single-flight de-duplication of
+//!   concurrent searches and a bounded worker pool sharding the per-layer
+//!   schedule stage;
 //! * the substrates the paper depends on: a compact Relay-like graph IR with
 //!   QNN ops and passes ([`relay`]), a TIR-like loop-nest IR with schedule
 //!   primitives ([`tir`]), a Gemmini-class ISA ([`isa`]) and a cycle-level,
@@ -89,6 +96,7 @@ pub mod relay;
 #[cfg(feature = "xla-runtime")]
 pub mod runtime;
 pub mod scheduler;
+pub mod service;
 pub mod sim;
 pub mod tir;
 pub mod util;

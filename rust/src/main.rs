@@ -4,28 +4,46 @@
 //! Subcommands:
 //!   schedule  — run the extended-CoSA sweep for a GEMM and print mappings
 //!   compile   — compile a .qmodel and print the chosen schedules/program
-//!   run       — compile + simulate a .qmodel (optionally golden-checked
-//!               against an HLO artifact via PJRT)
+//!               (add --socket to route through a running compile server)
+//!   run       — compile + simulate a .qmodel as one batched execution
+//!               (optionally golden-checked against an HLO artifact)
 //!   disasm    — compile and dump the instruction stream
+//!   serve     — long-lived compile server on a Unix domain socket,
+//!               sharing one persistent schedule cache across requests
+//!   cache     — stats|clear|warm the persistent schedule-cache artifact
+//!   gen-model — write a deterministic random .qmodel (for smoke tests)
+//!
+//! The `compile`, `run` and `cache warm` paths hydrate the on-disk
+//! schedule cache (default: `~/.cache/tvm-accel/schedules.bin`, override
+//! with --cache <file> or $TVM_ACCEL_CACHE, disable with --no-cache), so
+//! a repeat invocation performs zero schedule sweeps.
 //!
 //! Examples:
 //!   tvm-accel schedule --n 128 --c 128 --k 128
 //!   tvm-accel run --model artifacts/toycar.qmodel --backend proposed \
 //!       --golden artifacts/toycar.hlo.txt --inferences 10
 //!   tvm-accel compile --model artifacts/dense_64.qmodel --backend naive
+//!   tvm-accel serve --socket /tmp/tvm-accel.sock --cache /tmp/sched.bin
+//!   tvm-accel compile --socket /tmp/tvm-accel.sock --model m.qmodel
 
-use anyhow::{bail, Context, Result};
-use tvm_accel::accel::gemmini::{desc_for_arch, gemmini_desc};
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+use tvm_accel::accel::gemmini::gemmini_desc;
 use tvm_accel::accel::AccelDesc;
-use tvm_accel::arch::parse::arch_from_file;
 use tvm_accel::baselines::c_toolchain::compile_c_toolchain;
-use tvm_accel::baselines::naive_byoc::{compile_naive, import_with_weight_chain};
+use tvm_accel::baselines::naive_byoc::compile_naive;
+use tvm_accel::isa::program::Program;
 use tvm_accel::metrics::describe;
-use tvm_accel::pipeline::{Compiler, Deployment};
-use tvm_accel::relay::import::{load_qmodel, QModel};
+use tvm_accel::pipeline::{CompileOptions, Deployment};
+use tvm_accel::relay::import::{load_qmodel, synth_qmodel, write_qmodel, QModel};
 #[cfg(feature = "xla-runtime")]
 use tvm_accel::runtime::{golden_inputs, Runtime};
+use tvm_accel::scheduler::persist;
 use tvm_accel::scheduler::sweep::{sweep, SweepOptions};
+use tvm_accel::service::protocol::{parse_message, ObjBuilder};
+use tvm_accel::service::socket::{self, ServeOptions};
+use tvm_accel::service::{default_cache_path, CompileServer, CompiledArtifact};
 use tvm_accel::sim::Simulator;
 use tvm_accel::util::cli::Args;
 use tvm_accel::util::prng::Rng;
@@ -33,25 +51,73 @@ use tvm_accel::util::table::commafy;
 use tvm_accel::workload::Gemm;
 
 const VALUE_OPTS: &[&str] = &[
-    "n", "c", "k", "model", "backend", "arch", "golden", "inferences", "seed",
+    "n", "c", "k", "model", "backend", "arch", "golden", "inferences", "seed", "socket",
+    "cache", "workers", "dims", "batch", "out",
 ];
 
+/// Single-target variant of [`load_accels`] for subcommands that drive
+/// one simulator (schedule/run/disasm) — a comma-separated `--arch` list
+/// is a clear error here, not a mis-parsed file name.
 fn load_accel(args: &Args) -> Result<AccelDesc> {
+    let mut accels = load_accels(args)?;
+    ensure!(
+        accels.len() == 1,
+        "this subcommand simulates a single target; pass exactly one --arch (got {})",
+        accels.len()
+    );
+    Ok(accels.remove(0))
+}
+
+/// `--arch` accepts a comma-separated list of architecture YAMLs; several
+/// files make the compile multi-target (cost-driven partition).
+fn load_accels(args: &Args) -> Result<Vec<AccelDesc>> {
     match args.opt("arch") {
-        None => gemmini_desc(),
-        Some(path) => {
-            let arch = arch_from_file(std::path::Path::new(path))?;
-            let name = arch.name.clone();
-            desc_for_arch(&name, arch)
+        None => Ok(vec![gemmini_desc()?]),
+        Some(paths) => {
+            let mut out = Vec::new();
+            for p in paths.split(',').filter(|p| !p.is_empty()) {
+                out.push(socket::load_target(Path::new(p))?);
+            }
+            ensure!(!out.is_empty(), "--arch lists no files");
+            Ok(out)
         }
     }
+}
+
+/// The persistent-cache location this invocation uses.
+fn cache_path(args: &Args) -> PathBuf {
+    match args.opt("cache") {
+        Some(p) => PathBuf::from(p),
+        None => default_cache_path(),
+    }
+}
+
+/// A local (in-process) compile server honoring --cache/--no-cache and
+/// --workers.
+fn local_server(args: &Args) -> Result<CompileServer> {
+    let opts = CompileOptions::default();
+    let server = if args.flag("no-cache") {
+        CompileServer::new(opts)
+    } else {
+        CompileServer::with_cache_file(opts, cache_path(args)).0
+    };
+    Ok(match args.opt_usize("workers", 0)? {
+        0 => server,
+        n => server.with_workers(n),
+    })
 }
 
 fn build_deployment(args: &Args, accel: &AccelDesc, model: &QModel) -> Result<Deployment> {
     match args.opt_or("backend", "proposed").as_str() {
         "proposed" => {
-            let graph = import_with_weight_chain(model)?;
-            Compiler::new(accel.clone()).compile(&graph)
+            // Route through the compile service so repeat invocations hit
+            // the persistent schedule cache.
+            let server = local_server(args)?;
+            let reply = server.compile_model(model, std::slice::from_ref(accel))?;
+            match reply.artifact {
+                CompiledArtifact::Single(d) => Ok(d),
+                CompiledArtifact::Multi(_) => bail!("one target cannot yield a multi deployment"),
+            }
         }
         "naive" | "byoc" => compile_naive(accel, model),
         "c-toolchain" | "c" => compile_c_toolchain(accel, model),
@@ -77,43 +143,126 @@ fn cmd_schedule(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn print_histogram(prog: &Program) {
+    println!("instruction histogram:");
+    for (m, n) in prog.histogram() {
+        println!("  {m:<24} {n}");
+    }
+}
+
+/// Send the compile request to a running `tvm-accel serve` instead of
+/// compiling locally; prints the server's response line.
+fn client_compile(args: &Args, sock: &str, model: &str) -> Result<()> {
+    // The server resolves paths in its own working directory: send
+    // absolute ones.
+    let model_abs = std::fs::canonicalize(model)
+        .with_context(|| format!("resolving model path {model}"))?;
+    let mut req = ObjBuilder::new()
+        .str_field("cmd", "compile")
+        .str_field("model", &model_abs.display().to_string());
+    if let Some(arch) = args.opt("arch") {
+        let mut files = Vec::new();
+        for p in arch.split(',').filter(|p| !p.is_empty()) {
+            let abs = std::fs::canonicalize(p)
+                .with_context(|| format!("resolving arch path {p}"))?;
+            files.push(abs.display().to_string());
+        }
+        req = req.list_field("arch", &files);
+    }
+    let resp = socket::request(Path::new(sock), &req.finish())?;
+    println!("{resp}");
+    let msg = parse_message(&resp).context("parsing server response")?;
+    if msg.bool_field("ok") != Some(true) {
+        bail!("server error: {}", msg.str_field("error").unwrap_or("unknown"));
+    }
+    Ok(())
+}
+
 fn cmd_compile(args: &Args) -> Result<()> {
     let path = args.opt("model").context("--model <file.qmodel> required")?;
-    let model = load_qmodel(std::path::Path::new(path))?;
-    let accel = load_accel(args)?;
-    let dep = build_deployment(args, &accel, &model)?;
+    if let Some(sock) = args.opt("socket") {
+        ensure!(
+            args.opt_or("backend", "proposed") == "proposed",
+            "--socket serves the proposed backend only; drop --socket to compile \
+             the {} baseline locally",
+            args.opt_or("backend", "proposed")
+        );
+        return client_compile(args, sock, path);
+    }
+    let model = load_qmodel(Path::new(path))?;
+    if args.opt_or("backend", "proposed").as_str() != "proposed" {
+        let accel = load_accel(args)?;
+        let dep = build_deployment(args, &accel, &model)?;
+        println!(
+            "compiled '{}' for {}: {} items, {} DRAM bytes",
+            path,
+            accel.name,
+            dep.program.items.len(),
+            commafy(dep.program.layout.total_bytes())
+        );
+        for (name, s, cyc) in &dep.chosen {
+            println!("  {name}: {s} (profiled {cyc:?})");
+        }
+        print_histogram(&dep.program);
+        return Ok(());
+    }
+
+    let accels = load_accels(args)?;
+    let server = local_server(args)?;
+    let reply = server.compile_model(&model, &accels)?;
+    let names: Vec<&str> = accels.iter().map(|a| a.name.as_str()).collect();
     println!(
         "compiled '{}' for {}: {} items, {} DRAM bytes",
         path,
-        accel.name,
-        dep.program.items.len(),
-        commafy(dep.program.layout.total_bytes())
+        names.join("+"),
+        reply.artifact.program().items.len(),
+        commafy(reply.artifact.program().layout.total_bytes())
     );
-    for (name, s, cyc) in &dep.chosen {
-        println!("  {name}: {s} (profiled {cyc:?})");
+    match &reply.artifact {
+        CompiledArtifact::Single(dep) => {
+            for (name, s, cyc) in &dep.chosen {
+                println!("  {name}: {s} (profiled {cyc:?})");
+            }
+            print_histogram(&dep.program);
+        }
+        CompiledArtifact::Multi(dep) => {
+            print!("{}", dep.render_assignments());
+            print_histogram(&dep.program);
+        }
     }
-    println!("instruction histogram:");
-    for (m, n) in dep.program.histogram() {
-        println!("  {m:<24} {n}");
+    println!(
+        "schedule cache: {} hit(s) / {} miss(es), {} sweep(s) this compile",
+        reply.cache_hits, reply.cache_misses, reply.sweeps
+    );
+    if let Some(p) = server.cache_path() {
+        println!(
+            "  {} entries persisted at {}",
+            server.cache_stats().entries,
+            p.display()
+        );
     }
     Ok(())
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
+    ensure!(
+        args.opt("socket").is_none(),
+        "--socket applies to 'compile' only; 'run' executes locally on the simulator"
+    );
     let path = args.opt("model").context("--model <file.qmodel> required")?;
-    let model = load_qmodel(std::path::Path::new(path))?;
+    let model = load_qmodel(Path::new(path))?;
     let accel = load_accel(args)?;
     let dep = build_deployment(args, &accel, &model)?;
     let sim = Simulator::new(&accel.arch);
     let inferences = args.opt_usize("inferences", 1)?;
-    anyhow::ensure!(inferences > 0, "--inferences must be at least 1");
+    ensure!(inferences > 0, "--inferences must be at least 1");
     let mut rng = Rng::new(args.opt_usize("seed", 1)? as u64);
 
     #[cfg(feature = "xla-runtime")]
     let golden = match args.opt("golden") {
         Some(g) => {
             let rt = Runtime::cpu()?;
-            Some(rt.load_hlo_text(std::path::Path::new(g))?)
+            Some(rt.load_hlo_text(Path::new(g))?)
         }
         None => None,
     };
@@ -127,39 +276,144 @@ fn cmd_run(args: &Args) -> Result<()> {
     #[cfg(not(feature = "xla-runtime"))]
     let golden: Option<()> = None;
 
-    let mut total = 0u64;
-    for i in 0..inferences {
-        let x = rng.i8_vec(model.batch * model.layers[0].in_dim);
-        let (out, rep) = dep.run(&sim, &x)?;
-        total += rep.cycles;
-        #[cfg(feature = "xla-runtime")]
-        if let Some(g) = &golden {
-            let want = g.run(&golden_inputs(&model, &x)?)?.to_vec::<i8>()?;
-            if out != want {
+    // One batched execution: the DRAM image (constants included) is
+    // staged once for the whole batch instead of once per inference.
+    let elems = model.batch * model.layers[0].in_dim;
+    let inputs: Vec<Vec<i8>> = (0..inferences).map(|_| rng.i8_vec(elems)).collect();
+    let refs: Vec<&[i8]> = inputs.iter().map(|v| v.as_slice()).collect();
+    let batch = dep.run_batch(&sim, &refs)?;
+
+    #[cfg(feature = "xla-runtime")]
+    if let Some(g) = &golden {
+        for (i, out) in batch.outputs.iter().enumerate() {
+            let want = g.run(&golden_inputs(&model, &inputs[i])?)?.to_vec::<i8>()?;
+            if out != &want {
                 bail!("inference {i}: output mismatch vs golden model");
             }
         }
-        #[cfg(not(feature = "xla-runtime"))]
-        let _ = &out;
-        if i == 0 {
-            println!("{}", describe("first inference", &rep, accel.arch.pe_dim));
-        }
     }
+
+    println!("{}", describe("first inference", &batch.reports[0], accel.arch.pe_dim));
     println!(
         "{} inferences, mean latency {} cycles{}",
         inferences,
-        commafy(total / inferences as u64),
+        commafy(batch.mean_cycles()),
         if golden.is_some() { ", all golden-checked ✔" } else { "" }
     );
+    if inferences > 1 {
+        println!(
+            "pipelined batch model: {} cycles total vs {} serial",
+            commafy(batch.pipelined_cycles),
+            commafy(batch.serial_cycles)
+        );
+    }
     Ok(())
 }
 
 fn cmd_disasm(args: &Args) -> Result<()> {
+    ensure!(
+        args.opt("socket").is_none(),
+        "--socket applies to 'compile' only; 'disasm' compiles locally"
+    );
     let path = args.opt("model").context("--model <file.qmodel> required")?;
-    let model = load_qmodel(std::path::Path::new(path))?;
+    let model = load_qmodel(Path::new(path))?;
     let accel = load_accel(args)?;
     let dep = build_deployment(args, &accel, &model)?;
     print!("{}", dep.program.disassemble());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let sock = args.opt("socket").context("--socket <path> required")?;
+    let targets = load_accels(args)?;
+    let server = local_server(args)?;
+    let stats = server.cache_stats();
+    eprintln!(
+        "tvm-accel serve: listening on {} ({} cached schedule entries{})",
+        sock,
+        stats.entries,
+        match server.cache_path() {
+            Some(p) => format!(", persisting to {}", p.display()),
+            None => ", persistence disabled".to_string(),
+        }
+    );
+    socket::serve(
+        std::sync::Arc::new(server),
+        ServeOptions { socket: PathBuf::from(sock), default_targets: targets },
+    )
+}
+
+fn cmd_cache(args: &Args) -> Result<()> {
+    let action = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .context("usage: tvm-accel cache <stats|clear|warm> [--cache F] [--model F]")?;
+    let path = cache_path(args);
+    match action {
+        "stats" => {
+            let (entries, rep) = persist::load_file(&path);
+            println!(
+                "cache file {}: {} entries ({} skipped)",
+                path.display(),
+                entries.len(),
+                rep.skipped
+            );
+            let mut per_arch = std::collections::BTreeMap::new();
+            for (k, _) in &entries {
+                *per_arch.entry(k.arch).or_insert(0usize) += 1;
+            }
+            for (arch, n) in per_arch {
+                println!("  arch {arch:016x}: {n} schedule(s)");
+            }
+            Ok(())
+        }
+        "clear" => {
+            match std::fs::remove_file(&path) {
+                Ok(()) => println!("removed {}", path.display()),
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                    println!("nothing to clear at {}", path.display())
+                }
+                Err(e) => {
+                    return Err(e).with_context(|| format!("removing {}", path.display()))
+                }
+            }
+            Ok(())
+        }
+        "warm" => {
+            let model_path =
+                args.opt("model").context("cache warm needs --model <file.qmodel>")?;
+            let model = load_qmodel(Path::new(model_path))?;
+            let accels = load_accels(args)?;
+            let (server, _) =
+                CompileServer::with_cache_file(CompileOptions::default(), path.clone());
+            let reply = server.compile_model(&model, &accels)?;
+            println!(
+                "warmed '{}': {} sweep(s) run, {} cache hit(s); {} entries at {}",
+                model_path,
+                reply.sweeps,
+                reply.cache_hits,
+                server.cache_stats().entries,
+                path.display()
+            );
+            Ok(())
+        }
+        other => bail!("unknown cache action '{other}' (stats|clear|warm)"),
+    }
+}
+
+fn cmd_gen_model(args: &Args) -> Result<()> {
+    let out = args.opt("out").context("--out <file.qmodel> required")?;
+    let dims_s = args.opt_or("dims", "32,48,16");
+    let dims: Vec<usize> = dims_s
+        .split(',')
+        .map(|d| d.trim().parse::<usize>().map_err(|_| anyhow!("bad dim '{d}'")))
+        .collect::<Result<_>>()?;
+    let batch = args.opt_usize("batch", 4)?;
+    let model = synth_qmodel(args.opt_usize("seed", 1)? as u64, &dims, batch)?;
+    std::fs::write(out, write_qmodel(&model))
+        .with_context(|| format!("writing {out}"))?;
+    println!("wrote {} ({} layer(s), batch {})", out, model.layers.len(), batch);
     Ok(())
 }
 
@@ -170,11 +424,21 @@ fn main() -> Result<()> {
         Some("compile") => cmd_compile(&args),
         Some("run") => cmd_run(&args),
         Some("disasm") => cmd_disasm(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("cache") => cmd_cache(&args),
+        Some("gen-model") => cmd_gen_model(&args),
         _ => {
             eprintln!(
-                "usage: tvm-accel <schedule|compile|run|disasm> [--model F] \
-                 [--backend proposed|naive|c-toolchain] [--arch F.yaml] \
-                 [--golden F.hlo.txt] [--inferences N] [--n N --c C --k K]"
+                "usage: tvm-accel <schedule|compile|run|disasm|serve|cache|gen-model>\n\
+                 \x20 compile:     --model F.qmodel [--backend proposed|naive|c-toolchain]\n\
+                 \x20              [--arch F.yaml[,G.yaml...]] [--cache F|--no-cache]\n\
+                 \x20              [--socket S  (proposed backend via a running server)]\n\
+                 \x20 run/disasm:  --model F.qmodel [--backend ...] [--arch F.yaml]\n\
+                 \x20              [--golden F.hlo.txt] [--inferences N] [--cache F|--no-cache]\n\
+                 \x20 schedule:    --n N --c C --k K\n\
+                 \x20 serve:       --socket S [--arch ...] [--cache F|--no-cache] [--workers N]\n\
+                 \x20 cache:       <stats|clear|warm> [--cache F] [--model F.qmodel]\n\
+                 \x20 gen-model:   --out F.qmodel [--dims 32,48,16] [--batch N] [--seed N]"
             );
             std::process::exit(2);
         }

@@ -41,7 +41,9 @@ use crate::backend::mapping::apply_schedule;
 use crate::isa::program::Program;
 use crate::isa::Instr;
 use crate::relay::Graph;
-use crate::scheduler::cache::{CacheKey, CacheStats, CachedSelection, ScheduleCache, SearchKey};
+use crate::scheduler::cache::{
+    CacheKey, CacheStats, CachedSelection, ScheduleCache, SearchGate, SearchKey,
+};
 use crate::scheduler::sweep::{sweep, SweepOptions};
 use crate::scheduler::Schedule;
 use crate::sim::report::RunReport;
@@ -137,12 +139,9 @@ impl Deployment {
     /// once and only the input region is rewritten per inference. Outputs
     /// and reports are element-identical to `inputs.len()` separate
     /// [`Deployment::run`] calls (the program fully rewrites every region
-    /// it reads each run).
-    pub fn run_batch(
-        &self,
-        sim: &Simulator,
-        inputs: &[&[i8]],
-    ) -> Result<(Vec<Vec<i8>>, Vec<RunReport>)> {
+    /// it reads each run); on top of the serial per-inference reports the
+    /// returned [`BatchRun`] carries the pipelined batch timing model.
+    pub fn run_batch(&self, sim: &Simulator, inputs: &[&[i8]]) -> Result<BatchRun> {
         let mut dram = self.program.make_dram()?;
         let mut outputs = Vec::with_capacity(inputs.len());
         let mut reports = Vec::with_capacity(inputs.len());
@@ -158,8 +157,71 @@ impl Deployment {
             outputs.push(dram.read_i8_slice(self.output_offset, self.output_elems)?);
             reports.push(rep);
         }
-        Ok((outputs, reports))
+        Ok(BatchRun::new(outputs, reports))
     }
+}
+
+/// Result of a batched run: per-inference outputs and reports (identical
+/// to N separate `run` calls) plus batch-level cycle totals under two
+/// timing models — strictly serial inferences, and the pipelined model
+/// where the host preprocesses inference *i+1* while the accelerator
+/// still executes inference *i*.
+#[derive(Debug, Clone)]
+pub struct BatchRun {
+    /// Per-inference int8 outputs, in input order.
+    pub outputs: Vec<Vec<i8>>,
+    /// Per-inference reports (element- and cycle-identical to `run`).
+    pub reports: Vec<RunReport>,
+    /// Total cycles when inferences run strictly back to back
+    /// (sum of the per-inference `cycles`).
+    pub serial_cycles: u64,
+    /// Total cycles under the pipelined model: each inference's host
+    /// preprocessing prefix overlaps the previous inference's accelerator
+    /// execution, so the batch hides `min(prefix, previous accel time)`
+    /// per inference. Always ≤ [`BatchRun::serial_cycles`]; equal when no
+    /// inference has host preprocessing before its first accelerator
+    /// instruction.
+    pub pipelined_cycles: u64,
+}
+
+impl BatchRun {
+    pub(crate) fn new(outputs: Vec<Vec<i8>>, reports: Vec<RunReport>) -> BatchRun {
+        let serial_cycles = reports.iter().map(|r| r.cycles).sum();
+        let pipelined_cycles = pipelined_cycles(&reports);
+        BatchRun { outputs, reports, serial_cycles, pipelined_cycles }
+    }
+
+    /// Mean serial latency per inference (0 for an empty batch).
+    pub fn mean_cycles(&self) -> u64 {
+        if self.reports.is_empty() {
+            0
+        } else {
+            self.serial_cycles / self.reports.len() as u64
+        }
+    }
+}
+
+/// The pipelined batch timing model. Inference `i` is split into its host
+/// preprocessing prefix `H_i` (host cycles before the first accelerator
+/// instruction) and the remainder `A_i`. The first inference pays
+/// `H_0 + A_0` in full; afterwards the host prepares inference `i` during
+/// `A_{i-1}`, so only the part of `H_i` exceeding `A_{i-1}` remains on
+/// the critical path: `total += A_i + max(0, H_i - A_{i-1})`. Outputs are
+/// unaffected — this reinterprets the measured per-inference reports.
+pub(crate) fn pipelined_cycles(reports: &[RunReport]) -> u64 {
+    let mut total = 0u64;
+    let mut prev_accel = 0u64;
+    for (i, r) in reports.iter().enumerate() {
+        let host = r.host_prefix_cycles.min(r.cycles);
+        let accel = r.cycles - host;
+        if i == 0 {
+            total += r.cycles;
+        } else {
+            total += accel + host.saturating_sub(prev_accel);
+        }
+        prev_accel = accel;
+    }
+    total
 }
 
 /// The compiler: construct once per accelerator description. Long-lived
@@ -179,6 +241,29 @@ pub struct Compiler {
     cache: Arc<ScheduleCache>,
     /// Number of schedule sweeps actually executed (cache misses).
     sweeps_run: AtomicU64,
+    /// Cache hits observed by *this* compiler's lookups (the shared
+    /// cache's own counters aggregate every compiler attached to it).
+    cache_hits: AtomicU64,
+    /// Cache misses observed by this compiler's lookups.
+    cache_misses: AtomicU64,
+}
+
+/// Drop guard for single-flight search leadership: if the leader errors
+/// — or panics — before publishing, leadership is released so blocked
+/// followers can retry the search instead of hanging a long-lived
+/// compile server on that key forever.
+struct SearchLease<'a> {
+    cache: &'a ScheduleCache,
+    key: CacheKey,
+    armed: bool,
+}
+
+impl Drop for SearchLease<'_> {
+    fn drop(&mut self) {
+        if self.armed {
+            self.cache.abandon(&self.key);
+        }
+    }
 }
 
 impl Compiler {
@@ -192,14 +277,31 @@ impl Compiler {
         Compiler::with_shared_cache(accel, options, Arc::new(ScheduleCache::new()))
     }
 
-    /// A compiler wired to an externally owned schedule cache (the
-    /// building block of [`MultiCompiler`], whose targets pool one cache).
-    pub(crate) fn with_shared_cache(
+    /// A compiler wired to an externally owned schedule cache: the
+    /// building block of [`MultiCompiler`] (whose targets pool one cache)
+    /// and of the compile service ([`crate::service::CompileServer`]),
+    /// which hands every request a compiler over its long-lived,
+    /// disk-hydrated cache. The key covers the accelerator fingerprint,
+    /// so sharing one cache across machines is always safe.
+    pub fn with_shared_cache(
         accel: AccelDesc,
         options: CompileOptions,
         cache: Arc<ScheduleCache>,
     ) -> Compiler {
-        Compiler { accel, options, cache, sweeps_run: AtomicU64::new(0) }
+        Compiler {
+            accel,
+            options,
+            cache,
+            sweeps_run: AtomicU64::new(0),
+            cache_hits: AtomicU64::new(0),
+            cache_misses: AtomicU64::new(0),
+        }
+    }
+
+    /// A handle to this compiler's schedule cache (for persistence or for
+    /// wiring further compilers to the same cache).
+    pub fn schedule_cache(&self) -> Arc<ScheduleCache> {
+        self.cache.clone()
     }
 
     /// A cost-driven multi-accelerator compiler over a *set* of candidate
@@ -225,6 +327,21 @@ impl Compiler {
     /// selections that were not cache hits or naive defaults).
     pub fn sweeps_run(&self) -> u64 {
         self.sweeps_run.load(Ordering::Relaxed)
+    }
+
+    /// Cache hits observed by this compiler's own lookups. Unlike
+    /// [`Compiler::cache_stats`] — which reports the shared cache's
+    /// lifetime counters across every compiler attached to it — this is
+    /// attributable to exactly this compiler (the compile service uses it
+    /// for per-request accounting).
+    pub fn cache_hits(&self) -> u64 {
+        self.cache_hits.load(Ordering::Relaxed)
+    }
+
+    /// Cache misses observed by this compiler's own lookups (see
+    /// [`Compiler::cache_hits`]).
+    pub fn cache_misses(&self) -> u64 {
+        self.cache_misses.load(Ordering::Relaxed)
     }
 
     /// Schedule-cache counters.
@@ -286,34 +403,59 @@ impl Compiler {
             gemm: g,
             search: SearchKey::new(&self.options.sweep, self.options.profile_candidates),
         };
-        if self.options.schedule_cache {
-            if let Some(hit) = self.cache.get(&key) {
-                return Ok((hit.schedule, hit.profiled_cycles, ScheduleSource::Cache));
+        // Single-flight gate: on a hit (including one produced by another
+        // thread's concurrent search on the same key) return immediately;
+        // otherwise this thread is the leader and owes a publish — the
+        // lease guard releases leadership on error *and* on unwind.
+        let mut lease = if self.options.schedule_cache {
+            match self.cache.begin(&key) {
+                SearchGate::Ready(hit) => {
+                    self.cache_hits.fetch_add(1, Ordering::Relaxed);
+                    return Ok((hit.schedule, hit.profiled_cycles, ScheduleSource::Cache));
+                }
+                SearchGate::Leader => {
+                    self.cache_misses.fetch_add(1, Ordering::Relaxed);
+                    Some(SearchLease { cache: self.cache.as_ref(), key, armed: true })
+                }
             }
-        }
-
-        self.sweeps_run.fetch_add(1, Ordering::Relaxed);
-        let result = sweep(&self.accel.arch, g, &self.options.sweep);
-        ensure!(
-            !result.candidates.is_empty(),
-            "scheduler found no valid mapping for {g:?}"
-        );
-        let (schedule, cycles) = if self.options.profile_candidates == 0 {
-            (result.candidates[0].clone(), None)
         } else {
-            // Fig. 2(b): evaluate the refined candidates on the (simulated)
-            // hardware and keep the measured best.
-            let top = self.options.profile_candidates.min(result.candidates.len());
-            let (s, c) = self.profile_top_candidates(&result.candidates[..top])?;
-            (s, Some(c))
+            None
         };
-        if self.options.schedule_cache {
-            self.cache.insert(
-                key,
-                CachedSelection { schedule: schedule.clone(), profiled_cycles: cycles },
+
+        let searched = (|| -> Result<(Schedule, Option<u64>)> {
+            self.sweeps_run.fetch_add(1, Ordering::Relaxed);
+            let result = sweep(&self.accel.arch, g, &self.options.sweep);
+            ensure!(
+                !result.candidates.is_empty(),
+                "scheduler found no valid mapping for {g:?}"
             );
+            if self.options.profile_candidates == 0 {
+                Ok((result.candidates[0].clone(), None))
+            } else {
+                // Fig. 2(b): evaluate the refined candidates on the
+                // (simulated) hardware and keep the measured best.
+                let top = self.options.profile_candidates.min(result.candidates.len());
+                let (s, c) = self.profile_top_candidates(&result.candidates[..top])?;
+                Ok((s, Some(c)))
+            }
+        })();
+        match searched {
+            Ok((schedule, cycles)) => {
+                if let Some(lease) = lease.as_mut() {
+                    lease.cache.publish(
+                        key,
+                        CachedSelection {
+                            schedule: schedule.clone(),
+                            profiled_cycles: cycles,
+                        },
+                    );
+                    lease.armed = false;
+                }
+                Ok((schedule, cycles, ScheduleSource::Search))
+            }
+            // The lease's drop releases leadership for a blocked follower.
+            Err(e) => Err(e),
         }
-        Ok((schedule, cycles, ScheduleSource::Search))
     }
 
     /// Profile the candidates on scoped worker threads (contiguous chunks
@@ -574,15 +716,75 @@ mod tests {
 
         let inputs: Vec<Vec<i8>> = (0..5).map(|_| rng.i8_vec(4 * 32)).collect();
         let refs: Vec<&[i8]> = inputs.iter().map(|v| v.as_slice()).collect();
-        let (batch_outs, batch_reps) = dep.run_batch(&sim, &refs).unwrap();
-        assert_eq!(batch_outs.len(), 5);
+        let batch = dep.run_batch(&sim, &refs).unwrap();
+        assert_eq!(batch.outputs.len(), 5);
 
+        let mut serial = 0;
         for (i, input) in inputs.iter().enumerate() {
             let (out, rep) = dep.run(&sim, input).unwrap();
-            assert_eq!(batch_outs[i], out, "inference {i} output diverged");
-            assert_eq!(batch_reps[i].cycles, rep.cycles, "inference {i} timing diverged");
-            assert_eq!(batch_reps[i].macs, rep.macs);
+            assert_eq!(batch.outputs[i], out, "inference {i} output diverged");
+            assert_eq!(batch.reports[i].cycles, rep.cycles, "inference {i} timing diverged");
+            assert_eq!(batch.reports[i].macs, rep.macs);
+            serial += rep.cycles;
         }
+        assert_eq!(batch.serial_cycles, serial);
+        // The proposed flow has no host preprocessing, so there is nothing
+        // to overlap: the pipelined model degenerates to the serial one.
+        assert_eq!(batch.reports[0].host_prefix_cycles, 0);
+        assert_eq!(batch.pipelined_cycles, batch.serial_cycles);
+        assert_eq!(batch.mean_cycles(), serial / 5);
+    }
+
+    #[test]
+    fn pipelined_batch_overlaps_host_prefix() {
+        use crate::isa::Activation;
+        use crate::relay::{DType, GraphBuilder, Op, Tensor, TensorType};
+        // host transpose (runtime preprocessing) -> accel dense: every
+        // inference starts with a host prefix the pipeline can hide.
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", TensorType::new(vec![8, 8], DType::I8));
+        let t = b.op("t", Op::Transpose, &[x]).unwrap();
+        let w = b.constant(
+            "w",
+            Tensor::new(vec![8, 8], TensorData::I8(vec![1; 64])).unwrap(),
+        );
+        let bias =
+            b.constant("b", Tensor::new(vec![8], TensorData::I32(vec![0; 8])).unwrap());
+        let d = b
+            .op(
+                "dense",
+                Op::AccelDense { scale: 1.0, act: Activation::None, weight_transposed: true },
+                &[t, w, bias],
+            )
+            .unwrap();
+        let g = b.outputs(&[d]);
+
+        let accel = gemmini_desc().unwrap();
+        let dep = Compiler::new(accel.clone()).compile(&g).unwrap();
+        let sim = Simulator::new(&accel.arch);
+        let mut rng = Rng::new(13);
+        let inputs: Vec<Vec<i8>> = (0..4).map(|_| rng.i8_vec(64)).collect();
+        let refs: Vec<&[i8]> = inputs.iter().map(|v| v.as_slice()).collect();
+        let batch = dep.run_batch(&sim, &refs).unwrap();
+
+        // Outputs stay element-exact vs individual runs.
+        for (i, input) in inputs.iter().enumerate() {
+            let (out, _) = dep.run(&sim, input).unwrap();
+            assert_eq!(batch.outputs[i], out, "inference {i} output diverged");
+        }
+        // Each inference has a real host prefix and real accelerator work,
+        // so the pipelined model must be strictly cheaper than serial —
+        // and never cheaper than a single full inference.
+        let r = &batch.reports[0];
+        assert!(r.host_prefix_cycles > 0, "transpose must form a host prefix");
+        assert!(r.cycles > r.host_prefix_cycles, "accel part must be non-empty");
+        assert!(
+            batch.pipelined_cycles < batch.serial_cycles,
+            "pipelined {} should beat serial {}",
+            batch.pipelined_cycles,
+            batch.serial_cycles
+        );
+        assert!(batch.pipelined_cycles >= r.cycles);
     }
 
     #[test]

@@ -38,7 +38,7 @@ use crate::sim::report::RunReport;
 use crate::sim::Simulator;
 
 use super::session::{render_stage_reports, ScheduleStats, StageReport};
-use super::{CompileOptions, Compiler, CompilerSession};
+use super::{BatchRun, CompileOptions, Compiler, CompilerSession};
 
 /// One contiguous run of program items emitted for (and executed by) a
 /// single target. `target` indexes the deployment's target list; host ops
@@ -140,8 +140,9 @@ impl MultiDeployment {
     }
 
     /// Run many inferences back to back, staging the DRAM image once
-    /// (mirrors [`super::Deployment::run_batch`]).
-    pub fn run_batch(&self, inputs: &[&[i8]]) -> Result<(Vec<Vec<i8>>, Vec<RunReport>)> {
+    /// (mirrors [`super::Deployment::run_batch`], including the pipelined
+    /// batch timing model in the returned [`BatchRun`]).
+    pub fn run_batch(&self, inputs: &[&[i8]]) -> Result<BatchRun> {
         let sims = self.simulators();
         let mut dram = self.program.make_dram()?;
         let mut outputs = Vec::with_capacity(inputs.len());
@@ -157,7 +158,7 @@ impl MultiDeployment {
             reports.push(self.run_segments(&sims, &mut dram)?);
             outputs.push(dram.read_i8_slice(self.output_offset, self.output_elems)?);
         }
-        Ok((outputs, reports))
+        Ok(BatchRun::new(outputs, reports))
     }
 
     /// Number of layers assigned to accelerator `target`.
@@ -222,8 +223,19 @@ impl MultiCompiler {
     /// A multi-target compiler with explicit options (shared by every
     /// candidate; the search options are part of the schedule-cache key).
     pub fn with_options(targets: Vec<AccelDesc>, options: CompileOptions) -> Result<MultiCompiler> {
+        MultiCompiler::with_shared_cache(targets, options, Arc::new(ScheduleCache::new()))
+    }
+
+    /// A multi-target compiler pooled on an externally owned schedule
+    /// cache — the compile service hands every request a `MultiCompiler`
+    /// over its long-lived, disk-hydrated cache, so candidate probes hit
+    /// entries produced by earlier requests (and other processes).
+    pub fn with_shared_cache(
+        targets: Vec<AccelDesc>,
+        options: CompileOptions,
+        cache: Arc<ScheduleCache>,
+    ) -> Result<MultiCompiler> {
         ensure!(!targets.is_empty(), "need at least one accelerator description");
-        let cache = Arc::new(ScheduleCache::new());
         let compilers = targets
             .into_iter()
             .map(|accel| Compiler::with_shared_cache(accel, options.clone(), cache.clone()))
@@ -251,6 +263,19 @@ impl MultiCompiler {
         self.compilers.iter().map(|c| c.sweeps_run()).sum()
     }
 
+    /// Cache hits observed by this multi-compiler's own lookups, summed
+    /// across candidates (per-request attribution; the shared cache's
+    /// counters aggregate every attached compiler).
+    pub fn cache_hits(&self) -> u64 {
+        self.compilers.iter().map(|c| c.cache_hits()).sum()
+    }
+
+    /// Cache misses observed by this multi-compiler's own lookups (see
+    /// [`MultiCompiler::cache_hits`]).
+    pub fn cache_misses(&self) -> u64 {
+        self.compilers.iter().map(|c| c.cache_misses()).sum()
+    }
+
     /// Counters of the schedule cache shared by all candidates.
     pub fn cache_stats(&self) -> CacheStats {
         self.compilers[0].cache_stats()
@@ -263,27 +288,13 @@ mod tests {
     use crate::accel::gemmini::{desc_for_arch, gemmini_desc};
     use crate::arch::ArchDesc;
     use crate::relay::eval::eval;
-    use crate::relay::import::{from_quantized, to_qnn_graph};
-    use crate::relay::quantize::{quantize_mlp, FloatDense};
+    use crate::relay::import::{synth_qmodel, to_qnn_graph};
     use crate::relay::{Tensor, TensorData};
     use crate::util::prng::Rng;
     use std::collections::BTreeMap;
 
-    fn mlp_graph(rng: &mut Rng, dims: &[usize], batch: usize) -> Graph {
-        let layers: Vec<FloatDense> = dims
-            .windows(2)
-            .enumerate()
-            .map(|(i, w)| FloatDense {
-                weight: (0..w[0] * w[1]).map(|_| (rng.f64() as f32 - 0.5) * 0.3).collect(),
-                bias: (0..w[1]).map(|_| (rng.f64() as f32 - 0.5) * 0.1).collect(),
-                in_dim: w[0],
-                out_dim: w[1],
-                relu: i + 2 < dims.len(),
-            })
-            .collect();
-        let scales: Vec<f32> = (0..dims.len()).map(|i| 0.02 + 0.01 * i as f32).collect();
-        let q = quantize_mlp(&layers, &scales).unwrap();
-        to_qnn_graph(&from_quantized(batch, scales[0], &q)).unwrap()
+    fn mlp_graph(seed: u64, dims: &[usize], batch: usize) -> Graph {
+        to_qnn_graph(&synth_qmodel(seed, dims, batch).unwrap()).unwrap()
     }
 
     fn bigarray_desc() -> AccelDesc {
@@ -300,8 +311,7 @@ mod tests {
 
     #[test]
     fn single_target_multi_compiler_matches_plain_compiler() {
-        let mut rng = Rng::new(21);
-        let graph = mlp_graph(&mut rng, &[32, 48, 16], 4);
+        let graph = mlp_graph(21, &[32, 48, 16], 4);
         let accel = gemmini_desc().unwrap();
         let multi = Compiler::with_targets(std::slice::from_ref(&accel)).unwrap();
         let md = multi.compile(&graph).unwrap();
@@ -318,7 +328,7 @@ mod tests {
         let mut rng = Rng::new(22);
         let dims = [64usize, 96, 32];
         let batch = 8;
-        let graph = mlp_graph(&mut rng, &dims, batch);
+        let graph = mlp_graph(22, &dims, batch);
         let multi =
             Compiler::with_targets(&[gemmini_desc().unwrap(), bigarray_desc()]).unwrap();
         let out = multi.compile_with_report(&graph).unwrap();
@@ -345,21 +355,22 @@ mod tests {
         assert_eq!(TensorData::I8(got), want[0].data);
         assert!(rep.cycles > 0);
 
-        // Batch runs agree with individual runs.
+        // Batch runs agree with individual runs; the pipelined batch model
+        // never exceeds the serial total.
         let inputs: Vec<Vec<i8>> = (0..3).map(|_| rng.i8_vec(batch * dims[0])).collect();
         let refs: Vec<&[i8]> = inputs.iter().map(|v| v.as_slice()).collect();
-        let (bouts, breps) = dep.run_batch(&refs).unwrap();
+        let brun = dep.run_batch(&refs).unwrap();
         for (i, x) in inputs.iter().enumerate() {
             let (o, r) = dep.run(x).unwrap();
-            assert_eq!(bouts[i], o);
-            assert_eq!(breps[i].cycles, r.cycles);
+            assert_eq!(brun.outputs[i], o);
+            assert_eq!(brun.reports[i].cycles, r.cycles);
         }
+        assert!(brun.pipelined_cycles <= brun.serial_cycles);
     }
 
     #[test]
     fn identical_candidates_tie_break_to_first_and_share_cache() {
-        let mut rng = Rng::new(23);
-        let graph = mlp_graph(&mut rng, &[32, 32, 32], 4);
+        let graph = mlp_graph(23, &[32, 32, 32], 4);
         // Two descriptions of the same machine: identical fingerprints, so
         // the shared cache serves the second candidate's probes and every
         // equal-cost tie breaks to target 0.

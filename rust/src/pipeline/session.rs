@@ -24,6 +24,14 @@
 //! the classic single-target path, byte-identical to the pre-multi
 //! pipeline (the existing integration tests are the guard).
 //!
+//! Sessions never own a cache themselves: they run against whatever
+//! [`crate::scheduler::cache::ScheduleCache`] their compilers were
+//! constructed over ([`Compiler::with_shared_cache`]). The compile
+//! service ([`crate::service::CompileServer`]) exploits exactly that —
+//! it hydrates one cache from disk, pre-shards the schedule searches
+//! across a worker pool, and then runs an ordinary session whose schedule
+//! stage is all hits — while staying bit-compatible with a cold session.
+//!
 //! See `ARCHITECTURE.md` (next to this file) for the stage graph and the
 //! cache-keying rules.
 

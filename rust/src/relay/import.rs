@@ -182,6 +182,33 @@ pub fn to_qnn_graph(m: &QModel) -> Result<Graph> {
     Ok(g)
 }
 
+/// Deterministic synthetic quantized MLP: `dims` are the layer widths
+/// (at least two), ReLU on every layer but the last, weights/biases drawn
+/// from the seeded [`crate::util::prng::Rng`]. This is the one model
+/// builder shared by `tvm-accel gen-model`, the compile-service tests and
+/// the CI smoke job — same seed, same bytes, everywhere.
+pub fn synth_qmodel(seed: u64, dims: &[usize], batch: usize) -> Result<QModel> {
+    use super::quantize::{quantize_mlp, FloatDense};
+    ensure!(dims.len() >= 2, "need at least two layer widths, got {}", dims.len());
+    ensure!(dims.iter().all(|&d| d > 0), "every layer width must be positive");
+    ensure!(batch > 0, "batch must be positive");
+    let mut rng = crate::util::prng::Rng::new(seed);
+    let layers: Vec<FloatDense> = dims
+        .windows(2)
+        .enumerate()
+        .map(|(i, w)| FloatDense {
+            weight: (0..w[0] * w[1]).map(|_| (rng.f64() as f32 - 0.5) * 0.3).collect(),
+            bias: (0..w[1]).map(|_| (rng.f64() as f32 - 0.5) * 0.1).collect(),
+            in_dim: w[0],
+            out_dim: w[1],
+            relu: i + 2 < dims.len(),
+        })
+        .collect();
+    let scales: Vec<f32> = (0..dims.len()).map(|i| 0.02 + 0.01 * i as f32).collect();
+    let q = quantize_mlp(&layers, &scales)?;
+    Ok(from_quantized(batch, scales[0], &q))
+}
+
 /// Convert quantizer output ([`QuantDense`]) into a model, for building
 /// `.qmodel`s from Rust (tests, tooling).
 pub fn from_quantized(batch: usize, input_scale: f32, layers: &[QuantDense]) -> QModel {

@@ -29,12 +29,25 @@
 //! (layer, candidate) are the same searches its schedule stage would run,
 //! and each is paid once. Two candidates that describe the same machine
 //! (identical fingerprints) even share entries outright.
+//!
+//! Two extensions serve the long-lived compile service
+//! ([`crate::service`]):
+//!
+//! * **Single-flight search gating** ([`ScheduleCache::begin`]): when
+//!   several threads miss on the same key at once — concurrent compile
+//!   requests sharing a layer shape — exactly one becomes the *leader*
+//!   and runs the search; the rest block until the leader
+//!   [`ScheduleCache::publish`]es and are then served the entry as a hit.
+//! * **Persistence hooks** ([`ScheduleCache::snapshot`] /
+//!   [`ScheduleCache::hydrate`]): entries are pure data, so they can be
+//!   serialized to the on-disk artifact in [`super::persist`] and loaded
+//!   back into a cold process.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::fmt::Write as _;
 use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Condvar, Mutex};
 
 use crate::accel::AccelDesc;
 use crate::arch::ArchDesc;
@@ -84,7 +97,7 @@ pub fn accel_fingerprint(accel: &AccelDesc) -> u64 {
 }
 
 /// The search-option half of the cache key.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct SearchKey {
     /// Candidates kept per sweep configuration point.
     pub top_k_per_config: usize,
@@ -112,8 +125,9 @@ impl SearchKey {
 }
 
 /// Full cache key: accelerator fingerprint + workload shape + search
-/// options (see [`accel_fingerprint`]).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+/// options (see [`accel_fingerprint`]). Keys are totally ordered so
+/// persisted cache files are written in a deterministic entry order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct CacheKey {
     /// [`accel_fingerprint`] of the target description.
     pub arch: u64,
@@ -125,7 +139,7 @@ pub struct CacheKey {
 
 /// A cached selection: the winning schedule and, when profiling ran, its
 /// measured cycle count.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct CachedSelection {
     /// The winning schedule.
     pub schedule: Schedule,
@@ -144,11 +158,28 @@ pub struct CacheStats {
     pub entries: usize,
 }
 
+/// Outcome of [`ScheduleCache::begin`]: either the selection is ready
+/// (a hit, possibly after waiting out another thread's in-flight search)
+/// or the caller has been elected leader and must run the search itself.
+#[derive(Debug)]
+pub enum SearchGate {
+    /// The caller owns the search for this key: run it, then call
+    /// [`ScheduleCache::publish`] on success or [`ScheduleCache::abandon`]
+    /// on failure (so blocked followers can take over).
+    Leader,
+    /// The selection is available and was counted as a hit.
+    Ready(CachedSelection),
+}
+
 /// Thread-safe schedule cache. Interior mutability so the compiler can
 /// consult it from `&self` (and from profiling worker threads).
 #[derive(Debug, Default)]
 pub struct ScheduleCache {
     map: Mutex<HashMap<CacheKey, CachedSelection>>,
+    /// Keys whose search is currently running somewhere (single-flight
+    /// gate); waiters block on `inflight_cv`.
+    inflight: Mutex<HashSet<CacheKey>>,
+    inflight_cv: Condvar,
     hits: AtomicU64,
     misses: AtomicU64,
 }
@@ -172,6 +203,86 @@ impl ScheduleCache {
     /// Store a selection under `key` (overwrites an existing entry).
     pub fn insert(&self, key: CacheKey, value: CachedSelection) {
         self.map.lock().expect("schedule cache poisoned").insert(key, value);
+    }
+
+    /// Whether `key` is stored, *without* touching the hit/miss counters
+    /// (a planning peek — the compile service uses it to skip scheduling
+    /// work for already-warm shapes without skewing request accounting).
+    pub fn contains(&self, key: &CacheKey) -> bool {
+        self.map.lock().expect("schedule cache poisoned").contains_key(key)
+    }
+
+    /// Single-flight lookup: returns [`SearchGate::Ready`] on a hit
+    /// (counted as a hit, even when the caller had to wait for another
+    /// thread's in-flight search on the same key) or elects the caller
+    /// leader for the key (counted as a miss). A leader **must** follow up
+    /// with [`ScheduleCache::publish`] or [`ScheduleCache::abandon`];
+    /// dropping the obligation would block every later `begin` on the key.
+    pub fn begin(&self, key: &CacheKey) -> SearchGate {
+        let mut inflight = self.inflight.lock().expect("schedule cache poisoned");
+        loop {
+            // Re-check the map on every wakeup: the leader publishes the
+            // entry before clearing the in-flight mark.
+            let hit =
+                self.map.lock().expect("schedule cache poisoned").get(key).cloned();
+            if let Some(hit) = hit {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return SearchGate::Ready(hit);
+            }
+            if !inflight.contains(key) {
+                inflight.insert(*key);
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                return SearchGate::Leader;
+            }
+            inflight =
+                self.inflight_cv.wait(inflight).expect("schedule cache poisoned");
+        }
+    }
+
+    /// Complete a leader's search: store the selection and release every
+    /// thread blocked in [`ScheduleCache::begin`] on the same key.
+    pub fn publish(&self, key: CacheKey, value: CachedSelection) {
+        self.map.lock().expect("schedule cache poisoned").insert(key, value);
+        self.inflight.lock().expect("schedule cache poisoned").remove(&key);
+        self.inflight_cv.notify_all();
+    }
+
+    /// Give up a leadership claimed via [`ScheduleCache::begin`] without
+    /// publishing (the search failed). One blocked follower is promoted to
+    /// leader and will retry the search.
+    pub fn abandon(&self, key: &CacheKey) {
+        self.inflight.lock().expect("schedule cache poisoned").remove(key);
+        self.inflight_cv.notify_all();
+    }
+
+    /// Clone out every stored entry, sorted by key, so persisted cache
+    /// files are deterministic for identical contents.
+    pub fn snapshot(&self) -> Vec<(CacheKey, CachedSelection)> {
+        let mut out: Vec<(CacheKey, CachedSelection)> = self
+            .map
+            .lock()
+            .expect("schedule cache poisoned")
+            .iter()
+            .map(|(k, v)| (*k, v.clone()))
+            .collect();
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
+    }
+
+    /// Bulk-insert entries (disk hydration). Does not touch the hit/miss
+    /// counters — hydrated entries only count when a lookup serves them.
+    /// Returns the number of entries inserted.
+    pub fn hydrate<I: IntoIterator<Item = (CacheKey, CachedSelection)>>(
+        &self,
+        entries: I,
+    ) -> usize {
+        let mut map = self.map.lock().expect("schedule cache poisoned");
+        let mut n = 0;
+        for (k, v) in entries {
+            map.insert(k, v);
+            n += 1;
+        }
+        n
     }
 
     /// Number of stored selections.
@@ -289,6 +400,85 @@ mod tests {
         let mut rebound = gemmini_desc().unwrap();
         rebound.compute_intrinsic = "gemmini_mvin".into();
         assert_ne!(accel_fingerprint(&a), accel_fingerprint(&rebound));
+    }
+
+    #[test]
+    fn single_flight_elects_one_leader_and_serves_followers() {
+        use std::sync::atomic::AtomicUsize;
+        use std::sync::Arc;
+
+        let cache = Arc::new(ScheduleCache::new());
+        let g = Gemm::new(16, 16, 16);
+        let k = key(11, g);
+        // First begin() is the leader; a parallel begin() must block until
+        // publish and then observe the entry as a hit.
+        assert!(matches!(cache.begin(&k), SearchGate::Leader));
+        let leaders = Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for _ in 0..4 {
+                let cache = cache.clone();
+                let leaders = leaders.clone();
+                handles.push(scope.spawn(move || match cache.begin(&k) {
+                    SearchGate::Leader => {
+                        leaders.fetch_add(1, Ordering::Relaxed);
+                        None
+                    }
+                    SearchGate::Ready(hit) => Some(hit),
+                }));
+            }
+            // Give the followers a moment to block, then publish.
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            cache.publish(
+                k,
+                CachedSelection { schedule: dummy_schedule(g), profiled_cycles: Some(7) },
+            );
+            for h in handles {
+                let got = h.join().expect("follower panicked");
+                assert_eq!(got.expect("served from cache").profiled_cycles, Some(7));
+            }
+        });
+        assert_eq!(leaders.load(Ordering::Relaxed), 0, "only one leader per key");
+        let stats = cache.stats();
+        assert_eq!(stats.misses, 1, "one miss for the single leader");
+        assert_eq!(stats.hits, 4, "every follower is a hit");
+    }
+
+    #[test]
+    fn abandon_promotes_a_new_leader() {
+        let cache = ScheduleCache::new();
+        let g = Gemm::new(8, 8, 8);
+        let k = key(3, g);
+        assert!(matches!(cache.begin(&k), SearchGate::Leader));
+        cache.abandon(&k);
+        // The key is searchable again (and counted as a second miss).
+        assert!(matches!(cache.begin(&k), SearchGate::Leader));
+        assert_eq!(cache.stats().misses, 2);
+    }
+
+    #[test]
+    fn snapshot_is_sorted_and_hydrate_restores() {
+        let cache = ScheduleCache::new();
+        let shapes = [Gemm::new(32, 8, 8), Gemm::new(4, 4, 4), Gemm::new(16, 16, 8)];
+        for (i, g) in shapes.iter().enumerate() {
+            cache.insert(
+                key(9, *g),
+                CachedSelection {
+                    schedule: dummy_schedule(*g),
+                    profiled_cycles: Some(i as u64),
+                },
+            );
+        }
+        let snap = cache.snapshot();
+        assert_eq!(snap.len(), 3);
+        for w in snap.windows(2) {
+            assert!(w[0].0 < w[1].0, "snapshot must be key-sorted");
+        }
+        let fresh = ScheduleCache::new();
+        assert_eq!(fresh.hydrate(snap.clone()), 3);
+        assert_eq!(fresh.snapshot(), snap);
+        let stats = fresh.stats();
+        assert_eq!((stats.hits, stats.misses), (0, 0), "hydration is not a lookup");
     }
 
     #[test]

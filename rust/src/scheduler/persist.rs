@@ -1,0 +1,508 @@
+//! Persistent on-disk artifact for [`ScheduleCache`] entries.
+//!
+//! Selections are pure data (shape + tiling decision + measured cycles),
+//! so a long-lived compile service — and even a plain repeat CLI
+//! invocation — can skip the Fig. 2(b) sweep entirely by hydrating the
+//! cache from disk. The format is a hand-rolled, versioned,
+//! length-prefixed binary (no external dependencies):
+//!
+//! ```text
+//! header  b"TVAS" (4 bytes) + format version u32 (LE)
+//! entry*  payload_len u32 | fnv1a64(payload) u64 | payload
+//! ```
+//!
+//! Every payload encodes one `(CacheKey, CachedSelection)` pair with
+//! little-endian fixed-width fields. Robustness rules, in order:
+//!
+//! * **missing file / bad magic / other format version** → empty load
+//!   (cold cache), never an error;
+//! * **corrupted entry** (checksum or field-level decode failure) → that
+//!   entry is skipped, the scan continues at the next length prefix;
+//! * **truncated file** (a length prefix or payload extends past EOF) →
+//!   the scan stops, keeping everything decoded so far.
+//!
+//! Writes are atomic: the snapshot is serialized to a sibling temp file
+//! and `rename(2)`d over the destination, so a crashed or concurrent
+//! writer can never leave a half-written artifact where readers look.
+//! The cache key embeds the accelerator fingerprint, the GEMM shape and
+//! the search options, so one artifact safely serves many accelerator
+//! descriptions at once — exactly like the in-memory cache it mirrors.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::arch::Dataflow;
+use crate::workload::{Dim, Gemm};
+
+use super::cache::{CacheKey, CachedSelection, ScheduleCache, SearchKey};
+use super::{Estimate, Schedule};
+
+/// File magic ("TVm-Accel Schedules").
+pub const MAGIC: &[u8; 4] = b"TVAS";
+
+/// Current format version. Bumping it invalidates every existing artifact
+/// (old files load as empty, old readers skip new files).
+pub const FORMAT_VERSION: u32 = 1;
+
+/// Upper bound on one entry's payload (an entry is a few hundred bytes;
+/// anything larger is a corrupted length prefix).
+const MAX_ENTRY_BYTES: usize = 4096;
+
+/// Stable 64-bit FNV-1a, the per-entry checksum of the cache artifact
+/// (also handy as a cheap content hash for byte-identity assertions).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// What a cache-file load found. Loading never fails: a missing,
+/// truncated, corrupted or version-mismatched file yields fewer (or zero)
+/// entries — a cold cache — instead of an error.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LoadReport {
+    /// Entries decoded successfully.
+    pub loaded: usize,
+    /// Records skipped (checksum mismatch, undecodable payload, trailing
+    /// truncation).
+    pub skipped: usize,
+}
+
+// --- encoding ---------------------------------------------------------
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_usize(out: &mut Vec<u8>, v: usize) {
+    put_u64(out, v as u64);
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_gemm(out: &mut Vec<u8>, g: &Gemm) {
+    put_usize(out, g.n);
+    put_usize(out, g.c);
+    put_usize(out, g.k);
+}
+
+/// Serialize one entry into its payload bytes.
+fn encode_entry(key: &CacheKey, sel: &CachedSelection) -> Vec<u8> {
+    let mut p = Vec::with_capacity(256);
+    // Key.
+    put_u64(&mut p, key.arch);
+    put_gemm(&mut p, &key.gemm);
+    put_usize(&mut p, key.search.top_k_per_config);
+    put_usize(&mut p, key.search.max_candidates);
+    p.push(key.search.uneven_mapping as u8);
+    p.push(key.search.double_buffering as u8);
+    put_usize(&mut p, key.search.profile_candidates);
+    // Measured cycles.
+    match sel.profiled_cycles {
+        Some(c) => {
+            p.push(1);
+            put_u64(&mut p, c);
+        }
+        None => {
+            p.push(0);
+            put_u64(&mut p, 0);
+        }
+    }
+    // Schedule.
+    let s = &sel.schedule;
+    put_gemm(&mut p, &s.workload);
+    p.push(match s.dataflow {
+        Dataflow::WeightStationary => 0,
+        Dataflow::OutputStationary => 1,
+    });
+    p.push(s.double_buffer as u8);
+    for v in s.shares {
+        put_f64(&mut p, v);
+    }
+    for v in s.insn_tile {
+        put_usize(&mut p, v);
+    }
+    for v in s.onchip_tile {
+        put_usize(&mut p, v);
+    }
+    for d in s.dram_order {
+        p.push(d.index() as u8);
+    }
+    put_f64(&mut p, s.est.compute_cycles);
+    put_f64(&mut p, s.est.dma_cycles);
+    put_f64(&mut p, s.est.issue_cycles);
+    put_f64(&mut p, s.est.latency);
+    for v in s.est.bytes {
+        put_f64(&mut p, v);
+    }
+    put_f64(&mut p, s.est.utilization);
+    p
+}
+
+// --- decoding ---------------------------------------------------------
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Option<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            return None;
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Some(s)
+    }
+
+    fn u8(&mut self) -> Option<u8> {
+        Some(self.take(1)?[0])
+    }
+
+    fn bool(&mut self) -> Option<bool> {
+        match self.u8()? {
+            0 => Some(false),
+            1 => Some(true),
+            _ => None,
+        }
+    }
+
+    fn u64(&mut self) -> Option<u64> {
+        Some(u64::from_le_bytes(self.take(8)?.try_into().ok()?))
+    }
+
+    fn usize(&mut self) -> Option<usize> {
+        usize::try_from(self.u64()?).ok()
+    }
+
+    fn f64(&mut self) -> Option<f64> {
+        Some(f64::from_le_bytes(self.take(8)?.try_into().ok()?))
+    }
+
+    fn gemm(&mut self) -> Option<Gemm> {
+        let (n, c, k) = (self.usize()?, self.usize()?, self.usize()?);
+        if n == 0 || c == 0 || k == 0 {
+            return None; // Gemm::new would panic on zero dims
+        }
+        Some(Gemm { n, c, k })
+    }
+
+    fn usize3(&mut self) -> Option<[usize; 3]> {
+        Some([self.usize()?, self.usize()?, self.usize()?])
+    }
+
+    fn f64x3(&mut self) -> Option<[f64; 3]> {
+        Some([self.f64()?, self.f64()?, self.f64()?])
+    }
+}
+
+/// Decode one payload; `None` on any structural problem.
+fn decode_entry(payload: &[u8]) -> Option<(CacheKey, CachedSelection)> {
+    let mut c = Cursor { buf: payload, pos: 0 };
+    let key = CacheKey {
+        arch: c.u64()?,
+        gemm: c.gemm()?,
+        search: SearchKey {
+            top_k_per_config: c.usize()?,
+            max_candidates: c.usize()?,
+            uneven_mapping: c.bool()?,
+            double_buffering: c.bool()?,
+            profile_candidates: c.usize()?,
+        },
+    };
+    let has_cycles = c.bool()?;
+    let cycles = c.u64()?;
+    let workload = c.gemm()?;
+    let dataflow = match c.u8()? {
+        0 => Dataflow::WeightStationary,
+        1 => Dataflow::OutputStationary,
+        _ => return None,
+    };
+    let double_buffer = c.bool()?;
+    let shares = c.f64x3()?;
+    let insn_tile = c.usize3()?;
+    let onchip_tile = c.usize3()?;
+    let mut dram_order = [Dim::N; 3];
+    for slot in &mut dram_order {
+        *slot = *Dim::ALL.get(c.u8()? as usize)?;
+    }
+    let est = Estimate {
+        compute_cycles: c.f64()?,
+        dma_cycles: c.f64()?,
+        issue_cycles: c.f64()?,
+        latency: c.f64()?,
+        bytes: c.f64x3()?,
+        utilization: c.f64()?,
+    };
+    if c.pos != payload.len() {
+        return None; // trailing bytes: treat as corruption
+    }
+    let schedule = Schedule {
+        workload,
+        dataflow,
+        double_buffer,
+        shares,
+        insn_tile,
+        onchip_tile,
+        dram_order,
+        est,
+    };
+    Some((
+        key,
+        CachedSelection {
+            schedule,
+            profiled_cycles: if has_cycles { Some(cycles) } else { None },
+        },
+    ))
+}
+
+// --- file I/O ---------------------------------------------------------
+
+/// Serialize `entries` (as produced by [`ScheduleCache::snapshot`]) into
+/// the artifact byte format.
+pub fn encode(entries: &[(CacheKey, CachedSelection)]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8 + entries.len() * 280);
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+    for (key, sel) in entries {
+        let payload = encode_entry(key, sel);
+        out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&fnv1a64(&payload).to_le_bytes());
+        out.extend_from_slice(&payload);
+    }
+    out
+}
+
+/// Decode an artifact byte buffer, skipping what cannot be read (see the
+/// module docs for the exact tolerance rules).
+pub fn decode(buf: &[u8]) -> (Vec<(CacheKey, CachedSelection)>, LoadReport) {
+    let mut rep = LoadReport::default();
+    let mut entries = Vec::new();
+    if buf.len() < 8 || &buf[0..4] != MAGIC {
+        return (entries, rep);
+    }
+    let version = u32::from_le_bytes(buf[4..8].try_into().expect("4 bytes"));
+    if version != FORMAT_VERSION {
+        return (entries, rep);
+    }
+    let mut pos = 8;
+    while pos < buf.len() {
+        if pos + 12 > buf.len() {
+            rep.skipped += 1; // trailing garbage shorter than a prefix
+            break;
+        }
+        let len =
+            u32::from_le_bytes(buf[pos..pos + 4].try_into().expect("4 bytes")) as usize;
+        let sum = u64::from_le_bytes(buf[pos + 4..pos + 12].try_into().expect("8 bytes"));
+        pos += 12;
+        if len > MAX_ENTRY_BYTES || len > buf.len() - pos {
+            rep.skipped += 1; // truncated or absurd length: cannot resync
+            break;
+        }
+        let payload = &buf[pos..pos + len];
+        pos += len;
+        if fnv1a64(payload) != sum {
+            rep.skipped += 1;
+            continue;
+        }
+        match decode_entry(payload) {
+            Some(e) => {
+                entries.push(e);
+                rep.loaded += 1;
+            }
+            None => rep.skipped += 1,
+        }
+    }
+    (entries, rep)
+}
+
+/// Load an artifact file. Never fails — see the module docs.
+pub fn load_file(path: &Path) -> (Vec<(CacheKey, CachedSelection)>, LoadReport) {
+    match std::fs::read(path) {
+        Ok(buf) => decode(&buf),
+        Err(_) => (Vec::new(), LoadReport::default()),
+    }
+}
+
+/// Hydrate `cache` from an artifact file (missing/corrupt files hydrate
+/// zero entries). Counters are untouched.
+pub fn hydrate_from_file(cache: &ScheduleCache, path: &Path) -> LoadReport {
+    let (entries, rep) = load_file(path);
+    cache.hydrate(entries);
+    rep
+}
+
+/// Atomically write `cache`'s entries to `path` (temp file in the same
+/// directory + rename), **merged over** whatever the file already holds:
+/// the atomic rename prevents torn files, but without the merge two
+/// processes sharing one artifact would silently discard each other's
+/// learning (last writer wins). This cache's entries take precedence on
+/// key conflicts. Parent directories are created as needed. Returns the
+/// number of entries written.
+pub fn save_to_file(cache: &ScheduleCache, path: &Path) -> Result<usize> {
+    let (disk, _) = load_file(path);
+    let mut merged: std::collections::BTreeMap<CacheKey, CachedSelection> =
+        disk.into_iter().collect();
+    for (k, v) in cache.snapshot() {
+        merged.insert(k, v);
+    }
+    let entries: Vec<(CacheKey, CachedSelection)> = merged.into_iter().collect();
+    let bytes = encode(&entries);
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating cache dir {}", parent.display()))?;
+        }
+    }
+    let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
+    std::fs::write(&tmp, &bytes)
+        .with_context(|| format!("writing cache temp file {}", tmp.display()))?;
+    std::fs::rename(&tmp, path).with_context(|| {
+        format!("renaming {} over {}", tmp.display(), path.display())
+    })?;
+    Ok(entries.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::sweep::SweepOptions;
+
+    fn sample_entry(arch: u64, g: Gemm, cycles: Option<u64>) -> (CacheKey, CachedSelection) {
+        let schedule = Schedule {
+            workload: g,
+            dataflow: Dataflow::OutputStationary,
+            double_buffer: true,
+            shares: [0.25, 0.75, 1.0],
+            insn_tile: [g.n.min(16), g.c.min(16), g.k.min(16)],
+            onchip_tile: [g.n, g.c, g.k],
+            dram_order: [Dim::K, Dim::N, Dim::C],
+            est: Estimate {
+                compute_cycles: 123.5,
+                dma_cycles: 456.25,
+                issue_cycles: 7.0,
+                latency: 999.125,
+                bytes: [1.0, 2.0, 3.0],
+                utilization: 0.625,
+            },
+        };
+        let key = CacheKey {
+            arch,
+            gemm: g,
+            search: SearchKey::new(&SweepOptions::default(), 6),
+        };
+        (key, CachedSelection { schedule, profiled_cycles: cycles })
+    }
+
+    #[test]
+    fn entry_payload_roundtrips_exactly() {
+        for cycles in [Some(42u64), None] {
+            let (k, v) = sample_entry(0xdead_beef, Gemm::new(40, 16, 8), cycles);
+            let payload = encode_entry(&k, &v);
+            let (k2, v2) = decode_entry(&payload).expect("decodes");
+            assert_eq!(k, k2);
+            assert_eq!(v, v2);
+        }
+    }
+
+    #[test]
+    fn buffer_roundtrip_preserves_order_and_values() {
+        let entries = vec![
+            sample_entry(1, Gemm::new(4, 4, 4), Some(10)),
+            sample_entry(2, Gemm::new(64, 32, 16), None),
+            sample_entry(1, Gemm::new(8, 8, 8), Some(77)),
+        ];
+        let bytes = encode(&entries);
+        let (back, rep) = decode(&bytes);
+        assert_eq!(back, entries);
+        assert_eq!(rep, LoadReport { loaded: 3, skipped: 0 });
+    }
+
+    #[test]
+    fn corrupted_entry_is_skipped_rest_survive() {
+        let entries = vec![
+            sample_entry(1, Gemm::new(4, 4, 4), Some(10)),
+            sample_entry(2, Gemm::new(8, 8, 8), Some(20)),
+        ];
+        let mut bytes = encode(&entries);
+        // Flip a byte inside the first payload (after header + prefix).
+        bytes[8 + 12 + 3] ^= 0xff;
+        let (back, rep) = decode(&bytes);
+        assert_eq!(back.len(), 1, "second entry must survive");
+        assert_eq!(back[0], entries[1]);
+        assert_eq!(rep, LoadReport { loaded: 1, skipped: 1 });
+    }
+
+    #[test]
+    fn truncated_buffer_keeps_decoded_prefix() {
+        let entries = vec![
+            sample_entry(1, Gemm::new(4, 4, 4), Some(10)),
+            sample_entry(2, Gemm::new(8, 8, 8), Some(20)),
+        ];
+        let bytes = encode(&entries);
+        let (back, rep) = decode(&bytes[..bytes.len() - 5]);
+        assert_eq!(back.len(), 1);
+        assert_eq!(rep.skipped, 1);
+        // Header-only and garbage buffers are simply cold.
+        assert_eq!(decode(&bytes[..8]).0.len(), 0);
+        assert_eq!(decode(b"garbage not a cache").0.len(), 0);
+    }
+
+    #[test]
+    fn version_mismatch_loads_cold() {
+        let entries = vec![sample_entry(1, Gemm::new(4, 4, 4), Some(10))];
+        let mut bytes = encode(&entries);
+        bytes[4..8].copy_from_slice(&(FORMAT_VERSION + 1).to_le_bytes());
+        let (back, rep) = decode(&bytes);
+        assert!(back.is_empty());
+        assert_eq!(rep, LoadReport::default());
+    }
+
+    #[test]
+    fn bad_dataflow_or_dim_tag_rejected() {
+        let (k, v) = sample_entry(5, Gemm::new(4, 4, 4), None);
+        let mut payload = encode_entry(&k, &v);
+        // Dataflow byte sits right after key (8+24+8+8+1+1+8 = 58), the
+        // cycles flag+value (9) and the schedule workload (24): 58+9+24.
+        let df_at = 58 + 9 + 24;
+        payload[df_at] = 9;
+        assert!(decode_entry(&payload).is_none());
+    }
+
+    #[test]
+    fn save_merges_with_existing_artifact() {
+        // Process A persisted entry X; process B (which never hydrated X)
+        // saves entry Y to the same file: both must survive.
+        let dir = std::env::temp_dir()
+            .join(format!("tvm-accel-persist-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let file = dir.join("merge.bin");
+        let _ = std::fs::remove_file(&file);
+        let a = ScheduleCache::new();
+        let (kx, vx) = sample_entry(1, Gemm::new(4, 4, 4), Some(10));
+        a.insert(kx, vx.clone());
+        save_to_file(&a, &file).unwrap();
+        let b = ScheduleCache::new();
+        let (ky, vy) = sample_entry(2, Gemm::new(8, 8, 8), None);
+        b.insert(ky, vy.clone());
+        let written = save_to_file(&b, &file).unwrap();
+        assert_eq!(written, 2, "merge-on-save must keep the other process's entry");
+        let (entries, _) = load_file(&file);
+        assert_eq!(entries, vec![(kx, vx), (ky, vy)]);
+        let _ = std::fs::remove_file(&file);
+    }
+
+    #[test]
+    fn fnv_is_stable() {
+        // Known FNV-1a vectors (64-bit).
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+}

@@ -1,0 +1,416 @@
+//! Newline-delimited JSON-ish wire protocol for the compile service.
+//!
+//! One request per line, one response per line. Both sides are *flat*
+//! JSON objects (no nesting — a deliberate subset so the hand-rolled
+//! parser stays tiny and dependency-free): string, number, boolean and
+//! array-of-string values only.
+//!
+//! Requests:
+//!
+//! ```text
+//! {"cmd":"ping"}
+//! {"cmd":"compile","model":"/abs/path/m.qmodel","arch":["configs/gemmini.yaml"]}
+//! {"cmd":"stats"}
+//! {"cmd":"clear"}
+//! {"cmd":"shutdown"}
+//! ```
+//!
+//! `arch` is optional (the server's default targets apply) and may name
+//! several YAML files for a multi-accelerator compile. Responses always
+//! carry `"ok":true|false`; compile responses add `items`, `dram_bytes`,
+//! `layers`, `cache_hits`/`cache_misses`/`sweeps` (this request's deltas),
+//! `cache_entries`, `elapsed_us` and `program_fnv` (a stable content hash
+//! of the emitted program, hex-encoded so no precision is lost in JSON
+//! numbers).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, ensure, Result};
+
+/// A decoded value (the protocol's deliberately small JSON subset).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    /// A string.
+    Str(String),
+    /// A number (integers and floats collapse to `f64`).
+    Num(f64),
+    /// `true` / `false`.
+    Bool(bool),
+    /// `null`.
+    Null,
+    /// An array (of any subset value; the protocol uses string arrays).
+    Arr(Vec<Value>),
+}
+
+/// One parsed message: a flat JSON object.
+#[derive(Debug, Clone, Default)]
+pub struct Message {
+    fields: BTreeMap<String, Value>,
+}
+
+impl Message {
+    /// The `cmd` field ("" when absent).
+    pub fn cmd(&self) -> &str {
+        self.str_field("cmd").unwrap_or("")
+    }
+
+    /// A string field, when present and a string.
+    pub fn str_field(&self, name: &str) -> Option<&str> {
+        match self.fields.get(name) {
+            Some(Value::Str(s)) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// A numeric field, when present and a number.
+    pub fn num_field(&self, name: &str) -> Option<f64> {
+        match self.fields.get(name) {
+            Some(Value::Num(n)) => Some(*n),
+            _ => None,
+        }
+    }
+
+    /// A boolean field, when present and a boolean.
+    pub fn bool_field(&self, name: &str) -> Option<bool> {
+        match self.fields.get(name) {
+            Some(Value::Bool(b)) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// A field that is either one string or an array of strings, as a
+    /// list (empty when absent or of another type).
+    pub fn str_list(&self, name: &str) -> Vec<String> {
+        match self.fields.get(name) {
+            Some(Value::Str(s)) => vec![s.clone()],
+            Some(Value::Arr(a)) => a
+                .iter()
+                .filter_map(|v| match v {
+                    Value::Str(s) => Some(s.clone()),
+                    _ => None,
+                })
+                .collect(),
+            _ => Vec::new(),
+        }
+    }
+}
+
+// --- parsing ----------------------------------------------------------
+
+struct Parser<'a> {
+    s: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while self.pos < self.s.len() && self.s[self.pos].is_ascii_whitespace() {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&mut self) -> Option<u8> {
+        self.skip_ws();
+        self.s.get(self.pos).copied()
+    }
+
+    fn expect(&mut self, b: u8) -> Result<()> {
+        match self.peek() {
+            Some(got) if got == b => {
+                self.pos += 1;
+                Ok(())
+            }
+            got => bail!("expected '{}' at byte {}, found {:?}", b as char, self.pos, got),
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            ensure!(self.pos < self.s.len(), "unterminated string");
+            let b = self.s[self.pos];
+            self.pos += 1;
+            match b {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    ensure!(self.pos < self.s.len(), "dangling escape");
+                    let e = self.s[self.pos];
+                    self.pos += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b't' => out.push('\t'),
+                        b'r' => out.push('\r'),
+                        other => bail!("unsupported escape '\\{}'", other as char),
+                    }
+                }
+                _ => {
+                    // Pass UTF-8 continuation bytes through unchanged.
+                    out.push(b as char);
+                    if b >= 0x80 {
+                        // Rebuild multi-byte characters from raw bytes.
+                        out.pop();
+                        let start = self.pos - 1;
+                        let mut end = self.pos;
+                        while end < self.s.len() && self.s[end] >= 0x80 && self.s[end] < 0xc0 {
+                            end += 1;
+                        }
+                        match std::str::from_utf8(&self.s[start..end]) {
+                            Ok(chunk) => out.push_str(chunk),
+                            Err(_) => bail!("invalid UTF-8 in string"),
+                        }
+                        self.pos = end;
+                    }
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<f64> {
+        self.skip_ws();
+        let start = self.pos;
+        while self.pos < self.s.len()
+            && matches!(self.s[self.pos], b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9')
+        {
+            self.pos += 1;
+        }
+        let text = std::str::from_utf8(&self.s[start..self.pos]).expect("ascii");
+        text.parse::<f64>().map_err(|_| anyhow::anyhow!("bad number '{text}'"))
+    }
+
+    fn keyword(&mut self, word: &str, v: Value) -> Result<Value> {
+        ensure!(
+            self.s[self.pos..].starts_with(word.as_bytes()),
+            "bad literal at byte {}",
+            self.pos
+        );
+        self.pos += word.len();
+        Ok(v)
+    }
+
+    fn value(&mut self, depth: usize) -> Result<Value> {
+        ensure!(depth < 4, "message nests too deep");
+        match self.peek() {
+            Some(b'"') => Ok(Value::Str(self.string()?)),
+            Some(b't') => self.keyword("true", Value::Bool(true)),
+            Some(b'f') => self.keyword("false", Value::Bool(false)),
+            Some(b'n') => self.keyword("null", Value::Null),
+            Some(b'[') => {
+                self.expect(b'[')?;
+                let mut items = Vec::new();
+                if self.peek() == Some(b']') {
+                    self.pos += 1;
+                    return Ok(Value::Arr(items));
+                }
+                loop {
+                    items.push(self.value(depth + 1)?);
+                    match self.peek() {
+                        Some(b',') => self.pos += 1,
+                        Some(b']') => {
+                            self.pos += 1;
+                            return Ok(Value::Arr(items));
+                        }
+                        other => bail!("expected ',' or ']', found {other:?}"),
+                    }
+                }
+            }
+            Some(b'-' | b'0'..=b'9') => Ok(Value::Num(self.number()?)),
+            other => bail!("unexpected value start {other:?} at byte {}", self.pos),
+        }
+    }
+}
+
+/// Parse one protocol line into a [`Message`].
+pub fn parse_message(line: &str) -> Result<Message> {
+    let mut p = Parser { s: line.as_bytes(), pos: 0 };
+    p.expect(b'{')?;
+    let mut fields = BTreeMap::new();
+    if p.peek() == Some(b'}') {
+        p.pos += 1;
+        return Ok(Message { fields });
+    }
+    loop {
+        let key = p.string()?;
+        p.expect(b':')?;
+        let val = p.value(0)?;
+        fields.insert(key, val);
+        match p.peek() {
+            Some(b',') => p.pos += 1,
+            Some(b'}') => {
+                p.pos += 1;
+                break;
+            }
+            other => bail!("expected ',' or '}}', found {other:?}"),
+        }
+    }
+    p.skip_ws();
+    ensure!(p.pos == p.s.len(), "trailing bytes after message");
+    Ok(Message { fields })
+}
+
+// --- serialization ----------------------------------------------------
+
+/// Escape a string for embedding in a protocol line.
+pub fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push(' '),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Incremental builder for one flat response/request object.
+#[derive(Debug)]
+pub struct ObjBuilder {
+    buf: String,
+}
+
+impl ObjBuilder {
+    /// Start an empty object.
+    pub fn new() -> ObjBuilder {
+        ObjBuilder { buf: String::from("{") }
+    }
+
+    fn key(&mut self, k: &str) {
+        if self.buf.len() > 1 {
+            self.buf.push(',');
+        }
+        self.buf.push('"');
+        self.buf.push_str(&escape(k));
+        self.buf.push_str("\":");
+    }
+
+    /// Add a string field.
+    pub fn str_field(mut self, k: &str, v: &str) -> ObjBuilder {
+        self.key(k);
+        self.buf.push('"');
+        self.buf.push_str(&escape(v));
+        self.buf.push('"');
+        self
+    }
+
+    /// Add an unsigned integer field.
+    pub fn num_field(mut self, k: &str, v: u64) -> ObjBuilder {
+        self.key(k);
+        self.buf.push_str(&v.to_string());
+        self
+    }
+
+    /// Add a boolean field.
+    pub fn bool_field(mut self, k: &str, v: bool) -> ObjBuilder {
+        self.key(k);
+        self.buf.push_str(if v { "true" } else { "false" });
+        self
+    }
+
+    /// Add an array-of-strings field.
+    pub fn list_field(mut self, k: &str, items: &[String]) -> ObjBuilder {
+        self.key(k);
+        self.buf.push('[');
+        for (i, it) in items.iter().enumerate() {
+            if i > 0 {
+                self.buf.push(',');
+            }
+            self.buf.push('"');
+            self.buf.push_str(&escape(it));
+            self.buf.push('"');
+        }
+        self.buf.push(']');
+        self
+    }
+
+    /// Close the object and return the line (no trailing newline).
+    pub fn finish(mut self) -> String {
+        self.buf.push('}');
+        self.buf
+    }
+}
+
+impl Default for ObjBuilder {
+    fn default() -> ObjBuilder {
+        ObjBuilder::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_compile_request() {
+        let m = parse_message(
+            r#"{"cmd":"compile","model":"/tmp/m.qmodel","arch":["a.yaml","b.yaml"],"profile":6,"fast":true}"#,
+        )
+        .unwrap();
+        assert_eq!(m.cmd(), "compile");
+        assert_eq!(m.str_field("model"), Some("/tmp/m.qmodel"));
+        assert_eq!(m.str_list("arch"), vec!["a.yaml".to_string(), "b.yaml".to_string()]);
+        assert_eq!(m.num_field("profile"), Some(6.0));
+        assert_eq!(m.bool_field("fast"), Some(true));
+        assert_eq!(m.str_field("missing"), None);
+    }
+
+    #[test]
+    fn single_string_arch_becomes_one_element_list() {
+        let m = parse_message(r#"{"cmd":"compile","arch":"one.yaml"}"#).unwrap();
+        assert_eq!(m.str_list("arch"), vec!["one.yaml".to_string()]);
+        assert!(m.str_list("nope").is_empty());
+    }
+
+    #[test]
+    fn whitespace_escapes_and_empty_object() {
+        let m = parse_message(" { \"cmd\" : \"x y\\n\\\"z\\\"\" , \"n\" : -2.5 } ").unwrap();
+        assert_eq!(m.cmd(), "x y\n\"z\"");
+        assert_eq!(m.num_field("n"), Some(-2.5));
+        assert_eq!(parse_message("{}").unwrap().cmd(), "");
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        for bad in [
+            "",
+            "not json",
+            "{\"a\":}",
+            "{\"a\":1",
+            "{\"a\":1} trailing",
+            "{\"a\":\"unterminated}",
+            "{\"a\":[1,}",
+        ] {
+            assert!(parse_message(bad).is_err(), "should reject {bad:?}");
+        }
+    }
+
+    #[test]
+    fn builder_roundtrips_through_parser() {
+        let line = ObjBuilder::new()
+            .bool_field("ok", true)
+            .str_field("cmd", "compile")
+            .num_field("items", 42)
+            .str_field("path", "/a \"b\"\\c")
+            .list_field("arch", &["x.yaml".to_string(), "y.yaml".to_string()])
+            .finish();
+        let m = parse_message(&line).unwrap();
+        assert_eq!(m.bool_field("ok"), Some(true));
+        assert_eq!(m.num_field("items"), Some(42.0));
+        assert_eq!(m.str_field("path"), Some("/a \"b\"\\c"));
+        assert_eq!(m.str_list("arch").len(), 2);
+    }
+
+    #[test]
+    fn utf8_strings_survive() {
+        let line = ObjBuilder::new().str_field("name", "tölpel-机器").finish();
+        let m = parse_message(&line).unwrap();
+        assert_eq!(m.str_field("name"), Some("tölpel-机器"));
+    }
+}

@@ -1,0 +1,435 @@
+//! The long-lived compile server.
+//!
+//! A [`CompileServer`] owns one [`ScheduleCache`] for its whole lifetime,
+//! hydrated from the persistent artifact ([`crate::scheduler::persist`])
+//! at construction and re-persisted (atomic temp-file + rename) whenever
+//! a request executed new schedule sweeps. Every compile request —
+//! whether it arrives in-process or over the Unix socket front door
+//! ([`super::socket`]) — gets fresh per-request compilers wired to that
+//! shared cache, so:
+//!
+//! * repeated layer shapes across requests, models and processes are
+//!   searched **once**;
+//! * the per-layer schedule stage is pre-sharded across a bounded worker
+//!   pool (`workers` threads walk the distinct `(shape, target)` pairs of
+//!   the request), so a cold model's searches run in parallel before the
+//!   deterministic session emits code from an all-hit cache;
+//! * concurrent requests sharing a shape never duplicate work: the
+//!   cache's single-flight gate blocks followers until the leader
+//!   publishes (see [`ScheduleCache::begin`]).
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{ensure, Context, Result};
+
+use crate::accel::AccelDesc;
+use crate::backend::strategy::generate_strategy_typed;
+use crate::baselines::naive_byoc::import_with_weight_chain;
+use crate::frontend::{configure_all, run_frontend_passes};
+use crate::isa::program::Program;
+use crate::pipeline::{
+    CompileOptions, Compiler, Deployment, MultiCompiler, MultiDeployment, ScheduleStats,
+    StageReport,
+};
+use crate::relay::import::QModel;
+use crate::relay::Graph;
+use crate::scheduler::cache::{
+    accel_fingerprint, CacheKey, CacheStats, ScheduleCache, SearchKey,
+};
+use crate::scheduler::persist::{self, LoadReport};
+use crate::workload::Gemm;
+
+/// What a compile request produced: single- and multi-target deployments
+/// keep their native types (a single-target program stays byte-identical
+/// to the plain [`Compiler`] path).
+#[derive(Debug, Clone)]
+#[allow(clippy::large_enum_variant)]
+pub enum CompiledArtifact {
+    /// One accelerator target.
+    Single(Deployment),
+    /// Several candidate targets (cost-driven partition).
+    Multi(MultiDeployment),
+}
+
+impl CompiledArtifact {
+    /// The emitted program, whichever deployment shape was produced.
+    pub fn program(&self) -> &Program {
+        match self {
+            CompiledArtifact::Single(d) => &d.program,
+            CompiledArtifact::Multi(d) => &d.program,
+        }
+    }
+
+    /// Number of accelerator layers in the deployment.
+    pub fn layers(&self) -> usize {
+        match self {
+            CompiledArtifact::Single(d) => d.chosen.len(),
+            CompiledArtifact::Multi(d) => d.assignments.len(),
+        }
+    }
+
+    /// A stable content hash of the emitted program (disassembly bytes),
+    /// for byte-identity assertions across processes.
+    pub fn program_fnv(&self) -> u64 {
+        persist::fnv1a64(self.program().disassemble().as_bytes())
+    }
+}
+
+/// One request's result: the artifact plus the observability the service
+/// promises (per-stage timing, schedule counters, this request's cache
+/// hit/miss deltas and sweep count).
+#[derive(Debug, Clone)]
+pub struct ServiceReply {
+    /// The compiled deployment.
+    pub artifact: CompiledArtifact,
+    /// Per-stage timing + diagnostics from the session.
+    pub stages: Vec<StageReport>,
+    /// Schedule-selection counters from the session's schedule stage.
+    pub schedule_stats: ScheduleStats,
+    /// Cache hits attributable to this request (prewarm + session).
+    pub cache_hits: u64,
+    /// Cache misses attributable to this request.
+    pub cache_misses: u64,
+    /// Schedule sweeps this request actually executed (0 = fully warm).
+    pub sweeps: u64,
+    /// Wall-clock time of the whole request.
+    pub elapsed: Duration,
+}
+
+/// The long-lived compile server. See the module docs.
+pub struct CompileServer {
+    cache: Arc<ScheduleCache>,
+    cache_path: Option<PathBuf>,
+    options: CompileOptions,
+    workers: usize,
+    persist_lock: Mutex<()>,
+    requests: AtomicU64,
+}
+
+impl CompileServer {
+    /// A server with a fresh in-memory cache and no persistence.
+    pub fn new(options: CompileOptions) -> CompileServer {
+        let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        CompileServer {
+            cache: Arc::new(ScheduleCache::new()),
+            cache_path: None,
+            options,
+            workers,
+            persist_lock: Mutex::new(()),
+            requests: AtomicU64::new(0),
+        }
+    }
+
+    /// A server whose cache is hydrated from (and persisted back to) the
+    /// artifact at `path`. A missing or unreadable artifact starts cold —
+    /// never an error. Returns the server plus what the load found.
+    pub fn with_cache_file(
+        options: CompileOptions,
+        path: PathBuf,
+    ) -> (CompileServer, LoadReport) {
+        let mut server = CompileServer::new(options);
+        let report = persist::hydrate_from_file(&server.cache, &path);
+        server.cache_path = Some(path);
+        (server, report)
+    }
+
+    /// Bound the schedule-search worker pool to `n` threads per request
+    /// (minimum 1; default: available parallelism).
+    pub fn with_workers(mut self, n: usize) -> CompileServer {
+        self.workers = n.max(1);
+        self
+    }
+
+    /// The shared schedule cache.
+    pub fn cache(&self) -> Arc<ScheduleCache> {
+        self.cache.clone()
+    }
+
+    /// Lifetime cache counters.
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    /// Where the cache persists, when persistence is enabled.
+    pub fn cache_path(&self) -> Option<&Path> {
+        self.cache_path.as_deref()
+    }
+
+    /// Compile requests served so far.
+    pub fn requests_served(&self) -> u64 {
+        self.requests.load(Ordering::Relaxed)
+    }
+
+    /// Drop every cached selection, in memory and on disk.
+    pub fn clear_cache(&self) -> Result<()> {
+        self.cache.clear();
+        if let Some(path) = &self.cache_path {
+            match std::fs::remove_file(path) {
+                Ok(()) => {}
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+                Err(e) => {
+                    return Err(e).with_context(|| format!("removing {}", path.display()))
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Atomically write the current cache contents to the artifact file.
+    /// No-op (returning 0) without a configured path.
+    pub fn persist(&self) -> Result<usize> {
+        let Some(path) = &self.cache_path else { return Ok(0) };
+        let _guard = self.persist_lock.lock().expect("persist lock poisoned");
+        persist::save_to_file(&self.cache, path)
+    }
+
+    /// Compile a `.qmodel` (imported exactly like the CLI's `proposed`
+    /// backend) for `targets`.
+    pub fn compile_model(
+        &self,
+        model: &QModel,
+        targets: &[AccelDesc],
+    ) -> Result<ServiceReply> {
+        let graph = import_with_weight_chain(model)?;
+        self.compile_graph(&graph, targets)
+    }
+
+    /// Compile an in-memory graph for one or many targets. One target
+    /// produces [`CompiledArtifact::Single`] (byte-identical to the plain
+    /// [`Compiler`] path); several produce the cost-partitioned
+    /// [`CompiledArtifact::Multi`].
+    pub fn compile_graph(
+        &self,
+        graph: &Graph,
+        targets: &[AccelDesc],
+    ) -> Result<ServiceReply> {
+        ensure!(!targets.is_empty(), "compile request needs at least one target");
+        let t0 = Instant::now();
+
+        // Per-request compilers over the server's long-lived cache.
+        let warmers: Vec<Arc<Compiler>> = targets
+            .iter()
+            .map(|a| {
+                Arc::new(Compiler::with_shared_cache(
+                    a.clone(),
+                    self.options.clone(),
+                    self.cache.clone(),
+                ))
+            })
+            .collect();
+
+        // Shard the schedule searches before the (deterministic, in-order)
+        // session runs: afterwards every session lookup is a cache hit.
+        self.prewarm(graph, &warmers)?;
+
+        // Per-request attribution comes from the request's own compilers
+        // (the warmers; plus the MultiCompiler's candidates in the
+        // multi-target case) — the shared cache's global counters would
+        // pick up concurrent requests' traffic.
+        let (artifact, stages, schedule_stats, session) = if targets.len() == 1 {
+            let out = warmers[0].compile_with_report(graph)?;
+            (
+                CompiledArtifact::Single(out.deployment),
+                out.stages,
+                out.schedule_stats,
+                (0, 0, 0), // the warmer is the session compiler; counted below
+            )
+        } else {
+            let mc = MultiCompiler::with_shared_cache(
+                targets.to_vec(),
+                self.options.clone(),
+                self.cache.clone(),
+            )?;
+            let out = mc.compile_with_report(graph)?;
+            (
+                CompiledArtifact::Multi(out.deployment),
+                out.stages,
+                out.schedule_stats,
+                (mc.sweeps_run(), mc.cache_hits(), mc.cache_misses()),
+            )
+        };
+        let sweeps: u64 = warmers.iter().map(|c| c.sweeps_run()).sum::<u64>() + session.0;
+        let cache_hits: u64 =
+            warmers.iter().map(|c| c.cache_hits()).sum::<u64>() + session.1;
+        let cache_misses: u64 =
+            warmers.iter().map(|c| c.cache_misses()).sum::<u64>() + session.2;
+
+        // Write-on-update: only requests that learned something new pay
+        // the (atomic) persist.
+        if sweeps > 0 {
+            self.persist()?;
+        }
+        self.requests.fetch_add(1, Ordering::Relaxed);
+
+        Ok(ServiceReply {
+            artifact,
+            stages,
+            schedule_stats,
+            cache_hits,
+            cache_misses,
+            sweeps,
+            elapsed: t0.elapsed(),
+        })
+    }
+
+    /// Run the request's schedule searches on the bounded worker pool: one
+    /// job per distinct `(accelerator fingerprint, GEMM shape)` pair of
+    /// the frontend-processed graph. Failed probes (shape infeasible on a
+    /// candidate) are skipped here — the session reports them with full
+    /// per-layer context.
+    fn prewarm(&self, graph: &Graph, warmers: &[Arc<Compiler>]) -> Result<()> {
+        let accels: Vec<&AccelDesc> = warmers.iter().map(|c| &c.accel).collect();
+        let mut fcfg = configure_all(&accels);
+        fcfg.fold_constants = self.options.fold_constants;
+        let processed = run_frontend_passes(graph, &fcfg)?;
+
+        let mut seen: std::collections::BTreeSet<(u64, Gemm)> =
+            std::collections::BTreeSet::new();
+        let mut jobs: Vec<(Arc<Compiler>, u64, Gemm)> = Vec::new();
+        for c in warmers {
+            let fp = accel_fingerprint(&c.accel);
+            let supported = c.accel.supported_ops();
+            for n in &processed.nodes {
+                if !supported.contains(n.op.name()) {
+                    continue;
+                }
+                let shapes: Vec<Vec<usize>> = n
+                    .inputs
+                    .iter()
+                    .map(|&i| processed.node(i).ty.shape.clone())
+                    .collect();
+                let Ok(strategy) = generate_strategy_typed(&c.accel, n, &shapes) else {
+                    continue; // unbindable here; the session will explain
+                };
+                // Counter-neutral peek: already-warm shapes (the steady
+                // state of a long-lived server) spawn no search work.
+                let key = CacheKey {
+                    arch: fp,
+                    gemm: strategy.gemm,
+                    search: SearchKey::new(
+                        &self.options.sweep,
+                        self.options.profile_candidates,
+                    ),
+                };
+                if self.cache.contains(&key) {
+                    continue;
+                }
+                if seen.insert((fp, strategy.gemm)) {
+                    jobs.push((c.clone(), fp, strategy.gemm));
+                }
+            }
+        }
+
+        if jobs.len() <= 1 {
+            for (c, fp, g) in &jobs {
+                let _ = c.select_schedule(*g, *fp);
+            }
+            return Ok(());
+        }
+        let next = AtomicUsize::new(0);
+        let workers = self.workers.min(jobs.len());
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= jobs.len() {
+                        break;
+                    }
+                    let (c, fp, g) = &jobs[i];
+                    // Single-flight inside: concurrent requests sharing
+                    // this key wait here instead of re-searching.
+                    let _ = c.select_schedule(*g, *fp);
+                });
+            }
+        });
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::gemmini::gemmini_desc;
+    use crate::relay::import::{synth_qmodel, to_qnn_graph};
+
+    fn mlp_graph(seed: u64, dims: &[usize], batch: usize) -> Graph {
+        to_qnn_graph(&synth_qmodel(seed, dims, batch).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn second_request_is_fully_warm_and_byte_identical() {
+        let server = CompileServer::new(CompileOptions::default());
+        let graph = mlp_graph(41, &[32, 48, 16], 4);
+        let accel = gemmini_desc().unwrap();
+
+        let cold = server.compile_graph(&graph, std::slice::from_ref(&accel)).unwrap();
+        assert_eq!(cold.sweeps, 2, "one sweep per distinct shape");
+        assert_eq!(cold.artifact.layers(), 2);
+        assert!(cold.cache_misses > 0);
+
+        let warm = server.compile_graph(&graph, std::slice::from_ref(&accel)).unwrap();
+        assert_eq!(warm.sweeps, 0, "second identical request must be all hits");
+        assert_eq!(warm.cache_misses, 0);
+        assert!(warm.cache_hits >= 2);
+        assert_eq!(
+            warm.artifact.program().items,
+            cold.artifact.program().items,
+            "warm compile must emit byte-identical code"
+        );
+        assert_eq!(warm.artifact.program_fnv(), cold.artifact.program_fnv());
+        assert_eq!(server.requests_served(), 2);
+    }
+
+    #[test]
+    fn server_matches_plain_compiler_output() {
+        let server = CompileServer::new(CompileOptions::default());
+        let graph = mlp_graph(42, &[24, 24, 24], 2);
+        let accel = gemmini_desc().unwrap();
+        let reply = server.compile_graph(&graph, std::slice::from_ref(&accel)).unwrap();
+        let plain = Compiler::new(accel).compile(&graph).unwrap();
+        let CompiledArtifact::Single(dep) = &reply.artifact else {
+            panic!("single target must yield a single deployment");
+        };
+        assert_eq!(dep.program.items, plain.program.items);
+        assert_eq!(
+            reply.stages.iter().map(|s| s.name).collect::<Vec<_>>(),
+            ["frontend", "partition", "schedule", "mapping", "codegen", "link"]
+        );
+        // Prewarm ran every search up front: the session saw only hits.
+        assert_eq!(reply.schedule_stats.searched, 0);
+        assert_eq!(reply.schedule_stats.cache_hits, reply.schedule_stats.layers);
+    }
+
+    #[test]
+    fn concurrent_identical_requests_run_each_sweep_once() {
+        let server = Arc::new(CompileServer::new(CompileOptions::default()));
+        let graph = mlp_graph(43, &[40, 16, 16, 8], 1);
+        let accel = gemmini_desc().unwrap();
+        let replies: Vec<ServiceReply> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..2)
+                .map(|_| {
+                    let server = server.clone();
+                    let graph = graph.clone();
+                    let accel = accel.clone();
+                    scope.spawn(move || {
+                        server
+                            .compile_graph(&graph, std::slice::from_ref(&accel))
+                            .expect("compile")
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("request panicked")).collect()
+        });
+        // 3 distinct shapes; the single-flight gate must make the *sum* of
+        // sweeps across both concurrent requests exactly 3.
+        let total: u64 = replies.iter().map(|r| r.sweeps).sum();
+        assert_eq!(total, 3, "each shared shape must be swept exactly once");
+        assert_eq!(
+            replies[0].artifact.program().items,
+            replies[1].artifact.program().items
+        );
+    }
+}

@@ -1,0 +1,239 @@
+//! Unix-domain-socket front door for the compile service.
+//!
+//! [`serve`] binds a socket, accepts connections on a thread apiece, and
+//! answers the newline-delimited [`super::protocol`] messages against a
+//! shared [`CompileServer`]. `{"cmd":"shutdown"}` persists the cache and
+//! stops the accept loop; [`request`] is the one-shot client used by
+//! `tvm-accel compile --socket` (and by anything else that wants a warm
+//! compile without linking the crate).
+
+use std::io::{BufRead, BufReader, Write};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::accel::gemmini::desc_for_arch;
+use crate::accel::AccelDesc;
+use crate::arch::parse::arch_from_file;
+use crate::relay::import::load_qmodel;
+
+use super::protocol::{parse_message, Message, ObjBuilder};
+use super::server::CompileServer;
+
+/// Configuration of one serving loop.
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Path of the Unix domain socket (an existing file is replaced).
+    pub socket: PathBuf,
+    /// Targets used when a request names no `arch` files.
+    pub default_targets: Vec<AccelDesc>,
+}
+
+/// Serve requests until a `shutdown` message arrives. Blocks the calling
+/// thread; connections are handled concurrently (one thread each), all
+/// sharing `server`'s cache. On exit the cache is persisted and the
+/// socket file removed.
+pub fn serve(server: Arc<CompileServer>, opts: ServeOptions) -> Result<()> {
+    let _ = std::fs::remove_file(&opts.socket);
+    let listener = UnixListener::bind(&opts.socket)
+        .with_context(|| format!("binding socket {}", opts.socket.display()))?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let targets = Arc::new(opts.default_targets);
+    let mut workers: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    loop {
+        // Reap finished connection threads so a long-lived server's
+        // handle list doesn't grow with every one-shot client.
+        workers.retain(|w| !w.is_finished());
+        let stream = match listener.accept() {
+            Ok((s, _)) => s,
+            Err(e) => {
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                // Transient failure (EMFILE under a client burst, EINTR):
+                // back off and keep serving instead of dying from a
+                // recoverable load spike.
+                eprintln!("tvm-accel serve: accept error (retrying): {e}");
+                std::thread::sleep(std::time::Duration::from_millis(100));
+                continue;
+            }
+        };
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        // Bound how long an idle connection can hold its thread (and
+        // therefore delay shutdown); a request in flight is unaffected.
+        let _ = stream.set_read_timeout(Some(std::time::Duration::from_secs(120)));
+        let server = server.clone();
+        let stop = stop.clone();
+        let targets = targets.clone();
+        let socket_path = opts.socket.clone();
+        workers.push(std::thread::spawn(move || {
+            handle_connection(&server, stream, &targets, &stop, &socket_path);
+        }));
+    }
+    for w in workers {
+        let _ = w.join();
+    }
+    server.persist()?;
+    let _ = std::fs::remove_file(&opts.socket);
+    Ok(())
+}
+
+/// Read request lines off one connection until EOF (or shutdown).
+fn handle_connection(
+    server: &CompileServer,
+    stream: UnixStream,
+    default_targets: &[AccelDesc],
+    stop: &AtomicBool,
+    socket_path: &Path,
+) {
+    let Ok(read_half) = stream.try_clone() else { return };
+    let reader = BufReader::new(read_half);
+    let mut writer = stream;
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let (reply, shutdown) = handle_line(server, &line, default_targets);
+        if writeln!(writer, "{reply}").and_then(|_| writer.flush()).is_err() {
+            break;
+        }
+        if shutdown {
+            stop.store(true, Ordering::SeqCst);
+            // Unblock the accept loop so it observes the stop flag.
+            let _ = UnixStream::connect(socket_path);
+            break;
+        }
+    }
+}
+
+/// Dispatch one request line; returns the response line plus whether the
+/// server should shut down.
+fn handle_line(
+    server: &CompileServer,
+    line: &str,
+    default_targets: &[AccelDesc],
+) -> (String, bool) {
+    let msg = match parse_message(line) {
+        Ok(m) => m,
+        Err(e) => return (error_reply("parse", &format!("{e:#}")), false),
+    };
+    let cmd = msg.cmd().to_string();
+    match cmd.as_str() {
+        "ping" => (ok_reply(server, &cmd).finish(), false),
+        "stats" => {
+            let mut b = ok_reply(server, &cmd);
+            if let Some(p) = server.cache_path() {
+                b = b.str_field("cache_file", &p.display().to_string());
+            }
+            (b.num_field("requests", server.requests_served()).finish(), false)
+        }
+        "clear" => match server.clear_cache() {
+            Ok(()) => (ok_reply(server, &cmd).finish(), false),
+            Err(e) => (error_reply(&cmd, &format!("{e:#}")), false),
+        },
+        "shutdown" => match server.persist() {
+            Ok(persisted) => (
+                ok_reply(server, &cmd).num_field("persisted", persisted as u64).finish(),
+                true,
+            ),
+            Err(e) => (error_reply(&cmd, &format!("{e:#}")), true),
+        },
+        "compile" => match handle_compile(server, &msg, default_targets) {
+            Ok(reply) => (reply, false),
+            Err(e) => (error_reply(&cmd, &format!("{e:#}")), false),
+        },
+        other => (error_reply(other, "unknown command"), false),
+    }
+}
+
+fn handle_compile(
+    server: &CompileServer,
+    msg: &Message,
+    default_targets: &[AccelDesc],
+) -> Result<String> {
+    let model_path =
+        msg.str_field("model").context("compile request needs a \"model\" path")?;
+    let model = load_qmodel(Path::new(model_path))?;
+    let arch_files = msg.str_list("arch");
+    let targets: Vec<AccelDesc> = if arch_files.is_empty() {
+        default_targets.to_vec()
+    } else {
+        let mut out = Vec::with_capacity(arch_files.len());
+        for f in &arch_files {
+            out.push(load_target(Path::new(f))?);
+        }
+        out
+    };
+    let reply = server.compile_model(&model, &targets)?;
+    let stage_summary: Vec<String> = reply
+        .stages
+        .iter()
+        .map(|s| format!("{}:{}us", s.name, s.elapsed.as_micros()))
+        .collect();
+    let stats = server.cache_stats();
+    Ok(ObjBuilder::new()
+        .bool_field("ok", true)
+        .str_field("cmd", "compile")
+        .num_field("items", reply.artifact.program().items.len() as u64)
+        .num_field("dram_bytes", reply.artifact.program().layout.total_bytes())
+        .num_field("layers", reply.artifact.layers() as u64)
+        .num_field("cache_hits", reply.cache_hits)
+        .num_field("cache_misses", reply.cache_misses)
+        .num_field("sweeps", reply.sweeps)
+        .num_field("cache_entries", stats.entries as u64)
+        .num_field("elapsed_us", reply.elapsed.as_micros() as u64)
+        .str_field("program_fnv", &format!("{:016x}", reply.artifact.program_fnv()))
+        .list_field("stages", &stage_summary)
+        .finish())
+}
+
+/// Load one accelerator description from an architecture YAML.
+pub fn load_target(path: &Path) -> Result<AccelDesc> {
+    let arch = arch_from_file(path)?;
+    let name = arch.name.clone();
+    desc_for_arch(&name, arch)
+}
+
+fn ok_reply(server: &CompileServer, cmd: &str) -> ObjBuilder {
+    let stats = server.cache_stats();
+    ObjBuilder::new()
+        .bool_field("ok", true)
+        .str_field("cmd", cmd)
+        .num_field("cache_entries", stats.entries as u64)
+        .num_field("cache_hits", stats.hits)
+        .num_field("cache_misses", stats.misses)
+}
+
+fn error_reply(cmd: &str, error: &str) -> String {
+    ObjBuilder::new()
+        .bool_field("ok", false)
+        .str_field("cmd", cmd)
+        .str_field("error", error)
+        .finish()
+}
+
+/// One-shot client: connect to a serving socket, send one request line,
+/// return the (trimmed) response line.
+pub fn request(socket: &Path, line: &str) -> Result<String> {
+    let mut stream = UnixStream::connect(socket).with_context(|| {
+        format!("connecting to compile server at {}", socket.display())
+    })?;
+    // Bound the wait: a server draining toward shutdown may never accept
+    // this backlog entry, and a hung server should fail the client loudly
+    // rather than block it forever. 10 minutes covers a cold compile.
+    let _ = stream.set_read_timeout(Some(std::time::Duration::from_secs(600)));
+    let _ = stream.set_write_timeout(Some(std::time::Duration::from_secs(60)));
+    writeln!(stream, "{line}").context("sending request")?;
+    stream.flush().context("flushing request")?;
+    let mut reader = BufReader::new(stream);
+    let mut resp = String::new();
+    reader.read_line(&mut resp).context("reading response")?;
+    anyhow::ensure!(!resp.is_empty(), "server closed the connection without replying");
+    Ok(resp.trim_end().to_string())
+}

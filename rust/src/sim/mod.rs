@@ -140,8 +140,15 @@ impl Simulator {
         let mut rep = RunReport::default();
         let issue = self.arch.host.insn_issue_cycles;
 
+        // Host cycles before the first accelerator instruction: the
+        // preprocessing prefix a pipelined batch can overlap with the
+        // previous inference (see `RunReport::host_prefix_cycles`).
+        let mut seen_accel = false;
         for (off, item) in prog.items[range.clone()].iter().enumerate() {
             let idx = range.start + off;
+            if matches!(item, Item::Accel(_)) {
+                seen_accel = true;
+            }
             match item {
                 Item::Accel(Instr::LoopWs { .. }) => {
                     let Item::Accel(macro_insn) = item else { unreachable!() };
@@ -167,6 +174,9 @@ impl Simulator {
                 Item::Host(h) => {
                     self.exec_host(dram, &mut t, &mut rep, h)
                         .with_context(|| format!("item {idx}: {h:?}"))?;
+                    if !seen_accel {
+                        rep.host_prefix_cycles = t.host_cycles;
+                    }
                 }
             }
         }
@@ -185,6 +195,7 @@ impl Simulator {
         (self.arch.dma.request_latency + occ, occ)
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn exec_instr(
         &self,
         st: &mut ExecState,

@@ -12,6 +12,11 @@ pub struct RunReport {
     pub cycles: u64,
     /// Cycles spent in host-CPU operations (preprocessing etc.).
     pub host_cycles: u64,
+    /// Host cycles spent *before the first accelerator instruction* (the
+    /// run's preprocessing prefix). This is the portion a pipelined batch
+    /// can overlap with the previous inference's accelerator execution —
+    /// see `Deployment::run_batch`'s pipelined timing model.
+    pub host_prefix_cycles: u64,
     /// Bytes moved DRAM → on-chip.
     pub dram_read_bytes: u64,
     /// Bytes moved on-chip → DRAM.
@@ -35,6 +40,13 @@ impl RunReport {
     /// as serial segments — one per accelerator handoff — and report the
     /// sum as the end-to-end run.
     pub fn merge(&mut self, other: &RunReport) {
+        // The preprocessing prefix extends across the boundary only while
+        // no accelerator instruction has executed yet (`issued_commands`
+        // counts exactly those): an all-host leading segment contributes
+        // its full host time plus the next segment's own prefix.
+        if self.issued_commands == 0 {
+            self.host_prefix_cycles = self.host_cycles + other.host_prefix_cycles;
+        }
         self.cycles += other.cycles;
         self.host_cycles += other.host_cycles;
         self.dram_read_bytes += other.dram_read_bytes;
@@ -87,6 +99,37 @@ mod tests {
         // 128k MACs over 1000 cycles on a 16x16 array = 0.5 utilization.
         assert!((r.utilization(16) - 0.5).abs() < 1e-12);
         assert_eq!(RunReport::default().utilization(16), 0.0);
+    }
+
+    #[test]
+    fn merge_extends_prefix_only_before_accel_work() {
+        // Leading all-host segment + segment with its own prefix: the
+        // combined prefix spans both.
+        let mut lead = RunReport {
+            cycles: 50,
+            host_cycles: 50,
+            host_prefix_cycles: 50,
+            ..Default::default()
+        };
+        let tail = RunReport {
+            cycles: 200,
+            host_cycles: 30,
+            host_prefix_cycles: 20,
+            issued_commands: 9,
+            ..Default::default()
+        };
+        lead.merge(&tail);
+        assert_eq!(lead.host_prefix_cycles, 70);
+        assert_eq!(lead.cycles, 250);
+        // Once accelerator work ran, later segments never extend it.
+        let mut busy = RunReport {
+            cycles: 100,
+            host_prefix_cycles: 10,
+            issued_commands: 4,
+            ..Default::default()
+        };
+        busy.merge(&tail);
+        assert_eq!(busy.host_prefix_cycles, 10);
     }
 
     #[test]

@@ -111,7 +111,7 @@ impl fmt::Display for Operand {
 
 /// A GEMM workload: `O[N,K] = In[N,C] · W[C,K]` (plus bias / requantize in
 /// the quantized pipeline). Convolutions are lowered to this via im2col.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct Gemm {
     pub n: usize,
     pub c: usize,

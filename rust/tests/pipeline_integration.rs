@@ -226,12 +226,13 @@ fn session_pipeline_cache_and_batch_on_toycar_widths() {
     let sim = Simulator::new(&accel.arch);
     let inputs: Vec<Vec<i8>> = (0..3).map(|_| rng.i8_vec(640)).collect();
     let refs: Vec<&[i8]> = inputs.iter().map(|v| v.as_slice()).collect();
-    let (batch_outs, batch_reps) = out.deployment.run_batch(&sim, &refs).unwrap();
+    let batch = out.deployment.run_batch(&sim, &refs).unwrap();
     for (i, x) in inputs.iter().enumerate() {
         let (o, r) = out.deployment.run(&sim, x).unwrap();
-        assert_eq!(batch_outs[i], o);
-        assert_eq!(batch_reps[i].cycles, r.cycles);
+        assert_eq!(batch.outputs[i], o);
+        assert_eq!(batch.reports[i].cycles, r.cycles);
     }
+    assert!(batch.pipelined_cycles <= batch.serial_cycles);
 }
 
 /// Heterogeneous compile: the ToyCar stack against the *set* of shipped

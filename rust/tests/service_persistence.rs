@@ -1,0 +1,258 @@
+//! Integration tests for the compile service and the persistent schedule
+//! cache: the acceptance bar is that a cold compile followed by an
+//! identical one — through a fresh process-equivalent (new server, same
+//! cache file) or a running server — performs **zero** schedule sweeps
+//! the second time while emitting byte-identical programs.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use tvm_accel::accel::gemmini::gemmini_desc;
+use tvm_accel::pipeline::{CompileOptions, Compiler};
+use tvm_accel::relay::import::{parse_qmodel, synth_qmodel, write_qmodel, QModel};
+use tvm_accel::scheduler::persist;
+use tvm_accel::service::protocol::{parse_message, ObjBuilder};
+use tvm_accel::service::socket::{self, ServeOptions};
+use tvm_accel::service::{CompileServer, CompiledArtifact};
+
+static DIR_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// A fresh scratch directory per test (unique per process + call).
+fn scratch_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "tvm-accel-it-{}-{}-{}",
+        tag,
+        std::process::id(),
+        DIR_SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    std::fs::create_dir_all(&dir).expect("create scratch dir");
+    dir
+}
+
+fn sample_model(seed: u64, dims: &[usize], batch: usize) -> QModel {
+    synth_qmodel(seed, dims, batch).unwrap()
+}
+
+/// Save/load roundtrip through a real compile: every entry the compile
+/// produced survives the disk trip exactly.
+#[test]
+fn persisted_cache_roundtrip_is_entry_exact() {
+    let dir = scratch_dir("roundtrip");
+    let file = dir.join("schedules.bin");
+    let server = CompileServer::new(CompileOptions::default());
+    let model = sample_model(71, &[32, 48, 16], 4);
+    let accel = gemmini_desc().unwrap();
+    server.compile_model(&model, std::slice::from_ref(&accel)).unwrap();
+
+    let cache = server.cache();
+    let written = persist::save_to_file(&cache, &file).unwrap();
+    assert_eq!(written, 2, "two distinct shapes compiled");
+
+    let (entries, rep) = persist::load_file(&file);
+    assert_eq!(rep.loaded, 2);
+    assert_eq!(rep.skipped, 0);
+    assert_eq!(entries, cache.snapshot(), "roundtrip must be entry-exact");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Corrupted or truncated artifacts degrade to a (partially) cold cache —
+/// never an error.
+#[test]
+fn corrupt_and_truncated_artifacts_degrade_to_cold() {
+    let dir = scratch_dir("corrupt");
+    let file = dir.join("schedules.bin");
+    let server = CompileServer::new(CompileOptions::default());
+    let model = sample_model(72, &[24, 16, 8], 2);
+    let accel = gemmini_desc().unwrap();
+    server.compile_model(&model, std::slice::from_ref(&accel)).unwrap();
+    persist::save_to_file(&server.cache(), &file).unwrap();
+    let bytes = std::fs::read(&file).unwrap();
+
+    // Flip a byte inside the first entry's payload: that entry is skipped,
+    // the rest load.
+    let mut flipped = bytes.clone();
+    flipped[8 + 12 + 4] ^= 0x5a;
+    std::fs::write(&file, &flipped).unwrap();
+    let fresh = CompileServer::with_cache_file(CompileOptions::default(), file.clone()).1;
+    assert_eq!(fresh.loaded, 1);
+    assert_eq!(fresh.skipped, 1);
+
+    // Truncate mid-entry: the readable prefix survives.
+    std::fs::write(&file, &bytes[..bytes.len() - 7]).unwrap();
+    let (entries, rep) = persist::load_file(&file);
+    assert_eq!(entries.len(), 1);
+    assert_eq!(rep.skipped, 1);
+
+    // Garbage and missing files are plainly cold.
+    std::fs::write(&file, b"definitely not a schedule cache").unwrap();
+    assert_eq!(persist::load_file(&file).0.len(), 0);
+    assert_eq!(persist::load_file(&dir.join("missing.bin")).0.len(), 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A format-version bump invalidates the artifact cleanly (cold load, no
+/// error, and the next save rewrites it in the current version).
+#[test]
+fn version_bump_invalidates_cleanly() {
+    let dir = scratch_dir("version");
+    let file = dir.join("schedules.bin");
+    let server = CompileServer::new(CompileOptions::default());
+    let model = sample_model(73, &[16, 16], 2);
+    let accel = gemmini_desc().unwrap();
+    server.compile_model(&model, std::slice::from_ref(&accel)).unwrap();
+    persist::save_to_file(&server.cache(), &file).unwrap();
+
+    let mut bytes = std::fs::read(&file).unwrap();
+    let future = (persist::FORMAT_VERSION + 1).to_le_bytes();
+    bytes[4..8].copy_from_slice(&future);
+    std::fs::write(&file, &bytes).unwrap();
+
+    let (server2, rep) =
+        CompileServer::with_cache_file(CompileOptions::default(), file.clone());
+    assert_eq!(rep.loaded, 0, "future version must load cold");
+    assert_eq!(server2.cache_stats().entries, 0);
+    // Compiling through the hydrant rewrites the artifact in the current
+    // version.
+    let reply = server2.compile_model(&model, std::slice::from_ref(&accel)).unwrap();
+    assert!(reply.sweeps > 0);
+    let (entries, _) = persist::load_file(&file);
+    assert_eq!(entries.len(), 1);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The acceptance criterion: cold compile, then a second identical
+/// invocation through a *fresh* server hydrated from the same cache file
+/// — zero sweeps, zero misses, byte-identical program.
+#[test]
+fn hydrated_compile_is_sweep_free_and_byte_identical() {
+    let dir = scratch_dir("accept");
+    let file = dir.join("schedules.bin");
+    let model = sample_model(74, &[40, 16, 16, 8, 16, 16, 40], 1);
+    let accel = gemmini_desc().unwrap();
+
+    // Invocation 1: cold, persists on update.
+    let (cold_server, load) =
+        CompileServer::with_cache_file(CompileOptions::default(), file.clone());
+    assert_eq!(load.loaded, 0);
+    let cold = cold_server.compile_model(&model, std::slice::from_ref(&accel)).unwrap();
+    assert_eq!(cold.sweeps, 5, "ToyCar-like trunk has 5 distinct shapes");
+    assert!(file.exists(), "compile with sweeps must persist the cache");
+
+    // Invocation 2: a fresh server (the 'second CLI invocation').
+    let (warm_server, load) =
+        CompileServer::with_cache_file(CompileOptions::default(), file.clone());
+    assert_eq!(load.loaded, 5);
+    let warm = warm_server.compile_model(&model, std::slice::from_ref(&accel)).unwrap();
+    assert_eq!(warm.sweeps, 0, "hydrated compile must run zero sweeps");
+    assert_eq!(warm.cache_misses, 0);
+    assert_eq!(
+        warm.artifact.program().items,
+        cold.artifact.program().items,
+        "cache-hydrated compile must emit a byte-identical program"
+    );
+    assert_eq!(warm.artifact.program_fnv(), cold.artifact.program_fnv());
+
+    // And both match a plain cold Compiler without any service plumbing.
+    let graph = tvm_accel::baselines::naive_byoc::import_with_weight_chain(&model).unwrap();
+    let plain = Compiler::new(accel).compile(&graph).unwrap();
+    let CompiledArtifact::Single(dep) = &warm.artifact else {
+        panic!("single-target compile must produce a single deployment")
+    };
+    assert_eq!(dep.program.items, plain.program.items);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Two concurrent requests for models sharing every layer shape: the
+/// single-flight gate must run one sweep per distinct shape *total*.
+#[test]
+fn concurrent_server_requests_share_inflight_searches() {
+    let server = Arc::new(CompileServer::new(CompileOptions::default()));
+    let accel = gemmini_desc().unwrap();
+    // Different weights, identical shapes: distinct models, shared keys.
+    let a = sample_model(75, &[32, 24, 8], 4);
+    let b = sample_model(76, &[32, 24, 8], 4);
+    let sweeps: u64 = std::thread::scope(|scope| {
+        let handles: Vec<_> = [&a, &b]
+            .into_iter()
+            .map(|m| {
+                let server = server.clone();
+                let accel = accel.clone();
+                let model = m.clone();
+                scope.spawn(move || {
+                    server
+                        .compile_model(&model, std::slice::from_ref(&accel))
+                        .expect("compile request")
+                        .sweeps
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("request panicked")).sum()
+    });
+    assert_eq!(sweeps, 2, "exactly one sweep per shared layer shape");
+    assert_eq!(server.cache_stats().entries, 2);
+}
+
+/// End-to-end over the Unix socket: serve in a thread, compile twice, the
+/// second response must report 100% cache hits (zero sweeps/misses) and
+/// the same program hash; `shutdown` stops the server.
+#[test]
+fn socket_roundtrip_reports_warm_second_request() {
+    let dir = scratch_dir("socket");
+    let sock = dir.join("srv.sock");
+    let cache_file = dir.join("schedules.bin");
+    let model_file = dir.join("m.qmodel");
+    let model = sample_model(77, &[32, 48, 16], 4);
+    std::fs::write(&model_file, write_qmodel(&model)).unwrap();
+    // Sanity: the file parses back.
+    parse_qmodel(&std::fs::read(&model_file).unwrap()).unwrap();
+
+    let (server, _) =
+        CompileServer::with_cache_file(CompileOptions::default(), cache_file.clone());
+    let server = Arc::new(server);
+    let opts = ServeOptions {
+        socket: sock.clone(),
+        default_targets: vec![gemmini_desc().unwrap()],
+    };
+    let serve_thread = {
+        let server = server.clone();
+        std::thread::spawn(move || socket::serve(server, opts))
+    };
+    // Wait for the socket to appear.
+    for _ in 0..200 {
+        if sock.exists() {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(25));
+    }
+    assert!(sock.exists(), "server never bound its socket");
+
+    let req = ObjBuilder::new()
+        .str_field("cmd", "compile")
+        .str_field("model", &model_file.display().to_string())
+        .finish();
+    let cold = parse_message(&socket::request(&sock, &req).unwrap()).unwrap();
+    assert_eq!(cold.bool_field("ok"), Some(true), "cold compile failed: {cold:?}");
+    assert!(cold.num_field("sweeps").unwrap() > 0.0);
+
+    let warm = parse_message(&socket::request(&sock, &req).unwrap()).unwrap();
+    assert_eq!(warm.bool_field("ok"), Some(true));
+    assert_eq!(warm.num_field("sweeps"), Some(0.0), "warm request must not sweep");
+    assert_eq!(warm.num_field("cache_misses"), Some(0.0));
+    assert!(warm.num_field("cache_hits").unwrap() >= 2.0);
+    assert_eq!(
+        warm.str_field("program_fnv"),
+        cold.str_field("program_fnv"),
+        "warm compile must emit the identical program"
+    );
+
+    let bye = parse_message(
+        &socket::request(&sock, &ObjBuilder::new().str_field("cmd", "shutdown").finish())
+            .unwrap(),
+    )
+    .unwrap();
+    assert_eq!(bye.bool_field("ok"), Some(true));
+    serve_thread.join().expect("serve thread panicked").expect("serve errored");
+    assert!(cache_file.exists(), "shutdown must persist the cache");
+    let _ = std::fs::remove_dir_all(&dir);
+}
