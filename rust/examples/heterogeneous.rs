@@ -69,6 +69,18 @@ fn main() -> Result<()> {
     for (i, t) in targets.iter().enumerate() {
         println!("  {} layer(s) on {}", out.deployment.nodes_on_target(i), t.name);
     }
+    // The partition objective now prices target *switches*: every
+    // cross-target boundary is charged the DRAM round-trip it forces on
+    // the activation (same-target placement can elide it via cross-layer
+    // residency). The report lists each evaluated boundary.
+    println!("evaluated switch boundaries:\n{}", out.deployment.render_boundaries());
+    let max_switch =
+        out.deployment.boundaries.iter().map(|b| b.penalty).max().unwrap_or(0);
+    assert!(
+        max_switch > 0,
+        "the partition report must list a nonzero switch cost for at least one boundary"
+    );
+    println!("nonzero switch cost priced into the objective: up to {max_switch} cycles ✔");
     println!(
         "\n{} sweeps for {} layers across {} targets (shared schedule cache)",
         multi.sweeps_run(),

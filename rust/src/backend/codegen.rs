@@ -15,13 +15,23 @@
 //! tensorized compute never straddles scratchpad rows (see
 //! `scheduler::footprint_rows`, which sizes capacity with the same
 //! layout).
+//!
+//! Cross-layer residency ([`crate::scheduler::graph`]) plugs in here via
+//! [`generate_resident`]: a layer whose *output* is resident parks its
+//! requantized activation in a pinned scratchpad region (one
+//! [`Instr::MvoutSpad`] per column block) instead of storing to DRAM, and
+//! a layer whose *input* is resident reads straight from that region —
+//! its input cache-reads vanish and its own tiles allocate below the
+//! pinned rows. With no residency the emission is byte-identical to
+//! [`generate`].
 
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::accel::{AccelDesc, ComputeArgs, MemArgs};
 use crate::arch::Dataflow;
 use crate::isa::program::Program;
-use crate::isa::LocalAddr;
+use crate::isa::{Instr, LocalAddr};
+use crate::scheduler::graph::LayerResidency;
 use crate::scheduler::Schedule;
 use crate::tir::{LoopLevel, TirFunc, TirNode};
 use crate::util::ceil_div;
@@ -71,6 +81,12 @@ struct Walker<'a> {
     acc_slot: u32,
     /// Stationary-tile dedup: (b_row, red, cols, dst_row).
     last_preload: Option<(u32, u16, u16, u32)>,
+    /// Input activation is resident on-chip: skip its cache-reads (the
+    /// producer parked it at `alloc.a_base`).
+    input_resident: bool,
+    /// Park the output activation at this scratchpad base instead of
+    /// storing it to DRAM.
+    output_base: Option<u32>,
 }
 
 impl<'a> Walker<'a> {
@@ -140,6 +156,11 @@ impl<'a> Walker<'a> {
         let g = &self.s.workload;
         match operand {
             Operand::Input => {
+                if self.input_resident {
+                    // The producer parked the activation at `a_base` in
+                    // exactly this block layout — nothing to load.
+                    return Ok(());
+                }
                 let key = (self.off_dram[0], self.off_dram[1]);
                 if self.a_state == Some(key) {
                     return Ok(());
@@ -272,6 +293,22 @@ impl<'a> Walker<'a> {
         let (n_len, k_len) = (self.tile_len[0], self.tile_len[2]);
         let k0 = self.insn(Dim::K);
         let base = self.acc_slot * self.alloc.rows_out;
+        if let Some(park) = self.output_base {
+            // Resident edge: requantize each column block straight into
+            // the pinned scratchpad region — the consumer's input layout —
+            // eliding the DRAM store (and the consumer's reload). The
+            // planner guarantees this single tile covers the whole output.
+            for kb in 0..ceil_div(k_len, k0) {
+                let cols = k0.min(k_len - kb * k0) as u16;
+                prog.push(Instr::MvoutSpad {
+                    src: LocalAddr::acc(base + (kb * self.nominal(Dim::N)) as u32),
+                    dst: LocalAddr::spad(park + (kb * self.nominal(Dim::N)) as u32),
+                    rows: n_len as u16,
+                    cols,
+                });
+            }
+            return Ok(());
+        }
         for kb in 0..ceil_div(k_len, k0) {
             let cols = k0.min(k_len - kb * k0) as u16;
             let dram =
@@ -292,7 +329,8 @@ impl<'a> Walker<'a> {
 }
 
 /// Emit the per-layer configuration + full instruction stream for a
-/// scheduled TIR function into `prog`.
+/// scheduled TIR function into `prog` (no cross-layer residency; see
+/// [`generate_resident`]).
 pub fn generate(
     accel: &AccelDesc,
     f: &TirFunc,
@@ -300,30 +338,37 @@ pub fn generate(
     bufs: &LayerBufs,
     prog: &mut Program,
 ) -> Result<()> {
+    generate_resident(accel, f, s, bufs, &LayerResidency::default(), prog)
+}
+
+/// [`generate`] with cross-layer residency decisions: a resident input
+/// reads from its pinned region (no DRAM loads, no scratchpad slot of its
+/// own), a resident output parks in its pinned region (no DRAM stores),
+/// and the layer's own tiles must fit below `resid.reserved_rows`. The
+/// default (empty) residency emits byte-identical code to [`generate`].
+pub fn generate_resident(
+    accel: &AccelDesc,
+    f: &TirFunc,
+    s: &Schedule,
+    bufs: &LayerBufs,
+    resid: &LayerResidency,
+    prog: &mut Program,
+) -> Result<()> {
     f.validate().with_context(|| format!("codegen input '{}'", f.name))?;
     s.validate(&accel.arch)?;
     ensure!(f.gemm == s.workload, "schedule/function workload mismatch");
 
     let arch = &accel.arch;
-    let dim = arch.pe_dim;
-    let spad_rows = arch
-        .levels
-        .iter()
-        .find(|l| l.name == "Scratchpad")
-        .context("no Scratchpad level")?
-        .size_bytes
-        / dim;
-    let acc_rows = arch
-        .levels
-        .iter()
-        .find(|l| l.name == "Accumulator")
-        .context("no Accumulator level")?
-        .size_bytes
-        / (dim * 4);
+    // Same capacity numbers the residency planner checks against
+    // (`ResidencyConstraint::admits` mirrors the ensures below).
+    let (spad_rows, acc_rows) = crate::scheduler::graph::onchip_rows(arch)?;
 
     let [nt, ct, kt] = s.onchip_tile;
     let [_, c0, k0] = s.insn_tile;
-    let rows_in = (nt * ceil_div(ct, c0)) as u32;
+    // A resident input lives in the pinned region the producer wrote — it
+    // needs no staging rows (and never ping-pongs).
+    let rows_in =
+        if resid.input_base.is_some() { 0 } else { (nt * ceil_div(ct, c0)) as u32 };
     let rows_w = (ct * ceil_div(kt, k0)) as u32;
     let rows_out = (nt * ceil_div(kt, k0)) as u32;
     let slots: u32 = if s.double_buffer { 2 } else { 1 };
@@ -331,14 +376,26 @@ pub fn generate(
         rows_in,
         rows_w,
         rows_out,
-        a_base: 0,
+        a_base: resid.input_base.unwrap_or(0),
         w_base: slots * rows_in,
         slots,
     };
+    if resid.input_base.is_some() || resid.output_base.is_some() {
+        // The planner only proposes whole-activation residency: exactly
+        // one on-chip tile on each resident side.
+        ensure!(nt == s.workload.n, "resident layer must hold its full batch on-chip");
+        if resid.input_base.is_some() {
+            ensure!(ct == s.workload.c, "resident input must be one on-chip tile");
+        }
+        if resid.output_base.is_some() {
+            ensure!(kt == s.workload.k, "resident output must be one on-chip tile");
+        }
+    }
     ensure!(
-        (slots * (rows_in + rows_w)) as usize <= spad_rows,
-        "scratchpad overflow: {} rows needed, {} available",
+        (slots * (rows_in + rows_w) + resid.reserved_rows) as usize <= spad_rows,
+        "scratchpad overflow: {} rows needed (+{} pinned), {} available",
         slots * (rows_in + rows_w),
+        resid.reserved_rows,
         spad_rows
     );
     ensure!(
@@ -377,6 +434,8 @@ pub fn generate(
         w_slot: 0,
         acc_slot: slots - 1, // first LoadBias toggles to slot 0
         last_preload: None,
+        input_resident: resid.input_base.is_some(),
+        output_base: resid.output_base,
     };
     w.walk(&f.body, prog)
 }
@@ -494,6 +553,123 @@ mod tests {
             assert!(!scheds.is_empty());
             check_layer(g, &scheds[0], 300 + i as u64);
         }
+    }
+
+    #[test]
+    fn resident_edge_equals_round_trip_with_less_dram() {
+        use crate::scheduler::graph::{onchip_rows, LayerResidency};
+
+        let accel = gemmini_desc().unwrap();
+        let quant = QuantAttrs { scale: 0.05, act: Activation::Relu };
+        let g1 = Gemm::new(4, 32, 48);
+        let g2 = Gemm::new(4, 48, 16);
+        let dim = accel.arch.pe_dim;
+        let mk = |g: Gemm| Schedule {
+            workload: g,
+            dataflow: crate::arch::Dataflow::WeightStationary,
+            double_buffer: false,
+            shares: [0.5, 0.5, 1.0],
+            insn_tile: [g.n.min(dim), g.c.min(dim), g.k.min(dim)],
+            onchip_tile: [g.n, g.c, g.k],
+            dram_order: [
+                crate::workload::Dim::N,
+                crate::workload::Dim::C,
+                crate::workload::Dim::K,
+            ],
+            est: Default::default(),
+        };
+        let (s1, s2) = (mk(g1), mk(g2));
+        assert_eq!(s1.insn_tile[2], s2.insn_tile[1], "edge blocks must agree");
+        let sch1 = apply_schedule(
+            &accel,
+            &TirFunc::unscheduled("l1", g1, quant),
+            &s1,
+        )
+        .unwrap();
+        let sch2 = apply_schedule(
+            &accel,
+            &TirFunc::unscheduled("l2", g2, quant),
+            &s2,
+        )
+        .unwrap();
+
+        let mut rng = Rng::new(99);
+        let x = rng.i8_vec(g1.n * g1.c);
+        let w1 = rng.i8_vec(g1.c * g1.k);
+        let b1: Vec<i32> = (0..g1.k).map(|_| rng.below(200) as i32 - 100).collect();
+        let w2 = rng.i8_vec(g2.c * g2.k);
+        let b2: Vec<i32> = (0..g2.k).map(|_| rng.below(200) as i32 - 100).collect();
+
+        let build = |resident: bool| {
+            let mut prog = Program::new("pair");
+            let bufs1 = LayerBufs {
+                x: prog.layout.alloc("x", (g1.n * g1.c) as u64).unwrap().offset,
+                w: prog.layout.alloc("w1", (g1.c * g1.k) as u64).unwrap().offset,
+                bias: prog.layout.alloc("b1", (g1.k * 4) as u64).unwrap().offset,
+                out: prog.layout.alloc("mid", (g1.n * g1.k) as u64).unwrap().offset,
+            };
+            let bufs2 = LayerBufs {
+                x: bufs1.out,
+                w: prog.layout.alloc("w2", (g2.c * g2.k) as u64).unwrap().offset,
+                bias: prog.layout.alloc("b2", (g2.k * 4) as u64).unwrap().offset,
+                out: prog.layout.alloc("out", (g2.n * g2.k) as u64).unwrap().offset,
+            };
+            if resident {
+                let (spad_rows, _) = onchip_rows(&accel.arch).unwrap();
+                let rows_e = (g1.n * ceil_div(g1.k, s1.insn_tile[2])) as u32;
+                let base = spad_rows as u32 - rows_e;
+                let r1 = LayerResidency {
+                    input_base: None,
+                    output_base: Some(base),
+                    reserved_rows: rows_e,
+                };
+                let r2 = LayerResidency {
+                    input_base: Some(base),
+                    output_base: None,
+                    reserved_rows: rows_e,
+                };
+                generate_resident(&accel, &sch1, &s1, &bufs1, &r1, &mut prog).unwrap();
+                prog.push(Instr::Fence);
+                generate_resident(&accel, &sch2, &s2, &bufs2, &r2, &mut prog).unwrap();
+            } else {
+                generate(&accel, &sch1, &s1, &bufs1, &mut prog).unwrap();
+                prog.push(Instr::Fence);
+                generate(&accel, &sch2, &s2, &bufs2, &mut prog).unwrap();
+            }
+            prog.push(Instr::Fence);
+
+            let mut dram = prog.make_dram().unwrap();
+            dram.write_i8_slice(bufs1.x, &x).unwrap();
+            dram.write_i8_slice(bufs1.w, &w1).unwrap();
+            dram.write_i32_slice(bufs1.bias, &b1).unwrap();
+            dram.write_i8_slice(bufs2.w, &w2).unwrap();
+            dram.write_i32_slice(bufs2.bias, &b2).unwrap();
+            let sim = Simulator::new(&accel.arch);
+            let rep = sim.run(&prog, &mut dram).unwrap();
+            (dram.read_i8_slice(bufs2.out, g2.n * g2.k).unwrap(), rep)
+        };
+
+        let (base_out, base_rep) = build(false);
+        let (res_out, res_rep) = build(true);
+        // Element-exact: the parked int8 activation is exactly what the
+        // DRAM round-trip would have stored and reloaded.
+        assert_eq!(res_out, base_out);
+        let mid = ref_out(&x, &w1, &b1, g1, quant.scale, quant.act);
+        let want = ref_out(&mid, &w2, &b2, g2, quant.scale, quant.act);
+        assert_eq!(res_out, want, "resident pair must match the reference");
+        assert!(
+            res_rep.dram_transfer_cycles < base_rep.dram_transfer_cycles,
+            "residency must elide DRAM transfer cycles ({} vs {})",
+            res_rep.dram_transfer_cycles,
+            base_rep.dram_transfer_cycles
+        );
+        assert!(res_rep.dram_write_bytes < base_rep.dram_write_bytes);
+        assert!(res_rep.dram_read_bytes < base_rep.dram_read_bytes);
+        assert!(
+            res_rep.insn_counts.contains_key("mvout_spad"),
+            "the on-chip park must appear in the stream: {:?}",
+            res_rep.insn_counts
+        );
     }
 
     #[test]

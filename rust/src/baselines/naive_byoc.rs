@@ -63,6 +63,7 @@ pub fn naive_options() -> CompileOptions {
         fold_constants: false,
         profile_candidates: 0,
         schedule_cache: false,
+        cross_layer: false,
         sweep: SweepOptions::default(),
     }
 }

@@ -27,6 +27,8 @@ pub mod funct {
     pub const LOOP_WS_CONFIG: u8 = 9;
     pub const FENCE: u8 = 10;
     pub const FLUSH: u8 = 11;
+    /// On-chip requantizing store (accumulator → scratchpad, no DRAM).
+    pub const MVOUT_SPAD: u8 = 12;
 }
 
 /// One encoded command word.
@@ -114,6 +116,11 @@ pub fn encode(i: &Instr) -> Vec<Word> {
             funct: funct::MVOUT,
             rs1: dram,
             rs2: pack_local(Some(local)) | (pack_dims(rows, cols) << 32),
+        }],
+        Instr::MvoutSpad { src, dst, rows, cols } => vec![Word {
+            funct: funct::MVOUT_SPAD,
+            rs1: pack_local(Some(src)) | (pack_dims(rows, cols) << 32),
+            rs2: pack_local(Some(dst)),
         }],
         Instr::Preload { local, dst, rows, cols } => vec![Word {
             funct: funct::PRELOAD,
@@ -215,6 +222,14 @@ pub fn decode(words: &[Word]) -> Result<Vec<Instr>> {
                     Instr::Mvout { dram: w.rs1, local, rows, cols }
                 }
             }
+            funct::MVOUT_SPAD => {
+                let src = unpack_local(w.rs1 & 0xFFFF_FFFF)?
+                    .ok_or_else(|| anyhow::anyhow!("garbage mvout_spad src"))?;
+                let (rows, cols) = unpack_dims(w.rs1 >> 32);
+                let dst = unpack_local(w.rs2)?
+                    .ok_or_else(|| anyhow::anyhow!("garbage mvout_spad dst"))?;
+                Instr::MvoutSpad { src, dst, rows, cols }
+            }
             funct::PRELOAD => {
                 let local = unpack_local(w.rs1 & 0xFFFF_FFFF)?;
                 let (rows, cols) = unpack_dims(w.rs1 >> 32);
@@ -298,7 +313,7 @@ mod tests {
                 _ => LocalAddr::acc_accumulate(row),
             }
         };
-        match rng.below(9) {
+        match rng.below(10) {
             0 => Instr::ConfigEx {
                 dataflow: if rng.chance(0.5) {
                     Dataflow::WeightStationary
@@ -340,6 +355,12 @@ mod tests {
                 rows: rng.below(1 << 12) as u16,
                 cols: rng.below(1 << 12) as u16,
                 preloaded: rng.chance(0.5),
+            },
+            9 => Instr::MvoutSpad {
+                src: local(rng),
+                dst: local(rng),
+                rows: rng.below(1 << 12) as u16,
+                cols: rng.below(1 << 12) as u16,
             },
             7 => Instr::LoopWs {
                 a_dram: rng.below(1 << 40),

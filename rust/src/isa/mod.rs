@@ -90,6 +90,13 @@ pub enum Instr {
     /// DMA accumulator/scratchpad → DRAM, applying the configured
     /// requantization when reading int32 accumulator rows.
     Mvout { dram: u64, local: LocalAddr, rows: u16, cols: u16 },
+    /// On-chip store: requantize an int32 accumulator tile (with the
+    /// configured scale/activation, exactly like `MVOUT`) into int8
+    /// scratchpad rows without touching DRAM. This is the cross-layer
+    /// residency primitive: a producer layer parks its activation where
+    /// the consumer's input tile would live, eliding the DRAM
+    /// store + reload pair a layer boundary otherwise pays.
+    MvoutSpad { src: LocalAddr, dst: LocalAddr, rows: u16, cols: u16 },
     /// Load a `rows × cols` tile into the PE array's stationary registers
     /// (the weight tile under WS), and name the destination accumulator
     /// tile of the following computes. `local = None` preloads zeros.
@@ -133,6 +140,7 @@ impl Instr {
             Instr::ConfigSt { .. } => "config_st",
             Instr::Mvin { .. } => "mvin",
             Instr::Mvout { .. } => "mvout",
+            Instr::MvoutSpad { .. } => "mvout_spad",
             Instr::Preload { .. } => "preload",
             Instr::Compute { preloaded: true, .. } => "compute_preloaded",
             Instr::Compute { preloaded: false, .. } => "compute_accumulated",
@@ -156,6 +164,9 @@ impl fmt::Display for Instr {
             }
             Instr::Mvout { dram, local, rows, cols } => {
                 write!(f, "mvout {local} -> dram+{dram:#x} {rows}x{cols}")
+            }
+            Instr::MvoutSpad { src, dst, rows, cols } => {
+                write!(f, "mvout_spad {src} -> {dst} {rows}x{cols}")
             }
             Instr::Preload { local, dst, rows, cols } => match local {
                 Some(l) => write!(f, "preload {l} dst={dst} {rows}x{cols}"),

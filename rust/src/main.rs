@@ -10,7 +10,9 @@
 //!   disasm    — compile and dump the instruction stream
 //!   serve     — long-lived compile server on a Unix domain socket,
 //!               sharing one persistent schedule cache across requests
-//!   cache     — stats|clear|warm the persistent schedule-cache artifact
+//!   cache     — stats|clear|warm|gc the persistent schedule-cache
+//!               artifact (gc trims to --max-entries, least recently
+//!               served first)
 //!   gen-model — write a deterministic random .qmodel (for smoke tests)
 //!
 //! The `compile`, `run` and `cache warm` paths hydrate the on-disk
@@ -52,7 +54,7 @@ use tvm_accel::workload::Gemm;
 
 const VALUE_OPTS: &[&str] = &[
     "n", "c", "k", "model", "backend", "arch", "golden", "inferences", "seed", "socket",
-    "cache", "workers", "dims", "batch", "out",
+    "cache", "workers", "dims", "batch", "out", "max-entries",
 ];
 
 /// Single-target variant of [`load_accels`] for subcommands that drive
@@ -344,11 +346,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
 }
 
 fn cmd_cache(args: &Args) -> Result<()> {
-    let action = args
-        .positional
-        .get(1)
-        .map(|s| s.as_str())
-        .context("usage: tvm-accel cache <stats|clear|warm> [--cache F] [--model F]")?;
+    let action = args.positional.get(1).map(|s| s.as_str()).context(
+        "usage: tvm-accel cache <stats|clear|warm|gc> [--cache F] [--model F] \
+         [--max-entries N]",
+    )?;
     let path = cache_path(args);
     match action {
         "stats" => {
@@ -360,11 +361,30 @@ fn cmd_cache(args: &Args) -> Result<()> {
                 rep.skipped
             );
             let mut per_arch = std::collections::BTreeMap::new();
-            for (k, _) in &entries {
+            for (k, _, _) in &entries {
                 *per_arch.entry(k.arch).or_insert(0usize) += 1;
             }
             for (arch, n) in per_arch {
                 println!("  arch {arch:016x}: {n} schedule(s)");
+            }
+            Ok(())
+        }
+        "gc" => {
+            let max = args.opt_usize("max-entries", 0)?;
+            ensure!(max > 0, "cache gc needs --max-entries <N> (N > 0)");
+            let rep = persist::trim_file(&path, max)?;
+            println!(
+                "cache gc {}: kept {} entr{}, evicted {} (least recently served first)",
+                path.display(),
+                rep.kept,
+                if rep.kept == 1 { "y" } else { "ies" },
+                rep.dropped
+            );
+            if rep.dropped > 0 {
+                println!(
+                    "  note: a running server that hydrated this artifact still holds \
+                     the evicted entries and will merge them back on its next save"
+                );
             }
             Ok(())
         }
@@ -398,7 +418,7 @@ fn cmd_cache(args: &Args) -> Result<()> {
             );
             Ok(())
         }
-        other => bail!("unknown cache action '{other}' (stats|clear|warm)"),
+        other => bail!("unknown cache action '{other}' (stats|clear|warm|gc)"),
     }
 }
 
@@ -437,7 +457,8 @@ fn main() -> Result<()> {
                  \x20              [--golden F.hlo.txt] [--inferences N] [--cache F|--no-cache]\n\
                  \x20 schedule:    --n N --c C --k K\n\
                  \x20 serve:       --socket S [--arch ...] [--cache F|--no-cache] [--workers N]\n\
-                 \x20 cache:       <stats|clear|warm> [--cache F] [--model F.qmodel]\n\
+                 \x20 cache:       <stats|clear|warm|gc> [--cache F] [--model F.qmodel]\n\
+                 \x20              [--max-entries N  (gc: LRU-trim the artifact)]\n\
                  \x20 gen-model:   --out F.qmodel [--dims 32,48,16] [--batch N] [--seed N]"
             );
             std::process::exit(2);

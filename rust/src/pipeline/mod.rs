@@ -2,12 +2,20 @@
 //! description → deployable program.
 //!
 //! The heavy lifting lives in [`session`]: a [`CompilerSession`] chains
-//! the configurators as six explicit stages (frontend → partition →
-//! schedule → mapping → codegen → link), each producing an inspectable
-//! artifact plus timing/diagnostics. [`Compiler::compile`] is a thin
-//! wrapper that runs a session and returns just the [`Deployment`];
-//! [`Compiler::compile_with_report`] additionally returns the per-stage
-//! [`StageReport`]s.
+//! the configurators as seven explicit stages (frontend → partition →
+//! schedule → crosslayer → mapping → codegen → link), each producing an
+//! inspectable artifact plus timing/diagnostics. [`Compiler::compile`] is
+//! a thin wrapper that runs a session and returns just the
+//! [`Deployment`]; [`Compiler::compile_with_report`] additionally returns
+//! the per-stage [`StageReport`]s.
+//!
+//! The crosslayer stage is the graph-aware part
+//! ([`crate::scheduler::graph`]): activations flowing between adjacent
+//! same-target layers stay resident in the scratchpad when the schedules
+//! allow it, eliding the per-boundary DRAM store + reload; where the
+//! per-layer winners are incompatible it re-runs boundary-constrained
+//! searches, memoized under cache keys extended with the residency
+//! constraint.
 //!
 //! Schedule selection ("the generated schedules ... are evaluated on the
 //! hardware to determine the most efficient configuration based on real
@@ -44,6 +52,7 @@ use crate::relay::Graph;
 use crate::scheduler::cache::{
     CacheKey, CacheStats, CachedSelection, ScheduleCache, SearchGate, SearchKey,
 };
+use crate::scheduler::graph::ResidencyConstraint;
 use crate::scheduler::sweep::{sweep, SweepOptions};
 use crate::scheduler::Schedule;
 use crate::sim::report::RunReport;
@@ -51,7 +60,8 @@ use crate::sim::Simulator;
 use crate::workload::{Dim, Gemm};
 
 pub use multi::{
-    LayerAssignment, MultiCompiler, MultiDeployment, MultiSessionOutput, ProgramSegment,
+    LayerAssignment, LayerBoundary, MultiCompiler, MultiDeployment, MultiSessionOutput,
+    ProgramSegment,
 };
 pub use session::{CompilerSession, ScheduleStats, SessionOutput, StageReport};
 
@@ -70,6 +80,13 @@ pub struct CompileOptions {
     /// Memoize schedule selections in the compiler's content-addressed
     /// cache (keyed by arch fingerprint + GEMM shape + search options).
     pub schedule_cache: bool,
+    /// Run the graph-level cross-layer pass: keep activations resident
+    /// on-chip across producer→consumer layer boundaries when feasible
+    /// (re-running boundary-constrained searches where needed), eliding
+    /// the DRAM round-trip per resident edge. Graphs with no feasible
+    /// edge — and single-layer models — emit byte-identical programs
+    /// either way. Requires `use_scheduler`.
+    pub cross_layer: bool,
     /// Knobs of the Fig. 2(b) sweep grid.
     pub sweep: SweepOptions,
 }
@@ -81,6 +98,7 @@ impl Default for CompileOptions {
             fold_constants: true,
             profile_candidates: 6,
             schedule_cache: true,
+            cross_layer: true,
             sweep: SweepOptions::default(),
         }
     }
@@ -129,9 +147,24 @@ impl Deployment {
         );
         let mut dram = self.program.make_dram()?;
         dram.write_i8_slice(self.input_offset, input)?;
-        let rep = sim.run(&self.program, &mut dram)?;
+        let rep = sim.run_hinted(&self.program, &mut dram, self.input_stage_hint())?;
         let out = dram.read_i8_slice(self.output_offset, self.output_elems)?;
         Ok((out, rep))
+    }
+
+    /// The input-region hint for [`Simulator::run_hinted`]: double-buffered
+    /// input staging needs a *spare* slot in the first accelerator layer's
+    /// input buffer — with a single-buffered first layer the next
+    /// inference's input physically cannot stream in while the current one
+    /// executes, so no staging prefix is reported (and the pipelined batch
+    /// model claims no such overlap).
+    fn input_stage_hint(&self) -> Option<(u64, u64)> {
+        match self.chosen.first() {
+            Some((_, s, _)) if s.double_buffer => {
+                Some((self.input_offset, self.input_elems as u64))
+            }
+            _ => None,
+        }
     }
 
     /// Run many inferences back to back, amortizing the DRAM allocation
@@ -153,7 +186,7 @@ impl Deployment {
                 self.input_elems
             );
             dram.write_i8_slice(self.input_offset, input)?;
-            let rep = sim.run(&self.program, &mut dram)?;
+            let rep = sim.run_hinted(&self.program, &mut dram, self.input_stage_hint())?;
             outputs.push(dram.read_i8_slice(self.output_offset, self.output_elems)?);
             reports.push(rep);
         }
@@ -176,11 +209,12 @@ pub struct BatchRun {
     /// (sum of the per-inference `cycles`).
     pub serial_cycles: u64,
     /// Total cycles under the pipelined model: each inference's host
-    /// preprocessing prefix overlaps the previous inference's accelerator
-    /// execution, so the batch hides `min(prefix, previous accel time)`
-    /// per inference. Always ≤ [`BatchRun::serial_cycles`]; equal when no
-    /// inference has host preprocessing before its first accelerator
-    /// instruction.
+    /// preprocessing prefix *and* its first input-tile DMA
+    /// (double-buffered input staging) overlap the previous inference's
+    /// accelerator execution, so the batch hides
+    /// `min(prefix + staging, previous accel time)` per inference. Always
+    /// ≤ [`BatchRun::serial_cycles`]; equal when no inference has host
+    /// preprocessing or input staging before its first compute.
     pub pipelined_cycles: u64,
 }
 
@@ -201,23 +235,28 @@ impl BatchRun {
     }
 }
 
-/// The pipelined batch timing model. Inference `i` is split into its host
-/// preprocessing prefix `H_i` (host cycles before the first accelerator
-/// instruction) and the remainder `A_i`. The first inference pays
-/// `H_0 + A_0` in full; afterwards the host prepares inference `i` during
-/// `A_{i-1}`, so only the part of `H_i` exceeding `A_{i-1}` remains on
-/// the critical path: `total += A_i + max(0, H_i - A_{i-1})`. Outputs are
-/// unaffected — this reinterprets the measured per-inference reports.
+/// The pipelined batch timing model. Inference `i` is split into its
+/// overlappable prefix `P_i` — the host preprocessing before the first
+/// accelerator instruction (`H_i`) plus the first input-tile DMA
+/// (`S_i`, double-buffered input staging: the next inference's input can
+/// stream into the spare tile slot while the current one executes) — and
+/// the remainder `A_i`. The first inference pays `P_0 + A_0` in full;
+/// afterwards inference `i`'s prefix runs during `A_{i-1}`, so only the
+/// part of `P_i` exceeding `A_{i-1}` remains on the critical path:
+/// `total += A_i + max(0, P_i - A_{i-1})`. Outputs are unaffected — this
+/// reinterprets the measured per-inference reports.
 pub(crate) fn pipelined_cycles(reports: &[RunReport]) -> u64 {
     let mut total = 0u64;
     let mut prev_accel = 0u64;
     for (i, r) in reports.iter().enumerate() {
         let host = r.host_prefix_cycles.min(r.cycles);
-        let accel = r.cycles - host;
+        let staging = r.input_stage_cycles.min(r.cycles - host);
+        let prefix = host + staging;
+        let accel = r.cycles - prefix;
         if i == 0 {
             total += r.cycles;
         } else {
-            total += accel + host.saturating_sub(prev_accel);
+            total += accel + prefix.saturating_sub(prev_accel);
         }
         prev_accel = accel;
     }
@@ -398,11 +437,11 @@ impl Compiler {
         if !self.options.use_scheduler {
             return Ok((self.naive_schedule(g), None, ScheduleSource::Naive));
         }
-        let key = CacheKey {
-            arch: accel_fp,
-            gemm: g,
-            search: SearchKey::new(&self.options.sweep, self.options.profile_candidates),
-        };
+        let key = CacheKey::unconstrained(
+            accel_fp,
+            g,
+            SearchKey::new(&self.options.sweep, self.options.profile_candidates),
+        );
         // Single-flight gate: on a hit (including one produced by another
         // thread's concurrent search on the same key) return immediately;
         // otherwise this thread is the leader and owes a publish — the
@@ -456,6 +495,93 @@ impl Compiler {
             // The lease's drop releases leadership for a blocked follower.
             Err(e) => Err(e),
         }
+    }
+
+    /// Pick a schedule under a cross-layer residency constraint: the full
+    /// sweep filtered to candidates satisfying `rc`, then profiled like
+    /// [`Compiler::select_schedule`]. Selections are memoized under the
+    /// extended cache key (shape + residency constraint), so recompiles of
+    /// resident graphs stay warm.
+    ///
+    /// When no candidate satisfies the constraint, the *unconstrained*
+    /// analytic winner is cached under the constrained key instead of
+    /// nothing — a deterministic infeasibility marker that keeps repeat
+    /// compiles sweep-free. The cross-layer planner re-checks
+    /// `rc.admits(..)` on every returned schedule, so a non-admitting
+    /// result simply leaves the edge non-resident. `Ok(None)` only when
+    /// the scheduler is off or the sweep found no mapping at all.
+    ///
+    /// NOTE: the single-flight gate / lease / publish choreography here
+    /// intentionally parallels [`Compiler::select_schedule`] (which also
+    /// tracks [`ScheduleSource`] and bails rather than marking when the
+    /// sweep is empty) — a fix to either path almost certainly applies to
+    /// both.
+    pub(crate) fn select_schedule_constrained(
+        &self,
+        g: Gemm,
+        rc: ResidencyConstraint,
+        accel_fp: u64,
+    ) -> Result<Option<(Schedule, Option<u64>)>> {
+        if !self.options.use_scheduler {
+            return Ok(None);
+        }
+        let key = CacheKey {
+            arch: accel_fp,
+            gemm: g,
+            search: SearchKey::new(&self.options.sweep, self.options.profile_candidates),
+            residency: rc,
+        };
+        let mut lease = if self.options.schedule_cache {
+            match self.cache.begin(&key) {
+                SearchGate::Ready(hit) => {
+                    self.cache_hits.fetch_add(1, Ordering::Relaxed);
+                    return Ok(Some((hit.schedule, hit.profiled_cycles)));
+                }
+                SearchGate::Leader => {
+                    self.cache_misses.fetch_add(1, Ordering::Relaxed);
+                    Some(SearchLease { cache: self.cache.as_ref(), key, armed: true })
+                }
+            }
+        } else {
+            None
+        };
+
+        self.sweeps_run.fetch_add(1, Ordering::Relaxed);
+        let result = sweep(&self.accel.arch, g, &self.options.sweep);
+        if result.candidates.is_empty() {
+            // No mapping at all (the lease's drop releases single-flight
+            // leadership). Unreachable for layers that already scheduled.
+            return Ok(None);
+        }
+        let candidates: Vec<Schedule> = result
+            .candidates
+            .iter()
+            .filter(|s| rc.admits(s, &self.accel.arch))
+            .cloned()
+            .collect();
+        let searched = if candidates.is_empty() {
+            // Infeasibility marker: cache the unconstrained analytic
+            // winner (which fails `rc.admits`, so the planner rejects it)
+            // rather than re-sweeping this dead end on every compile.
+            (result.candidates[0].clone(), None)
+        } else if self.options.profile_candidates == 0 {
+            (candidates[0].clone(), None)
+        } else {
+            let top = self.options.profile_candidates.min(candidates.len());
+            let (s, c) = self.profile_top_candidates(&candidates[..top])?;
+            (s, Some(c))
+        };
+        if let Some(lease) = lease.as_mut() {
+            lease.cache.publish(
+                key,
+                CachedSelection {
+                    schedule: searched.0.clone(),
+                    profiled_cycles: searched.1,
+                },
+            );
+            lease.armed = false;
+        }
+        Ok(Some(searched))
     }
 
     /// Profile the candidates on scoped worker threads (contiguous chunks
@@ -645,7 +771,11 @@ mod tests {
 
         let first = compiler.compile(&graph).unwrap();
         let sweeps_after_first = compiler.sweeps_run();
-        assert_eq!(sweeps_after_first, 2, "one sweep per distinct layer shape");
+        assert!(
+            sweeps_after_first >= 2,
+            "at least one sweep per distinct layer shape (plus any \
+             boundary-constrained re-searches)"
+        );
 
         let second = compiler.compile(&graph).unwrap();
         assert_eq!(
@@ -655,8 +785,8 @@ mod tests {
         );
         assert_eq!(first.program.items, second.program.items);
         let stats = compiler.cache_stats();
-        assert_eq!(stats.entries, 2);
-        assert_eq!(stats.hits, 2, "both layers hit on the second compile");
+        assert!(stats.entries >= 2);
+        assert!(stats.hits >= 2, "both layers hit on the second compile");
     }
 
     #[test]
@@ -669,7 +799,7 @@ mod tests {
         let compiler = Compiler::new(gemmini_desc().unwrap());
         let out = compiler.compile_with_report(&graph).unwrap();
         assert_eq!(out.schedule_stats.layers, 6);
-        assert_eq!(compiler.sweeps_run(), 5);
+        assert!(compiler.sweeps_run() >= 5);
         assert_eq!(out.schedule_stats.cache_hits, 1);
         assert_eq!(out.schedule_stats.searched, 5);
     }
@@ -682,9 +812,12 @@ mod tests {
         let opts = CompileOptions { schedule_cache: false, ..Default::default() };
         let compiler = Compiler::with_options(gemmini_desc().unwrap(), opts);
         compiler.compile(&graph).unwrap();
+        let per_compile = compiler.sweeps_run();
+        // Two layers with the same shape: each sweeps (no memoization).
+        assert!(per_compile >= 2);
         compiler.compile(&graph).unwrap();
-        // Two layers with the same shape, compiled twice, all swept.
-        assert_eq!(compiler.sweeps_run(), 4);
+        // And the second compile re-runs every search.
+        assert_eq!(compiler.sweeps_run(), 2 * per_compile);
         assert_eq!(compiler.cache_stats().entries, 0);
     }
 
@@ -728,10 +861,25 @@ mod tests {
             serial += rep.cycles;
         }
         assert_eq!(batch.serial_cycles, serial);
-        // The proposed flow has no host preprocessing, so there is nothing
-        // to overlap: the pipelined model degenerates to the serial one.
+        // The proposed flow has no host preprocessing. When the first
+        // layer's winning schedule is double-buffered, its input-tile DMA
+        // forms a staging prefix the pipelined model hides behind the
+        // previous inference's execution; single-buffered first layers
+        // have no spare slot, so nothing overlaps and the model
+        // degenerates to serial.
         assert_eq!(batch.reports[0].host_prefix_cycles, 0);
-        assert_eq!(batch.pipelined_cycles, batch.serial_cycles);
+        let first_db = dep.chosen[0].1.double_buffer;
+        if first_db {
+            assert!(
+                batch.reports[0].input_stage_cycles > 0,
+                "double-buffered first layer must report its input staging prefix"
+            );
+            assert!(batch.pipelined_cycles < batch.serial_cycles);
+        } else {
+            assert_eq!(batch.reports[0].input_stage_cycles, 0);
+            assert_eq!(batch.pipelined_cycles, batch.serial_cycles);
+        }
+        assert!(batch.pipelined_cycles >= batch.reports[0].cycles);
         assert_eq!(batch.mean_cycles(), serial / 5);
     }
 

@@ -53,6 +53,26 @@ pub struct ProgramSegment {
     pub end: usize,
 }
 
+/// One evaluated target-switch boundary, with target names resolved: what
+/// placing `layer` on `to` costs in forced DRAM round-trip cycles when its
+/// producer sits on `from` (see
+/// [`crate::scheduler::graph::switch_round_trip_cycles`]). `taken` marks
+/// switches the partitioner actually paid for; the rest were avoided
+/// because same-target placement (cost + no penalty) won.
+#[derive(Debug, Clone)]
+pub struct LayerBoundary {
+    /// Graph-node name of the layer whose placement was evaluated.
+    pub layer: String,
+    /// Display name of the producer's target.
+    pub from: String,
+    /// Display name of the evaluated candidate target.
+    pub to: String,
+    /// Switch penalty in cycles.
+    pub penalty: u64,
+    /// Whether this switch won the placement.
+    pub taken: bool,
+}
+
 /// Which accelerator one layer landed on, and at what cost.
 #[derive(Debug, Clone)]
 pub struct LayerAssignment {
@@ -92,6 +112,10 @@ pub struct MultiDeployment {
     pub output_elems: usize,
     /// Per-layer target choice + schedule (codegen order).
     pub assignments: Vec<LayerAssignment>,
+    /// Every cross-target boundary the partitioner evaluated, with the
+    /// switch penalty charged (the forced DRAM round-trip) and whether the
+    /// switch was taken. Empty for single-target compiles.
+    pub boundaries: Vec<LayerBoundary>,
 }
 
 impl MultiDeployment {
@@ -105,16 +129,26 @@ impl MultiDeployment {
         dram: &mut crate::sim::memory::Dram,
     ) -> Result<RunReport> {
         let mut rep = RunReport::default();
+        // Double-buffered input staging needs a spare slot in the first
+        // layer's input buffer (see `Deployment`'s hint of the same name).
+        let hint = match self.assignments.first() {
+            Some(a) if a.schedule.double_buffer => {
+                Some((self.input_offset, self.input_elems as u64))
+            }
+            _ => None,
+        };
         for seg in &self.segments {
             let sim = sims
                 .get(seg.target)
                 .with_context(|| format!("segment names unknown target {}", seg.target))?;
-            let r = sim.run_slice(&self.program, dram, seg.start..seg.end).with_context(|| {
-                format!(
-                    "items {}..{} on target '{}'",
-                    seg.start, seg.end, self.targets[seg.target].name
-                )
-            })?;
+            let r = sim
+                .run_slice_hinted(&self.program, dram, seg.start..seg.end, hint)
+                .with_context(|| {
+                    format!(
+                        "items {}..{} on target '{}'",
+                        seg.start, seg.end, self.targets[seg.target].name
+                    )
+                })?;
             rep.merge(&r);
         }
         Ok(rep)
@@ -164,6 +198,23 @@ impl MultiDeployment {
     /// Number of layers assigned to accelerator `target`.
     pub fn nodes_on_target(&self, target: usize) -> usize {
         self.assignments.iter().filter(|a| a.target == target).count()
+    }
+
+    /// Render the evaluated target-switch boundaries (penalty in cycles,
+    /// taken or avoided) as an indented summary.
+    pub fn render_boundaries(&self) -> String {
+        let mut out = String::new();
+        for b in &self.boundaries {
+            out.push_str(&format!(
+                "{:<12} {} -> {}: switch cost {} cycles ({})\n",
+                b.layer,
+                b.from,
+                b.to,
+                b.penalty,
+                if b.taken { "taken" } else { "avoided" }
+            ));
+        }
+        out
     }
 
     /// Render the per-layer target choices as an indented summary.
@@ -381,10 +432,17 @@ mod tests {
         for asg in &dep.assignments {
             assert_eq!(asg.target, 0, "{} must tie-break to target 0", asg.layer);
         }
-        // One sweep per distinct shape, not per (shape, candidate).
-        assert_eq!(multi.sweeps_run(), 1, "identical fingerprints must share cache entries");
+        // One sweep per distinct search, not per (search, candidate): the
+        // two-candidate compile runs exactly as many sweeps as a plain
+        // single-target compile of the same graph.
+        let plain_compiler = Compiler::new(a);
+        let plain = plain_compiler.compile(&graph).unwrap();
+        assert_eq!(
+            multi.sweeps_run(),
+            plain_compiler.sweeps_run(),
+            "identical fingerprints must share cache entries"
+        );
         // And the result is byte-identical to the single-target compile.
-        let plain = Compiler::new(a).compile(&graph).unwrap();
         assert_eq!(dep.program.items, plain.program.items);
     }
 

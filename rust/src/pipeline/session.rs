@@ -2,16 +2,20 @@
 //! explicit.
 //!
 //! [`Compiler::compile`] used to be one opaque function; a
-//! [`CompilerSession`] runs the same flow as six observable stages —
+//! [`CompilerSession`] runs the same flow as seven observable stages —
 //!
 //! ```text
-//! frontend → partition → schedule → mapping → codegen → link
+//! frontend → partition → schedule → crosslayer → mapping → codegen → link
 //! ```
 //!
 //! — each producing an inspectable artifact plus a [`StageReport`] with
 //! wall-clock timing and diagnostics. The schedule stage consults the
 //! compiler's content-addressed schedule cache and runs the Fig. 2(b)
-//! sweep + simulator profiling only on misses. `Compiler::compile` is now
+//! sweep + simulator profiling only on misses; the crosslayer stage then
+//! plans graph-level activation residency ([`crate::scheduler::graph`]),
+//! keeping producer→consumer activations on-chip where feasible (its
+//! boundary-constrained re-searches share the same cache, under keys
+//! extended with the residency constraint). `Compiler::compile` is now
 //! a thin façade over this module; callers that want the per-stage
 //! breakdown use [`Compiler::compile_with_report`].
 //!
@@ -41,7 +45,8 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::accel::AccelDesc;
-use crate::backend::codegen::{generate, LayerBufs};
+use crate::arch::ArchDesc;
+use crate::backend::codegen::{generate_resident, LayerBufs};
 use crate::backend::mapping::apply_schedule;
 use crate::backend::strategy::{generate_strategy_typed, Strategy};
 use crate::frontend::{configure_all, run_frontend_passes};
@@ -50,10 +55,15 @@ use crate::isa::Instr;
 use crate::relay::partition::{partition, partition_multi, PartitionedGraph, Target};
 use crate::relay::{Graph, Node, Op, TensorData};
 use crate::scheduler::cache::accel_fingerprint;
+use crate::scheduler::graph::{
+    plan as plan_residency, switch_round_trip_cycles, LayerResidency, LayerSched,
+};
 use crate::scheduler::Schedule;
 use crate::tir::TirFunc;
 
-use super::multi::{LayerAssignment, MultiDeployment, MultiSessionOutput, ProgramSegment};
+use super::multi::{
+    LayerAssignment, LayerBoundary, MultiDeployment, MultiSessionOutput, ProgramSegment,
+};
 use super::{Compiler, Deployment, ScheduleSource};
 
 /// Timing + diagnostics for one pipeline stage.
@@ -97,6 +107,9 @@ pub struct ScheduleStats {
     pub searched: usize,
     /// Layers given the naive default schedule (`use_scheduler = false`).
     pub naive: usize,
+    /// Producer→consumer edges the cross-layer stage kept resident
+    /// on-chip (each elides one DRAM store + reload pair).
+    pub resident_edges: usize,
 }
 
 /// Everything a session produces: the deployment plus the per-stage
@@ -231,6 +244,19 @@ impl<'a> CompilerSession<'a> {
         let t0 = Instant::now();
         let fps: Vec<u64> = self.compilers.iter().map(|c| accel_fingerprint(&c.accel)).collect();
         let mut infeasible: Vec<String> = Vec::new();
+        // Use counts over the processed graph: an activation with several
+        // consumers (or one that is a graph output) must materialize in
+        // DRAM no matter where its consumer runs, so a target switch
+        // cannot forgo any residency elision there and is not penalized.
+        let mut act_uses = vec![0usize; processed.nodes.len()];
+        for n in &processed.nodes {
+            for &i in &n.inputs {
+                act_uses[i] += 1;
+            }
+        }
+        for &o in &processed.outputs {
+            act_uses[o] += 1;
+        }
         let pg: PartitionedGraph = if !is_multi {
             partition(&processed, &fcfg.supported)?
         } else {
@@ -243,28 +269,56 @@ impl<'a> CompilerSession<'a> {
             let supported: Vec<BTreeSet<String>> =
                 self.compilers.iter().map(|c| c.accel.supported_ops()).collect();
             let compilers = &self.compilers;
-            partition_multi(&processed, &supported, |node, t| {
-                let shapes: Vec<Vec<usize>> =
-                    node.inputs.iter().map(|&i| processed.node(i).ty.shape.clone()).collect();
-                let c = compilers[t];
-                let probe = generate_strategy_typed(&c.accel, node, &shapes)
-                    .and_then(|strategy| c.select_schedule(strategy.gemm, fps[t]));
-                match probe {
-                    // Profiled cycles when profiling ran; the analytic cost
-                    // otherwise (0 for the naive default schedule, which
-                    // then tie-breaks toward the first target).
-                    Ok((schedule, profiled, _)) => {
-                        Ok(Some(profiled.unwrap_or_else(|| schedule.est.cost() as u64)))
+            partition_multi(
+                &processed,
+                &supported,
+                |node, t| {
+                    let shapes: Vec<Vec<usize>> = node
+                        .inputs
+                        .iter()
+                        .map(|&i| processed.node(i).ty.shape.clone())
+                        .collect();
+                    let c = compilers[t];
+                    let probe = generate_strategy_typed(&c.accel, node, &shapes)
+                        .and_then(|strategy| c.select_schedule(strategy.gemm, fps[t]));
+                    match probe {
+                        // Profiled cycles when profiling ran; the analytic cost
+                        // otherwise (0 for the naive default schedule, which
+                        // then tie-breaks toward the first target).
+                        Ok((schedule, profiled, _)) => {
+                            Ok(Some(profiled.unwrap_or_else(|| schedule.est.cost() as u64)))
+                        }
+                        Err(e) => {
+                            infeasible.push(format!(
+                                "{} infeasible on {}: {:#}",
+                                node.name, c.accel.name, e
+                            ));
+                            Ok(None)
+                        }
                     }
-                    Err(e) => {
-                        infeasible.push(format!(
-                            "{} infeasible on {}: {:#}",
-                            node.name, c.accel.name, e
-                        ));
-                        Ok(None)
+                },
+                // Switch penalty: placing a layer off its producer's target
+                // forces the activation through DRAM (store by `from`, load
+                // by `to`) — a round-trip same-target placement could elide
+                // via cross-layer residency. Previously switching was free.
+                // The penalty is the *foregone elision*, so it only applies
+                // where residency could actually happen: pass enabled and a
+                // single-use, non-output activation.
+                |node, from, to| {
+                    if !lead.options.cross_layer || !lead.options.use_scheduler {
+                        return 0;
                     }
-                }
-            })?
+                    let Some(&src) = node.inputs.first() else { return 0 };
+                    if act_uses[src] != 1 {
+                        return 0;
+                    }
+                    switch_round_trip_cycles(
+                        &compilers[from].accel.arch,
+                        &compilers[to].accel.arch,
+                        processed.node(src).ty.elems(),
+                    )
+                },
+            )?
         };
         ensure!(pg.graph.inputs.len() == 1, "exactly one graph input supported");
         ensure!(pg.graph.outputs.len() == 1, "exactly one graph output supported");
@@ -287,6 +341,16 @@ impl<'a> CompilerSession<'a> {
                         n.name, self.compilers[t].accel.name
                     ));
                 }
+            }
+            for b in &pg.boundaries {
+                notes.push(format!(
+                    "{}: switch {} -> {} costs {} cycle round-trip ({})",
+                    pg.graph.node(b.node).name,
+                    self.compilers[b.from].accel.name,
+                    self.compilers[b.to].accel.name,
+                    b.penalty,
+                    if b.taken { "taken" } else { "avoided" }
+                ));
             }
             notes.append(&mut infeasible);
         }
@@ -334,7 +398,90 @@ impl<'a> CompilerSession<'a> {
             ],
         );
 
-        // --- Stage 4: mapping (apply TIR schedules) ----------------------
+        // --- Stage 4: cross-layer residency planning ---------------------
+        // Decide per producer→consumer edge whether the activation stays
+        // resident on-chip (eliding the DRAM round-trip), re-running
+        // boundary-constrained searches where the per-layer winners' loop
+        // orders are incompatible. Layer plans are updated in place;
+        // codegen consumes the per-node residency decisions. With no
+        // feasible edge every plan is untouched and the emitted program is
+        // byte-identical to the per-layer pipeline.
+        let t0 = Instant::now();
+        let mut node_resid: Vec<LayerResidency> =
+            vec![LayerResidency::default(); g.nodes.len()];
+        let mut notes: Vec<String> = Vec::new();
+        let cross_layer = lead.options.cross_layer && lead.options.use_scheduler;
+        if cross_layer {
+            // Accelerator layers in emission order.
+            let order: Vec<usize> = g
+                .nodes
+                .iter()
+                .filter(|n| pg.targets[n.id] == Target::Accel)
+                .map(|n| n.id)
+                .collect();
+            // An activation with more than one use (or that is a graph
+            // output) must materialize in DRAM regardless.
+            let mut uses = vec![0usize; g.nodes.len()];
+            for n in &g.nodes {
+                for &i in &n.inputs {
+                    uses[i] += 1;
+                }
+            }
+            for &o in &g.outputs {
+                uses[o] += 1;
+            }
+            let mut edges: Vec<(usize, usize)> = Vec::new();
+            for (li, w) in order.windows(2).enumerate() {
+                let (p, c) = (w[0], w[1]);
+                let same_target = match (&plans[p], &plans[c]) {
+                    (Some(pp), Some(cp)) => pp.target == cp.target,
+                    _ => false,
+                };
+                if g.node(c).inputs.first() == Some(&p) && uses[p] == 1 && same_target {
+                    edges.push((li, li + 1));
+                }
+            }
+            let layer_scheds: Vec<LayerSched> = order
+                .iter()
+                .map(|&id| {
+                    let pl = plans[id].as_ref().expect("accel layer has a plan");
+                    LayerSched {
+                        name: g.node(id).name.clone(),
+                        gemm: pl.strategy.gemm,
+                        schedule: pl.schedule.clone(),
+                        profiled_cycles: pl.profiled_cycles,
+                        target: pl.target,
+                    }
+                })
+                .collect();
+            let arches: Vec<&ArchDesc> =
+                self.compilers.iter().map(|c| &c.accel.arch).collect();
+            let compilers = &self.compilers;
+            let gs = plan_residency(&arches, layer_scheds, &edges, |t, gemm, rc| {
+                compilers[t].select_schedule_constrained(gemm, rc, fps[t])
+            })?;
+            stats.resident_edges = gs.resident.len();
+            notes.push(format!(
+                "{} edge(s) considered, {} resident (~{} DRAM round-trip cycle(s) \
+                 elided), {} constrained search(es)",
+                edges.len(),
+                gs.resident.len(),
+                gs.saved_cycles(),
+                gs.searches
+            ));
+            notes.extend(gs.notes.iter().cloned());
+            for (li, &id) in order.iter().enumerate() {
+                let pl = plans[id].as_mut().expect("accel layer has a plan");
+                pl.schedule = gs.layers[li].schedule.clone();
+                pl.profiled_cycles = gs.layers[li].profiled_cycles;
+                node_resid[id] = gs.residency[li];
+            }
+        } else {
+            notes.push("cross-layer pass disabled".to_string());
+        }
+        self.finish_stage("crosslayer", t0, notes);
+
+        // --- Stage 5: mapping (apply TIR schedules) ----------------------
         let t0 = Instant::now();
         let mut lowered: Vec<Option<TirFunc>> = Vec::new();
         lowered.resize_with(g.nodes.len(), || None);
@@ -350,7 +497,7 @@ impl<'a> CompilerSession<'a> {
         }
         self.finish_stage("mapping", t0, vec![format!("{mapped} TIR function(s) scheduled")]);
 
-        // --- Stage 5: codegen (allocate + emit) --------------------------
+        // --- Stage 6: codegen (allocate + emit) --------------------------
         let t0 = Instant::now();
         let mut prog = Program::new("deployment");
         let region = allocate_regions(g, &mut prog)?;
@@ -375,8 +522,15 @@ impl<'a> CompilerSession<'a> {
                         bias: region[n.inputs[2]],
                         out: region[n.id],
                     };
-                    generate(accel, scheduled, &plan.schedule, &bufs, &mut prog)
-                        .with_context(|| format!("codegen for layer '{}'", n.name))?;
+                    generate_resident(
+                        accel,
+                        scheduled,
+                        &plan.schedule,
+                        &bufs,
+                        &node_resid[n.id],
+                        &mut prog,
+                    )
+                    .with_context(|| format!("codegen for layer '{}'", n.name))?;
                     // Drain before anything consumes this layer's DRAM
                     // output (the timing model tracks on-chip hazards only).
                     prog.push(Instr::Fence);
@@ -421,10 +575,21 @@ impl<'a> CompilerSession<'a> {
         }
         self.finish_stage("codegen", t0, notes);
 
-        // --- Stage 6: link (bind I/O, wrap the deployment) ---------------
+        // --- Stage 7: link (bind I/O, wrap the deployment) ---------------
         let t0 = Instant::now();
         let in_node = g.node(g.inputs[0]);
         let out_node = g.node(g.outputs[0]);
+        let boundaries: Vec<LayerBoundary> = pg
+            .boundaries
+            .iter()
+            .map(|b| LayerBoundary {
+                layer: pg.graph.node(b.node).name.clone(),
+                from: self.compilers[b.from].accel.name.clone(),
+                to: self.compilers[b.to].accel.name.clone(),
+                penalty: b.penalty,
+                taken: b.taken,
+            })
+            .collect();
         let deployment = MultiDeployment {
             targets: self.compilers.iter().map(|c| c.accel.clone()).collect(),
             input_offset: region[in_node.id],
@@ -435,6 +600,7 @@ impl<'a> CompilerSession<'a> {
             segments,
             graph: pg.graph,
             assignments,
+            boundaries,
         };
         self.finish_stage(
             "link",
@@ -608,7 +774,7 @@ mod tests {
         let names: Vec<&str> = out.stages.iter().map(|s| s.name).collect();
         assert_eq!(
             names,
-            ["frontend", "partition", "schedule", "mapping", "codegen", "link"]
+            ["frontend", "partition", "schedule", "crosslayer", "mapping", "codegen", "link"]
         );
         for s in &out.stages {
             assert!(!s.notes.is_empty(), "stage {} has no diagnostics", s.name);

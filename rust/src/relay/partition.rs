@@ -40,6 +40,24 @@ pub enum Target {
     None,
 }
 
+/// One evaluated target-switch boundary: placing `node` on `to` while its
+/// direct producer sits on `from` forces the activation through DRAM
+/// (store by `from`, reload by `to`) — a round-trip same-target placement
+/// could have elided via cross-layer residency.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BoundaryEval {
+    /// The consumer node whose placement was evaluated.
+    pub node: NodeId,
+    /// Target its direct producer was assigned to.
+    pub from: usize,
+    /// Candidate target evaluated for the consumer.
+    pub to: usize,
+    /// Switch penalty charged to the candidate, in cycles.
+    pub penalty: u64,
+    /// Whether this candidate won the placement (the penalty was paid).
+    pub taken: bool,
+}
+
 /// A partitioned graph: the (unmodified) graph plus per-node targets and
 /// the list of accelerator regions (maximal runs of accel nodes on the
 /// same target, in topological order).
@@ -55,8 +73,14 @@ pub struct PartitionedGraph {
     pub accel_of: Vec<Option<usize>>,
     /// Cost of the chosen target per node, when the partitioner evaluated
     /// one (cost-driven [`partition_multi`] only; `None` from
-    /// [`partition`] and for host/no-work nodes).
+    /// [`partition`] and for host/no-work nodes). Excludes any switch
+    /// penalty — see [`PartitionedGraph::boundaries`].
     pub costs: Vec<Option<u64>>,
+    /// Every cross-target boundary the cost-driven partitioner evaluated
+    /// (empty from single-target [`partition`]): what switching away from
+    /// the producer's target would cost per candidate, and whether the
+    /// switch was actually taken.
+    pub boundaries: Vec<BoundaryEval>,
     /// Maximal topological runs of accel nodes on the same target
     /// (constants between them do not break a region).
     pub regions: Vec<Vec<NodeId>>,
@@ -127,7 +151,14 @@ pub fn partition(g: &Graph, supported: &BTreeSet<String>) -> Result<PartitionedG
     }
     let regions = build_regions(g, &targets, &accel_of);
     let costs = vec![None; g.nodes.len()];
-    let pg = PartitionedGraph { graph: g.clone(), targets, accel_of, costs, regions };
+    let pg = PartitionedGraph {
+        graph: g.clone(),
+        targets,
+        accel_of,
+        costs,
+        boundaries: Vec::new(),
+        regions,
+    };
     ensure!(
         pg.targets.len() == g.nodes.len(),
         "partition must cover every node"
@@ -145,25 +176,42 @@ pub fn partition(g: &Graph, supported: &BTreeSet<String>) -> Result<PartitionedG
 /// `Ok(None)` when the candidate turns out to be infeasible for this
 /// particular node (op support is name-granular, feasibility is
 /// shape-level: e.g. memories too small for the layer's minimal tile);
-/// infeasible candidates are simply skipped. The node is assigned to the
-/// cheapest feasible candidate; ties break toward the lower index, so the
-/// assignment is deterministic. A node that no candidate supports (or
-/// that every candidate reports infeasible) falls back to
-/// [`Target::Host`]. An `Err` from `cost` aborts the partition.
+/// infeasible candidates are simply skipped.
+///
+/// `boundary(node, from, to)` prices a target *switch*: when `node`'s
+/// direct data producer (its first input) was already placed on
+/// accelerator `from`, every candidate `to != from` is additionally
+/// charged the returned penalty — the DRAM round-trip the switch forces
+/// on the activation, which same-target placement could elide via
+/// cross-layer residency (previously switching was free in the
+/// objective). Each evaluated boundary is recorded in
+/// [`PartitionedGraph::boundaries`].
+///
+/// The node is assigned to the candidate with the cheapest
+/// `cost + penalty`; ties break toward the lower index, so the assignment
+/// is deterministic. A node that no candidate supports (or that every
+/// candidate reports infeasible) falls back to [`Target::Host`]. An `Err`
+/// from `cost` aborts the partition.
 pub fn partition_multi(
     g: &Graph,
     supported: &[BTreeSet<String>],
     mut cost: impl FnMut(&Node, usize) -> Result<Option<u64>>,
+    mut boundary: impl FnMut(&Node, usize, usize) -> u64,
 ) -> Result<PartitionedGraph> {
     ensure!(!supported.is_empty(), "need at least one candidate accelerator");
     let mut targets = Vec::with_capacity(g.nodes.len());
-    let mut accel_of = Vec::with_capacity(g.nodes.len());
+    let mut accel_of: Vec<Option<usize>> = Vec::with_capacity(g.nodes.len());
     let mut costs = Vec::with_capacity(g.nodes.len());
+    let mut boundaries = Vec::new();
     for n in &g.nodes {
         let (t, chosen, c) = match &n.op {
             Op::Input | Op::Constant(_) => (Target::None, None, None),
             op => {
-                let mut best: Option<(usize, u64)> = None;
+                // Where the node's activation comes from (nodes are in
+                // topological order, so the producer is already placed).
+                let producer_target =
+                    n.inputs.first().and_then(|&i| accel_of.get(i).copied().flatten());
+                let mut best: Option<(usize, u64, u64)> = None;
                 for (idx, s) in supported.iter().enumerate() {
                     if !s.contains(op.name()) {
                         continue;
@@ -171,13 +219,35 @@ pub fn partition_multi(
                     let Some(c) = cost(n, idx)? else {
                         continue; // supported by name, infeasible for this node
                     };
+                    let penalty = match producer_target {
+                        Some(from) if from != idx => {
+                            let p = boundary(n, from, idx);
+                            boundaries.push(BoundaryEval {
+                                node: n.id,
+                                from,
+                                to: idx,
+                                penalty: p,
+                                taken: false, // fixed up below
+                            });
+                            p
+                        }
+                        _ => 0,
+                    };
                     // Strict `<` keeps the lowest index on equal cost.
-                    if best.map(|(_, bc)| c < bc).unwrap_or(true) {
-                        best = Some((idx, c));
+                    if best.map(|(_, _, bc)| c + penalty < bc).unwrap_or(true) {
+                        best = Some((idx, c, c + penalty));
                     }
                 }
                 match best {
-                    Some((idx, c)) => (Target::Accel, Some(idx), Some(c)),
+                    Some((idx, c, _)) => {
+                        for b in boundaries.iter_mut().rev() {
+                            if b.node != n.id {
+                                break;
+                            }
+                            b.taken = b.to == idx;
+                        }
+                        (Target::Accel, Some(idx), Some(c))
+                    }
                     None => (Target::Host, None, None),
                 }
             }
@@ -187,7 +257,7 @@ pub fn partition_multi(
         costs.push(c);
     }
     let regions = build_regions(g, &targets, &accel_of);
-    Ok(PartitionedGraph { graph: g.clone(), targets, accel_of, costs, regions })
+    Ok(PartitionedGraph { graph: g.clone(), targets, accel_of, costs, boundaries, regions })
 }
 
 #[cfg(test)]
@@ -275,15 +345,20 @@ mod tests {
         let (g, l1, l2) = two_layer_graph();
         let sets = vec![supported(), supported()];
         // Target 0 cheaper for l1, target 1 cheaper for l2.
-        let pg = partition_multi(&g, &sets, |n, t| {
-            Ok(Some(match (n.name.as_str(), t) {
-                ("l1", 0) => 10,
-                ("l1", 1) => 20,
-                ("l2", 0) => 30,
-                ("l2", 1) => 5,
-                _ => unreachable!(),
-            }))
-        })
+        let pg = partition_multi(
+            &g,
+            &sets,
+            |n, t| {
+                Ok(Some(match (n.name.as_str(), t) {
+                    ("l1", 0) => 10,
+                    ("l1", 1) => 20,
+                    ("l2", 0) => 30,
+                    ("l2", 1) => 5,
+                    _ => unreachable!(),
+                }))
+            },
+            |_, _, _| 0,
+        )
         .unwrap();
         assert_eq!(pg.accel_of[l1], Some(0));
         assert_eq!(pg.accel_of[l2], Some(1));
@@ -297,7 +372,7 @@ mod tests {
     fn multi_tie_breaks_toward_lower_index() {
         let (g, l1, l2) = two_layer_graph();
         let sets = vec![supported(), supported(), supported()];
-        let pg = partition_multi(&g, &sets, |_, _| Ok(Some(42))).unwrap();
+        let pg = partition_multi(&g, &sets, |_, _| Ok(Some(42)), |_, _, _| 0).unwrap();
         assert_eq!(pg.accel_of[l1], Some(0));
         assert_eq!(pg.accel_of[l2], Some(0));
         assert_eq!(pg.regions.len(), 1, "same target keeps one region");
@@ -314,10 +389,15 @@ mod tests {
         // nothing at all.
         let sets = vec![supported(), BTreeSet::new()];
         let mut queried = Vec::new();
-        let pg = partition_multi(&g, &sets, |n, t| {
-            queried.push((n.name.clone(), t));
-            Ok(Some(7))
-        })
+        let pg = partition_multi(
+            &g,
+            &sets,
+            |n, t| {
+                queried.push((n.name.clone(), t));
+                Ok(Some(7))
+            },
+            |_, _, _| 0,
+        )
         .unwrap();
         assert_eq!(pg.targets[t], Target::Host);
         assert_eq!(pg.accel_of[t], None);
@@ -333,20 +413,26 @@ mod tests {
         // Candidate 0 is cheaper but infeasible for l2 (shape-level):
         // l2 must land on candidate 1; a node infeasible everywhere
         // falls back to the host.
-        let pg = partition_multi(&g, &sets, |n, t| {
-            Ok(match (n.name.as_str(), t) {
-                ("l1", 0) => Some(1),
-                ("l1", 1) => Some(2),
-                ("l2", 0) => None,
-                ("l2", 1) => Some(9),
-                _ => unreachable!(),
-            })
-        })
+        let pg = partition_multi(
+            &g,
+            &sets,
+            |n, t| {
+                Ok(match (n.name.as_str(), t) {
+                    ("l1", 0) => Some(1),
+                    ("l1", 1) => Some(2),
+                    ("l2", 0) => None,
+                    ("l2", 1) => Some(9),
+                    _ => unreachable!(),
+                })
+            },
+            |_, _, _| 0,
+        )
         .unwrap();
         assert_eq!(pg.accel_of[l1], Some(0));
         assert_eq!(pg.accel_of[l2], Some(1));
 
-        let all_infeasible = partition_multi(&g, &sets, |_, _| Ok(None)).unwrap();
+        let all_infeasible =
+            partition_multi(&g, &sets, |_, _| Ok(None), |_, _, _| 0).unwrap();
         assert_eq!(all_infeasible.targets[l1], Target::Host);
         assert_eq!(all_infeasible.targets[l2], Target::Host);
         assert_eq!(all_infeasible.accel_nodes(), 0);
@@ -355,6 +441,6 @@ mod tests {
     #[test]
     fn multi_with_no_candidates_rejected() {
         let (g, _, _) = two_layer_graph();
-        assert!(partition_multi(&g, &[], |_, _| Ok(None)).is_err());
+        assert!(partition_multi(&g, &[], |_, _| Ok(None), |_, _, _| 0).is_err());
     }
 }

@@ -53,8 +53,18 @@ use crate::accel::AccelDesc;
 use crate::arch::ArchDesc;
 use crate::workload::Gemm;
 
+use super::graph::ResidencyConstraint;
 use super::sweep::SweepOptions;
 use super::Schedule;
+
+/// Wall-clock seconds since the Unix epoch — the last-served stamp the
+/// persisted artifact records for LRU trimming (`tvm-accel cache gc`).
+fn now_secs() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}
 
 fn hash_str(s: &str) -> u64 {
     let mut h = std::collections::hash_map::DefaultHasher::new();
@@ -135,6 +145,19 @@ pub struct CacheKey {
     pub gemm: Gemm,
     /// The search options used for the selection.
     pub search: SearchKey,
+    /// The cross-layer residency constraint the search ran under
+    /// ([`ResidencyConstraint::NONE`] for the ordinary per-layer search).
+    /// Boundary-constrained selections are memoized — and persisted —
+    /// under their own keys, so re-compiling a graph with resident edges
+    /// is as warm as re-compiling one without.
+    pub residency: ResidencyConstraint,
+}
+
+impl CacheKey {
+    /// The key of an ordinary (unconstrained) per-layer selection.
+    pub fn unconstrained(arch: u64, gemm: Gemm, search: SearchKey) -> CacheKey {
+        CacheKey { arch, gemm, search, residency: ResidencyConstraint::NONE }
+    }
 }
 
 /// A cached selection: the winning schedule and, when profiling ran, its
@@ -176,6 +199,10 @@ pub enum SearchGate {
 #[derive(Debug, Default)]
 pub struct ScheduleCache {
     map: Mutex<HashMap<CacheKey, CachedSelection>>,
+    /// Last-served wall-clock stamp per key (updated on every hit and on
+    /// publish/insert), persisted for LRU trimming. Kept beside `map`
+    /// rather than inside the values so selections stay pure data.
+    stamps: Mutex<HashMap<CacheKey, u64>>,
     /// Keys whose search is currently running somewhere (single-flight
     /// gate); waiters block on `inflight_cv`.
     inflight: Mutex<HashSet<CacheKey>>,
@@ -190,11 +217,24 @@ impl ScheduleCache {
         ScheduleCache::default()
     }
 
-    /// Look up a selection, counting the hit or miss.
+    /// Refresh `key`'s last-served stamp. This costs a second (uncontended
+    /// in practice) lock plus a clock read per hit; keeping the stamps out
+    /// of `map` keeps selections pure data for snapshot/persist. Fold the
+    /// stamp into the map entries if hit-path contention ever shows up in
+    /// profiles.
+    fn touch(&self, key: &CacheKey) {
+        self.stamps.lock().expect("schedule cache poisoned").insert(*key, now_secs());
+    }
+
+    /// Look up a selection, counting the hit or miss (a hit refreshes the
+    /// key's last-served stamp).
     pub fn get(&self, key: &CacheKey) -> Option<CachedSelection> {
         let found = self.map.lock().expect("schedule cache poisoned").get(key).cloned();
         match &found {
-            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
+            Some(_) => {
+                self.touch(key);
+                self.hits.fetch_add(1, Ordering::Relaxed)
+            }
             None => self.misses.fetch_add(1, Ordering::Relaxed),
         };
         found
@@ -203,6 +243,7 @@ impl ScheduleCache {
     /// Store a selection under `key` (overwrites an existing entry).
     pub fn insert(&self, key: CacheKey, value: CachedSelection) {
         self.map.lock().expect("schedule cache poisoned").insert(key, value);
+        self.touch(&key);
     }
 
     /// Whether `key` is stored, *without* touching the hit/miss counters
@@ -226,6 +267,7 @@ impl ScheduleCache {
             let hit =
                 self.map.lock().expect("schedule cache poisoned").get(key).cloned();
             if let Some(hit) = hit {
+                self.touch(key);
                 self.hits.fetch_add(1, Ordering::Relaxed);
                 return SearchGate::Ready(hit);
             }
@@ -243,6 +285,7 @@ impl ScheduleCache {
     /// thread blocked in [`ScheduleCache::begin`] on the same key.
     pub fn publish(&self, key: CacheKey, value: CachedSelection) {
         self.map.lock().expect("schedule cache poisoned").insert(key, value);
+        self.touch(&key);
         self.inflight.lock().expect("schedule cache poisoned").remove(&key);
         self.inflight_cv.notify_all();
     }
@@ -258,13 +301,21 @@ impl ScheduleCache {
     /// Clone out every stored entry, sorted by key, so persisted cache
     /// files are deterministic for identical contents.
     pub fn snapshot(&self) -> Vec<(CacheKey, CachedSelection)> {
-        let mut out: Vec<(CacheKey, CachedSelection)> = self
-            .map
-            .lock()
-            .expect("schedule cache poisoned")
+        self.snapshot_stamped().into_iter().map(|(k, v, _)| (k, v)).collect()
+    }
+
+    /// [`ScheduleCache::snapshot`] with each entry's last-served stamp
+    /// (0 when the entry was never served or stamped).
+    pub fn snapshot_stamped(&self) -> Vec<(CacheKey, CachedSelection, u64)> {
+        // Lock order: map before stamps, matching `hydrate_stamped`.
+        let map = self.map.lock().expect("schedule cache poisoned");
+        let stamps = self.stamps.lock().expect("schedule cache poisoned");
+        let mut out: Vec<(CacheKey, CachedSelection, u64)> = map
             .iter()
-            .map(|(k, v)| (*k, v.clone()))
+            .map(|(k, v)| (*k, v.clone(), stamps.get(k).copied().unwrap_or(0)))
             .collect();
+        drop(stamps);
+        drop(map);
         out.sort_by(|a, b| a.0.cmp(&b.0));
         out
     }
@@ -276,10 +327,23 @@ impl ScheduleCache {
         &self,
         entries: I,
     ) -> usize {
+        self.hydrate_stamped(entries.into_iter().map(|(k, v)| (k, v, 0)))
+    }
+
+    /// [`ScheduleCache::hydrate`] preserving each entry's persisted
+    /// last-served stamp (so LRU age survives process restarts).
+    pub fn hydrate_stamped<I: IntoIterator<Item = (CacheKey, CachedSelection, u64)>>(
+        &self,
+        entries: I,
+    ) -> usize {
         let mut map = self.map.lock().expect("schedule cache poisoned");
+        let mut stamps = self.stamps.lock().expect("schedule cache poisoned");
         let mut n = 0;
-        for (k, v) in entries {
+        for (k, v, stamp) in entries {
             map.insert(k, v);
+            if stamp > 0 {
+                stamps.insert(k, stamp);
+            }
             n += 1;
         }
         n
@@ -298,6 +362,7 @@ impl ScheduleCache {
     /// Drop every stored selection (counters are kept).
     pub fn clear(&self) {
         self.map.lock().expect("schedule cache poisoned").clear();
+        self.stamps.lock().expect("schedule cache poisoned").clear();
     }
 
     /// Snapshot of the hit/miss/entry counters.
@@ -331,7 +396,7 @@ mod tests {
     }
 
     fn key(arch: u64, g: Gemm) -> CacheKey {
-        CacheKey { arch, gemm: g, search: SearchKey::new(&SweepOptions::default(), 6) }
+        CacheKey::unconstrained(arch, g, SearchKey::new(&SweepOptions::default(), 6))
     }
 
     #[test]
@@ -479,6 +544,49 @@ mod tests {
         assert_eq!(fresh.snapshot(), snap);
         let stats = fresh.stats();
         assert_eq!((stats.hits, stats.misses), (0, 0), "hydration is not a lookup");
+    }
+
+    #[test]
+    fn residency_constraint_distinguishes_keys() {
+        use crate::scheduler::graph::ResidencyConstraint;
+        let cache = ScheduleCache::new();
+        let g = Gemm::new(16, 16, 16);
+        let unconstrained = key(5, g);
+        cache.insert(
+            unconstrained,
+            CachedSelection { schedule: dummy_schedule(g), profiled_cycles: Some(1) },
+        );
+        let mut constrained = unconstrained;
+        constrained.residency =
+            ResidencyConstraint { in_block: 16, out_block: 0, reserved_rows: 8 };
+        assert!(cache.get(&constrained).is_none(), "constraint must be part of the key");
+        assert!(cache.get(&unconstrained).is_some());
+    }
+
+    #[test]
+    fn stamps_follow_hits_and_survive_stamped_hydration() {
+        let cache = ScheduleCache::new();
+        let g = Gemm::new(8, 8, 8);
+        cache.insert(
+            key(1, g),
+            CachedSelection { schedule: dummy_schedule(g), profiled_cycles: None },
+        );
+        let snap = cache.snapshot_stamped();
+        assert_eq!(snap.len(), 1);
+        assert!(snap[0].2 > 0, "insert must stamp the entry");
+        // Hydrating with explicit stamps preserves them; plain hydration
+        // leaves entries unstamped (age unknown).
+        let aged: Vec<_> =
+            snap.iter().map(|(k, v, _)| (*k, v.clone(), 12345u64)).collect();
+        let fresh = ScheduleCache::new();
+        fresh.hydrate_stamped(aged);
+        assert_eq!(fresh.snapshot_stamped()[0].2, 12345);
+        let cold = ScheduleCache::new();
+        cold.hydrate(cache.snapshot());
+        assert_eq!(cold.snapshot_stamped()[0].2, 0);
+        // Serving the entry refreshes the stamp.
+        assert!(cold.get(&key(1, g)).is_some());
+        assert!(cold.snapshot_stamped()[0].2 > 0);
     }
 
     #[test]

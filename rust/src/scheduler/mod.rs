@@ -28,6 +28,7 @@
 #![warn(missing_docs)]
 
 pub mod cache;
+pub mod graph;
 pub mod persist;
 pub mod solver;
 pub mod sweep;

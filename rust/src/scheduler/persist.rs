@@ -11,8 +11,12 @@
 //! entry*  payload_len u32 | fnv1a64(payload) u64 | payload
 //! ```
 //!
-//! Every payload encodes one `(CacheKey, CachedSelection)` pair with
-//! little-endian fixed-width fields. Robustness rules, in order:
+//! Every payload encodes one `(CacheKey, CachedSelection)` pair — since
+//! format 2 including the key's cross-layer [`ResidencyConstraint`] and a
+//! trailing *last-served* wall-clock stamp, which [`trim_file`] uses for
+//! LRU eviction (`tvm-accel cache gc --max-entries N`). Format-1 files
+//! (and any other version) simply load cold. Fields are little-endian and
+//! fixed-width. Robustness rules, in order:
 //!
 //! * **missing file / bad magic / other format version** → empty load
 //!   (cold cache), never an error;
@@ -36,14 +40,16 @@ use crate::arch::Dataflow;
 use crate::workload::{Dim, Gemm};
 
 use super::cache::{CacheKey, CachedSelection, ScheduleCache, SearchKey};
+use super::graph::ResidencyConstraint;
 use super::{Estimate, Schedule};
 
 /// File magic ("TVm-Accel Schedules").
 pub const MAGIC: &[u8; 4] = b"TVAS";
 
 /// Current format version. Bumping it invalidates every existing artifact
-/// (old files load as empty, old readers skip new files).
-pub const FORMAT_VERSION: u32 = 1;
+/// (old files load as empty, old readers skip new files). Version 2 added
+/// the residency-constraint key half and the last-served LRU stamp.
+pub const FORMAT_VERSION: u32 = 2;
 
 /// Upper bound on one entry's payload (an entry is a few hundred bytes;
 /// anything larger is a corrupted length prefix).
@@ -78,6 +84,10 @@ fn put_u64(out: &mut Vec<u8>, v: u64) {
     out.extend_from_slice(&v.to_le_bytes());
 }
 
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
 fn put_usize(out: &mut Vec<u8>, v: usize) {
     put_u64(out, v as u64);
 }
@@ -93,7 +103,7 @@ fn put_gemm(out: &mut Vec<u8>, g: &Gemm) {
 }
 
 /// Serialize one entry into its payload bytes.
-fn encode_entry(key: &CacheKey, sel: &CachedSelection) -> Vec<u8> {
+fn encode_entry(key: &CacheKey, sel: &CachedSelection, last_served: u64) -> Vec<u8> {
     let mut p = Vec::with_capacity(256);
     // Key.
     put_u64(&mut p, key.arch);
@@ -103,6 +113,9 @@ fn encode_entry(key: &CacheKey, sel: &CachedSelection) -> Vec<u8> {
     p.push(key.search.uneven_mapping as u8);
     p.push(key.search.double_buffering as u8);
     put_usize(&mut p, key.search.profile_candidates);
+    put_u32(&mut p, key.residency.in_block);
+    put_u32(&mut p, key.residency.out_block);
+    put_u32(&mut p, key.residency.reserved_rows);
     // Measured cycles.
     match sel.profiled_cycles {
         Some(c) => {
@@ -142,6 +155,8 @@ fn encode_entry(key: &CacheKey, sel: &CachedSelection) -> Vec<u8> {
         put_f64(&mut p, v);
     }
     put_f64(&mut p, s.est.utilization);
+    // LRU stamp (trailing so the schedule decode stays contiguous).
+    put_u64(&mut p, last_served);
     p
 }
 
@@ -178,6 +193,10 @@ impl<'a> Cursor<'a> {
         Some(u64::from_le_bytes(self.take(8)?.try_into().ok()?))
     }
 
+    fn u32(&mut self) -> Option<u32> {
+        Some(u32::from_le_bytes(self.take(4)?.try_into().ok()?))
+    }
+
     fn usize(&mut self) -> Option<usize> {
         usize::try_from(self.u64()?).ok()
     }
@@ -204,7 +223,7 @@ impl<'a> Cursor<'a> {
 }
 
 /// Decode one payload; `None` on any structural problem.
-fn decode_entry(payload: &[u8]) -> Option<(CacheKey, CachedSelection)> {
+fn decode_entry(payload: &[u8]) -> Option<(CacheKey, CachedSelection, u64)> {
     let mut c = Cursor { buf: payload, pos: 0 };
     let key = CacheKey {
         arch: c.u64()?,
@@ -215,6 +234,11 @@ fn decode_entry(payload: &[u8]) -> Option<(CacheKey, CachedSelection)> {
             uneven_mapping: c.bool()?,
             double_buffering: c.bool()?,
             profile_candidates: c.usize()?,
+        },
+        residency: ResidencyConstraint {
+            in_block: c.u32()?,
+            out_block: c.u32()?,
+            reserved_rows: c.u32()?,
         },
     };
     let has_cycles = c.bool()?;
@@ -241,6 +265,7 @@ fn decode_entry(payload: &[u8]) -> Option<(CacheKey, CachedSelection)> {
         bytes: c.f64x3()?,
         utilization: c.f64()?,
     };
+    let last_served = c.u64()?;
     if c.pos != payload.len() {
         return None; // trailing bytes: treat as corruption
     }
@@ -260,19 +285,20 @@ fn decode_entry(payload: &[u8]) -> Option<(CacheKey, CachedSelection)> {
             schedule,
             profiled_cycles: if has_cycles { Some(cycles) } else { None },
         },
+        last_served,
     ))
 }
 
 // --- file I/O ---------------------------------------------------------
 
-/// Serialize `entries` (as produced by [`ScheduleCache::snapshot`]) into
-/// the artifact byte format.
-pub fn encode(entries: &[(CacheKey, CachedSelection)]) -> Vec<u8> {
-    let mut out = Vec::with_capacity(8 + entries.len() * 280);
+/// Serialize stamped `entries` (as produced by
+/// [`ScheduleCache::snapshot_stamped`]) into the artifact byte format.
+pub fn encode(entries: &[(CacheKey, CachedSelection, u64)]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8 + entries.len() * 300);
     out.extend_from_slice(MAGIC);
     out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
-    for (key, sel) in entries {
-        let payload = encode_entry(key, sel);
+    for (key, sel, stamp) in entries {
+        let payload = encode_entry(key, sel, *stamp);
         out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
         out.extend_from_slice(&fnv1a64(&payload).to_le_bytes());
         out.extend_from_slice(&payload);
@@ -282,7 +308,7 @@ pub fn encode(entries: &[(CacheKey, CachedSelection)]) -> Vec<u8> {
 
 /// Decode an artifact byte buffer, skipping what cannot be read (see the
 /// module docs for the exact tolerance rules).
-pub fn decode(buf: &[u8]) -> (Vec<(CacheKey, CachedSelection)>, LoadReport) {
+pub fn decode(buf: &[u8]) -> (Vec<(CacheKey, CachedSelection, u64)>, LoadReport) {
     let mut rep = LoadReport::default();
     let mut entries = Vec::new();
     if buf.len() < 8 || &buf[0..4] != MAGIC {
@@ -324,7 +350,7 @@ pub fn decode(buf: &[u8]) -> (Vec<(CacheKey, CachedSelection)>, LoadReport) {
 }
 
 /// Load an artifact file. Never fails — see the module docs.
-pub fn load_file(path: &Path) -> (Vec<(CacheKey, CachedSelection)>, LoadReport) {
+pub fn load_file(path: &Path) -> (Vec<(CacheKey, CachedSelection, u64)>, LoadReport) {
     match std::fs::read(path) {
         Ok(buf) => decode(&buf),
         Err(_) => (Vec::new(), LoadReport::default()),
@@ -332,29 +358,17 @@ pub fn load_file(path: &Path) -> (Vec<(CacheKey, CachedSelection)>, LoadReport) 
 }
 
 /// Hydrate `cache` from an artifact file (missing/corrupt files hydrate
-/// zero entries). Counters are untouched.
+/// zero entries), preserving persisted last-served stamps. Counters are
+/// untouched.
 pub fn hydrate_from_file(cache: &ScheduleCache, path: &Path) -> LoadReport {
     let (entries, rep) = load_file(path);
-    cache.hydrate(entries);
+    cache.hydrate_stamped(entries);
     rep
 }
 
-/// Atomically write `cache`'s entries to `path` (temp file in the same
-/// directory + rename), **merged over** whatever the file already holds:
-/// the atomic rename prevents torn files, but without the merge two
-/// processes sharing one artifact would silently discard each other's
-/// learning (last writer wins). This cache's entries take precedence on
-/// key conflicts. Parent directories are created as needed. Returns the
-/// number of entries written.
-pub fn save_to_file(cache: &ScheduleCache, path: &Path) -> Result<usize> {
-    let (disk, _) = load_file(path);
-    let mut merged: std::collections::BTreeMap<CacheKey, CachedSelection> =
-        disk.into_iter().collect();
-    for (k, v) in cache.snapshot() {
-        merged.insert(k, v);
-    }
-    let entries: Vec<(CacheKey, CachedSelection)> = merged.into_iter().collect();
-    let bytes = encode(&entries);
+/// Atomically replace `path` with `bytes` (temp file in the same
+/// directory + rename). Parent directories are created as needed.
+fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
     if let Some(parent) = path.parent() {
         if !parent.as_os_str().is_empty() {
             std::fs::create_dir_all(parent)
@@ -362,12 +376,69 @@ pub fn save_to_file(cache: &ScheduleCache, path: &Path) -> Result<usize> {
         }
     }
     let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
-    std::fs::write(&tmp, &bytes)
+    std::fs::write(&tmp, bytes)
         .with_context(|| format!("writing cache temp file {}", tmp.display()))?;
-    std::fs::rename(&tmp, path).with_context(|| {
-        format!("renaming {} over {}", tmp.display(), path.display())
-    })?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} over {}", tmp.display(), path.display()))
+}
+
+/// Atomically write `cache`'s entries to `path` (temp file in the same
+/// directory + rename), **merged over** whatever the file already holds:
+/// the atomic rename prevents torn files, but without the merge two
+/// processes sharing one artifact would silently discard each other's
+/// learning (last writer wins). This cache's entries take precedence on
+/// key conflicts; last-served stamps merge to the freshest of the two
+/// sides. Returns the number of entries written.
+pub fn save_to_file(cache: &ScheduleCache, path: &Path) -> Result<usize> {
+    let (disk, _) = load_file(path);
+    let mut merged: std::collections::BTreeMap<CacheKey, (CachedSelection, u64)> =
+        disk.into_iter().map(|(k, v, s)| (k, (v, s))).collect();
+    for (k, v, stamp) in cache.snapshot_stamped() {
+        let stamp = match merged.get(&k) {
+            Some((_, disk_stamp)) => stamp.max(*disk_stamp),
+            None => stamp,
+        };
+        merged.insert(k, (v, stamp));
+    }
+    let entries: Vec<(CacheKey, CachedSelection, u64)> =
+        merged.into_iter().map(|(k, (v, s))| (k, v, s)).collect();
+    write_atomic(path, &encode(&entries))?;
     Ok(entries.len())
+}
+
+/// What an LRU trim did.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TrimReport {
+    /// Entries kept in the rewritten artifact.
+    pub kept: usize,
+    /// Entries evicted (least recently served first).
+    pub dropped: usize,
+}
+
+/// Trim the artifact at `path` to at most `max_entries` selections,
+/// evicting least-recently-served entries first (ties break toward the
+/// smaller key, so trimming is deterministic). The survivors are written
+/// back atomically in key order; a file already within the bound is left
+/// untouched.
+///
+/// This trims the artifact *at rest*: a live process that hydrated the
+/// file before the trim still holds every entry in memory, and its next
+/// [`save_to_file`] merges them back. Run `cache gc` against artifacts
+/// no server currently holds hydrated (or restart the server afterward);
+/// a save-side bound is a ROADMAP follow-on.
+pub fn trim_file(path: &Path, max_entries: usize) -> Result<TrimReport> {
+    let (mut entries, _) = load_file(path);
+    if entries.len() <= max_entries {
+        return Ok(TrimReport { kept: entries.len(), dropped: 0 });
+    }
+    // Most recently served first; unstamped (never-served) entries age out
+    // before anything with a stamp.
+    entries.sort_by(|a, b| b.2.cmp(&a.2).then_with(|| a.0.cmp(&b.0)));
+    let dropped = entries.len() - max_entries;
+    entries.truncate(max_entries);
+    entries.sort_by(|a, b| a.0.cmp(&b.0));
+    write_atomic(path, &encode(&entries))?;
+    Ok(TrimReport { kept: entries.len(), dropped })
 }
 
 #[cfg(test)]
@@ -375,7 +446,11 @@ mod tests {
     use super::*;
     use crate::scheduler::sweep::SweepOptions;
 
-    fn sample_entry(arch: u64, g: Gemm, cycles: Option<u64>) -> (CacheKey, CachedSelection) {
+    fn sample_entry(
+        arch: u64,
+        g: Gemm,
+        cycles: Option<u64>,
+    ) -> (CacheKey, CachedSelection, u64) {
         let schedule = Schedule {
             workload: g,
             dataflow: Dataflow::OutputStationary,
@@ -397,18 +472,24 @@ mod tests {
             arch,
             gemm: g,
             search: SearchKey::new(&SweepOptions::default(), 6),
+            residency: ResidencyConstraint {
+                in_block: (arch % 3) as u32 * 8,
+                out_block: 16,
+                reserved_rows: 40,
+            },
         };
-        (key, CachedSelection { schedule, profiled_cycles: cycles })
+        (key, CachedSelection { schedule, profiled_cycles: cycles }, 1000 + arch)
     }
 
     #[test]
     fn entry_payload_roundtrips_exactly() {
         for cycles in [Some(42u64), None] {
-            let (k, v) = sample_entry(0xdead_beef, Gemm::new(40, 16, 8), cycles);
-            let payload = encode_entry(&k, &v);
-            let (k2, v2) = decode_entry(&payload).expect("decodes");
+            let (k, v, stamp) = sample_entry(0xdead_beef, Gemm::new(40, 16, 8), cycles);
+            let payload = encode_entry(&k, &v, stamp);
+            let (k2, v2, s2) = decode_entry(&payload).expect("decodes");
             assert_eq!(k, k2);
             assert_eq!(v, v2);
+            assert_eq!(stamp, s2);
         }
     }
 
@@ -467,11 +548,12 @@ mod tests {
 
     #[test]
     fn bad_dataflow_or_dim_tag_rejected() {
-        let (k, v) = sample_entry(5, Gemm::new(4, 4, 4), None);
-        let mut payload = encode_entry(&k, &v);
-        // Dataflow byte sits right after key (8+24+8+8+1+1+8 = 58), the
-        // cycles flag+value (9) and the schedule workload (24): 58+9+24.
-        let df_at = 58 + 9 + 24;
+        let (k, v, stamp) = sample_entry(5, Gemm::new(4, 4, 4), None);
+        let mut payload = encode_entry(&k, &v, stamp);
+        // Dataflow byte sits right after the key (8+24+8+8+1+1+8 search
+        // fields + 12 residency = 70), the cycles flag+value (9) and the
+        // schedule workload (24): 70+9+24.
+        let df_at = 70 + 9 + 24;
         payload[df_at] = 9;
         assert!(decode_entry(&payload).is_none());
     }
@@ -486,16 +568,45 @@ mod tests {
         let file = dir.join("merge.bin");
         let _ = std::fs::remove_file(&file);
         let a = ScheduleCache::new();
-        let (kx, vx) = sample_entry(1, Gemm::new(4, 4, 4), Some(10));
+        let (kx, vx, _) = sample_entry(1, Gemm::new(4, 4, 4), Some(10));
         a.insert(kx, vx.clone());
         save_to_file(&a, &file).unwrap();
         let b = ScheduleCache::new();
-        let (ky, vy) = sample_entry(2, Gemm::new(8, 8, 8), None);
+        let (ky, vy, _) = sample_entry(2, Gemm::new(8, 8, 8), None);
         b.insert(ky, vy.clone());
         let written = save_to_file(&b, &file).unwrap();
         assert_eq!(written, 2, "merge-on-save must keep the other process's entry");
         let (entries, _) = load_file(&file);
-        assert_eq!(entries, vec![(kx, vx), (ky, vy)]);
+        let kv: Vec<(CacheKey, CachedSelection)> =
+            entries.into_iter().map(|(k, v, _)| (k, v)).collect();
+        assert_eq!(kv, vec![(kx, vx), (ky, vy)]);
+        let _ = std::fs::remove_file(&file);
+    }
+
+    #[test]
+    fn trim_evicts_least_recently_served_first() {
+        let dir =
+            std::env::temp_dir().join(format!("tvm-accel-trim-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let file = dir.join("trim.bin");
+        // Stamps 1001, 1002, 1003 (from sample_entry's 1000 + arch).
+        let entries = vec![
+            sample_entry(1, Gemm::new(4, 4, 4), Some(10)),
+            sample_entry(2, Gemm::new(8, 8, 8), Some(20)),
+            sample_entry(3, Gemm::new(16, 16, 16), Some(30)),
+        ];
+        write_atomic(&file, &encode(&entries)).unwrap();
+        let rep = trim_file(&file, 2).unwrap();
+        assert_eq!(rep, TrimReport { kept: 2, dropped: 1 });
+        let (left, _) = load_file(&file);
+        assert_eq!(left.len(), 2);
+        assert!(
+            left.iter().all(|(k, _, _)| k.arch != 1),
+            "the oldest-served entry must be evicted"
+        );
+        // Within the bound: untouched, zero drops.
+        let rep = trim_file(&file, 10).unwrap();
+        assert_eq!(rep, TrimReport { kept: 2, dropped: 0 });
         let _ = std::fs::remove_file(&file);
     }
 

@@ -113,6 +113,21 @@ impl Simulator {
         self.run_slice(prog, dram, 0..prog.items.len())
     }
 
+    /// [`Simulator::run`] with an input-region hint `(byte offset, bytes)`:
+    /// DMA loads sourced from that region before the first compute are
+    /// additionally reported as `input_stage_cycles` (the staging prefix a
+    /// double-buffered pipelined batch can overlap with the previous
+    /// inference — see `Deployment::run_batch`). Cycles and outputs are
+    /// unaffected by the hint.
+    pub fn run_hinted(
+        &self,
+        prog: &Program,
+        dram: &mut Dram,
+        input_region: Option<(u64, u64)>,
+    ) -> Result<RunReport> {
+        self.run_slice_hinted(prog, dram, 0..prog.items.len(), input_region)
+    }
+
     /// Execute one contiguous slice of `prog`'s items against `dram` with a
     /// fresh machine state (scratchpad/accumulator cleared, queues empty).
     ///
@@ -128,6 +143,18 @@ impl Simulator {
         prog: &Program,
         dram: &mut Dram,
         range: std::ops::Range<usize>,
+    ) -> Result<RunReport> {
+        self.run_slice_hinted(prog, dram, range, None)
+    }
+
+    /// [`Simulator::run_slice`] with the input-region hint of
+    /// [`Simulator::run_hinted`].
+    pub fn run_slice_hinted(
+        &self,
+        prog: &Program,
+        dram: &mut Dram,
+        range: std::ops::Range<usize>,
+        input_region: Option<(u64, u64)>,
     ) -> Result<RunReport> {
         ensure!(range.start <= range.end, "inverted item range {range:?}");
         ensure!(
@@ -161,14 +188,14 @@ impl Simulator {
                     let mut gap = 4 * issue;
                     for m in &micro {
                         // FSM-generated micro-ops issue back-to-back.
-                        self.exec_instr(&mut st, dram, &mut t, &mut rep, m, gap, true)
+                        self.exec_instr(&mut st, dram, &mut t, &mut rep, m, gap, true, input_region)
                             .with_context(|| format!("LOOP_WS micro-op {m}"))?;
                         gap = 1;
                     }
                 }
                 Item::Accel(i) => {
                     rep.issued_commands += 1;
-                    self.exec_instr(&mut st, dram, &mut t, &mut rep, i, issue, false)
+                    self.exec_instr(&mut st, dram, &mut t, &mut rep, i, issue, false, input_region)
                         .with_context(|| format!("item {idx}: {i}"))?;
                 }
                 Item::Host(h) => {
@@ -205,6 +232,7 @@ impl Simulator {
         i: &Instr,
         issue_gap: u64,
         from_fsm: bool,
+        input_region: Option<(u64, u64)>,
     ) -> Result<()> {
         if !from_fsm {
             rep.count(i.mnemonic());
@@ -270,6 +298,15 @@ impl Simulator {
                 };
                 rep.dram_read_bytes += bytes;
                 let (lat, occ) = self.dma_latency(rows as u64, bytes);
+                rep.dram_transfer_cycles += occ;
+                // Loads staging the run's input region before any compute
+                // form the input-staging prefix a pipelined batch can
+                // double-buffer (see `RunReport::input_stage_cycles`).
+                if let Some((start, len)) = input_region {
+                    if rep.macs == 0 && base >= start && base < start + len {
+                        rep.input_stage_cycles += occ;
+                    }
+                }
                 t.step(
                     QueueId::Load,
                     issue_gap,
@@ -308,12 +345,44 @@ impl Simulator {
                 };
                 rep.dram_write_bytes += rows as u64 * cols as u64;
                 let (lat, occ) = self.dma_latency(rows as u64, bytes_onchip);
+                rep.dram_transfer_cycles += occ;
                 t.step(
                     QueueId::Store,
                     issue_gap,
                     lat,
                     Some(occ),
                     &[Access::read(local.space, local.row, rows as u32)],
+                );
+            }
+            Instr::MvoutSpad { src, dst, rows, cols } => {
+                ensure!(rows > 0 && cols > 0, "empty mvout_spad");
+                ensure!(cols as usize <= dim, "mvout_spad cols {cols} exceeds DIM {dim}");
+                ensure!(src.space == Space::Acc, "mvout_spad source must be accumulator");
+                ensure!(dst.space == Space::Spad, "mvout_spad dest must be scratchpad");
+                for r in 0..rows as u32 {
+                    let row = st.acc.row(src.row + r)?.to_vec();
+                    let out = st.spad.row_mut(dst.row + r)?;
+                    for (dst_v, &acc_v) in
+                        out[..cols as usize].iter_mut().zip(row[..cols as usize].iter())
+                    {
+                        *dst_v = requantize(acc_v, st.st_scale, st.st_act);
+                    }
+                    // Zero-fill like MVIN so partial tiles never read stale
+                    // data through the resident region.
+                    out[cols as usize..dim].fill(0);
+                }
+                // Purely on-chip: occupies the store queue, but neither the
+                // DMA engine nor DRAM bandwidth (the whole point of keeping
+                // the activation resident).
+                t.step(
+                    QueueId::Store,
+                    issue_gap,
+                    rows as u64 + 4,
+                    None,
+                    &[
+                        Access::read(Space::Acc, src.row, rows as u32),
+                        Access::write(Space::Spad, dst.row, rows as u32),
+                    ],
                 );
             }
             Instr::Preload { local, dst, rows, cols } => {

@@ -21,6 +21,18 @@ pub struct RunReport {
     pub dram_read_bytes: u64,
     /// Bytes moved on-chip → DRAM.
     pub dram_write_bytes: u64,
+    /// Cycles the DMA engine spent moving data to/from DRAM (per-transfer
+    /// occupancy, summed). On-chip moves (`mvout_spad`, the cross-layer
+    /// residency store) contribute nothing here, so a deployment with
+    /// resident edges shows strictly fewer DRAM-transfer cycles than its
+    /// round-tripping baseline.
+    pub dram_transfer_cycles: u64,
+    /// DMA occupancy of the loads that stage this run's *input region*
+    /// before the first compute fires (the first input-tile DMA). Under
+    /// double-buffered input staging a pipelined batch overlaps this
+    /// prefix — like `host_prefix_cycles` — with the previous inference's
+    /// accelerator execution (see `Deployment::run_batch`).
+    pub input_stage_cycles: u64,
     /// Multiply-accumulates performed by the PE array.
     pub macs: u64,
     /// Instruction counts by mnemonic (LOOP_WS micro-ops counted under
@@ -47,10 +59,19 @@ impl RunReport {
         if self.issued_commands == 0 {
             self.host_prefix_cycles = self.host_cycles + other.host_prefix_cycles;
         }
+        // Input staging is a *prefix* notion too: it only extends across a
+        // segment boundary while no compute has fired yet. Summing it
+        // unconditionally would claim overlap for mid-run loads — and,
+        // with resident edges eliding boundary transfers, would leave the
+        // merged DRAM counters inconsistent with the instruction stream.
+        if self.macs == 0 {
+            self.input_stage_cycles += other.input_stage_cycles;
+        }
         self.cycles += other.cycles;
         self.host_cycles += other.host_cycles;
         self.dram_read_bytes += other.dram_read_bytes;
         self.dram_write_bytes += other.dram_write_bytes;
+        self.dram_transfer_cycles += other.dram_transfer_cycles;
         self.macs += other.macs;
         self.issued_commands += other.issued_commands;
         for (&m, &n) in &other.insn_counts {
@@ -130,6 +151,38 @@ mod tests {
         };
         busy.merge(&tail);
         assert_eq!(busy.host_prefix_cycles, 10);
+    }
+
+    #[test]
+    fn merge_sums_dram_transfer_and_gates_input_staging() {
+        // A leading segment that computed: later segments' input staging
+        // must NOT extend the merged prefix, but transfer cycles sum.
+        let mut busy = RunReport {
+            cycles: 100,
+            macs: 64,
+            dram_transfer_cycles: 40,
+            input_stage_cycles: 10,
+            ..Default::default()
+        };
+        let tail = RunReport {
+            cycles: 80,
+            macs: 32,
+            dram_transfer_cycles: 25,
+            input_stage_cycles: 9,
+            ..Default::default()
+        };
+        busy.merge(&tail);
+        assert_eq!(busy.dram_transfer_cycles, 65);
+        assert_eq!(busy.input_stage_cycles, 10, "staging after compute never extends");
+        // A compute-free leading segment (e.g. all-host preprocessing)
+        // does extend the staging prefix.
+        let mut lead = RunReport {
+            cycles: 30,
+            input_stage_cycles: 5,
+            ..Default::default()
+        };
+        lead.merge(&tail);
+        assert_eq!(lead.input_stage_cycles, 14);
     }
 
     #[test]

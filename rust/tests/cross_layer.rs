@@ -1,0 +1,166 @@
+//! Cross-layer residency integration tests (the tentpole acceptance bar):
+//!
+//! * a ToyCar deployment with ≥1 resident edge produces element-exact
+//!   outputs versus the non-resident baseline while spending strictly
+//!   fewer DRAM-transfer cycles;
+//! * single-layer models and residency-infeasible graphs emit
+//!   byte-identical programs with the pass on or off;
+//! * random MLPs compiled with residency stay exact end to end (the
+//!   capacity property itself is unit-tested in `scheduler::graph`).
+
+use std::collections::BTreeMap;
+
+use tvm_accel::accel::gemmini::gemmini_desc;
+use tvm_accel::pipeline::{CompileOptions, Compiler};
+use tvm_accel::relay::eval::eval;
+use tvm_accel::relay::import::{synth_qmodel, to_qnn_graph};
+use tvm_accel::relay::{Graph, Tensor, TensorData};
+use tvm_accel::sim::Simulator;
+use tvm_accel::util::prng::Rng;
+
+fn no_cross_layer() -> CompileOptions {
+    CompileOptions { cross_layer: false, ..Default::default() }
+}
+
+fn mlp_graph(seed: u64, dims: &[usize], batch: usize) -> Graph {
+    to_qnn_graph(&synth_qmodel(seed, dims, batch).unwrap()).unwrap()
+}
+
+#[test]
+fn toycar_resident_edges_exact_with_fewer_dram_cycles() {
+    let widths = [640usize, 128, 128, 128, 128, 8, 128, 128, 128, 128, 640];
+    let graph = mlp_graph(501, &widths, 1);
+    let accel = gemmini_desc().unwrap();
+    let sim = Simulator::new(&accel.arch);
+
+    let resident = Compiler::new(accel.clone()).compile_with_report(&graph).unwrap();
+    assert!(
+        resident.schedule_stats.resident_edges >= 1,
+        "ToyCar activations fit on-chip; the cross-layer pass must keep at least one \
+         edge resident (stages: {})",
+        resident.render_stages()
+    );
+    let baseline =
+        Compiler::with_options(accel.clone(), no_cross_layer()).compile(&graph).unwrap();
+
+    let mut rng = Rng::new(502);
+    for i in 0..3 {
+        let x = rng.i8_vec(640);
+        let (got_r, rep_r) = resident.deployment.run(&sim, &x).unwrap();
+        let (got_b, rep_b) = baseline.run(&sim, &x).unwrap();
+        assert_eq!(got_r, got_b, "inference {i}: resident output diverged from baseline");
+
+        // Both agree with the interpreter (semantic ground truth).
+        let mut m = BTreeMap::new();
+        m.insert(
+            "x".to_string(),
+            Tensor::new(vec![1, 640], TensorData::I8(x.clone())).unwrap(),
+        );
+        let want = eval(&graph, &m).unwrap();
+        assert_eq!(TensorData::I8(got_r), want[0].data, "inference {i} vs interpreter");
+
+        // The elided store+reload pairs show up as strictly fewer
+        // DRAM-transfer cycles (and bytes), with the on-chip park in the
+        // instruction stream instead.
+        assert!(
+            rep_r.dram_transfer_cycles < rep_b.dram_transfer_cycles,
+            "inference {i}: resident {} DRAM-transfer cycles vs baseline {}",
+            rep_r.dram_transfer_cycles,
+            rep_b.dram_transfer_cycles
+        );
+        assert!(rep_r.dram_read_bytes < rep_b.dram_read_bytes);
+        assert!(rep_r.dram_write_bytes < rep_b.dram_write_bytes);
+        assert!(rep_r.insn_counts.contains_key("mvout_spad"));
+        assert!(!rep_b.insn_counts.contains_key("mvout_spad"));
+    }
+}
+
+#[test]
+fn single_layer_models_byte_identical_with_pass_on_or_off() {
+    let graph = mlp_graph(503, &[64, 32], 4);
+    let accel = gemmini_desc().unwrap();
+    let on = Compiler::new(accel.clone()).compile(&graph).unwrap();
+    let off = Compiler::with_options(accel, no_cross_layer()).compile(&graph).unwrap();
+    assert_eq!(
+        on.program.items, off.program.items,
+        "a single-layer model has no edges: the pass must be a no-op"
+    );
+    assert_eq!(on.program.disassemble(), off.program.disassemble());
+}
+
+#[test]
+fn host_op_between_layers_blocks_residency_byte_identically() {
+    use tvm_accel::isa::Activation;
+    use tvm_accel::relay::{DType, GraphBuilder, Op, TensorType};
+
+    // accel.dense -> transpose (host) -> accel.dense: the producer's
+    // activation is consumed by a host op, so no edge is resident and the
+    // emitted program must be byte-identical to the pass-off pipeline.
+    let mut b = GraphBuilder::new();
+    let x = b.input("x", TensorType::new(vec![8, 8], DType::I8));
+    let mk_dense = |b: &mut GraphBuilder, name: &str, x, c: usize, k: usize| {
+        let w = b.constant(
+            format!("{name}_w"),
+            Tensor::new(vec![c, k], TensorData::I8(vec![1; c * k])).unwrap(),
+        );
+        let bias = b.constant(
+            format!("{name}_b"),
+            Tensor::new(vec![k], TensorData::I32(vec![0; k])).unwrap(),
+        );
+        b.op(
+            name,
+            Op::AccelDense { scale: 1.0, act: Activation::None, weight_transposed: true },
+            &[x, w, bias],
+        )
+        .unwrap()
+    };
+    let l1 = mk_dense(&mut b, "l1", x, 8, 8);
+    let t = b.op("t", Op::Transpose, &[l1]).unwrap();
+    let l2 = mk_dense(&mut b, "l2", t, 8, 8);
+    let g = b.outputs(&[l2]);
+
+    let accel = gemmini_desc().unwrap();
+    let on = Compiler::new(accel.clone()).compile_with_report(&g).unwrap();
+    let off = Compiler::with_options(accel, no_cross_layer()).compile(&g).unwrap();
+    assert_eq!(on.schedule_stats.resident_edges, 0);
+    assert_eq!(on.deployment.program.items, off.program.items);
+}
+
+#[test]
+fn prop_random_mlps_with_residency_stay_exact() {
+    let accel = gemmini_desc().unwrap();
+    let sim = Simulator::new(&accel.arch);
+    tvm_accel::util::prop::check("cross-layer e2e exact", 6, |rng| {
+        let pick = [8usize, 16, 24, 32, 48, 64];
+        let n_layers = rng.range(2, 4);
+        let mut dims = Vec::with_capacity(n_layers + 1);
+        for _ in 0..=n_layers {
+            dims.push(*rng.pick(&pick));
+        }
+        let batch = *rng.pick(&[1usize, 2, 4, 8]);
+        let graph = mlp_graph(rng.next_u64(), &dims, batch);
+
+        let resident = Compiler::new(accel.clone())
+            .compile(&graph)
+            .map_err(|e| format!("resident compile failed for {dims:?}: {e:#}"))?;
+        let baseline = Compiler::with_options(accel.clone(), no_cross_layer())
+            .compile(&graph)
+            .map_err(|e| format!("baseline compile failed for {dims:?}: {e:#}"))?;
+
+        let x = rng.i8_vec(batch * dims[0]);
+        let (got_r, rep_r) =
+            resident.run(&sim, &x).map_err(|e| format!("resident run: {e:#}"))?;
+        let (got_b, rep_b) =
+            baseline.run(&sim, &x).map_err(|e| format!("baseline run: {e:#}"))?;
+        if got_r != got_b {
+            return Err(format!("outputs diverged for dims {dims:?} batch {batch}"));
+        }
+        if rep_r.dram_transfer_cycles > rep_b.dram_transfer_cycles {
+            return Err(format!(
+                "residency increased DRAM transfer cycles for dims {dims:?}: {} > {}",
+                rep_r.dram_transfer_cycles, rep_b.dram_transfer_cycles
+            ));
+        }
+        Ok(())
+    });
+}

@@ -209,17 +209,24 @@ fn session_pipeline_cache_and_batch_on_toycar_widths() {
     let compiler = Compiler::new(accel.clone());
     let out = compiler.compile_with_report(&graph).unwrap();
     let names: Vec<&str> = out.stages.iter().map(|s| s.name).collect();
-    assert_eq!(names, ["frontend", "partition", "schedule", "mapping", "codegen", "link"]);
+    assert_eq!(
+        names,
+        ["frontend", "partition", "schedule", "crosslayer", "mapping", "codegen", "link"]
+    );
 
     // 10 dense layers, but only 5 distinct GEMM shapes: the repeated
-    // trunk layers must come from the cache within one compile.
+    // trunk layers must come from the cache within one compile. The
+    // cross-layer stage may add boundary-constrained searches on top of
+    // the 5 per-shape sweeps; those are memoized under their own keys.
     assert_eq!(out.schedule_stats.layers, 10);
-    assert_eq!(compiler.sweeps_run(), 5, "one sweep per distinct layer shape");
+    let sweeps_first = compiler.sweeps_run();
+    assert!(sweeps_first >= 5, "at least one sweep per distinct layer shape");
     assert_eq!(out.schedule_stats.cache_hits, 5);
 
-    // A second compile of the same graph performs zero additional sweeps.
+    // A second compile of the same graph performs zero additional sweeps
+    // (boundary-constrained selections included).
     let again = compiler.compile(&graph).unwrap();
-    assert_eq!(compiler.sweeps_run(), 5);
+    assert_eq!(compiler.sweeps_run(), sweeps_first);
     assert_eq!(again.program.items, out.deployment.program.items);
 
     // Batched inference matches individual runs element- and cycle-exactly.
@@ -274,8 +281,15 @@ fn heterogeneous_toycar_across_shipped_configs() {
         partition.notes
     );
     // 5 distinct shapes x 2 candidates: every probe beyond that is a
-    // cache hit, and the schedule stage re-runs none of them.
-    assert_eq!(multi.sweeps_run(), 10, "one sweep per (shape, candidate)");
+    // cache hit, and the schedule stage re-runs none of them (the
+    // cross-layer stage may add boundary-constrained searches on top).
+    // A second compile of the same graph pins the total down: everything
+    // — probes and constrained re-searches included — must be warm.
+    assert!(multi.sweeps_run() >= 10, "one sweep per (shape, candidate)");
+    let sweeps_first = multi.sweeps_run();
+    let again = multi.compile(&graph).unwrap();
+    assert_eq!(multi.sweeps_run(), sweeps_first, "repeat compile must be sweep-free");
+    assert_eq!(again.program.items, out.deployment.program.items);
 
     let mut inputs = BTreeMap::new();
     inputs.insert(
