@@ -1,0 +1,408 @@
+//! The tracked performance trajectory: `tvm-accel bench`.
+//!
+//! Cold-compiles every Table-2 workload (the 64³..512³ square dense
+//! layers plus the full ToyCar stack) with a **fresh** compiler per
+//! workload — no schedule-cache reuse across workloads, so the numbers
+//! are honest cold-compile costs — then runs one simulated inference per
+//! deployment and emits two flat-JSON artifacts:
+//!
+//! * `BENCH_compile.json` — per workload: `<name>.compile_us` (wall
+//!   time), `<name>.sweeps`, `<name>.solver_leaves`,
+//!   `<name>.configs_pruned` (the search effort behind the compile).
+//! * `BENCH_cycles.json` — per workload: simulated end-to-end cycles
+//!   (`{"<name>": cycles}`).
+//!
+//! Both files are single-line flat JSON objects in the compile service's
+//! wire subset ([`crate::service::protocol`]), so the same hand-rolled,
+//! dependency-free parser reads them back — which is exactly what
+//! [`check_against_baseline`] does in CI: simulated cycles more than
+//! `max_regress_pct` above the committed baseline **fail** the gate;
+//! compile-time deltas are reported but advisory (wall time is
+//! machine-dependent, cycles are not). A missing baseline file, a missing
+//! workload entry, or a `0` baseline value means "record-only": the run
+//! reports its numbers and passes, and the gate activates once a measured
+//! `BENCH_cycles.json` is committed (see the repository README's
+//! Benchmarking section).
+
+#![warn(missing_docs)]
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::accel::gemmini::gemmini_desc;
+use crate::baselines::naive_byoc::import_with_weight_chain;
+use crate::pipeline::Compiler;
+use crate::relay::import::{from_quantized, QModel};
+use crate::relay::quantize::{quantize_mlp, FloatDense};
+use crate::service::protocol::{parse_message, ObjBuilder};
+use crate::sim::Simulator;
+use crate::util::prng::Rng;
+use crate::workload::suites;
+
+/// File name of the compile-cost artifact.
+pub const COMPILE_FILE: &str = "BENCH_compile.json";
+/// File name of the simulated-cycles artifact.
+pub const CYCLES_FILE: &str = "BENCH_cycles.json";
+
+/// One workload's measurements: cold-compile cost and simulated latency.
+#[derive(Debug, Clone)]
+pub struct WorkloadResult {
+    /// Workload name (the Table-2 label, e.g. `"(64, 64, 64)"`).
+    pub name: String,
+    /// Cold-compile wall time in microseconds (machine-dependent —
+    /// reported, never gated).
+    pub compile_us: u64,
+    /// Schedule sweeps the cold compile executed.
+    pub sweeps: u64,
+    /// Solver leaves costed across those sweeps (the search effort).
+    pub solver_leaves: u64,
+    /// Dominated sweep configuration points that rode a group search.
+    pub configs_pruned: u64,
+    /// Simulated end-to-end cycles of one inference (deterministic —
+    /// this is what the CI gate checks).
+    pub cycles: u64,
+}
+
+/// Everything one bench run measured.
+#[derive(Debug, Clone, Default)]
+pub struct BenchReport {
+    /// Per-workload results, in suite order.
+    pub results: Vec<WorkloadResult>,
+}
+
+impl BenchReport {
+    /// The `BENCH_compile.json` line (flat JSON, no trailing newline).
+    pub fn compile_json(&self) -> String {
+        let mut b = ObjBuilder::new();
+        for r in &self.results {
+            b = b
+                .num_field(&format!("{}.compile_us", r.name), r.compile_us)
+                .num_field(&format!("{}.sweeps", r.name), r.sweeps)
+                .num_field(&format!("{}.solver_leaves", r.name), r.solver_leaves)
+                .num_field(&format!("{}.configs_pruned", r.name), r.configs_pruned);
+        }
+        b.finish()
+    }
+
+    /// The `BENCH_cycles.json` line (flat JSON, no trailing newline).
+    pub fn cycles_json(&self) -> String {
+        let mut b = ObjBuilder::new();
+        for r in &self.results {
+            b = b.num_field(&r.name, r.cycles);
+        }
+        b.finish()
+    }
+
+    /// Write both artifacts into `dir` (created if needed).
+    pub fn write_artifacts(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating bench output dir {}", dir.display()))?;
+        let compile = dir.join(COMPILE_FILE);
+        std::fs::write(&compile, self.compile_json() + "\n")
+            .with_context(|| format!("writing {}", compile.display()))?;
+        let cycles = dir.join(CYCLES_FILE);
+        std::fs::write(&cycles, self.cycles_json() + "\n")
+            .with_context(|| format!("writing {}", cycles.display()))?;
+        Ok(())
+    }
+
+    /// Render the results as an aligned table (for the CLI).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for r in &self.results {
+            out.push_str(&format!(
+                "{:<16} {:>12} cycles   compile {:>9} µs   {:>3} sweep(s)   \
+                 {:>9} leaf(s) visited   {:>3} config(s) pruned\n",
+                r.name, r.cycles, r.compile_us, r.sweeps, r.solver_leaves, r.configs_pruned
+            ));
+        }
+        out
+    }
+}
+
+fn square_model(size: usize, seed: u64) -> Result<QModel> {
+    let mut rng = Rng::new(seed);
+    let l = FloatDense {
+        weight: (0..size * size).map(|_| (rng.f64() as f32 - 0.5) * 0.25).collect(),
+        bias: (0..size).map(|_| (rng.f64() as f32 - 0.5) * 0.1).collect(),
+        in_dim: size,
+        out_dim: size,
+        relu: false,
+    };
+    Ok(from_quantized(size, 0.04, &quantize_mlp(&[l], &[0.04, 0.05])?))
+}
+
+fn toycar_model(seed: u64) -> Result<QModel> {
+    let mut rng = Rng::new(seed);
+    let widths = suites::toycar_widths();
+    let layers: Vec<FloatDense> = widths
+        .windows(2)
+        .enumerate()
+        .map(|(i, w)| FloatDense {
+            weight: (0..w[0] * w[1]).map(|_| (rng.f64() as f32 - 0.5) * 0.25).collect(),
+            bias: (0..w[1]).map(|_| (rng.f64() as f32 - 0.5) * 0.1).collect(),
+            in_dim: w[0],
+            out_dim: w[1],
+            relu: i + 2 < widths.len(),
+        })
+        .collect();
+    let scales: Vec<f32> = (0..widths.len()).map(|i| 0.04 + 0.01 * i as f32).collect();
+    Ok(from_quantized(1, scales[0], &quantize_mlp(&layers, &scales)?))
+}
+
+/// The tracked suite: the Table-2 square layers plus the full ToyCar
+/// stack, with the same seeds the `table2_latency` bench uses (so the
+/// simulated cycles line up with the reproduced table).
+pub fn standard_suite() -> Result<Vec<(String, QModel)>> {
+    let mut suite = Vec::new();
+    for (i, (name, g)) in suites::table2_single_layers().iter().enumerate() {
+        suite.push((name.clone(), square_model(g.n, 500 + i as u64)?));
+    }
+    suite.push(("ToyCar".to_string(), toycar_model(600)?));
+    Ok(suite)
+}
+
+/// Cold-compile and simulate every workload in `suite`. Each workload
+/// gets a fresh [`Compiler`] (default options) so nothing is amortized
+/// across workloads; the per-compiler counters therefore attribute
+/// sweeps and solver leaves to exactly one workload.
+pub fn run_suite(suite: &[(String, QModel)]) -> Result<BenchReport> {
+    let accel = gemmini_desc()?;
+    let sim = Simulator::new(&accel.arch);
+    let mut results = Vec::new();
+    for (name, model) in suite {
+        let graph = import_with_weight_chain(model)
+            .with_context(|| format!("importing bench workload '{name}'"))?;
+        let compiler = Compiler::new(accel.clone());
+        let t0 = Instant::now();
+        let dep = compiler
+            .compile(&graph)
+            .with_context(|| format!("cold-compiling '{name}'"))?;
+        let compile_us = t0.elapsed().as_micros() as u64;
+        let x = Rng::new(7).i8_vec(model.batch * model.layers[0].in_dim);
+        let (_, rep) =
+            dep.run(&sim, &x).with_context(|| format!("simulating '{name}'"))?;
+        results.push(WorkloadResult {
+            name: name.clone(),
+            compile_us,
+            sweeps: compiler.sweeps_run(),
+            solver_leaves: compiler.solver_leaves_visited(),
+            configs_pruned: compiler.configs_pruned(),
+            cycles: rep.cycles,
+        });
+    }
+    Ok(BenchReport { results })
+}
+
+/// The regression gate's verdict: `failures` is what breaks CI,
+/// `notes` is everything worth printing either way.
+#[derive(Debug, Clone, Default)]
+pub struct GateOutcome {
+    /// Cycle regressions beyond the allowed percentage (CI fails on any).
+    pub failures: Vec<String>,
+    /// Per-workload comparisons, bootstrap notices and advisory
+    /// compile-time deltas.
+    pub notes: Vec<String>,
+}
+
+impl GateOutcome {
+    /// True when no workload regressed beyond the threshold.
+    pub fn passed(&self) -> bool {
+        self.failures.is_empty()
+    }
+
+    /// Render notes then failures, one per line.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for n in &self.notes {
+            out.push_str(&format!("  {n}\n"));
+        }
+        for f in &self.failures {
+            out.push_str(&format!("  REGRESSION: {f}\n"));
+        }
+        out
+    }
+}
+
+fn read_flat_json(path: &Path) -> Option<crate::service::protocol::Message> {
+    let text = std::fs::read_to_string(path).ok()?;
+    parse_message(text.trim()).ok()
+}
+
+/// Diff `report` against the committed baseline in `baseline_dir`.
+///
+/// Simulated cycles more than `max_regress_pct` percent above the
+/// baseline value fail the gate. A missing `BENCH_cycles.json`, a
+/// missing workload entry, or a baseline value of `0` is the bootstrap
+/// state: record-only, always passes. Compile-time deltas (from
+/// `BENCH_compile.json`) are advisory notes, never failures.
+pub fn check_against_baseline(
+    report: &BenchReport,
+    baseline_dir: &Path,
+    max_regress_pct: f64,
+) -> GateOutcome {
+    let mut out = GateOutcome::default();
+    let cycles_path = baseline_dir.join(CYCLES_FILE);
+    match read_flat_json(&cycles_path) {
+        None => out.notes.push(format!(
+            "no cycle baseline at {} — recording only",
+            cycles_path.display()
+        )),
+        Some(base) => {
+            for r in &report.results {
+                match base.num_field(&r.name) {
+                    None => out.notes.push(format!(
+                        "{}: no baseline entry — recording only",
+                        r.name
+                    )),
+                    Some(b) if b <= 0.0 => out.notes.push(format!(
+                        "{}: baseline unset (0) — gate activates once a measured \
+                         baseline is committed",
+                        r.name
+                    )),
+                    Some(b) => {
+                        let delta_pct = (r.cycles as f64 - b) / b * 100.0;
+                        if delta_pct > max_regress_pct {
+                            out.failures.push(format!(
+                                "{}: {} simulated cycles vs baseline {} \
+                                 ({:+.1}% > {:.1}% allowed)",
+                                r.name, r.cycles, b as u64, delta_pct, max_regress_pct
+                            ));
+                        } else {
+                            out.notes.push(format!(
+                                "{}: {} cycles vs baseline {} ({:+.1}%)",
+                                r.name, r.cycles, b as u64, delta_pct
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    if let Some(base) = read_flat_json(&baseline_dir.join(COMPILE_FILE)) {
+        for r in &report.results {
+            if let Some(b) = base.num_field(&format!("{}.compile_us", r.name)) {
+                if b > 0.0 {
+                    let delta_pct = (r.compile_us as f64 - b) / b * 100.0;
+                    out.notes.push(format!(
+                        "{}: compile {} µs vs baseline {} µs ({:+.1}%, advisory)",
+                        r.name, r.compile_us, b as u64, delta_pct
+                    ));
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_report() -> BenchReport {
+        BenchReport {
+            results: vec![
+                WorkloadResult {
+                    name: "a".into(),
+                    compile_us: 1000,
+                    sweeps: 3,
+                    solver_leaves: 50,
+                    configs_pruned: 1,
+                    cycles: 1100,
+                },
+                WorkloadResult {
+                    name: "b".into(),
+                    compile_us: 2000,
+                    sweeps: 5,
+                    solver_leaves: 80,
+                    configs_pruned: 0,
+                    cycles: 900,
+                },
+            ],
+        }
+    }
+
+    fn tmp_dir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("tvm-accel-bench-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn artifacts_roundtrip_through_protocol_parser() {
+        let rep = fake_report();
+        let dir = tmp_dir("roundtrip");
+        rep.write_artifacts(&dir).unwrap();
+        let cycles = read_flat_json(&dir.join(CYCLES_FILE)).unwrap();
+        assert_eq!(cycles.num_field("a"), Some(1100.0));
+        assert_eq!(cycles.num_field("b"), Some(900.0));
+        let compile = read_flat_json(&dir.join(COMPILE_FILE)).unwrap();
+        assert_eq!(compile.num_field("a.compile_us"), Some(1000.0));
+        assert_eq!(compile.num_field("b.sweeps"), Some(5.0));
+        assert_eq!(compile.num_field("a.configs_pruned"), Some(1.0));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn gate_fails_only_on_regression_beyond_threshold() {
+        let dir = tmp_dir("gate");
+        // Baseline: 'a' at 1000 (current 1100 = +10%), 'b' at 1000
+        // (current 900, an improvement — never a failure).
+        std::fs::write(dir.join(CYCLES_FILE), "{\"a\":1000,\"b\":1000}\n").unwrap();
+        let rep = fake_report();
+        let loose = check_against_baseline(&rep, &dir, 15.0);
+        assert!(loose.passed(), "+10% within a 15% gate: {:?}", loose.failures);
+        assert!(loose.notes.iter().any(|n| n.starts_with("a:")));
+        let tight = check_against_baseline(&rep, &dir, 5.0);
+        assert!(!tight.passed(), "+10% must fail a 5% gate");
+        assert_eq!(tight.failures.len(), 1, "only 'a' regressed: {:?}", tight.failures);
+        assert!(tight.failures[0].starts_with("a:"), "{:?}", tight.failures);
+        assert!(!tight.render().is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_or_zero_baseline_is_record_only() {
+        let rep = fake_report();
+        let dir = tmp_dir("bootstrap");
+        let missing = check_against_baseline(&rep, &dir, 10.0);
+        assert!(missing.passed(), "no baseline file = record-only");
+        assert!(!missing.notes.is_empty());
+        std::fs::write(dir.join(CYCLES_FILE), "{\"a\":0,\"b\":0}\n").unwrap();
+        let zero = check_against_baseline(&rep, &dir, 10.0);
+        assert!(zero.passed(), "zero baseline = bootstrap, record-only");
+        assert!(zero.notes.iter().any(|n| n.contains("baseline unset")));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn compile_time_deltas_are_advisory() {
+        let dir = tmp_dir("advisory");
+        std::fs::write(dir.join(CYCLES_FILE), "{\"a\":1100,\"b\":900}\n").unwrap();
+        // Wildly slower compiles than baseline must not fail the gate.
+        std::fs::write(
+            dir.join(COMPILE_FILE),
+            "{\"a.compile_us\":1,\"b.compile_us\":1}\n",
+        )
+        .unwrap();
+        let out = check_against_baseline(&fake_report(), &dir, 10.0);
+        assert!(out.passed(), "compile time is advisory: {:?}", out.failures);
+        assert!(out.notes.iter().any(|n| n.contains("advisory")));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bench_runs_a_small_workload_end_to_end() {
+        let suite = vec![("(64, 64, 64)".to_string(), square_model(64, 500).unwrap())];
+        let rep = run_suite(&suite).unwrap();
+        assert_eq!(rep.results.len(), 1);
+        let r = &rep.results[0];
+        assert!(r.cycles > 0, "one simulated inference ran");
+        assert!(r.sweeps > 0 && r.solver_leaves > 0, "cold compile searched");
+        assert!(rep.cycles_json().contains("(64, 64, 64)"));
+        assert!(!rep.render().is_empty());
+    }
+}

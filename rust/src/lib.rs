@@ -36,7 +36,11 @@
 //!   functionally exact simulator ([`sim`]);
 //! * the paper's two baselines ([`baselines`]) and a PJRT-backed golden
 //!   reference runtime (`runtime`, behind the off-by-default `xla-runtime`
-//!   cargo feature: it needs the pinned `xla_extension` 0.5.1 toolchain).
+//!   cargo feature: it needs the pinned `xla_extension` 0.5.1 toolchain);
+//! * a tracked **performance trajectory** — `tvm-accel bench` cold-compiles
+//!   the Table-2 workloads, records compile cost and simulated cycles as
+//!   `BENCH_compile.json` / `BENCH_cycles.json`, and [`bench`] gates CI on
+//!   simulated-cycle regressions against the committed baseline.
 //!
 //! See the repository `README.md` for build/test instructions and
 //! `src/pipeline/ARCHITECTURE.md` for the stage graph; `examples/` has
@@ -88,6 +92,7 @@ pub mod accel;
 pub mod arch;
 pub mod backend;
 pub mod baselines;
+pub mod bench;
 pub mod frontend;
 pub mod isa;
 pub mod metrics;

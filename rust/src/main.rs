@@ -13,6 +13,9 @@
 //!   cache     — stats|clear|warm|gc the persistent schedule-cache
 //!               artifact (gc trims to --max-entries, least recently
 //!               served first)
+//!   bench     — cold-compile the Table-2 suite, print compile cost and
+//!               simulated cycles, optionally write BENCH_*.json and gate
+//!               against a committed baseline (the perf trajectory)
 //!   gen-model — write a deterministic random .qmodel (for smoke tests)
 //!
 //! The `compile`, `run` and `cache warm` paths hydrate the on-disk
@@ -35,6 +38,7 @@ use tvm_accel::accel::gemmini::gemmini_desc;
 use tvm_accel::accel::AccelDesc;
 use tvm_accel::baselines::c_toolchain::compile_c_toolchain;
 use tvm_accel::baselines::naive_byoc::compile_naive;
+use tvm_accel::bench;
 use tvm_accel::isa::program::Program;
 use tvm_accel::metrics::describe;
 use tvm_accel::pipeline::{CompileOptions, Deployment};
@@ -54,7 +58,8 @@ use tvm_accel::workload::Gemm;
 
 const VALUE_OPTS: &[&str] = &[
     "n", "c", "k", "model", "backend", "arch", "golden", "inferences", "seed", "socket",
-    "cache", "workers", "dims", "batch", "out", "max-entries",
+    "cache", "workers", "dims", "batch", "out", "max-entries", "out-dir", "baseline",
+    "max-regress",
 ];
 
 /// Single-target variant of [`load_accels`] for subcommands that drive
@@ -233,8 +238,13 @@ fn cmd_compile(args: &Args) -> Result<()> {
         }
     }
     println!(
-        "schedule cache: {} hit(s) / {} miss(es), {} sweep(s) this compile",
-        reply.cache_hits, reply.cache_misses, reply.sweeps
+        "schedule cache: {} hit(s) / {} miss(es), {} sweep(s) this compile \
+         ({} solver leaf(s) visited, {} config point(s) pruned)",
+        reply.cache_hits,
+        reply.cache_misses,
+        reply.sweeps,
+        reply.solver_leaves_visited,
+        reply.configs_pruned
     );
     if let Some(p) = server.cache_path() {
         println!(
@@ -422,6 +432,40 @@ fn cmd_cache(args: &Args) -> Result<()> {
     }
 }
 
+fn cmd_bench(args: &Args) -> Result<()> {
+    let max_regress: f64 = {
+        let s = args.opt_or("max-regress", "10");
+        s.parse::<f64>().map_err(|_| anyhow!("bad --max-regress '{s}' (a percentage)"))?
+    };
+    ensure!(max_regress >= 0.0, "--max-regress must be nonnegative");
+    eprintln!("tvm-accel bench: cold-compiling the Table-2 suite (takes ~a minute)...");
+    let suite = bench::standard_suite()?;
+    let report = bench::run_suite(&suite)?;
+    print!("{}", report.render());
+    if let Some(dir) = args.opt("out-dir") {
+        let dir = Path::new(dir);
+        report.write_artifacts(dir)?;
+        println!(
+            "wrote {} and {} to {}",
+            bench::COMPILE_FILE,
+            bench::CYCLES_FILE,
+            dir.display()
+        );
+    }
+    if let Some(base) = args.opt("baseline") {
+        let outcome = bench::check_against_baseline(&report, Path::new(base), max_regress);
+        print!("{}", outcome.render());
+        if !outcome.passed() {
+            bail!(
+                "{} workload(s) regressed more than {max_regress}% in simulated cycles",
+                outcome.failures.len()
+            );
+        }
+        println!("cycle gate passed ({max_regress}% regression allowed)");
+    }
+    Ok(())
+}
+
 fn cmd_gen_model(args: &Args) -> Result<()> {
     let out = args.opt("out").context("--out <file.qmodel> required")?;
     let dims_s = args.opt_or("dims", "32,48,16");
@@ -446,10 +490,11 @@ fn main() -> Result<()> {
         Some("disasm") => cmd_disasm(&args),
         Some("serve") => cmd_serve(&args),
         Some("cache") => cmd_cache(&args),
+        Some("bench") => cmd_bench(&args),
         Some("gen-model") => cmd_gen_model(&args),
         _ => {
             eprintln!(
-                "usage: tvm-accel <schedule|compile|run|disasm|serve|cache|gen-model>\n\
+                "usage: tvm-accel <schedule|compile|run|disasm|serve|cache|bench|gen-model>\n\
                  \x20 compile:     --model F.qmodel [--backend proposed|naive|c-toolchain]\n\
                  \x20              [--arch F.yaml[,G.yaml...]] [--cache F|--no-cache]\n\
                  \x20              [--socket S  (proposed backend via a running server)]\n\
@@ -459,6 +504,8 @@ fn main() -> Result<()> {
                  \x20 serve:       --socket S [--arch ...] [--cache F|--no-cache] [--workers N]\n\
                  \x20 cache:       <stats|clear|warm|gc> [--cache F] [--model F.qmodel]\n\
                  \x20              [--max-entries N  (gc: LRU-trim the artifact)]\n\
+                 \x20 bench:       [--out-dir D  (write BENCH_*.json)] [--baseline D]\n\
+                 \x20              [--max-regress PCT  (cycle gate, default 10)]\n\
                  \x20 gen-model:   --out F.qmodel [--dims 32,48,16] [--batch N] [--seed N]"
             );
             std::process::exit(2);

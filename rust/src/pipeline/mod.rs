@@ -38,8 +38,9 @@
 pub mod multi;
 pub mod session;
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{ensure, Result};
 
@@ -113,6 +114,64 @@ pub enum ScheduleSource {
     Cache,
     /// Full sweep + profiling ran for this shape.
     Search,
+    /// Served from an incremental-session memo ([`SessionMemo`]) — not
+    /// even the shared cache was consulted.
+    Memo,
+}
+
+/// A session-scoped schedule memo for incremental recompiles.
+///
+/// A [`SessionMemo`] remembers every selection made while compiling a
+/// model; passing the same memo to a later compile
+/// ([`Compiler::compile_incremental`] /
+/// [`MultiCompiler::compile_incremental`]) re-runs the search only for
+/// layers whose [`CacheKey`] — shape × arch fingerprint × search options
+/// × residency constraint — changed since the last compile. Unlike the
+/// shared [`ScheduleCache`] it is consulted *before* the single-flight
+/// gate (so it also works with `schedule_cache: false`), is plain
+/// process-local state (never persisted), and is only used when
+/// explicitly passed — plain [`Compiler::compile`] calls are unaffected.
+#[derive(Debug, Default)]
+pub struct SessionMemo {
+    entries: Mutex<HashMap<CacheKey, (Schedule, Option<u64>)>>,
+    hits: AtomicU64,
+}
+
+impl SessionMemo {
+    /// An empty memo.
+    pub fn new() -> SessionMemo {
+        SessionMemo::default()
+    }
+
+    /// Memoized selections held.
+    pub fn len(&self) -> usize {
+        self.entries.lock().expect("memo lock poisoned").len()
+    }
+
+    /// True when nothing has been memoized yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Lookups served from this memo (across all compiles it was used in).
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    fn get(&self, key: &CacheKey) -> Option<(Schedule, Option<u64>)> {
+        let found = self.entries.lock().expect("memo lock poisoned").get(key).cloned();
+        if found.is_some() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        }
+        found
+    }
+
+    fn put(&self, key: CacheKey, schedule: &Schedule, cycles: Option<u64>) {
+        self.entries
+            .lock()
+            .expect("memo lock poisoned")
+            .insert(key, (schedule.clone(), cycles));
+    }
 }
 
 /// A compiled deployment.
@@ -285,6 +344,11 @@ pub struct Compiler {
     cache_hits: AtomicU64,
     /// Cache misses observed by this compiler's lookups.
     cache_misses: AtomicU64,
+    /// Solver leaves costed across this compiler's sweeps (search effort).
+    solver_leaves: AtomicU64,
+    /// Dominated sweep configuration points skipped across this
+    /// compiler's sweeps.
+    configs_pruned: AtomicU64,
 }
 
 /// Drop guard for single-flight search leadership: if the leader errors
@@ -334,6 +398,8 @@ impl Compiler {
             sweeps_run: AtomicU64::new(0),
             cache_hits: AtomicU64::new(0),
             cache_misses: AtomicU64::new(0),
+            solver_leaves: AtomicU64::new(0),
+            configs_pruned: AtomicU64::new(0),
         }
     }
 
@@ -362,6 +428,24 @@ impl Compiler {
         CompilerSession::new(self).run(graph)
     }
 
+    /// Compile like [`Compiler::compile`], memoizing every schedule
+    /// selection in `memo`. Recompiling after editing a model re-runs the
+    /// search only for layers whose cache key (shape × arch × options ×
+    /// residency constraint) is new — unchanged layers skip the sweep,
+    /// the profiling, and even the shared-cache lookup.
+    pub fn compile_incremental(&self, graph: &Graph, memo: &SessionMemo) -> Result<Deployment> {
+        Ok(self.compile_incremental_with_report(graph, memo)?.deployment)
+    }
+
+    /// [`Compiler::compile_incremental`] with per-stage reports.
+    pub fn compile_incremental_with_report(
+        &self,
+        graph: &Graph,
+        memo: &SessionMemo,
+    ) -> Result<SessionOutput> {
+        CompilerSession::with_memo(self, memo).run(graph)
+    }
+
     /// How many Fig. 2(b) sweeps this compiler has executed (schedule
     /// selections that were not cache hits or naive defaults).
     pub fn sweeps_run(&self) -> u64 {
@@ -381,6 +465,19 @@ impl Compiler {
     /// [`Compiler::cache_hits`]).
     pub fn cache_misses(&self) -> u64 {
         self.cache_misses.load(Ordering::Relaxed)
+    }
+
+    /// Solver leaves costed across this compiler's sweeps — the search
+    /// effort the pruned sweep actually spent (cache/memo hits add none).
+    pub fn solver_leaves_visited(&self) -> u64 {
+        self.solver_leaves.load(Ordering::Relaxed)
+    }
+
+    /// Dominated sweep configuration points that rode a shared group
+    /// search for free instead of running their own (see
+    /// [`crate::scheduler::solver::SearchStats`]).
+    pub fn configs_pruned(&self) -> u64 {
+        self.configs_pruned.load(Ordering::Relaxed)
     }
 
     /// Schedule-cache counters.
@@ -433,6 +530,7 @@ impl Compiler {
         &self,
         g: Gemm,
         accel_fp: u64,
+        memo: Option<&SessionMemo>,
     ) -> Result<(Schedule, Option<u64>, ScheduleSource)> {
         if !self.options.use_scheduler {
             return Ok((self.naive_schedule(g), None, ScheduleSource::Naive));
@@ -442,6 +540,14 @@ impl Compiler {
             g,
             SearchKey::new(&self.options.sweep, self.options.profile_candidates),
         );
+        // An incremental-session memo short-circuits everything — even
+        // the shared cache — so it works with `schedule_cache: false` and
+        // adds no hit/miss accounting noise.
+        if let Some(memo) = memo {
+            if let Some((schedule, cycles)) = memo.get(&key) {
+                return Ok((schedule, cycles, ScheduleSource::Memo));
+            }
+        }
         // Single-flight gate: on a hit (including one produced by another
         // thread's concurrent search on the same key) return immediately;
         // otherwise this thread is the leader and owes a publish — the
@@ -450,6 +556,9 @@ impl Compiler {
             match self.cache.begin(&key) {
                 SearchGate::Ready(hit) => {
                     self.cache_hits.fetch_add(1, Ordering::Relaxed);
+                    if let Some(memo) = memo {
+                        memo.put(key, &hit.schedule, hit.profiled_cycles);
+                    }
                     return Ok((hit.schedule, hit.profiled_cycles, ScheduleSource::Cache));
                 }
                 SearchGate::Leader => {
@@ -464,6 +573,8 @@ impl Compiler {
         let searched = (|| -> Result<(Schedule, Option<u64>)> {
             self.sweeps_run.fetch_add(1, Ordering::Relaxed);
             let result = sweep(&self.accel.arch, g, &self.options.sweep);
+            self.solver_leaves.fetch_add(result.stats.leaves_visited, Ordering::Relaxed);
+            self.configs_pruned.fetch_add(result.stats.configs_pruned, Ordering::Relaxed);
             ensure!(
                 !result.candidates.is_empty(),
                 "scheduler found no valid mapping for {g:?}"
@@ -489,6 +600,9 @@ impl Compiler {
                         },
                     );
                     lease.armed = false;
+                }
+                if let Some(memo) = memo {
+                    memo.put(key, &schedule, cycles);
                 }
                 Ok((schedule, cycles, ScheduleSource::Search))
             }
@@ -521,6 +635,7 @@ impl Compiler {
         g: Gemm,
         rc: ResidencyConstraint,
         accel_fp: u64,
+        memo: Option<&SessionMemo>,
     ) -> Result<Option<(Schedule, Option<u64>)>> {
         if !self.options.use_scheduler {
             return Ok(None);
@@ -531,10 +646,18 @@ impl Compiler {
             search: SearchKey::new(&self.options.sweep, self.options.profile_candidates),
             residency: rc,
         };
+        if let Some(memo) = memo {
+            if let Some((schedule, cycles)) = memo.get(&key) {
+                return Ok(Some((schedule, cycles)));
+            }
+        }
         let mut lease = if self.options.schedule_cache {
             match self.cache.begin(&key) {
                 SearchGate::Ready(hit) => {
                     self.cache_hits.fetch_add(1, Ordering::Relaxed);
+                    if let Some(memo) = memo {
+                        memo.put(key, &hit.schedule, hit.profiled_cycles);
+                    }
                     return Ok(Some((hit.schedule, hit.profiled_cycles)));
                 }
                 SearchGate::Leader => {
@@ -548,6 +671,8 @@ impl Compiler {
 
         self.sweeps_run.fetch_add(1, Ordering::Relaxed);
         let result = sweep(&self.accel.arch, g, &self.options.sweep);
+        self.solver_leaves.fetch_add(result.stats.leaves_visited, Ordering::Relaxed);
+        self.configs_pruned.fetch_add(result.stats.configs_pruned, Ordering::Relaxed);
         if result.candidates.is_empty() {
             // No mapping at all (the lease's drop releases single-flight
             // leadership). Unreachable for layers that already scheduled.
@@ -580,6 +705,9 @@ impl Compiler {
                 },
             );
             lease.armed = false;
+        }
+        if let Some(memo) = memo {
+            memo.put(key, &searched.0, searched.1);
         }
         Ok(Some(searched))
     }

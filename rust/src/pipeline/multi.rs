@@ -38,7 +38,7 @@ use crate::sim::report::RunReport;
 use crate::sim::Simulator;
 
 use super::session::{render_stage_reports, ScheduleStats, StageReport};
-use super::{BatchRun, CompileOptions, Compiler, CompilerSession};
+use super::{BatchRun, CompileOptions, Compiler, CompilerSession, SessionMemo};
 
 /// One contiguous run of program items emitted for (and executed by) a
 /// single target. `target` indexes the deployment's target list; host ops
@@ -309,6 +309,27 @@ impl MultiCompiler {
         CompilerSession::multi(self.compilers.iter().collect()).run_multi(graph)
     }
 
+    /// Compile against an incremental-session memo: layers (and partition
+    /// cost probes) whose cache key already appears in `memo` skip the
+    /// sweep, the profiling, and even the shared-cache lookup. See
+    /// [`Compiler::compile_incremental`].
+    pub fn compile_incremental(
+        &self,
+        graph: &Graph,
+        memo: &SessionMemo,
+    ) -> Result<MultiDeployment> {
+        Ok(self.compile_incremental_with_report(graph, memo)?.deployment)
+    }
+
+    /// [`MultiCompiler::compile_incremental`] with per-stage reports.
+    pub fn compile_incremental_with_report(
+        &self,
+        graph: &Graph,
+        memo: &SessionMemo,
+    ) -> Result<MultiSessionOutput> {
+        CompilerSession::multi_with_memo(self.compilers.iter().collect(), memo).run_multi(graph)
+    }
+
     /// Total Fig. 2(b) sweeps executed across all candidates.
     pub fn sweeps_run(&self) -> u64 {
         self.compilers.iter().map(|c| c.sweeps_run()).sum()
@@ -325,6 +346,18 @@ impl MultiCompiler {
     /// [`MultiCompiler::cache_hits`]).
     pub fn cache_misses(&self) -> u64 {
         self.compilers.iter().map(|c| c.cache_misses()).sum()
+    }
+
+    /// Solver leaves costed across all candidates' sweeps (see
+    /// [`Compiler::solver_leaves_visited`]).
+    pub fn solver_leaves_visited(&self) -> u64 {
+        self.compilers.iter().map(|c| c.solver_leaves_visited()).sum()
+    }
+
+    /// Dominated sweep configuration points pruned across all candidates
+    /// (see [`Compiler::configs_pruned`]).
+    pub fn configs_pruned(&self) -> u64 {
+        self.compilers.iter().map(|c| c.configs_pruned()).sum()
     }
 
     /// Counters of the schedule cache shared by all candidates.

@@ -64,7 +64,7 @@ use crate::tir::TirFunc;
 use super::multi::{
     LayerAssignment, LayerBoundary, MultiDeployment, MultiSessionOutput, ProgramSegment,
 };
-use super::{Compiler, Deployment, ScheduleSource};
+use super::{Compiler, Deployment, ScheduleSource, SessionMemo};
 
 /// Timing + diagnostics for one pipeline stage.
 #[derive(Debug, Clone)]
@@ -103,10 +103,20 @@ pub struct ScheduleStats {
     pub layers: usize,
     /// Layers satisfied from the schedule cache (no sweep, no profiling).
     pub cache_hits: usize,
+    /// Layers satisfied from the incremental-session memo
+    /// ([`SessionMemo`]) — unchanged since the previous compile of the
+    /// same session, so not even the shared cache was consulted.
+    pub memo_hits: usize,
     /// Layers that ran the full sweep + profiling.
     pub searched: usize,
     /// Layers given the naive default schedule (`use_scheduler = false`).
     pub naive: usize,
+    /// Solver leaves costed by this session's sweeps (schedule stage plus
+    /// any partition probes and constrained cross-layer re-searches).
+    pub solver_leaves: u64,
+    /// Dominated sweep configuration points that rode a shared group
+    /// search instead of running their own DFS.
+    pub configs_pruned: u64,
     /// Producer→consumer edges the cross-layer stage kept resident
     /// on-chip (each elides one DRAM store + reload pair).
     pub resident_edges: usize,
@@ -148,18 +158,43 @@ struct LayerPlan {
 pub struct CompilerSession<'a> {
     compilers: Vec<&'a Compiler>,
     stages: Vec<StageReport>,
+    /// Incremental-session memo: schedules selected by a previous run of
+    /// the same session, keyed by the full [`CacheKey`]
+    /// (shape × arch × options × residency constraint). `None` for
+    /// ordinary one-shot compiles.
+    ///
+    /// [`CacheKey`]: crate::scheduler::cache::CacheKey
+    memo: Option<&'a SessionMemo>,
 }
 
 impl<'a> CompilerSession<'a> {
     /// A session compiling for a single accelerator.
     pub fn new(compiler: &'a Compiler) -> CompilerSession<'a> {
-        CompilerSession { compilers: vec![compiler], stages: Vec::new() }
+        CompilerSession { compilers: vec![compiler], stages: Vec::new(), memo: None }
+    }
+
+    /// A single-target session that reuses (and extends) an
+    /// incremental-session memo: layers whose cache key already appears in
+    /// `memo` skip the sweep, the profiling, and the shared-cache lookup.
+    pub fn with_memo(compiler: &'a Compiler, memo: &'a SessionMemo) -> CompilerSession<'a> {
+        CompilerSession { compilers: vec![compiler], stages: Vec::new(), memo: Some(memo) }
     }
 
     /// A session over several candidate targets (cost-driven partition).
     pub(crate) fn multi(compilers: Vec<&'a Compiler>) -> CompilerSession<'a> {
         assert!(!compilers.is_empty(), "session needs at least one target");
-        CompilerSession { compilers, stages: Vec::new() }
+        CompilerSession { compilers, stages: Vec::new(), memo: None }
+    }
+
+    /// [`CompilerSession::multi`] with an incremental-session memo; the
+    /// cost-driven partition probes reuse it too (cache keys embed the
+    /// accelerator fingerprint, so one memo safely spans targets).
+    pub(crate) fn multi_with_memo(
+        compilers: Vec<&'a Compiler>,
+        memo: &'a SessionMemo,
+    ) -> CompilerSession<'a> {
+        assert!(!compilers.is_empty(), "session needs at least one target");
+        CompilerSession { compilers, stages: Vec::new(), memo: Some(memo) }
     }
 
     fn finish_stage(&mut self, name: &'static str, started: Instant, notes: Vec<String>) {
@@ -219,6 +254,12 @@ impl<'a> CompilerSession<'a> {
     ) -> Result<(MultiDeployment, Vec<StageReport>, ScheduleStats)> {
         let lead = self.compilers[0];
         let is_multi = self.compilers.len() > 1;
+        let search_effort = |compilers: &[&Compiler]| -> (u64, u64) {
+            compilers.iter().fold((0, 0), |(l, p), c| {
+                (l + c.solver_leaves_visited(), p + c.configs_pruned())
+            })
+        };
+        let effort0 = search_effort(&self.compilers);
 
         // --- Stage 1: frontend (legalize + constant fold) ----------------
         let t0 = Instant::now();
@@ -269,6 +310,7 @@ impl<'a> CompilerSession<'a> {
             let supported: Vec<BTreeSet<String>> =
                 self.compilers.iter().map(|c| c.accel.supported_ops()).collect();
             let compilers = &self.compilers;
+            let memo = self.memo;
             partition_multi(
                 &processed,
                 &supported,
@@ -280,7 +322,7 @@ impl<'a> CompilerSession<'a> {
                         .collect();
                     let c = compilers[t];
                     let probe = generate_strategy_typed(&c.accel, node, &shapes)
-                        .and_then(|strategy| c.select_schedule(strategy.gemm, fps[t]));
+                        .and_then(|strategy| c.select_schedule(strategy.gemm, fps[t], memo));
                     match probe {
                         // Profiled cycles when profiling ran; the analytic cost
                         // otherwise (0 for the naive default schedule, which
@@ -372,28 +414,35 @@ impl<'a> CompilerSession<'a> {
                 n.inputs.iter().map(|&i| g.node(i).ty.shape.clone()).collect();
             let strategy = generate_strategy_typed(&c.accel, n, &shapes)?;
             let (schedule, profiled_cycles, source) = c
-                .select_schedule(strategy.gemm, fps[target])
+                .select_schedule(strategy.gemm, fps[target], self.memo)
                 .with_context(|| format!("schedule selection for layer '{}'", n.name))?;
             stats.layers += 1;
             match source {
                 ScheduleSource::Cache => stats.cache_hits += 1,
+                ScheduleSource::Memo => stats.memo_hits += 1,
                 ScheduleSource::Search => stats.searched += 1,
                 ScheduleSource::Naive => stats.naive += 1,
             }
             plans[n.id] = Some(LayerPlan { strategy, schedule, profiled_cycles, target });
         }
         let cache = lead.cache_stats();
+        let effort_now = search_effort(&self.compilers);
         self.finish_stage(
             "schedule",
             t0,
             vec![
                 format!(
-                    "{} layer(s): {} cache hit(s), {} searched, {} naive",
-                    stats.layers, stats.cache_hits, stats.searched, stats.naive
+                    "{} layer(s): {} memo hit(s), {} cache hit(s), {} searched, {} naive",
+                    stats.layers, stats.memo_hits, stats.cache_hits, stats.searched, stats.naive
                 ),
                 format!(
                     "cache: {} entries, {} hits / {} misses lifetime",
                     cache.entries, cache.hits, cache.misses
+                ),
+                format!(
+                    "search effort: {} solver leaf(s) visited, {} config point(s) pruned",
+                    effort_now.0 - effort0.0,
+                    effort_now.1 - effort0.1
                 ),
             ],
         );
@@ -457,8 +506,9 @@ impl<'a> CompilerSession<'a> {
             let arches: Vec<&ArchDesc> =
                 self.compilers.iter().map(|c| &c.accel.arch).collect();
             let compilers = &self.compilers;
+            let memo = self.memo;
             let gs = plan_residency(&arches, layer_scheds, &edges, |t, gemm, rc| {
-                compilers[t].select_schedule_constrained(gemm, rc, fps[t])
+                compilers[t].select_schedule_constrained(gemm, rc, fps[t], memo)
             })?;
             stats.resident_edges = gs.resident.len();
             notes.push(format!(
@@ -480,6 +530,9 @@ impl<'a> CompilerSession<'a> {
             notes.push("cross-layer pass disabled".to_string());
         }
         self.finish_stage("crosslayer", t0, notes);
+        let effort_final = search_effort(&self.compilers);
+        stats.solver_leaves = effort_final.0 - effort0.0;
+        stats.configs_pruned = effort_final.1 - effort0.1;
 
         // --- Stage 5: mapping (apply TIR schedules) ----------------------
         let t0 = Instant::now();

@@ -15,11 +15,25 @@
 //!   dimensions overflows its budget;
 //! * at each leaf all six DRAM permutations are costed analytically.
 //!
+//! Two search drivers share that structure. [`solve`] (via
+//! `solve_exhaustive`) is the unpruned reference: it visits every feasible
+//! leaf of one configuration. [`solve_group`] is the production path used
+//! by the pruned sweep: it runs one DFS for a whole group of
+//! configurations that differ only in memory shares, gating each node per
+//! configuration and cutting subtrees with an admissible lower bound
+//! ([`LowerBound`]) once a configuration's top-k list is full. Because the
+//! bound never exceeds the true analytic cost, and a costed leaf is pushed
+//! to every configuration that admits it in the exact order the reference
+//! would produce, the per-configuration results are byte-identical to
+//! `solve` — only cheaper to reach (differential- and property-tested in
+//! `sweep.rs`).
+//!
 //! The search is exact over the discrete space — the same optimum the MIP
 //! would return under the same objective — while taking well under a
 //! millisecond for Table-2-sized workloads.
 
 use crate::arch::{ArchDesc, Dataflow};
+use crate::util::ceil_div;
 use crate::workload::{factor::Factorization, Dim, Gemm, Operand};
 
 use super::traffic::{estimate, Candidate};
@@ -46,6 +60,31 @@ impl SolverConfig {
     }
 }
 
+/// Search-effort counters, accumulated across every solver invocation of
+/// a sweep (and surfaced through the compile pipeline's stage reports).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SearchStats {
+    /// Leaves whose six DRAM permutations were actually costed.
+    pub leaves_visited: u64,
+    /// Leaf costings skipped by the admissible lower bound (subtree cuts
+    /// count their remaining K-table entries, so this upper-bounds the
+    /// work avoided rather than the exact feasible-leaf count).
+    pub leaves_pruned: u64,
+    /// Configuration points whose capacities are pointwise ≤ another
+    /// point's in the same (dataflow, double-buffer) group — they ride
+    /// the shared DFS for free instead of running their own.
+    pub configs_pruned: u64,
+}
+
+impl SearchStats {
+    /// Fold another counter set into this one.
+    pub fn absorb(&mut self, other: &SearchStats) {
+        self.leaves_visited += other.leaves_visited;
+        self.leaves_pruned += other.leaves_pruned;
+        self.configs_pruned += other.configs_pruned;
+    }
+}
+
 /// All divisors of `v` that are ≤ `limit`.
 fn divisors_upto(v: usize, limit: usize) -> Vec<usize> {
     Factorization::of(v)
@@ -55,38 +94,167 @@ fn divisors_upto(v: usize, limit: usize) -> Vec<usize> {
         .collect()
 }
 
-/// Solve one configuration, returning up to `top_k` schedules sorted by
-/// analytic cost (best first). Returns an empty vec when no mapping fits
-/// (e.g. shares too small for even a single instruction tile).
-pub fn solve(arch: &ArchDesc, g: Gemm, cfg: &SolverConfig) -> Vec<Schedule> {
-    let caps = capacity_rows(arch, &cfg.shares, cfg.double_buffer);
-    let insn_limit = arch.constraints.insn_tile_limit.min(arch.pe_dim);
+/// Per-dimension (insn, onchip) divisor-chain tables for one workload.
+///
+/// The tables depend only on the workload bounds and the architecture's
+/// instruction-tile limit — not on shares, dataflow or buffering — so a
+/// sweep builds them once and shares them across all of its configuration
+/// points instead of refactorizing the bounds per `solve` call.
+#[derive(Debug, Clone)]
+pub struct DimTables {
+    per_dim: [Vec<(usize, usize)>; 3],
+    /// Largest instruction-tile divisor per dimension; the subtree lower
+    /// bound uses it as the best case for a dimension not yet fixed.
+    max_insn: [usize; 3],
+}
 
-    // Candidate (insn, onchip) pairs per dimension.
-    let per_dim: Vec<Vec<(usize, usize)>> = Dim::ALL
-        .iter()
-        .map(|&d| {
+impl DimTables {
+    /// Build the divisor tables for `g` under `arch`'s tile limit.
+    pub fn new(arch: &ArchDesc, g: Gemm) -> DimTables {
+        let insn_limit = arch.constraints.insn_tile_limit.min(arch.pe_dim);
+        let mut per_dim: [Vec<(usize, usize)>; 3] = [Vec::new(), Vec::new(), Vec::new()];
+        let mut max_insn = [1usize; 3];
+        for &d in Dim::ALL.iter() {
             let bound = g.bound(d);
             let mut out = Vec::new();
             for insn in divisors_upto(bound, insn_limit.min(bound)) {
+                max_insn[d.index()] = max_insn[d.index()].max(insn);
                 for mult in Factorization::of(bound / insn).divisors() {
                     out.push((insn, insn * mult));
                 }
             }
-            out
-        })
-        .collect();
+            per_dim[d.index()] = out;
+        }
+        DimTables { per_dim, max_insn }
+    }
+}
 
+/// Insert `s` into `best` (kept sorted ascending by analytic cost,
+/// capped at `top_k`). Equal costs keep insertion order, exactly like the
+/// append + stable sort + truncate this replaced — same results, but
+/// O(log n) search + one bounded shift instead of a full re-sort per push.
+fn insert_bounded(best: &mut Vec<Schedule>, s: Schedule, top_k: usize) {
+    let pos = best.partition_point(|b| b.est.cost() <= s.est.cost());
+    if pos >= top_k {
+        return;
+    }
+    best.insert(pos, s);
+    best.truncate(top_k);
+}
+
+/// Cost the six DRAM permutations of one feasible leaf, returning the
+/// cheapest estimate and its order (the first permutation wins ties).
+fn leaf_estimate(
+    arch: &ArchDesc,
+    g: Gemm,
+    dataflow: Dataflow,
+    double_buffer: bool,
+    insn: [usize; 3],
+    onchip: [usize; 3],
+) -> Option<(Estimate, [Dim; 3])> {
+    let mut leaf_best: Option<(Estimate, [Dim; 3])> = None;
+    for raw in PERMS {
+        // The mapping generator canonicalizes the DRAM order with C
+        // innermost whenever the C loop iterates (the output tile must
+        // finish in the accumulator); cost the order that will actually
+        // run.
+        let order = if ceil_div(g.c, onchip[Dim::C.index()]) > 1 {
+            let mut o: Vec<Dim> = raw.iter().copied().filter(|&d| d != Dim::C).collect();
+            o.push(Dim::C);
+            [o[0], o[1], o[2]]
+        } else {
+            raw
+        };
+        let cand = Candidate {
+            workload: g,
+            dataflow,
+            double_buffer,
+            insn_tile: insn,
+            onchip_tile: onchip,
+            dram_order: order,
+        };
+        let est = estimate(arch, &cand);
+        if leaf_best.as_ref().map(|(b, _)| est.cost() < b.cost()).unwrap_or(true) {
+            leaf_best = Some((est, order));
+        }
+    }
+    leaf_best
+}
+
+/// An admissible lower bound on [`Estimate::cost`] over every DRAM
+/// permutation and on-chip tiling reachable under a (partially) fixed
+/// instruction tile. Each term is derived from `traffic::estimate` by
+/// dropping work:
+///
+/// * every operand is fetched from DRAM at least once, so
+///   `bytes ≥ N·C + C·K + N·K` (the revisit/int32 factors only add);
+/// * DMA pays at least those payload bytes at `bytes_per_cycle`
+///   (request latencies and row overheads dropped; the output term is
+///   covered by the 4 B/element accumulator-read traffic);
+/// * compute issues at least `ceil(N/n0)·ceil(C/c0)·ceil(K/k0)` matmuls
+///   at `n0 + 8` cycles each (preloads dropped; uses
+///   `ceil(B/t)·ceil(t/t0) ≥ ceil(B/t0)` per dimension);
+/// * the front end issues those same instructions at `insn_issue_cycles`;
+/// * latency is at least the slowest engine in both buffering modes.
+///
+/// Everything dropped only increases the true cost, so cutting a subtree
+/// when the bound already exceeds a full top-k list's worst entry can
+/// never change which candidates survive.
+struct LowerBound {
+    g: Gemm,
+    bytes_lb: f64,
+    dma_lb: f64,
+    issue_per_insn: f64,
+}
+
+impl LowerBound {
+    fn new(arch: &ArchDesc, g: Gemm) -> LowerBound {
+        let bytes_lb = (g.n * g.c + g.c * g.k + g.n * g.k) as f64;
+        LowerBound {
+            g,
+            bytes_lb,
+            dma_lb: bytes_lb / arch.dma.bytes_per_cycle as f64,
+            issue_per_insn: arch.host.insn_issue_cycles as f64,
+        }
+    }
+
+    /// Best-case cost with the instruction tile fixed at `(n0, c0, k0)`.
+    /// For a dimension whose divisor is not yet chosen, pass its largest
+    /// table entry: the bound is nonincreasing in each tile size, so the
+    /// maximum is the safe (weakest) choice for the whole subtree.
+    fn cost(&self, n0: usize, c0: usize, k0: usize) -> f64 {
+        let computes = (ceil_div(self.g.n, n0) * ceil_div(self.g.c, c0) * ceil_div(self.g.k, k0))
+            as f64;
+        let compute_lb = computes * (n0 as f64 + 8.0);
+        let issue_lb = computes * self.issue_per_insn;
+        compute_lb.max(self.dma_lb).max(issue_lb)
+            + 1e-3 * self.bytes_lb
+            + 1e-4 * (compute_lb + issue_lb)
+    }
+}
+
+/// Solve one configuration, returning up to `top_k` schedules sorted by
+/// analytic cost (best first). Returns an empty vec when no mapping fits
+/// (e.g. shares too small for even a single instruction tile).
+pub fn solve(arch: &ArchDesc, g: Gemm, cfg: &SolverConfig) -> Vec<Schedule> {
+    let tables = DimTables::new(arch, g);
+    solve_exhaustive(arch, g, cfg, &tables, &mut SearchStats::default())
+}
+
+/// The unpruned reference search: depth-first over (N, C, K) with
+/// capacity propagation only, costing every feasible leaf. This is what
+/// the differential tests compare the pruned group search against.
+pub(crate) fn solve_exhaustive(
+    arch: &ArchDesc,
+    g: Gemm,
+    cfg: &SolverConfig,
+    tables: &DimTables,
+    stats: &mut SearchStats,
+) -> Vec<Schedule> {
+    let caps = capacity_rows(arch, &cfg.shares, cfg.double_buffer);
     let mut best: Vec<Schedule> = Vec::new();
-    let mut push = |s: Schedule| {
-        best.push(s);
-        best.sort_by(|a, b| a.est.cost().partial_cmp(&b.est.cost()).unwrap());
-        best.truncate(cfg.top_k);
-    };
-
-    // Depth-first over (N, C, K) with capacity propagation.
-    for &(n_insn, n_tile) in &per_dim[Dim::N.index()] {
-        for &(c_insn, c_tile) in &per_dim[Dim::C.index()] {
+    for &(n_insn, n_tile) in &tables.per_dim[Dim::N.index()] {
+        for &(c_insn, c_tile) in &tables.per_dim[Dim::C.index()] {
             // Input footprint depends only on N and C — prune early.
             let probe = [n_tile, c_tile, 1];
             let probe_insn = [n_insn, c_insn, 1];
@@ -95,58 +263,173 @@ pub fn solve(arch: &ArchDesc, g: Gemm, cfg: &SolverConfig) -> Vec<Schedule> {
             {
                 continue;
             }
-            for &(k_insn, k_tile) in &per_dim[Dim::K.index()] {
+            for &(k_insn, k_tile) in &tables.per_dim[Dim::K.index()] {
                 let onchip = [n_tile, c_tile, k_tile];
-                let insn_probe = [n_insn, c_insn, k_insn];
-                let rows = footprint_rows(arch, &onchip, &insn_probe);
+                let insn = [n_insn, c_insn, k_insn];
+                let rows = footprint_rows(arch, &onchip, &insn);
                 if rows[Operand::Weight.index()] > caps[Operand::Weight.index()]
                     || rows[Operand::Output.index()] > caps[Operand::Output.index()]
                 {
                     continue;
                 }
-                let insn = [n_insn, c_insn, k_insn];
-                let mut leaf_best: Option<(Estimate, [Dim; 3])> = None;
-                for raw in PERMS {
-                    // The mapping generator canonicalizes the DRAM order
-                    // with C innermost whenever the C loop iterates (the
-                    // output tile must finish in the accumulator); cost
-                    // the order that will actually run.
-                    let order = if crate::util::ceil_div(g.c, c_tile) > 1 {
-                        let mut o: Vec<Dim> =
-                            raw.iter().copied().filter(|&d| d != Dim::C).collect();
-                        o.push(Dim::C);
-                        [o[0], o[1], o[2]]
-                    } else {
-                        raw
-                    };
-                    let cand = Candidate {
-                        workload: g,
-                        dataflow: cfg.dataflow,
-                        double_buffer: cfg.double_buffer,
-                        insn_tile: insn,
-                        onchip_tile: onchip,
-                        dram_order: order,
-                    };
-                    let est = estimate(arch, &cand);
-                    if leaf_best
-                        .as_ref()
-                        .map(|(b, _)| est.cost() < b.cost())
-                        .unwrap_or(true)
-                    {
-                        leaf_best = Some((est, order));
-                    }
+                stats.leaves_visited += 1;
+                if let Some((est, order)) =
+                    leaf_estimate(arch, g, cfg.dataflow, cfg.double_buffer, insn, onchip)
+                {
+                    insert_bounded(
+                        &mut best,
+                        Schedule {
+                            workload: g,
+                            dataflow: cfg.dataflow,
+                            double_buffer: cfg.double_buffer,
+                            shares: cfg.shares,
+                            insn_tile: insn,
+                            onchip_tile: onchip,
+                            dram_order: order,
+                            est,
+                        },
+                        cfg.top_k,
+                    );
                 }
-                if let Some((est, order)) = leaf_best {
-                    push(Schedule {
-                        workload: g,
-                        dataflow: cfg.dataflow,
-                        double_buffer: cfg.double_buffer,
-                        shares: cfg.shares,
-                        insn_tile: insn,
-                        onchip_tile: onchip,
-                        dram_order: order,
-                        est,
-                    });
+            }
+        }
+    }
+    best
+}
+
+/// Solve a whole group of configurations that share (dataflow,
+/// double-buffer, top_k) and differ only in memory shares, with one DFS.
+///
+/// The walk runs over the pointwise-max union of the group's capacities;
+/// at each node a per-configuration admit mask records which members the
+/// node is feasible for, and a leaf is costed once and pushed (in walk
+/// order) to every admitting member's own top-k list. That makes each
+/// member's list the exact subsequence `solve` would have produced —
+/// byte-identical results. On top of that:
+///
+/// * a leaf (or whole K-subtree) is skipped when the admissible
+///   [`LowerBound`] already exceeds the worst entry of every admitting
+///   member whose list is full;
+/// * members whose capacities are pointwise ≤ another member's explore a
+///   strict subset of its nodes and are counted in
+///   [`SearchStats::configs_pruned`] — they cost nothing extra beyond
+///   their own top-k bookkeeping.
+pub(crate) fn solve_group(
+    arch: &ArchDesc,
+    g: Gemm,
+    cfgs: &[SolverConfig],
+    tables: &DimTables,
+    stats: &mut SearchStats,
+) -> Vec<Vec<Schedule>> {
+    debug_assert!(!cfgs.is_empty());
+    debug_assert!(cfgs.windows(2).all(|w| {
+        w[0].dataflow == w[1].dataflow
+            && w[0].double_buffer == w[1].double_buffer
+            && w[0].top_k == w[1].top_k
+    }));
+    let caps: Vec<[usize; 3]> =
+        cfgs.iter().map(|c| capacity_rows(arch, &c.shares, c.double_buffer)).collect();
+    for (i, ci) in caps.iter().enumerate() {
+        let dominated = caps.iter().enumerate().any(|(j, cj)| {
+            // Ties count only the later point, so a pair of equal
+            // capacity vectors prunes one member, not both.
+            j != i && ci.iter().zip(cj).all(|(a, b)| a <= b) && (ci != cj || j < i)
+        });
+        if dominated {
+            stats.configs_pruned += 1;
+        }
+    }
+    let mut union = [0usize; 3];
+    for c in &caps {
+        for (u, &v) in union.iter_mut().zip(c) {
+            *u = (*u).max(v);
+        }
+    }
+
+    let (dataflow, double_buffer) = (cfgs[0].dataflow, cfgs[0].double_buffer);
+    let top_k = cfgs[0].top_k;
+    let lb = LowerBound::new(arch, g);
+    let mut best: Vec<Vec<Schedule>> = vec![Vec::new(); cfgs.len()];
+    // A member still needs a leaf while its list has room, or while the
+    // bound does not strictly beat its current worst. The worst of a full
+    // list only ever decreases, so a cut decided here stays valid.
+    let needs = |list: &[Schedule], bound: f64| {
+        if list.len() < top_k {
+            return true;
+        }
+        match list.last() {
+            Some(worst) => bound <= worst.est.cost(),
+            None => false, // top_k == 0: nothing can ever enter
+        }
+    };
+
+    let mut admit_nc = vec![false; cfgs.len()];
+    let mut admit = vec![false; cfgs.len()];
+    for &(n_insn, n_tile) in &tables.per_dim[Dim::N.index()] {
+        for &(c_insn, c_tile) in &tables.per_dim[Dim::C.index()] {
+            let probe = [n_tile, c_tile, 1];
+            let probe_insn = [n_insn, c_insn, 1];
+            let in_rows = footprint_rows(arch, &probe, &probe_insn)[Operand::Input.index()];
+            if in_rows > union[Operand::Input.index()] {
+                continue;
+            }
+            for (a, cap) in admit_nc.iter_mut().zip(&caps) {
+                *a = in_rows <= cap[Operand::Input.index()];
+            }
+            // Subtree bound: K's divisor is still free; its largest table
+            // entry minimizes the bound over the whole subtree.
+            let sub_lb = lb.cost(n_insn, c_insn, tables.max_insn[Dim::K.index()]);
+            if !admit_nc.iter().zip(&best).any(|(&a, b)| a && needs(b.as_slice(), sub_lb)) {
+                stats.leaves_pruned += tables.per_dim[Dim::K.index()].len() as u64;
+                continue;
+            }
+            for &(k_insn, k_tile) in &tables.per_dim[Dim::K.index()] {
+                let onchip = [n_tile, c_tile, k_tile];
+                let insn = [n_insn, c_insn, k_insn];
+                let rows = footprint_rows(arch, &onchip, &insn);
+                if rows[Operand::Weight.index()] > union[Operand::Weight.index()]
+                    || rows[Operand::Output.index()] > union[Operand::Output.index()]
+                {
+                    continue;
+                }
+                let mut any = false;
+                for ((a, &nc), cap) in admit.iter_mut().zip(&admit_nc).zip(&caps) {
+                    *a = nc
+                        && rows[Operand::Weight.index()] <= cap[Operand::Weight.index()]
+                        && rows[Operand::Output.index()] <= cap[Operand::Output.index()];
+                    any |= *a;
+                }
+                if !any {
+                    continue;
+                }
+                let leaf_lb = lb.cost(n_insn, c_insn, k_insn);
+                if !admit.iter().zip(&best).any(|(&a, b)| a && needs(b.as_slice(), leaf_lb)) {
+                    stats.leaves_pruned += 1;
+                    continue;
+                }
+                stats.leaves_visited += 1;
+                if let Some((est, order)) =
+                    leaf_estimate(arch, g, dataflow, double_buffer, insn, onchip)
+                {
+                    for ((list, &a), cfg) in best.iter_mut().zip(&admit).zip(cfgs) {
+                        if !a {
+                            continue;
+                        }
+                        insert_bounded(
+                            list,
+                            Schedule {
+                                workload: g,
+                                dataflow,
+                                double_buffer,
+                                shares: cfg.shares,
+                                insn_tile: insn,
+                                onchip_tile: onchip,
+                                dram_order: order,
+                                est,
+                            },
+                            top_k,
+                        );
+                    }
                 }
             }
         }
@@ -240,6 +523,99 @@ mod tests {
         for w in scheds.windows(2) {
             assert!(w[0].est.cost() <= w[1].est.cost());
         }
+    }
+
+    #[test]
+    fn bounded_insertion_matches_sort_truncate() {
+        // The reference semantics insert_bounded replaced: append, stable
+        // sort by cost, truncate. Replaying a solver run's push sequence
+        // through both must give identical lists (including tie order).
+        let arch = gemmini();
+        let cfg = SolverConfig {
+            top_k: 3,
+            ..SolverConfig::new(Dataflow::WeightStationary)
+        };
+        // top_k = usize::MAX keeps every feasible candidate; shuffling
+        // gives an arbitrary push order, including equal-cost runs.
+        let mut all = solve(
+            &arch,
+            Gemm::new(64, 96, 64),
+            &SolverConfig { top_k: usize::MAX, ..cfg },
+        );
+        assert!(all.len() > cfg.top_k);
+        Rng::new(3).shuffle(&mut all);
+        let mut reference: Vec<Schedule> = Vec::new();
+        let mut bounded: Vec<Schedule> = Vec::new();
+        for s in &all {
+            reference.push(s.clone());
+            reference.sort_by(|a, b| a.est.cost().partial_cmp(&b.est.cost()).unwrap());
+            reference.truncate(cfg.top_k);
+            insert_bounded(&mut bounded, s.clone(), cfg.top_k);
+        }
+        assert_eq!(reference, bounded);
+    }
+
+    #[test]
+    fn group_solve_matches_per_config_solve() {
+        let arch = gemmini();
+        let g = Gemm::new(256, 256, 256);
+        let tables = DimTables::new(&arch, g);
+        let cfgs: Vec<SolverConfig> = [[0.5, 0.5, 1.0], [0.25, 0.75, 1.0], [0.75, 0.25, 1.0]]
+            .iter()
+            .map(|&shares| SolverConfig {
+                shares,
+                ..SolverConfig::new(Dataflow::WeightStationary)
+            })
+            .collect();
+        let mut stats = SearchStats::default();
+        let grouped = solve_group(&arch, g, &cfgs, &tables, &mut stats);
+        for (cfg, got) in cfgs.iter().zip(&grouped) {
+            assert_eq!(got, &solve(&arch, g, cfg), "shares {:?}", cfg.shares);
+        }
+        assert!(stats.leaves_visited > 0);
+    }
+
+    #[test]
+    fn lower_bound_is_admissible() {
+        // The pruning bound must never exceed the true analytic cost of
+        // any leaf it covers — checked over random shapes and tiles.
+        let arch = gemmini();
+        prop::check("lower bound admissible", 80, |rng: &mut Rng| {
+            let pow2 = [1usize, 2, 4, 8, 16, 32, 64, 128, 256];
+            let g = Gemm::new(*rng.pick(&pow2), *rng.pick(&pow2), *rng.pick(&pow2));
+            let lb = LowerBound::new(&arch, g);
+            let tables = DimTables::new(&arch, g);
+            for _ in 0..8 {
+                let pick = |d: Dim| *rng.pick(&tables.per_dim[d.index()]);
+                let (n_insn, n_tile) = pick(Dim::N);
+                let (c_insn, c_tile) = pick(Dim::C);
+                let (k_insn, k_tile) = pick(Dim::K);
+                let dataflow = if rng.chance(0.5) {
+                    Dataflow::WeightStationary
+                } else {
+                    Dataflow::OutputStationary
+                };
+                let db = rng.chance(0.5);
+                let Some((est, _)) = leaf_estimate(
+                    &arch,
+                    g,
+                    dataflow,
+                    db,
+                    [n_insn, c_insn, k_insn],
+                    [n_tile, c_tile, k_tile],
+                ) else {
+                    continue;
+                };
+                let bound = lb.cost(n_insn, c_insn, k_insn);
+                if bound > est.cost() + 1e-6 {
+                    return Err(format!(
+                        "{g:?} insn=({n_insn},{c_insn},{k_insn}): bound {bound} > cost {}",
+                        est.cost()
+                    ));
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -3,11 +3,24 @@
 //! dataflows, uneven mapping strategies, and double buffering", then hand
 //! the refined candidates to the mapping generator for on-hardware
 //! (simulator) profiling.
+//!
+//! Three drivers produce the identical candidate list (differential- and
+//! property-tested below):
+//!
+//! * [`sweep_serial`] — the exhaustive reference: one unpruned solve per
+//!   configuration point;
+//! * [`sweep_parallel`] — the same solves fanned across worker threads;
+//! * [`sweep_pruned`] — the production path (`opts.pruned`, default on):
+//!   points sharing a (dataflow, double-buffer) pair run as one grouped,
+//!   lower-bound-pruned DFS ([`super::solver::solve_group`]), with the
+//!   groups themselves parallelized when `opts.parallel` is set.
+
+use std::collections::HashSet;
 
 use crate::arch::{ArchDesc, Dataflow};
-use crate::workload::Gemm;
+use crate::workload::{Dim, Gemm};
 
-use super::solver::{solve, SolverConfig};
+use super::solver::{solve_exhaustive, solve_group, DimTables, SearchStats, SolverConfig};
 use super::Schedule;
 
 /// Options controlling the sweep.
@@ -25,6 +38,10 @@ pub struct SweepOptions {
     /// is byte-identical to the serial sweep (tested), so this is purely a
     /// compile-time speed knob and is not part of the schedule-cache key.
     pub parallel: bool,
+    /// Use the grouped, lower-bound-pruned search. Also byte-identical to
+    /// the serial sweep (differential- and property-tested), so like
+    /// `parallel` it is a speed knob excluded from the cache key.
+    pub pruned: bool,
 }
 
 impl Default for SweepOptions {
@@ -35,6 +52,7 @@ impl Default for SweepOptions {
             uneven_mapping: true,
             double_buffering: true,
             parallel: true,
+            pruned: true,
         }
     }
 }
@@ -46,12 +64,14 @@ pub struct SweepResult {
     pub candidates: Vec<Schedule>,
     /// Number of (dataflow, shares, double-buffer) points explored.
     pub configs_explored: usize,
+    /// Search-effort counters (leaves costed / pruned, dominated points).
+    pub stats: SearchStats,
 }
 
 /// The ordered grid of configuration points (dataflow × memory shares ×
-/// double buffering) the sweep explores. Both the serial and the parallel
-/// sweep walk this exact order, which is what makes their outputs
-/// identical: the final sort is stable, so ties keep grid order.
+/// double buffering) the sweep explores. Every sweep driver walks this
+/// exact order, which is what makes their outputs identical: the final
+/// sort is stable, so ties keep grid order.
 fn config_points(arch: &ArchDesc, opts: &SweepOptions) -> Vec<SolverConfig> {
     let even = [0.5f64, 0.5, 1.0];
     let mut share_configs: Vec<[f64; 3]> = vec![even];
@@ -81,35 +101,41 @@ fn config_points(arch: &ArchDesc, opts: &SweepOptions) -> Vec<SolverConfig> {
     points
 }
 
-/// Run the sweep for one GEMM workload. Dispatches to the parallel
-/// implementation when `opts.parallel` is set; both paths return the
-/// identical result.
+/// Run the sweep for one GEMM workload. Dispatches to the pruned grouped
+/// search by default, else to the parallel or serial exhaustive drivers;
+/// all paths return the identical result.
 pub fn sweep(arch: &ArchDesc, g: Gemm, opts: &SweepOptions) -> SweepResult {
-    if opts.parallel {
+    if opts.pruned {
+        sweep_pruned(arch, g, opts)
+    } else if opts.parallel {
         sweep_parallel(arch, g, opts)
     } else {
         sweep_serial(arch, g, opts)
     }
 }
 
-/// The reference serial sweep (Fig. 2(b) outer loop).
+/// The reference serial sweep (Fig. 2(b) outer loop): exhaustive per
+/// point, sharing only the divisor tables across points.
 pub fn sweep_serial(arch: &ArchDesc, g: Gemm, opts: &SweepOptions) -> SweepResult {
     let points = config_points(arch, opts);
+    let tables = DimTables::new(arch, g);
+    let mut stats = SearchStats::default();
     let mut candidates = Vec::new();
     for cfg in &points {
-        candidates.extend(solve(arch, g, cfg));
+        candidates.extend(solve_exhaustive(arch, g, cfg, &tables, &mut stats));
     }
-    finalize(candidates, points.len(), opts)
+    finalize(candidates, points.len(), stats, opts)
 }
 
-/// Parallel sweep: fan the configuration points out across scoped worker
-/// threads (contiguous chunks, results concatenated in grid order), so the
-/// candidate list is byte-identical to [`sweep_serial`]'s.
+/// Parallel exhaustive sweep: fan the configuration points out across
+/// scoped worker threads (contiguous chunks, results concatenated in grid
+/// order), so the candidate list is byte-identical to [`sweep_serial`]'s.
 pub fn sweep_parallel(arch: &ArchDesc, g: Gemm, opts: &SweepOptions) -> SweepResult {
     let points = config_points(arch, opts);
     if points.len() < 2 {
         return sweep_serial(arch, g, opts);
     }
+    let tables = DimTables::new(arch, g);
     let workers = std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(4)
@@ -117,51 +143,116 @@ pub fn sweep_parallel(arch: &ArchDesc, g: Gemm, opts: &SweepOptions) -> SweepRes
     let chunk_len = crate::util::ceil_div(points.len(), workers);
 
     let mut per_point: Vec<Vec<Schedule>> = Vec::with_capacity(points.len());
+    let mut stats = SearchStats::default();
     std::thread::scope(|scope| {
         let handles: Vec<_> = points
             .chunks(chunk_len)
             .map(|chunk| {
+                let tables = &tables;
                 scope.spawn(move || {
-                    chunk.iter().map(|cfg| solve(arch, g, cfg)).collect::<Vec<_>>()
+                    let mut s = SearchStats::default();
+                    let lists: Vec<_> = chunk
+                        .iter()
+                        .map(|cfg| solve_exhaustive(arch, g, cfg, tables, &mut s))
+                        .collect();
+                    (lists, s)
                 })
             })
             .collect();
         for h in handles {
-            per_point.extend(h.join().expect("sweep worker panicked"));
+            let (lists, s) = h.join().expect("sweep worker panicked");
+            per_point.extend(lists);
+            stats.absorb(&s);
         }
     });
 
     let candidates: Vec<Schedule> = per_point.into_iter().flatten().collect();
-    finalize(candidates, points.len(), opts)
+    finalize(candidates, points.len(), stats, opts)
+}
+
+/// Pruned sweep: group the configuration points by (dataflow,
+/// double-buffer) — the axes that change the cost model — and run one
+/// shared, lower-bound-pruned DFS per group, each group on its own scoped
+/// thread when `opts.parallel` is set. Per-point results come back in
+/// grid order, so the final list is byte-identical to [`sweep_serial`]'s
+/// while costing strictly fewer solver leaves.
+pub fn sweep_pruned(arch: &ArchDesc, g: Gemm, opts: &SweepOptions) -> SweepResult {
+    let points = config_points(arch, opts);
+    let tables = DimTables::new(arch, g);
+    // Group points by (dataflow, double_buffer), remembering each point's
+    // grid index so the per-point lists reassemble in grid order.
+    let mut groups: Vec<(Vec<usize>, Vec<SolverConfig>)> = Vec::new();
+    for (i, cfg) in points.iter().enumerate() {
+        match groups.iter_mut().find(|(_, members)| {
+            members[0].dataflow == cfg.dataflow && members[0].double_buffer == cfg.double_buffer
+        }) {
+            Some((indices, members)) => {
+                indices.push(i);
+                members.push(*cfg);
+            }
+            None => groups.push((vec![i], vec![*cfg])),
+        }
+    }
+
+    let mut per_point: Vec<Vec<Schedule>> = vec![Vec::new(); points.len()];
+    let mut stats = SearchStats::default();
+    if opts.parallel && groups.len() >= 2 {
+        let results: Vec<(Vec<Vec<Schedule>>, SearchStats)> = std::thread::scope(|scope| {
+            let handles: Vec<_> = groups
+                .iter()
+                .map(|(_, members)| {
+                    let tables = &tables;
+                    scope.spawn(move || {
+                        let mut s = SearchStats::default();
+                        let lists = solve_group(arch, g, members, tables, &mut s);
+                        (lists, s)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("sweep worker panicked")).collect()
+        });
+        for ((indices, _), (lists, s)) in groups.iter().zip(results) {
+            stats.absorb(&s);
+            for (&i, list) in indices.iter().zip(lists) {
+                per_point[i] = list;
+            }
+        }
+    } else {
+        for (indices, members) in &groups {
+            let lists = solve_group(arch, g, members, &tables, &mut stats);
+            for (&i, list) in indices.iter().zip(lists) {
+                per_point[i] = list;
+            }
+        }
+    }
+
+    let candidates: Vec<Schedule> = per_point.into_iter().flatten().collect();
+    finalize(candidates, points.len(), stats, opts)
 }
 
 /// Rank, dedup and truncate the raw per-config candidates.
 fn finalize(
     mut candidates: Vec<Schedule>,
     configs_explored: usize,
+    stats: SearchStats,
     opts: &SweepOptions,
 ) -> SweepResult {
     candidates.sort_by(|a, b| a.est.cost().partial_cmp(&b.est.cost()).unwrap());
     // Global dedup: different share configs often produce the same mapping;
     // keep the first (cheapest) instance so the shortlist stays diverse.
-    let mut seen: Vec<([usize; 3], [usize; 3], [crate::workload::Dim; 3], Dataflow, bool)> =
-        Vec::new();
+    let mut seen: HashSet<([usize; 3], [usize; 3], [Dim; 3], Dataflow, bool)> =
+        HashSet::with_capacity(candidates.len());
     candidates.retain(|s| {
-        let key = (s.insn_tile, s.onchip_tile, s.dram_order, s.dataflow, s.double_buffer);
-        if seen.contains(&key) {
-            false
-        } else {
-            seen.push(key);
-            true
-        }
+        seen.insert((s.insn_tile, s.onchip_tile, s.dram_order, s.dataflow, s.double_buffer))
     });
     candidates.truncate(opts.max_candidates);
-    SweepResult { candidates, configs_explored }
+    SweepResult { candidates, configs_explored, stats }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::{prng::Rng, prop};
 
     #[test]
     fn sweep_explores_full_grid() {
@@ -201,12 +292,23 @@ mod tests {
 
     #[test]
     fn parallel_sweep_identical_to_serial() {
-        // The acceptance bar: for the ToyCar layer shapes (and a couple of
-        // streaming-scale shapes) the parallel sweep must return the exact
-        // candidate list — same schedules, same order, same estimates — as
-        // the serial reference.
+        // For the ToyCar layer shapes (and a couple of streaming-scale
+        // shapes) the parallel sweep must return the exact candidate list
+        // — same schedules, same order, same estimates — as the serial
+        // reference.
         let arch = ArchDesc::gemmini();
-        let shapes = [
+        for g in toycar_and_table2_shapes() {
+            let serial = sweep_serial(&arch, g, &SweepOptions::default());
+            let parallel = sweep_parallel(&arch, g, &SweepOptions::default());
+            assert_eq!(serial.configs_explored, parallel.configs_explored, "{g:?}");
+            assert_eq!(serial.candidates, parallel.candidates, "{g:?}");
+            // Both drivers are exhaustive: identical leaf counts too.
+            assert_eq!(serial.stats, parallel.stats, "{g:?}");
+        }
+    }
+
+    fn toycar_and_table2_shapes() -> Vec<Gemm> {
+        vec![
             Gemm::new(1, 640, 128), // ToyCar input layer
             Gemm::new(1, 128, 128), // ToyCar trunk
             Gemm::new(1, 128, 8),   // ToyCar bottleneck
@@ -214,13 +316,58 @@ mod tests {
             Gemm::new(1, 128, 640), // ToyCar output layer
             Gemm::new(64, 64, 64),
             Gemm::new(512, 512, 512),
-        ];
-        for g in shapes {
+        ]
+    }
+
+    #[test]
+    fn pruned_sweep_identical_to_serial_with_fewer_leaves() {
+        // The tentpole acceptance bar: the pruned grouped search must
+        // return candidates byte-identical to the exhaustive serial
+        // reference on the ToyCar + Table-2 shapes, while costing strictly
+        // fewer solver leaves on a Table-2 workload.
+        let arch = ArchDesc::gemmini();
+        for g in toycar_and_table2_shapes() {
             let serial = sweep_serial(&arch, g, &SweepOptions::default());
-            let parallel = sweep_parallel(&arch, g, &SweepOptions::default());
-            assert_eq!(serial.configs_explored, parallel.configs_explored, "{g:?}");
-            assert_eq!(serial.candidates, parallel.candidates, "{g:?}");
+            let pruned = sweep_pruned(&arch, g, &SweepOptions::default());
+            assert_eq!(serial.configs_explored, pruned.configs_explored, "{g:?}");
+            assert_eq!(serial.candidates, pruned.candidates, "{g:?}");
+            assert!(
+                pruned.stats.leaves_visited <= serial.stats.leaves_visited,
+                "{g:?}: pruned visited {} > serial {}",
+                pruned.stats.leaves_visited,
+                serial.stats.leaves_visited
+            );
         }
+        // Strictly fewer on the largest Table-2 layer (512³): shared
+        // group leaves alone guarantee it, lower-bound cuts add more.
+        let g = Gemm::new(512, 512, 512);
+        let serial = sweep_serial(&arch, g, &SweepOptions::default());
+        let pruned = sweep_pruned(&arch, g, &SweepOptions::default());
+        assert!(
+            pruned.stats.leaves_visited < serial.stats.leaves_visited,
+            "pruned visited {} >= serial {}",
+            pruned.stats.leaves_visited,
+            serial.stats.leaves_visited
+        );
+    }
+
+    #[test]
+    fn dominated_share_config_rides_free() {
+        // A share point whose capacities are pointwise ≤ another's
+        // explores a strict subset of its leaves; the grouped search
+        // counts it as pruned and still returns its exact candidates.
+        // Gemmini's stock share points are mutually incomparable, so add
+        // one that is dominated by the even split.
+        let mut arch = ArchDesc::gemmini();
+        arch.constraints.memory_share_configs.push([0.25, 0.25, 1.0]);
+        let g = Gemm::new(128, 128, 128);
+        let serial = sweep_serial(&arch, g, &SweepOptions::default());
+        let pruned = sweep_pruned(&arch, g, &SweepOptions::default());
+        assert_eq!(serial.candidates, pruned.candidates);
+        assert_eq!(serial.configs_explored, pruned.configs_explored);
+        // 4 groups × 1 dominated member each.
+        assert!(pruned.stats.configs_pruned > 0);
+        assert_eq!(serial.stats.configs_pruned, 0);
     }
 
     #[test]
@@ -230,6 +377,7 @@ mod tests {
         let on = sweep(&arch, g, &SweepOptions { parallel: true, ..Default::default() });
         let off = sweep(&arch, g, &SweepOptions { parallel: false, ..Default::default() });
         assert_eq!(on.candidates, off.candidates);
+        assert_eq!(on.stats, off.stats);
     }
 
     #[test]
@@ -255,5 +403,51 @@ mod tests {
         assert_eq!(tall.candidates[0].dataflow, Dataflow::WeightStationary);
         let deep = sweep(&arch, Gemm::new(16, 1024, 16), &SweepOptions::default());
         assert_eq!(deep.candidates[0].dataflow, Dataflow::OutputStationary);
+    }
+
+    #[test]
+    fn prop_pruned_sweep_matches_serial_reference() {
+        // Seeded property test over random GEMM shapes and sweep options:
+        // the pruned search must match the unpruned serial reference
+        // exactly — candidates, costs, and configs_explored accounting.
+        let arch = ArchDesc::gemmini();
+        prop::check("pruned sweep == serial sweep", 40, |rng: &mut Rng| {
+            let pow2 = [1usize, 2, 4, 8, 16, 32, 64, 128, 256, 512];
+            let n = *rng.pick(&pow2);
+            let c = *rng.pick(&[8usize, 16, 24, 40, 64, 96, 128, 320, 640]);
+            let k = *rng.pick(&pow2);
+            let g = Gemm::new(n, c, k);
+            let opts = SweepOptions {
+                top_k_per_config: rng.range(1, 3),
+                max_candidates: rng.range(4, 16),
+                uneven_mapping: rng.chance(0.8),
+                double_buffering: rng.chance(0.8),
+                parallel: rng.chance(0.5),
+                pruned: false,
+            };
+            let serial = sweep_serial(&arch, g, &opts);
+            let pruned = sweep_pruned(&arch, g, &opts);
+            if serial.configs_explored != pruned.configs_explored {
+                return Err(format!(
+                    "{g:?} {opts:?}: configs {} != {}",
+                    serial.configs_explored, pruned.configs_explored
+                ));
+            }
+            if serial.candidates != pruned.candidates {
+                return Err(format!("{g:?} {opts:?}: candidate lists differ"));
+            }
+            let costs_s: Vec<f64> = serial.candidates.iter().map(|s| s.est.cost()).collect();
+            let costs_p: Vec<f64> = pruned.candidates.iter().map(|s| s.est.cost()).collect();
+            if costs_s != costs_p {
+                return Err(format!("{g:?} {opts:?}: costs differ"));
+            }
+            if pruned.stats.leaves_visited > serial.stats.leaves_visited {
+                return Err(format!(
+                    "{g:?} {opts:?}: pruned visited more leaves ({} > {})",
+                    pruned.stats.leaves_visited, serial.stats.leaves_visited
+                ));
+            }
+            Ok(())
+        });
     }
 }

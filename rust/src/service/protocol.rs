@@ -19,9 +19,10 @@
 //! several YAML files for a multi-accelerator compile. Responses always
 //! carry `"ok":true|false`; compile responses add `items`, `dram_bytes`,
 //! `layers`, `cache_hits`/`cache_misses`/`sweeps` (this request's deltas),
-//! `cache_entries`, `elapsed_us` and `program_fnv` (a stable content hash
-//! of the emitted program, hex-encoded so no precision is lost in JSON
-//! numbers).
+//! `solver_leaves_visited`/`configs_pruned` (the search effort behind
+//! those sweeps — zero on a fully warm request), `cache_entries`,
+//! `elapsed_us` and `program_fnv` (a stable content hash of the emitted
+//! program, hex-encoded so no precision is lost in JSON numbers).
 
 use std::collections::BTreeMap;
 

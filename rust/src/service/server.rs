@@ -95,6 +95,13 @@ pub struct ServiceReply {
     pub cache_misses: u64,
     /// Schedule sweeps this request actually executed (0 = fully warm).
     pub sweeps: u64,
+    /// Solver leaves costed by this request's sweeps (prewarm + session;
+    /// 0 = fully warm). The search effort behind `sweeps`.
+    pub solver_leaves_visited: u64,
+    /// Dominated sweep configuration points that rode a shared group
+    /// search instead of running their own DFS (see
+    /// [`crate::scheduler::solver::SearchStats`]).
+    pub configs_pruned: u64,
     /// Wall-clock time of the whole request.
     pub elapsed: Duration,
 }
@@ -235,7 +242,8 @@ impl CompileServer {
                 CompiledArtifact::Single(out.deployment),
                 out.stages,
                 out.schedule_stats,
-                (0, 0, 0), // the warmer is the session compiler; counted below
+                // The warmer is the session compiler; counted below.
+                (0, 0, 0, 0, 0),
             )
         } else {
             let mc = MultiCompiler::with_shared_cache(
@@ -248,7 +256,13 @@ impl CompileServer {
                 CompiledArtifact::Multi(out.deployment),
                 out.stages,
                 out.schedule_stats,
-                (mc.sweeps_run(), mc.cache_hits(), mc.cache_misses()),
+                (
+                    mc.sweeps_run(),
+                    mc.cache_hits(),
+                    mc.cache_misses(),
+                    mc.solver_leaves_visited(),
+                    mc.configs_pruned(),
+                ),
             )
         };
         let sweeps: u64 = warmers.iter().map(|c| c.sweeps_run()).sum::<u64>() + session.0;
@@ -256,6 +270,10 @@ impl CompileServer {
             warmers.iter().map(|c| c.cache_hits()).sum::<u64>() + session.1;
         let cache_misses: u64 =
             warmers.iter().map(|c| c.cache_misses()).sum::<u64>() + session.2;
+        let solver_leaves_visited: u64 =
+            warmers.iter().map(|c| c.solver_leaves_visited()).sum::<u64>() + session.3;
+        let configs_pruned: u64 =
+            warmers.iter().map(|c| c.configs_pruned()).sum::<u64>() + session.4;
 
         // Write-on-update: only requests that learned something new pay
         // the (atomic) persist.
@@ -271,6 +289,8 @@ impl CompileServer {
             cache_hits,
             cache_misses,
             sweeps,
+            solver_leaves_visited,
+            configs_pruned,
             elapsed: t0.elapsed(),
         })
     }
@@ -325,7 +345,7 @@ impl CompileServer {
 
         if jobs.len() <= 1 {
             for (c, fp, g) in &jobs {
-                let _ = c.select_schedule(*g, *fp);
+                let _ = c.select_schedule(*g, *fp, None);
             }
             return Ok(());
         }
@@ -341,7 +361,7 @@ impl CompileServer {
                     let (c, fp, g) = &jobs[i];
                     // Single-flight inside: concurrent requests sharing
                     // this key wait here instead of re-searching.
-                    let _ = c.select_schedule(*g, *fp);
+                    let _ = c.select_schedule(*g, *fp, None);
                 });
             }
         });
@@ -369,10 +389,12 @@ mod tests {
         assert!(cold.sweeps >= 2, "at least one sweep per distinct shape");
         assert_eq!(cold.artifact.layers(), 2);
         assert!(cold.cache_misses > 0);
+        assert!(cold.solver_leaves_visited > 0, "cold sweeps cost solver leaves");
 
         let warm = server.compile_graph(&graph, std::slice::from_ref(&accel)).unwrap();
         assert_eq!(warm.sweeps, 0, "second identical request must be all hits");
         assert_eq!(warm.cache_misses, 0);
+        assert_eq!(warm.solver_leaves_visited, 0, "warm requests spend no search effort");
         assert!(warm.cache_hits >= 2);
         assert_eq!(
             warm.artifact.program().items,

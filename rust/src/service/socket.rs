@@ -186,6 +186,8 @@ fn handle_compile(
         .num_field("cache_hits", reply.cache_hits)
         .num_field("cache_misses", reply.cache_misses)
         .num_field("sweeps", reply.sweeps)
+        .num_field("solver_leaves_visited", reply.solver_leaves_visited)
+        .num_field("configs_pruned", reply.configs_pruned)
         .num_field("cache_entries", stats.entries as u64)
         .num_field("elapsed_us", reply.elapsed.as_micros() as u64)
         .str_field("program_fnv", &format!("{:016x}", reply.artifact.program_fnv()))

@@ -9,7 +9,7 @@ use tvm_accel::accel::gemmini::{desc_for_arch, gemmini_desc};
 use tvm_accel::arch::parse::arch_from_yaml;
 use tvm_accel::baselines::c_toolchain::compile_c_toolchain;
 use tvm_accel::baselines::naive_byoc::{compile_naive, import_with_weight_chain};
-use tvm_accel::pipeline::{CompileOptions, Compiler};
+use tvm_accel::pipeline::{CompileOptions, Compiler, MultiCompiler, SessionMemo};
 use tvm_accel::relay::eval::eval;
 use tvm_accel::relay::import::{from_quantized, parse_qmodel, write_qmodel, QModel};
 use tvm_accel::relay::quantize::{quantize_mlp, FloatDense};
@@ -306,6 +306,90 @@ fn heterogeneous_toycar_across_shipped_configs() {
     let plain = Compiler::new(targets[0].clone()).compile(&graph).unwrap();
     assert_eq!(solo.program.items, plain.program.items);
     assert_eq!(solo.segments.len(), 1);
+}
+
+/// The incremental-session memo: recompiling a model after changing ONE
+/// layer's shape re-runs the schedule search for exactly that layer. The
+/// shared cache is disabled so the memo is the only thing standing
+/// between the unchanged layers and a fresh sweep.
+#[test]
+fn incremental_recompile_resweeps_only_the_changed_layer() {
+    let opts = CompileOptions {
+        schedule_cache: false, // isolate the memo from the shared cache
+        cross_layer: false,    // no boundary-constrained re-searches
+        ..Default::default()
+    };
+    let compiler = Compiler::with_options(gemmini_desc().unwrap(), opts.clone());
+    let memo = SessionMemo::new();
+
+    let mut rng = Rng::new(1007);
+    let before = import_with_weight_chain(&mk_model(&mut rng, &[32, 48, 16], 4)).unwrap();
+    let first = compiler.compile_incremental_with_report(&before, &memo).unwrap();
+    assert_eq!(first.schedule_stats.searched, 2);
+    assert_eq!(first.schedule_stats.memo_hits, 0);
+    assert!(first.schedule_stats.solver_leaves > 0, "cold sweeps cost solver leaves");
+    let sweeps_cold = compiler.sweeps_run();
+    assert_eq!(sweeps_cold, 2, "one sweep per layer with the cache off");
+
+    // Widen the output layer only: fc0 keeps its (4, 32, 48) GEMM, fc1
+    // changes from (4, 48, 16) to (4, 48, 24).
+    let after = import_with_weight_chain(&mk_model(&mut rng, &[32, 48, 24], 4)).unwrap();
+    let second = compiler.compile_incremental_with_report(&after, &memo).unwrap();
+    assert_eq!(
+        compiler.sweeps_run(),
+        sweeps_cold + 1,
+        "only the changed layer re-runs the search"
+    );
+    assert_eq!(second.schedule_stats.memo_hits, 1);
+    assert_eq!(second.schedule_stats.searched, 1);
+
+    // The memo is a pure bypass: a further incremental compile of the
+    // edited model is sweep-free, and its program is byte-identical to
+    // what a cold compiler emits for the same graph.
+    let third = compiler.compile_incremental(&after, &memo).unwrap();
+    assert_eq!(compiler.sweeps_run(), sweeps_cold + 1, "fully warm recompile");
+    let cold = Compiler::with_options(gemmini_desc().unwrap(), opts).compile(&after).unwrap();
+    assert_eq!(third.program.items, cold.program.items);
+    assert!(memo.hits() >= 3, "memo served stage-3 lookups across compiles");
+}
+
+/// The memo also serves the multi-target partitioner's cost probes: the
+/// probes populate it during stage 2, so stage 3 re-schedules nothing,
+/// and a repeat incremental compile runs zero sweeps even with the
+/// shared cache disabled.
+#[test]
+fn incremental_memo_serves_multi_target_probes() {
+    use tvm_accel::arch::parse::arch_from_file;
+
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs");
+    let mut targets = Vec::new();
+    for file in ["gemmini.yaml", "bigarray_os.yaml"] {
+        let arch = arch_from_file(&dir.join(file)).unwrap();
+        let name = arch.name.clone();
+        targets.push(desc_for_arch(&name, arch).unwrap());
+    }
+    let opts = CompileOptions {
+        schedule_cache: false,
+        cross_layer: false,
+        ..Default::default()
+    };
+    let multi = MultiCompiler::with_options(targets, opts).unwrap();
+    let memo = SessionMemo::new();
+
+    let mut rng = Rng::new(1008);
+    let graph = import_with_weight_chain(&mk_model(&mut rng, &[32, 48, 16], 4)).unwrap();
+    let out = multi.compile_incremental_with_report(&graph, &memo).unwrap();
+    let sweeps_first = multi.sweeps_run();
+    assert!(sweeps_first >= 2, "each (shape, candidate) probe swept once");
+    assert_eq!(
+        out.schedule_stats.memo_hits, 2,
+        "stage 3 reuses the partition probes' memo entries"
+    );
+    assert_eq!(out.schedule_stats.searched, 0);
+
+    let again = multi.compile_incremental(&graph, &memo).unwrap();
+    assert_eq!(multi.sweeps_run(), sweeps_first, "repeat incremental compile is sweep-free");
+    assert_eq!(again.program.items, out.deployment.program.items);
 }
 
 /// Convolution support (paper Table 1 covers "2D convolution and dense"):
