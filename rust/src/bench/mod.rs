@@ -205,6 +205,10 @@ pub struct GateOutcome {
     /// Per-workload comparisons, bootstrap notices and advisory
     /// compile-time deltas.
     pub notes: Vec<String>,
+    /// Workload entries that were record-only (missing baseline file,
+    /// missing entry, or unset `0` value). Nonzero means the gate is
+    /// not actually armed and [`GateOutcome::render`] shouts about it.
+    pub bootstrap_entries: usize,
 }
 
 impl GateOutcome {
@@ -213,7 +217,14 @@ impl GateOutcome {
         self.failures.is_empty()
     }
 
-    /// Render notes then failures, one per line.
+    /// True when every workload was checked against a real measured
+    /// baseline — the gate can actually fail.
+    pub fn armed(&self) -> bool {
+        self.bootstrap_entries == 0
+    }
+
+    /// Render notes then failures, one per line, plus a loud warning
+    /// when any entry ran in record-only bootstrap mode.
     pub fn render(&self) -> String {
         let mut out = String::new();
         for n in &self.notes {
@@ -221,6 +232,15 @@ impl GateOutcome {
         }
         for f in &self.failures {
             out.push_str(&format!("  REGRESSION: {f}\n"));
+        }
+        if !self.armed() {
+            out.push_str(&format!(
+                "  WARNING: cycle gate is in record-only bootstrap mode for {} \
+                 workload(s) — regressions are NOT failing CI.\n  WARNING: commit a \
+                 measured {CYCLES_FILE} (tvm-accel bench --out-dir <baseline dir> on a \
+                 green run) to arm the gate.\n",
+                self.bootstrap_entries
+            ));
         }
         out
     }
@@ -246,22 +266,31 @@ pub fn check_against_baseline(
     let mut out = GateOutcome::default();
     let cycles_path = baseline_dir.join(CYCLES_FILE);
     match read_flat_json(&cycles_path) {
-        None => out.notes.push(format!(
-            "no cycle baseline at {} — recording only",
-            cycles_path.display()
-        )),
+        None => {
+            out.bootstrap_entries += report.results.len();
+            out.notes.push(format!(
+                "no cycle baseline at {} — recording only",
+                cycles_path.display()
+            ))
+        }
         Some(base) => {
             for r in &report.results {
                 match base.num_field(&r.name) {
-                    None => out.notes.push(format!(
-                        "{}: no baseline entry — recording only",
-                        r.name
-                    )),
-                    Some(b) if b <= 0.0 => out.notes.push(format!(
-                        "{}: baseline unset (0) — gate activates once a measured \
-                         baseline is committed",
-                        r.name
-                    )),
+                    None => {
+                        out.bootstrap_entries += 1;
+                        out.notes.push(format!(
+                            "{}: no baseline entry — recording only",
+                            r.name
+                        ))
+                    }
+                    Some(b) if b <= 0.0 => {
+                        out.bootstrap_entries += 1;
+                        out.notes.push(format!(
+                            "{}: baseline unset (0) — gate activates once a measured \
+                             baseline is committed",
+                            r.name
+                        ))
+                    }
                     Some(b) => {
                         let delta_pct = (r.cycles as f64 - b) / b * 100.0;
                         if delta_pct > max_regress_pct {
@@ -371,10 +400,29 @@ mod tests {
         let missing = check_against_baseline(&rep, &dir, 10.0);
         assert!(missing.passed(), "no baseline file = record-only");
         assert!(!missing.notes.is_empty());
+        assert!(!missing.armed(), "no baseline file means the gate is unarmed");
         std::fs::write(dir.join(CYCLES_FILE), "{\"a\":0,\"b\":0}\n").unwrap();
         let zero = check_against_baseline(&rep, &dir, 10.0);
         assert!(zero.passed(), "zero baseline = bootstrap, record-only");
         assert!(zero.notes.iter().any(|n| n.contains("baseline unset")));
+        assert_eq!(zero.bootstrap_entries, 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bootstrap_mode_warns_loudly_and_armed_mode_does_not() {
+        let rep = fake_report();
+        let dir = tmp_dir("warn");
+        // All-zero bootstrap baseline: the rendered outcome must shout.
+        std::fs::write(dir.join(CYCLES_FILE), "{\"a\":0,\"b\":0}\n").unwrap();
+        let boot = check_against_baseline(&rep, &dir, 10.0);
+        assert!(boot.render().contains("WARNING"), "got: {}", boot.render());
+        assert!(boot.render().contains("record-only bootstrap"));
+        // Measured baseline: armed, no warning.
+        std::fs::write(dir.join(CYCLES_FILE), "{\"a\":1000,\"b\":1000}\n").unwrap();
+        let armed = check_against_baseline(&rep, &dir, 15.0);
+        assert!(armed.armed());
+        assert!(!armed.render().contains("WARNING"), "got: {}", armed.render());
         std::fs::remove_dir_all(&dir).ok();
     }
 

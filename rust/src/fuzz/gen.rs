@@ -1,0 +1,206 @@
+//! Seeded random model-graph generator.
+//!
+//! [`gen_case`] draws a *valid* quantized GEMM-stack model — randomized
+//! layer count, dimensions (including degenerate 1s and non-power-of-two
+//! sizes), requant parameters and activations — plus one or more input
+//! vectors, entirely from a [`Rng`] seeded with the case seed. The same
+//! seed always yields byte-identical models and inputs, which is what
+//! makes every fuzz finding replayable from its seed alone.
+//!
+//! Every generated model parses back through
+//! [`crate::relay::import::parse_qmodel`] (chain-consistent dims, valid
+//! activation tags, `lo <= hi` on clip layers — `clamp` panics
+//! otherwise), so the generator can only produce graphs the compiler is
+//! *supposed* to handle; any downstream failure is a compiler bug, not a
+//! malformed input.
+
+use crate::relay::import::{QLayer, QModel};
+use crate::util::prng::Rng;
+
+/// Bounds of the random model space. The defaults keep a single case
+/// cheap enough to compile through every oracle axis in milliseconds
+/// while still covering degenerate (1) and awkward (odd, non-power-of-
+/// two) dimensions.
+#[derive(Debug, Clone, Copy)]
+pub struct GenOptions {
+    /// Maximum number of dense layers per model (≥ 1).
+    pub max_layers: usize,
+    /// Maximum layer width (input and output dims; ≥ 1).
+    pub max_dim: usize,
+    /// Maximum batch size (≥ 1).
+    pub max_batch: usize,
+    /// Maximum number of input vectors per case (≥ 1).
+    pub max_inputs: usize,
+}
+
+impl Default for GenOptions {
+    fn default() -> GenOptions {
+        GenOptions { max_layers: 4, max_dim: 64, max_batch: 4, max_inputs: 3 }
+    }
+}
+
+/// One generated differential-test case: the seed it came from, a valid
+/// quantized model, and the input vectors to run it on.
+#[derive(Debug, Clone)]
+pub struct FuzzCase {
+    /// The case seed (regenerates the case via [`gen_case`]).
+    pub seed: u64,
+    /// The generated quantized GEMM stack.
+    pub model: QModel,
+    /// Input vectors, each `batch * in_dim` int8 elements.
+    pub inputs: Vec<Vec<i8>>,
+}
+
+impl FuzzCase {
+    /// `batch * in_dim` — the length every input vector must have.
+    pub fn input_elems(&self) -> usize {
+        self.model.batch * self.model.layers[0].in_dim
+    }
+}
+
+/// One random dimension: mixes degenerate 1s, tiny odd sizes, arbitrary
+/// non-power-of-two widths and PE-aligned sizes. Always in
+/// `[1, max_dim]`.
+fn dim(rng: &mut Rng, max_dim: usize) -> usize {
+    let d = if rng.chance(0.12) {
+        1
+    } else if rng.chance(0.35) {
+        rng.range(2, max_dim.max(2).min(8))
+    } else if rng.chance(0.5) {
+        rng.range(2, max_dim.max(2))
+    } else {
+        *rng.pick(&[8usize, 16, 24, 32, 48, 64])
+    };
+    d.clamp(1, max_dim.max(1))
+}
+
+/// One requant scale: occasionally the identity (1.0, so in-range
+/// accumulators pass through and large ones hit the i8 rails), otherwise
+/// a typical small rescale.
+fn requant_scale(rng: &mut Rng) -> f32 {
+    if rng.chance(0.1) {
+        1.0
+    } else {
+        (0.004 + rng.f64() * 0.12) as f32
+    }
+}
+
+/// One bias value: mostly moderate, occasionally large enough to force
+/// saturation at a rail through any requant scale.
+fn bias_value(rng: &mut Rng) -> i32 {
+    if rng.chance(0.05) {
+        rng.below(1_000_001) as i32 - 500_000
+    } else {
+        rng.below(2_001) as i32 - 1_000
+    }
+}
+
+/// Generate the case for `seed`. Deterministic: the same seed and
+/// options always produce byte-identical model and inputs.
+pub fn gen_case(seed: u64, opts: &GenOptions) -> FuzzCase {
+    let mut rng = Rng::new(seed);
+    let n_layers = rng.range(1, opts.max_layers.max(1));
+    let batch = if rng.chance(0.25) { 1 } else { rng.range(1, opts.max_batch.max(1)) };
+
+    // The layer-width chain (n_layers + 1 widths; adjacent layers share
+    // a width, so the model is chain-consistent by construction).
+    let widths: Vec<usize> = (0..=n_layers).map(|_| dim(&mut rng, opts.max_dim)).collect();
+
+    let layers: Vec<QLayer> = widths
+        .windows(2)
+        .map(|w| {
+            let (in_dim, out_dim) = (w[0], w[1]);
+            let requant = requant_scale(&mut rng);
+            let act = rng.below(3) as u8;
+            // `i8::clamp` panics when lo > hi, so a clip layer must
+            // always carry an ordered range (lo == hi is legal and a
+            // useful degenerate case).
+            let (a, b) = (rng.i8(), rng.i8());
+            let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+            let weight = rng.i8_vec(out_dim * in_dim);
+            let bias = (0..out_dim).map(|_| bias_value(&mut rng)).collect();
+            QLayer { in_dim, out_dim, requant, out_scale: 0.1, act, lo, hi, weight, bias }
+        })
+        .collect();
+
+    let model = QModel { batch, input_scale: 0.05, layers };
+    let elems = batch * widths[0];
+    let n_inputs = rng.range(1, opts.max_inputs.max(1));
+    let inputs = (0..n_inputs)
+        .map(|_| {
+            if rng.chance(0.08) {
+                vec![0i8; elems] // all-zero input: bias-only data path
+            } else {
+                rng.i8_vec(elems)
+            }
+        })
+        .collect();
+
+    FuzzCase { seed, model, inputs }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::relay::import::{parse_qmodel, to_qnn_graph, write_qmodel};
+
+    #[test]
+    fn same_seed_same_case() {
+        let opts = GenOptions::default();
+        for seed in [0u64, 1, 42, u64::MAX] {
+            let a = gen_case(seed, &opts);
+            let b = gen_case(seed, &opts);
+            assert_eq!(write_qmodel(&a.model), write_qmodel(&b.model));
+            assert_eq!(a.inputs, b.inputs);
+            assert_eq!(a.seed, seed);
+        }
+    }
+
+    #[test]
+    fn generated_models_are_valid() {
+        // Every generated model must survive the importer's validation
+        // (chain consistency, positive dims, act tags, exact byte
+        // length) and build a QNN graph.
+        let opts = GenOptions::default();
+        for seed in 0..200u64 {
+            let case = gen_case(seed, &opts);
+            let bytes = write_qmodel(&case.model);
+            let back = parse_qmodel(&bytes)
+                .unwrap_or_else(|e| panic!("seed {seed}: generated model invalid: {e}"));
+            assert_eq!(back.layers.len(), case.model.layers.len());
+            to_qnn_graph(&case.model)
+                .unwrap_or_else(|e| panic!("seed {seed}: graph build failed: {e}"));
+            for l in &case.model.layers {
+                assert!(l.lo <= l.hi, "seed {seed}: clip range must be ordered");
+                assert!((1..=opts.max_dim).contains(&l.in_dim));
+                assert!((1..=opts.max_dim).contains(&l.out_dim));
+            }
+            assert!(!case.inputs.is_empty());
+            for x in &case.inputs {
+                assert_eq!(x.len(), case.input_elems());
+            }
+        }
+    }
+
+    #[test]
+    fn space_covers_degenerate_and_awkward_shapes() {
+        let opts = GenOptions::default();
+        let (mut ones, mut odd, mut multi_layer, mut zero_input, mut identity) =
+            (false, false, false, false, false);
+        for seed in 0..400u64 {
+            let case = gen_case(seed, &opts);
+            for l in &case.model.layers {
+                ones |= l.in_dim == 1 || l.out_dim == 1;
+                odd |= l.in_dim % 2 == 1 && l.in_dim > 1;
+                identity |= l.requant == 1.0;
+            }
+            multi_layer |= case.model.layers.len() > 1;
+            zero_input |= case.inputs.iter().any(|x| x.iter().all(|&v| v == 0));
+        }
+        assert!(ones, "degenerate dim-1 layers must appear");
+        assert!(odd, "odd non-power-of-two dims must appear");
+        assert!(multi_layer, "multi-layer stacks must appear");
+        assert!(zero_input, "all-zero inputs must appear");
+        assert!(identity, "identity requant (scale 1.0) must appear");
+    }
+}

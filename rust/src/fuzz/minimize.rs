@@ -1,0 +1,231 @@
+//! Deterministic shrinking of failing cases.
+//!
+//! [`minimize`] repeatedly proposes structurally smaller variants of a
+//! failing case — drop a layer, halve a dimension or the batch, drop
+//! extra inputs, zero the input data, strip activations — and keeps a
+//! variant whenever the caller's predicate says the failure still
+//! reproduces. Candidates are generated in a fixed order and the first
+//! reproducing one is taken, so the same failing case and predicate
+//! always minimize to the same reproducer (same seed in, same
+//! reproducer out).
+//!
+//! Every shrink keeps the model valid: the layer chain stays
+//! dimension-consistent (weights are re-sliced or zero-padded when a
+//! splice changes a layer's input width), `lo <= hi` is never touched,
+//! and inputs are resized to `batch * in_dim`.
+
+use crate::relay::import::QLayer;
+
+use super::gen::FuzzCase;
+
+/// Counters from one minimization run.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MinimizeStats {
+    /// Shrink candidates tried (predicate invocations, minus the initial
+    /// reproduction check).
+    pub attempts: u64,
+    /// Candidates that still reproduced and were kept.
+    pub accepted: u64,
+}
+
+/// Set a layer's input width, truncating or zero-padding each weight row
+/// (TFLite `[out, in]` layout: row r holds the weights of output r).
+fn resize_layer_input(l: &mut QLayer, new_in: usize) {
+    let copy = l.in_dim.min(new_in);
+    let mut w = vec![0i8; l.out_dim * new_in];
+    for r in 0..l.out_dim {
+        w[r * new_in..r * new_in + copy]
+            .copy_from_slice(&l.weight[r * l.in_dim..r * l.in_dim + copy]);
+    }
+    l.weight = w;
+    l.in_dim = new_in;
+}
+
+/// Truncate a layer's output width: drop weight rows and bias entries
+/// past `new_out` (callers shrink only, so `new_out <= out_dim`).
+fn truncate_layer_output(l: &mut QLayer, new_out: usize) {
+    debug_assert!(new_out <= l.out_dim);
+    l.weight.truncate(new_out * l.in_dim);
+    l.bias.truncate(new_out);
+    l.out_dim = new_out;
+}
+
+/// Resize every input vector to the model's current `batch * in_dim`
+/// (truncate, then zero-pad).
+fn fix_inputs(case: &mut FuzzCase) {
+    let want = case.model.batch * case.model.layers[0].in_dim;
+    for v in &mut case.inputs {
+        v.truncate(want);
+        v.resize(want, 0);
+    }
+}
+
+/// All shrink candidates of `cur`, most aggressive first. Deterministic
+/// order; every candidate is a valid case.
+fn shrink_candidates(cur: &FuzzCase) -> Vec<FuzzCase> {
+    let mut out = Vec::new();
+    let n_layers = cur.model.layers.len();
+
+    // 1. Drop one layer (splicing the chain back together).
+    if n_layers > 1 {
+        for i in 0..n_layers {
+            let mut c = cur.clone();
+            c.model.layers.remove(i);
+            // The old successor (now at index i, if any) must accept the
+            // old predecessor's output width.
+            if i > 0 && i < c.model.layers.len() {
+                let feed = c.model.layers[i - 1].out_dim;
+                resize_layer_input(&mut c.model.layers[i], feed);
+            }
+            fix_inputs(&mut c);
+            out.push(c);
+        }
+    }
+
+    // 2. Halve the batch.
+    if cur.model.batch > 1 {
+        let mut c = cur.clone();
+        c.model.batch /= 2;
+        fix_inputs(&mut c);
+        out.push(c);
+    }
+
+    // 3. Halve the first layer's input width.
+    if cur.model.layers[0].in_dim > 1 {
+        let mut c = cur.clone();
+        let new_in = cur.model.layers[0].in_dim / 2;
+        resize_layer_input(&mut c.model.layers[0], new_in);
+        fix_inputs(&mut c);
+        out.push(c);
+    }
+
+    // 4. Halve one layer's output width (and the successor's input).
+    for i in 0..n_layers {
+        if cur.model.layers[i].out_dim > 1 {
+            let mut c = cur.clone();
+            let new_out = cur.model.layers[i].out_dim / 2;
+            truncate_layer_output(&mut c.model.layers[i], new_out);
+            if i + 1 < n_layers {
+                resize_layer_input(&mut c.model.layers[i + 1], new_out);
+            }
+            out.push(c);
+        }
+    }
+
+    // 5. Drop extra inputs.
+    if cur.inputs.len() > 1 {
+        let mut c = cur.clone();
+        c.inputs.truncate(1);
+        out.push(c);
+    }
+
+    // 6. Zero the input data.
+    if cur.inputs.iter().any(|v| v.iter().any(|&x| x != 0)) {
+        let mut c = cur.clone();
+        for v in &mut c.inputs {
+            v.iter_mut().for_each(|x| *x = 0);
+        }
+        out.push(c);
+    }
+
+    // 7. Strip activations.
+    for i in 0..n_layers {
+        if cur.model.layers[i].act != 0 {
+            let mut c = cur.clone();
+            c.model.layers[i].act = 0;
+            out.push(c);
+        }
+    }
+
+    out
+}
+
+/// Shrink `case` while `still_fails` keeps returning true, to a fixed
+/// point. Returns the original (cloned) case untouched when it does not
+/// reproduce under the predicate.
+pub fn minimize(
+    case: &FuzzCase,
+    mut still_fails: impl FnMut(&FuzzCase) -> bool,
+) -> (FuzzCase, MinimizeStats) {
+    let mut stats = MinimizeStats::default();
+    if !still_fails(case) {
+        return (case.clone(), stats);
+    }
+    let mut cur = case.clone();
+    loop {
+        let mut progressed = false;
+        for cand in shrink_candidates(&cur) {
+            stats.attempts += 1;
+            if still_fails(&cand) {
+                cur = cand;
+                stats.accepted += 1;
+                progressed = true;
+                break; // regenerate candidates from the smaller case
+            }
+        }
+        if !progressed {
+            return (cur, stats);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fuzz::gen::{gen_case, GenOptions};
+    use crate::relay::import::{parse_qmodel, write_qmodel};
+
+    /// A synthetic "bug": fails whenever the model still has a layer
+    /// with an odd input width greater than 1.
+    fn has_odd_wide_input(c: &FuzzCase) -> bool {
+        c.model.layers.iter().any(|l| l.in_dim > 1 && l.in_dim % 2 == 1)
+    }
+
+    fn some_failing_case() -> FuzzCase {
+        let opts = GenOptions::default();
+        (0..)
+            .map(|s| gen_case(s, &opts))
+            .find(has_odd_wide_input)
+            .expect("the space contains odd input widths")
+    }
+
+    #[test]
+    fn shrinks_stay_valid_models() {
+        let opts = GenOptions::default();
+        for seed in 0..40u64 {
+            let case = gen_case(seed, &opts);
+            for cand in shrink_candidates(&case) {
+                parse_qmodel(&write_qmodel(&cand.model)).unwrap_or_else(|e| {
+                    panic!("seed {seed}: shrink produced an invalid model: {e}")
+                });
+                for x in &cand.inputs {
+                    assert_eq!(x.len(), cand.input_elems());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn minimizes_to_fixed_point_deterministically() {
+        let case = some_failing_case();
+        let (a, stats_a) = minimize(&case, has_odd_wide_input);
+        let (b, stats_b) = minimize(&case, has_odd_wide_input);
+        assert!(has_odd_wide_input(&a), "result must still fail");
+        assert_eq!(write_qmodel(&a.model), write_qmodel(&b.model));
+        assert_eq!(a.inputs, b.inputs);
+        assert_eq!(stats_a.accepted, stats_b.accepted);
+        // Fixed point: no shrink of the result reproduces.
+        assert!(shrink_candidates(&a).iter().all(|c| !has_odd_wide_input(c)));
+        // And it genuinely shrank from a multi-property random case.
+        assert!(a.model.layers.len() <= case.model.layers.len());
+        assert!(stats_a.attempts >= stats_a.accepted);
+    }
+
+    #[test]
+    fn non_reproducing_case_is_returned_unchanged() {
+        let case = gen_case(5, &GenOptions::default());
+        let (out, stats) = minimize(&case, |_| false);
+        assert_eq!(write_qmodel(&out.model), write_qmodel(&case.model));
+        assert_eq!(stats.accepted, 0);
+    }
+}

@@ -1,0 +1,387 @@
+//! The differential oracle: one case, every configuration axis.
+//!
+//! [`check_case`] compiles the case's model through each axis the repo
+//! makes promises about, executes on the simulator, and checks every
+//! promise against [`crate::relay::eval`] (element-exactness) or against
+//! a sibling configuration (cross-config invariants):
+//!
+//! | axis                  | invariant checked                                |
+//! |-----------------------|--------------------------------------------------|
+//! | `exact/single`        | pruned-sweep compile output == interpreter       |
+//! | `bytes/pruned-vs-serial` | serial sweep emits a byte-identical program   |
+//! | `exact/residency-off` | `cross_layer: false` output == interpreter       |
+//! | `residency/dram-transfer` | residency-on DRAM-transfer cycles ≤ off      |
+//! | `exact/multi`         | gemmini+bigarray multi-target output == interp.  |
+//! | `report/issued-commands` | merged `issued_commands` == accel insn count  |
+//! | `report/loop-ws`      | merged `loop_ws` count == program histogram      |
+//! | `report/host-counts`  | merged per-host-op counts == program histogram   |
+//! | `batch/exact`         | `run_batch` outputs == per-input `run` outputs   |
+//! | `batch/serial-sum`    | `serial_cycles` == Σ per-inference cycles        |
+//! | `batch/pipelined-le-serial` | pipelined ≤ serial (single and multi)      |
+//! | `timing/data-independent` | same program, same cycles for every input    |
+//!
+//! The byte-identity pair compiles through two *fresh* compilers: the
+//! `pruned`/`parallel` sweep knobs are deliberately excluded from the
+//! schedule-cache key (they promise byte-identical results), so reusing
+//! one compiler would let the second compile hit the first's cache and
+//! the comparison would be vacuous.
+
+use std::collections::BTreeMap;
+
+use crate::accel::gemmini::{desc_for_arch, gemmini_desc};
+use crate::accel::AccelDesc;
+use crate::arch::ArchDesc;
+use crate::pipeline::{CompileOptions, Compiler, MultiCompiler};
+use crate::relay::eval::eval;
+use crate::relay::import::to_qnn_graph;
+use crate::relay::{Graph, Tensor, TensorData};
+use crate::scheduler::sweep::SweepOptions;
+use crate::sim::report::RunReport;
+use crate::sim::Simulator;
+
+use super::gen::FuzzCase;
+
+/// The verdict for one case across every axis.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Verdict {
+    /// Every invariant held on every axis.
+    Pass,
+    /// The first invariant that broke.
+    Fail(Failure),
+}
+
+impl Verdict {
+    /// True for [`Verdict::Pass`].
+    pub fn passed(&self) -> bool {
+        matches!(self, Verdict::Pass)
+    }
+}
+
+/// One broken invariant: which axis caught it, and the details.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Failure {
+    /// Stable axis identifier (see the module table). The minimizer
+    /// shrinks while the *same axis* keeps failing, so a shrink that
+    /// trades one bug for a different one is rejected.
+    pub axis: &'static str,
+    /// Human-readable mismatch description.
+    pub detail: String,
+}
+
+fn fail(axis: &'static str, detail: impl Into<String>) -> Verdict {
+    Verdict::Fail(Failure { axis, detail: detail.into() })
+}
+
+/// The options every oracle compile uses (identical across the
+/// byte-identity pair — `profile_candidates` is part of the cache key
+/// and of the selection, so it must not differ).
+fn fuzz_options() -> CompileOptions {
+    CompileOptions { profile_candidates: 2, ..CompileOptions::default() }
+}
+
+/// The second multi-target candidate: a 32×32 output-stationary array
+/// with bigger scratchpad and wider DMA (the `bigarray-os` configuration
+/// the heterogeneous tests use).
+pub fn bigarray_desc() -> anyhow::Result<AccelDesc> {
+    let mut arch = ArchDesc::gemmini();
+    arch.name = "bigarray-os".into();
+    arch.pe_dim = 32;
+    arch.constraints.insn_tile_limit = 32;
+    arch.dataflows = vec![crate::arch::Dataflow::OutputStationary];
+    arch.levels[1].size_bytes = 131072; // accumulator
+    arch.levels[2].size_bytes = 524288; // scratchpad
+    arch.dma.bytes_per_cycle = 32;
+    desc_for_arch("bigarray-os", arch)
+}
+
+/// First index where two int8 vectors differ, with values (for the
+/// failure detail).
+fn first_diff(got: &[i8], want: &[i8]) -> String {
+    if got.len() != want.len() {
+        return format!("length {} vs {}", got.len(), want.len());
+    }
+    match got.iter().zip(want).position(|(a, b)| a != b) {
+        Some(i) => format!("elem {i}: got {} want {}", got[i], want[i]),
+        None => "identical".to_string(),
+    }
+}
+
+/// The interpreter's output for one input vector.
+fn reference_output(case: &FuzzCase, graph: &Graph, input: &[i8]) -> anyhow::Result<Vec<i8>> {
+    let mut m = BTreeMap::new();
+    m.insert(
+        "x".to_string(),
+        Tensor::new(
+            vec![case.model.batch, case.model.layers[0].in_dim],
+            TensorData::I8(input.to_vec()),
+        )?,
+    );
+    let out = eval(graph, &m)?;
+    Ok(out[0].data.as_i8()?.to_vec())
+}
+
+/// Check the merged [`RunReport`] of a full-program execution against
+/// the instruction stream it claims to describe.
+fn check_report_counters(
+    rep: &RunReport,
+    program: &crate::isa::program::Program,
+) -> Option<Verdict> {
+    let accel = program.accel_insn_count() as u64;
+    if rep.issued_commands != accel {
+        return Some(fail(
+            "report/issued-commands",
+            format!(
+                "merged report issued {} commands, program has {accel} accel instructions",
+                rep.issued_commands
+            ),
+        ));
+    }
+    let hist = program.histogram();
+    let hist_loop_ws = hist.get("loop_ws").copied().unwrap_or(0) as u64;
+    let rep_loop_ws = rep.insn_counts.get("loop_ws").copied().unwrap_or(0);
+    if rep_loop_ws != hist_loop_ws {
+        return Some(fail(
+            "report/loop-ws",
+            format!("report counted {rep_loop_ws} loop_ws, histogram has {hist_loop_ws}"),
+        ));
+    }
+    // Every host op executes exactly once per run, so the merged report's
+    // per-mnemonic counts must equal the static histogram.
+    for (&m, &n) in &hist {
+        if !m.starts_with("host.") {
+            continue;
+        }
+        let counted = rep.insn_counts.get(m).copied().unwrap_or(0);
+        if counted != n as u64 {
+            return Some(fail(
+                "report/host-counts",
+                format!("host op {m}: report counted {counted}, histogram has {n}"),
+            ));
+        }
+    }
+    None
+}
+
+/// Run `case` through every configuration axis. Returns the first
+/// broken invariant (axes are checked in a fixed order, so the verdict
+/// is deterministic).
+pub fn check_case(case: &FuzzCase) -> Verdict {
+    let graph = match to_qnn_graph(&case.model) {
+        Ok(g) => g,
+        Err(e) => return fail("import", format!("to_qnn_graph: {e:#}")),
+    };
+
+    // Reference outputs, one per input vector.
+    let mut want = Vec::with_capacity(case.inputs.len());
+    for (i, input) in case.inputs.iter().enumerate() {
+        match reference_output(case, &graph, input) {
+            Ok(o) => want.push(o),
+            Err(e) => return fail("reference-eval", format!("input {i}: {e:#}")),
+        }
+    }
+
+    let accel = match gemmini_desc() {
+        Ok(a) => a,
+        Err(e) => return fail("compile/single", format!("gemmini_desc: {e:#}")),
+    };
+    let sim = Simulator::new(&accel.arch);
+
+    // Axis: single-target, default (pruned, parallel) sweep.
+    let dep = match Compiler::with_options(accel.clone(), fuzz_options()).compile(&graph) {
+        Ok(d) => d,
+        Err(e) => return fail("compile/single", format!("{e:#}")),
+    };
+    let mut single_reports = Vec::with_capacity(case.inputs.len());
+    for (i, input) in case.inputs.iter().enumerate() {
+        match dep.run(&sim, input) {
+            Ok((got, rep)) => {
+                if got != want[i] {
+                    return fail(
+                        "exact/single",
+                        format!("input {i}: {}", first_diff(&got, &want[i])),
+                    );
+                }
+                single_reports.push(rep);
+            }
+            Err(e) => return fail("exact/single", format!("input {i}: run: {e:#}")),
+        }
+    }
+    // Axis: timing is data-independent — same program, same cycles for
+    // every input.
+    if let Some((i, r)) = single_reports
+        .iter()
+        .enumerate()
+        .find(|(_, r)| r.cycles != single_reports[0].cycles)
+    {
+        return fail(
+            "timing/data-independent",
+            format!(
+                "input {i} took {} cycles, input 0 took {}",
+                r.cycles, single_reports[0].cycles
+            ),
+        );
+    }
+
+    // Axis: the serial, unpruned sweep must emit a byte-identical
+    // program (fresh compiler: pruned/parallel are excluded from the
+    // cache key, so a shared compiler would make this vacuous).
+    let serial_opts = CompileOptions {
+        sweep: SweepOptions { pruned: false, parallel: false, ..SweepOptions::default() },
+        ..fuzz_options()
+    };
+    match Compiler::with_options(accel.clone(), serial_opts).compile(&graph) {
+        Ok(d) => {
+            if d.program.items != dep.program.items {
+                return fail(
+                    "bytes/pruned-vs-serial",
+                    format!(
+                        "pruned sweep emitted {} items, serial emitted {} (first diff at {:?})",
+                        dep.program.items.len(),
+                        d.program.items.len(),
+                        dep.program.items.iter().zip(&d.program.items).position(|(a, b)| a != b)
+                    ),
+                );
+            }
+        }
+        Err(e) => return fail("compile/serial", format!("{e:#}")),
+    }
+
+    // Axis: cross-layer residency off — still element-exact, and the
+    // residency-on deployment never moves more DRAM-transfer cycles.
+    let no_res_opts = CompileOptions { cross_layer: false, ..fuzz_options() };
+    match Compiler::with_options(accel.clone(), no_res_opts).compile(&graph) {
+        Ok(d) => {
+            for (i, input) in case.inputs.iter().enumerate() {
+                match d.run(&sim, input) {
+                    Ok((got, rep)) => {
+                        if got != want[i] {
+                            return fail(
+                                "exact/residency-off",
+                                format!("input {i}: {}", first_diff(&got, &want[i])),
+                            );
+                        }
+                        if i == 0
+                            && single_reports[0].dram_transfer_cycles > rep.dram_transfer_cycles
+                        {
+                            return fail(
+                                "residency/dram-transfer",
+                                format!(
+                                    "residency-on spent {} DRAM-transfer cycles, off spent {}",
+                                    single_reports[0].dram_transfer_cycles, rep.dram_transfer_cycles
+                                ),
+                            );
+                        }
+                    }
+                    Err(e) => {
+                        return fail("exact/residency-off", format!("input {i}: run: {e:#}"))
+                    }
+                }
+            }
+        }
+        Err(e) => return fail("compile/residency-off", format!("{e:#}")),
+    }
+
+    // Axis: multi-target (gemmini + bigarray-os) — element-exact, and
+    // the merged report's counters must match the instruction stream.
+    let bigarray = match bigarray_desc() {
+        Ok(a) => a,
+        Err(e) => return fail("compile/multi", format!("bigarray_desc: {e:#}")),
+    };
+    let multi = MultiCompiler::with_options(vec![accel.clone(), bigarray], fuzz_options());
+    let multi = match multi.and_then(|m| m.compile(&graph)) {
+        Ok(d) => d,
+        Err(e) => return fail("compile/multi", format!("{e:#}")),
+    };
+    for (i, input) in case.inputs.iter().enumerate() {
+        match multi.run(input) {
+            Ok((got, rep)) => {
+                if got != want[i] {
+                    return fail(
+                        "exact/multi",
+                        format!("input {i}: {}", first_diff(&got, &want[i])),
+                    );
+                }
+                if i == 0 {
+                    if let Some(v) = check_report_counters(&rep, &multi.program) {
+                        return v;
+                    }
+                }
+            }
+            Err(e) => return fail("exact/multi", format!("input {i}: run: {e:#}")),
+        }
+    }
+
+    // Axis: run_batch — outputs identical to per-input runs, serial
+    // cycles are the sum, pipelined never exceeds serial.
+    let refs: Vec<&[i8]> = case.inputs.iter().map(|v| v.as_slice()).collect();
+    match dep.run_batch(&sim, &refs) {
+        Ok(batch) => {
+            for (i, w) in want.iter().enumerate() {
+                if &batch.outputs[i] != w {
+                    return fail(
+                        "batch/exact",
+                        format!("inference {i}: {}", first_diff(&batch.outputs[i], w)),
+                    );
+                }
+            }
+            let sum: u64 = batch.reports.iter().map(|r| r.cycles).sum();
+            if batch.serial_cycles != sum {
+                return fail(
+                    "batch/serial-sum",
+                    format!("serial_cycles {} != per-inference sum {sum}", batch.serial_cycles),
+                );
+            }
+            if batch.pipelined_cycles > batch.serial_cycles {
+                return fail(
+                    "batch/pipelined-le-serial",
+                    format!(
+                        "pipelined {} > serial {}",
+                        batch.pipelined_cycles, batch.serial_cycles
+                    ),
+                );
+            }
+        }
+        Err(e) => return fail("batch/exact", format!("run_batch: {e:#}")),
+    }
+    match multi.run_batch(&refs) {
+        Ok(batch) => {
+            if batch.pipelined_cycles > batch.serial_cycles {
+                return fail(
+                    "batch/pipelined-le-serial",
+                    format!(
+                        "multi: pipelined {} > serial {}",
+                        batch.pipelined_cycles, batch.serial_cycles
+                    ),
+                );
+            }
+        }
+        Err(e) => return fail("batch/exact", format!("multi run_batch: {e:#}")),
+    }
+
+    Verdict::Pass
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fuzz::gen::{gen_case, GenOptions};
+
+    #[test]
+    fn small_cases_pass_every_axis() {
+        // A handful of real end-to-end cases (kept small: each one runs
+        // four compiles and a dozen simulations).
+        let opts = GenOptions { max_layers: 2, max_dim: 16, max_batch: 2, max_inputs: 2 };
+        for seed in [11u64, 12, 13] {
+            let case = gen_case(seed, &opts);
+            let v = check_case(&case);
+            assert!(v.passed(), "seed {seed} failed: {v:?}");
+        }
+    }
+
+    #[test]
+    fn verdict_is_deterministic() {
+        let opts = GenOptions { max_layers: 2, max_dim: 12, max_batch: 2, max_inputs: 1 };
+        let case = gen_case(99, &opts);
+        assert_eq!(check_case(&case), check_case(&case));
+    }
+}

@@ -37,6 +37,11 @@
 //! * the paper's two baselines ([`baselines`]) and a PJRT-backed golden
 //!   reference runtime (`runtime`, behind the off-by-default `xla-runtime`
 //!   cargo feature: it needs the pinned `xla_extension` 0.5.1 toolchain);
+//! * **differential fuzzing at scale** — a seeded model-graph generator,
+//!   a multi-axis differential oracle (every compile configuration checked
+//!   element-exactly against the interpreter plus cross-config invariants),
+//!   a deterministic minimizer and a replayable reproducer corpus
+//!   ([`fuzz`], `tvm-accel fuzz --cases N --seed S`);
 //! * a tracked **performance trajectory** — `tvm-accel bench` cold-compiles
 //!   the Table-2 workloads, records compile cost and simulated cycles as
 //!   `BENCH_compile.json` / `BENCH_cycles.json`, and [`bench`] gates CI on
@@ -94,6 +99,7 @@ pub mod backend;
 pub mod baselines;
 pub mod bench;
 pub mod frontend;
+pub mod fuzz;
 pub mod isa;
 pub mod metrics;
 pub mod pipeline;

@@ -17,6 +17,10 @@
 //!               simulated cycles, optionally write BENCH_*.json and gate
 //!               against a committed baseline (the perf trajectory)
 //!   gen-model — write a deterministic random .qmodel (for smoke tests)
+//!   fuzz      — differential fuzzing: seeded random graphs through every
+//!               compile-configuration axis, checked element-exactly
+//!               against the interpreter; failures minimize to replayable
+//!               .repro files (or replay one with --replay F)
 //!
 //! The `compile`, `run` and `cache warm` paths hydrate the on-disk
 //! schedule cache (default: `~/.cache/tvm-accel/schedules.bin`, override
@@ -39,6 +43,7 @@ use tvm_accel::accel::AccelDesc;
 use tvm_accel::baselines::c_toolchain::compile_c_toolchain;
 use tvm_accel::baselines::naive_byoc::compile_naive;
 use tvm_accel::bench;
+use tvm_accel::fuzz;
 use tvm_accel::isa::program::Program;
 use tvm_accel::metrics::describe;
 use tvm_accel::pipeline::{CompileOptions, Deployment};
@@ -59,7 +64,7 @@ use tvm_accel::workload::Gemm;
 const VALUE_OPTS: &[&str] = &[
     "n", "c", "k", "model", "backend", "arch", "golden", "inferences", "seed", "socket",
     "cache", "workers", "dims", "batch", "out", "max-entries", "out-dir", "baseline",
-    "max-regress",
+    "max-regress", "cases", "replay",
 ];
 
 /// Single-target variant of [`load_accels`] for subcommands that drive
@@ -481,6 +486,43 @@ fn cmd_gen_model(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_fuzz(args: &Args) -> Result<()> {
+    if let Some(path) = args.opt("replay") {
+        return match fuzz::replay_file(Path::new(path))? {
+            fuzz::Verdict::Pass => {
+                println!("reproducer {path}: all axes pass");
+                Ok(())
+            }
+            fuzz::Verdict::Fail(f) => {
+                bail!("reproducer {path}: axis {} still fails: {}", f.axis, f.detail)
+            }
+        };
+    }
+    let cases = args.opt_usize("cases", 500)? as u64;
+    ensure!(cases > 0, "--cases must be at least 1");
+    let opts = fuzz::FuzzOptions {
+        cases,
+        seed: args.opt_usize("seed", 0)? as u64,
+        gen: fuzz::GenOptions::default(),
+        out_dir: Some(PathBuf::from(args.opt_or("out-dir", "fuzz-reproducers"))),
+    };
+    eprintln!(
+        "tvm-accel fuzz: {} case(s) from seed {}, every configuration axis \
+         checked against the interpreter",
+        opts.cases, opts.seed
+    );
+    let summary = fuzz::run_fuzz(&opts)?;
+    print!("{}", summary.render());
+    if !summary.passed() {
+        bail!(
+            "{} case(s) broke a compiler invariant (minimized reproducers above)",
+            summary.findings.len()
+        );
+    }
+    println!("all {} case(s) passed every axis", summary.cases);
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let args = Args::from_env(VALUE_OPTS)?;
     match args.positional.first().map(|s| s.as_str()) {
@@ -492,9 +534,10 @@ fn main() -> Result<()> {
         Some("cache") => cmd_cache(&args),
         Some("bench") => cmd_bench(&args),
         Some("gen-model") => cmd_gen_model(&args),
+        Some("fuzz") => cmd_fuzz(&args),
         _ => {
             eprintln!(
-                "usage: tvm-accel <schedule|compile|run|disasm|serve|cache|bench|gen-model>\n\
+                "usage: tvm-accel <schedule|compile|run|disasm|serve|cache|bench|gen-model|fuzz>\n\
                  \x20 compile:     --model F.qmodel [--backend proposed|naive|c-toolchain]\n\
                  \x20              [--arch F.yaml[,G.yaml...]] [--cache F|--no-cache]\n\
                  \x20              [--socket S  (proposed backend via a running server)]\n\
@@ -506,7 +549,10 @@ fn main() -> Result<()> {
                  \x20              [--max-entries N  (gc: LRU-trim the artifact)]\n\
                  \x20 bench:       [--out-dir D  (write BENCH_*.json)] [--baseline D]\n\
                  \x20              [--max-regress PCT  (cycle gate, default 10)]\n\
-                 \x20 gen-model:   --out F.qmodel [--dims 32,48,16] [--batch N] [--seed N]"
+                 \x20 gen-model:   --out F.qmodel [--dims 32,48,16] [--batch N] [--seed N]\n\
+                 \x20 fuzz:        [--cases N (default 500)] [--seed N]\n\
+                 \x20              [--out-dir D  (reproducers, default fuzz-reproducers)]\n\
+                 \x20              [--replay F.repro  (re-check one archived reproducer)]"
             );
             std::process::exit(2);
         }

@@ -326,4 +326,76 @@ mod tests {
         let g = crate::relay::tests::qnn_layer();
         assert!(eval(&g, &BTreeMap::new()).is_err());
     }
+
+    // ---- quantized-model edge cases (independent of the fuzzer, so a
+    // ---- regression here localizes to the interpreter itself) ----
+
+    use crate::relay::import::{to_qnn_graph, QLayer, QModel};
+
+    fn layer(in_dim: usize, out_dim: usize, requant: f32, act: u8) -> QLayer {
+        QLayer {
+            in_dim,
+            out_dim,
+            requant,
+            out_scale: 0.1,
+            act,
+            lo: -100,
+            hi: 100,
+            weight: vec![0; out_dim * in_dim],
+            bias: vec![0; out_dim],
+        }
+    }
+
+    fn eval_qmodel(model: &QModel, input: Vec<i8>) -> Vec<i8> {
+        let g = to_qnn_graph(model).unwrap();
+        let t = Tensor::new(
+            vec![model.batch, model.layers[0].in_dim],
+            TensorData::I8(input),
+        )
+        .unwrap();
+        let out = eval(&g, &input_map("x", t)).unwrap();
+        out[0].data.as_i8().unwrap().to_vec()
+    }
+
+    #[test]
+    fn single_layer_1x1x1_gemm() {
+        // The smallest possible model: batch 1, one 1×1 layer.
+        // acc = 3*4 + 10 = 22; requant 0.5 → 11.
+        let mut l = layer(1, 1, 0.5, 0);
+        l.weight = vec![4];
+        l.bias = vec![10];
+        let m = QModel { batch: 1, input_scale: 0.05, layers: vec![l] };
+        assert_eq!(eval_qmodel(&m, vec![3]), vec![11]);
+    }
+
+    #[test]
+    fn saturation_at_both_i8_rails() {
+        // Identity requant with huge biases must clamp to exactly -128
+        // and 127, not wrap.
+        let mut l = layer(1, 2, 1.0, 0);
+        l.bias = vec![100_000, -100_000];
+        let m = QModel { batch: 1, input_scale: 0.05, layers: vec![l] };
+        assert_eq!(eval_qmodel(&m, vec![1]), vec![127, -128]);
+    }
+
+    #[test]
+    fn identity_requant_passes_accumulator_through() {
+        // scale 1.0: in-range accumulators come back exactly.
+        let mut l = layer(1, 1, 1.0, 0);
+        l.weight = vec![7];
+        l.bias = vec![-3];
+        let m = QModel { batch: 1, input_scale: 0.05, layers: vec![l] };
+        assert_eq!(eval_qmodel(&m, vec![5]), vec![32]); // 5*7 - 3
+    }
+
+    #[test]
+    fn zero_input_graph_is_bias_only() {
+        // An all-zero input exercises the bias-only data path: the dense
+        // contributes nothing, so the output is the requantized bias.
+        let mut l = layer(3, 2, 1.0, 0);
+        l.weight = vec![9; 2 * 3]; // must not matter
+        l.bias = vec![42, -7];
+        let m = QModel { batch: 2, input_scale: 0.05, layers: vec![l] };
+        assert_eq!(eval_qmodel(&m, vec![0; 2 * 3]), vec![42, -7, 42, -7]);
+    }
 }

@@ -46,8 +46,13 @@ pub fn check_seeded(
         let seed = base_seed.wrapping_add(i).wrapping_mul(0x9E3779B97F4A7C15);
         let mut rng = Rng::new(seed);
         if let Err(msg) = f(&mut rng) {
+            // base_seed + i regenerates this exact case as case 0 of a
+            // one-case replay run: the derivation multiplies the sum, so
+            // (base + i + 0) * M == (base + i) * M.
+            let replay = base_seed.wrapping_add(i);
             panic!(
-                "property '{name}' failed at case {i} (replay: base_seed={base_seed:#x}): {msg}"
+                "property '{name}' failed at case {i} (case seed {seed:#018x}): {msg}\n  \
+                 replay: check_seeded(\"{name}\", {replay:#x}, 1, &mut f)"
             );
         }
     }
@@ -72,5 +77,45 @@ mod tests {
             let v = rng.range(0, 10);
             assert_prop(v < 5, format!("v={v}"))
         });
+    }
+
+    #[test]
+    fn reported_replay_seed_reproduces_the_failure() {
+        use std::panic::{catch_unwind, AssertUnwindSafe};
+
+        // Fails only when the first draw is exactly 3, so most cases
+        // pass and the failure lands at some case i > 0 — the
+        // interesting replay situation. P(no 3 in 1000 draws) ≈ 1e-58.
+        fn octant_prop(rng: &mut Rng) -> CaseResult {
+            let v = rng.below(8);
+            assert_prop(v != 3, format!("v={v}"))
+        }
+
+        let err = catch_unwind(AssertUnwindSafe(|| {
+            let mut f = octant_prop;
+            check_seeded("octants", 0xFEED, 1000, &mut f);
+        }))
+        .expect_err("the property must fail within 1000 cases");
+        let msg = err.downcast_ref::<String>().expect("panic carries a String").clone();
+        assert!(msg.contains("replay: check_seeded(\"octants\", "), "got: {msg}");
+
+        // Parse the replay base out of the printed snippet and run it:
+        // case 0 of the replay must hit the very same failure.
+        let tail = msg
+            .split("check_seeded(\"octants\", 0x")
+            .nth(1)
+            .unwrap_or_else(|| panic!("no replay snippet in: {msg}"));
+        let hex = tail.split(',').next().unwrap().trim();
+        let replay = u64::from_str_radix(hex, 16)
+            .unwrap_or_else(|e| panic!("bad replay seed '{hex}': {e}"));
+
+        let replay_err = catch_unwind(AssertUnwindSafe(|| {
+            let mut f = octant_prop;
+            check_seeded("octants", replay, 1, &mut f);
+        }))
+        .expect_err("the reported replay seed must reproduce the failure");
+        let replay_msg = replay_err.downcast_ref::<String>().unwrap();
+        assert!(replay_msg.contains("failed at case 0"), "got: {replay_msg}");
+        assert!(replay_msg.contains("v=3"), "same case data expected, got: {replay_msg}");
     }
 }

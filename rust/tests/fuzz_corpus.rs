@@ -1,0 +1,57 @@
+//! Seed regression corpus: every `.repro` file under `tests/corpus/` is
+//! a past (or representative) fuzz reproducer, replayed here through the
+//! *full* differential oracle on every `cargo test` run — past fuzz
+//! finds stay fixed as permanent tier-1 tests.
+//!
+//! To promote a new finding: copy the minimized reproducer the fuzzer
+//! wrote (`fuzz-reproducers/seed-<hex>.repro` by default) into
+//! `tests/corpus/` and commit it; this test picks it up by glob.
+
+use std::ffi::OsStr;
+use std::path::PathBuf;
+
+use tvm_accel::fuzz::{check_case, load_repro, parse_repro, write_repro};
+
+fn corpus_entries() -> Vec<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/corpus");
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(&dir)
+        .unwrap_or_else(|e| panic!("reading {}: {e}", dir.display()))
+        .map(|e| e.unwrap().path())
+        .filter(|p| p.extension() == Some(OsStr::new("repro")))
+        .collect();
+    entries.sort();
+    entries
+}
+
+#[test]
+fn every_corpus_entry_passes_every_axis() {
+    let entries = corpus_entries();
+    assert!(!entries.is_empty(), "the committed corpus must not be empty");
+    for path in &entries {
+        let case = load_repro(path).unwrap_or_else(|e| panic!("{}: {e:#}", path.display()));
+        let verdict = check_case(&case);
+        assert!(
+            verdict.passed(),
+            "{} (seed {:#018x}) regressed: {verdict:?}",
+            path.display(),
+            case.seed
+        );
+    }
+}
+
+#[test]
+fn corpus_entries_roundtrip_byte_identically() {
+    // A committed reproducer must be in canonical form: re-serializing
+    // the parsed case yields the exact file bytes, so corpus diffs stay
+    // reviewable.
+    for path in &corpus_entries() {
+        let bytes = std::fs::read(path).unwrap();
+        let case = parse_repro(&bytes).unwrap();
+        assert_eq!(
+            write_repro(&case),
+            bytes,
+            "{} is not in canonical serialized form",
+            path.display()
+        );
+    }
+}
