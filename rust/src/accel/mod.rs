@@ -202,6 +202,11 @@ impl HwIntrinsic {
 pub struct AccelDesc {
     /// Display name of the accelerator (not part of the cache fingerprint).
     pub name: String,
+    /// Registry id of the backend that lowers for this accelerator (see
+    /// [`crate::backend::lookup`]). Part of the cache fingerprint: two
+    /// descriptions differing only in backend never share schedule-cache
+    /// entries.
+    pub backend: String,
     /// The architectural half (array size, memories, timing, constraints).
     pub arch: ArchDesc,
     core: BTreeMap<String, CoreCompute>,
@@ -223,6 +228,7 @@ impl AccelDesc {
         AccelDescBuilder {
             desc: AccelDesc {
                 name: name.to_string(),
+                backend: "gemmini".to_string(),
                 arch,
                 core: BTreeMap::new(),
                 preprocessing: BTreeMap::new(),
@@ -265,7 +271,13 @@ impl AccelDesc {
             "roles({},{},{},{})",
             self.compute_intrinsic, self.load_intrinsic, self.store_intrinsic, self.config_intrinsic
         );
+        let _ = write!(s, ";backend({})", self.backend);
         s
+    }
+
+    /// Resolve this description's backend implementation from the registry.
+    pub fn backend_impl(&self) -> Result<&'static dyn crate::backend::Backend> {
+        crate::backend::lookup(&self.backend)
     }
 
     /// The core compute registered under `tag` ("dense", "conv2d"), if any.
@@ -340,6 +352,13 @@ pub struct AccelDescBuilder {
 }
 
 impl AccelDescBuilder {
+    /// Bind the backend registry id that lowers for this accelerator
+    /// (defaults to `"gemmini"`).
+    pub fn backend(mut self, id: &str) -> Self {
+        self.desc.backend = id.to_string();
+        self
+    }
+
     /// `@register_core_compute(tag)` (Fig. 3b).
     pub fn register_core_compute(mut self, c: CoreCompute) -> Self {
         self.desc.core.insert(c.tag.clone(), c);
@@ -395,6 +414,14 @@ mod tests {
         assert_eq!(d.preprocessing("dense"), &[Preprocessing::WeightTranspose]);
         assert!(d.intrinsic("gemmini_matmul").is_ok());
         assert!(d.intrinsic("nope").is_err());
+    }
+
+    #[test]
+    fn backend_id_defaults_and_fingerprints() {
+        let d = gemmini::gemmini_desc().unwrap();
+        assert_eq!(d.backend, "gemmini");
+        assert!(d.functional_repr().contains("backend(gemmini)"));
+        assert_eq!(d.backend_impl().unwrap().id(), "gemmini");
     }
 
     #[test]

@@ -129,6 +129,18 @@ pub fn arch_from_yaml(src: &str) -> Result<ArchDesc> {
     Ok(arch)
 }
 
+/// Read the optional top-level `backend:` key of an accelerator config:
+/// the registry id of the backend family that lowers for this target (see
+/// [`crate::backend::lookup`]). Absent means `"gemmini"`, so existing
+/// configs keep working unchanged.
+pub fn backend_from_yaml(src: &str) -> Result<String> {
+    let doc = yaml::parse(src)?;
+    Ok(match doc.get_opt("backend") {
+        Some(v) => v.as_str()?.to_string(),
+        None => "gemmini".to_string(),
+    })
+}
+
 /// Parse an architectural description from a YAML file.
 pub fn arch_from_file(path: &std::path::Path) -> Result<ArchDesc> {
     let src = std::fs::read_to_string(path)
@@ -199,6 +211,13 @@ constraints:
             assert_eq!(l1.residents, l2.residents);
         }
         assert_eq!(y.constraints.insn_tile_limit, b.constraints.insn_tile_limit);
+    }
+
+    #[test]
+    fn backend_key_defaults_to_gemmini() {
+        assert_eq!(backend_from_yaml(GEMMINI_YAML).unwrap(), "gemmini");
+        let tagged = format!("backend: vector\n{GEMMINI_YAML}");
+        assert_eq!(backend_from_yaml(&tagged).unwrap(), "vector");
     }
 
     #[test]

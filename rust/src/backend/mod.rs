@@ -1,8 +1,270 @@
 //! Backend configurator (paper §3.3): the strategy generator, hardware
 //! intrinsic generator, mapping generator and code generator that together
 //! turn the accelerator description into a working compiler backend.
+//!
+//! Everything target-*family*-specific lives behind the [`Backend`] trait:
+//! strategy binding, schedule search, schedule→TIR mapping, instruction
+//! selection/codegen (including the cross-layer residency path), binary
+//! encoding, and the timing hooks the simulator calls. The rest of the
+//! pipeline — frontend, partitioner, scheduler cache, session/service
+//! plumbing, fuzzing — is backend-agnostic and dispatches through the
+//! registry ([`lookup`]), keyed by the `backend:` field of an accelerator
+//! config (see [`crate::arch::parse::backend_from_yaml`]).
+//!
+//! Two families are registered:
+//!
+//! * [`GemminiBackend`] — the systolic-array reference target. Pure
+//!   delegation to the module-level functions below, so programs are
+//!   byte-identical to pre-trait output (golden-hash tested).
+//! * [`vector::VectorBackend`] — a scalar/SIMD fallback engine with no
+//!   systolic array and no software-managed scratchpad: strip-mined MAC
+//!   loops streaming from DRAM, its own instruction encoding
+//!   ([`crate::isa::vector_encode`]) and timing model.
 
 pub mod codegen;
 pub mod intrin;
 pub mod mapping;
 pub mod strategy;
+pub mod vector;
+
+use anyhow::{anyhow, Result};
+
+use crate::accel::AccelDesc;
+use crate::arch::ArchDesc;
+use crate::isa::encode::{self, Word};
+use crate::isa::program::Program;
+use crate::isa::Instr;
+use crate::relay::Node;
+use crate::scheduler::graph::LayerResidency;
+use crate::scheduler::sweep::{SweepOptions, SweepResult};
+use crate::scheduler::Schedule;
+use crate::tir::TirFunc;
+use crate::workload::Gemm;
+
+use codegen::LayerBufs;
+use strategy::Strategy;
+
+/// One target family's implementation of the compiler backend. Everything
+/// here is dispatched per-accelerator via [`AccelDesc::backend_impl`]; a
+/// new target family implements this trait (plus, if it introduces new
+/// instructions, their simulator semantics) and registers itself in
+/// [`lookup`] — partitioning, scheduling-cache, session, service and
+/// fuzzing infrastructure come for free.
+pub trait Backend: Sync {
+    /// Registry id (the `backend:` value in accelerator configs).
+    fn id(&self) -> &'static str;
+
+    /// Build the full accelerator description for this family on a given
+    /// architecture (the per-target analogue of the paper's user-written
+    /// functional description).
+    fn make_desc(&self, name: &str, arch: ArchDesc) -> Result<AccelDesc>;
+
+    /// The family's shipped default description (its built-in reference
+    /// architecture). The fuzz oracle and the CI backend matrix iterate
+    /// the registry through this.
+    fn default_desc(&self) -> Result<AccelDesc>;
+
+    /// Bind a lowering strategy for one graph node. The default is the
+    /// shared dense/GEMM binding; a family with different operator
+    /// coverage overrides this.
+    fn generate_strategy(
+        &self,
+        accel: &AccelDesc,
+        node: &Node,
+        input_shapes: &[Vec<usize>],
+    ) -> Result<Strategy> {
+        strategy::generate_strategy_typed(accel, node, input_shapes)
+    }
+
+    /// Run the schedule search for one GEMM workload on this family.
+    fn sweep(&self, arch: &ArchDesc, g: Gemm, opts: &SweepOptions) -> SweepResult;
+
+    /// Apply a schedule to the unscheduled TIR function (tiling,
+    /// reordering, tensorization, staging — or whatever the family's
+    /// mapping looks like).
+    fn apply_schedule(&self, accel: &AccelDesc, f: &TirFunc, s: &Schedule) -> Result<TirFunc>;
+
+    /// Emit one layer's instruction stream (no cross-layer residency).
+    fn generate(
+        &self,
+        accel: &AccelDesc,
+        f: &TirFunc,
+        s: &Schedule,
+        bufs: &LayerBufs,
+        prog: &mut Program,
+    ) -> Result<()> {
+        self.generate_resident(accel, f, s, bufs, &LayerResidency::default(), prog)
+    }
+
+    /// Emit one layer with cross-layer residency decisions. Families that
+    /// return `false` from [`Backend::supports_residency`] are only ever
+    /// called with the default (empty) residency.
+    fn generate_resident(
+        &self,
+        accel: &AccelDesc,
+        f: &TirFunc,
+        s: &Schedule,
+        bufs: &LayerBufs,
+        resid: &LayerResidency,
+        prog: &mut Program,
+    ) -> Result<()>;
+
+    /// Whether this family can keep activations resident on-chip across
+    /// layer boundaries (drives the session's residency planner).
+    fn supports_residency(&self) -> bool {
+        false
+    }
+
+    /// Encode one instruction into command words. All families share the
+    /// RoCC-style framing and disjoint funct ranges, so the default is the
+    /// unified codec.
+    fn encode(&self, i: &Instr) -> Vec<Word> {
+        encode::encode(i)
+    }
+
+    /// Decode a command-word stream back into instructions.
+    fn decode(&self, words: &[Word]) -> Result<Vec<Instr>> {
+        encode::decode(words)
+    }
+}
+
+/// The systolic-array reference family (Gemmini). Pure delegation to the
+/// module-level strategy/mapping/codegen functions — programs are
+/// byte-identical to direct calls (tested below and golden-hash tested in
+/// `tests/golden_backend.rs`).
+pub struct GemminiBackend;
+
+impl Backend for GemminiBackend {
+    fn id(&self) -> &'static str {
+        "gemmini"
+    }
+
+    fn make_desc(&self, name: &str, arch: ArchDesc) -> Result<AccelDesc> {
+        crate::accel::gemmini::desc_for_arch(name, arch)
+    }
+
+    fn default_desc(&self) -> Result<AccelDesc> {
+        crate::accel::gemmini::gemmini_desc()
+    }
+
+    fn sweep(&self, arch: &ArchDesc, g: Gemm, opts: &SweepOptions) -> SweepResult {
+        crate::scheduler::sweep::sweep(arch, g, opts)
+    }
+
+    fn apply_schedule(&self, accel: &AccelDesc, f: &TirFunc, s: &Schedule) -> Result<TirFunc> {
+        mapping::apply_schedule(accel, f, s)
+    }
+
+    fn generate_resident(
+        &self,
+        accel: &AccelDesc,
+        f: &TirFunc,
+        s: &Schedule,
+        bufs: &LayerBufs,
+        resid: &LayerResidency,
+        prog: &mut Program,
+    ) -> Result<()> {
+        codegen::generate_resident(accel, f, s, bufs, resid, prog)
+    }
+
+    fn supports_residency(&self) -> bool {
+        true
+    }
+}
+
+/// The backend registry. Order is the display/iteration order of
+/// [`backends`] (fuzzing and CI matrices iterate it).
+static BACKENDS: [&dyn Backend; 2] = [&GemminiBackend, &vector::VectorBackend];
+
+/// All registered backends, in registry order.
+pub fn backends() -> impl Iterator<Item = &'static dyn Backend> {
+    BACKENDS.iter().copied()
+}
+
+/// Registry ids of all registered backends, in registry order.
+pub fn backend_ids() -> Vec<&'static str> {
+    BACKENDS.iter().map(|b| b.id()).collect()
+}
+
+/// Resolve a backend by registry id (the `backend:` config value).
+/// Unknown ids are a clean configuration error naming the known ids.
+pub fn lookup(id: &str) -> Result<&'static dyn Backend> {
+    BACKENDS.iter().copied().find(|b| b.id() == id).ok_or_else(|| {
+        anyhow!(
+            "unknown backend '{id}' — known backends: {}",
+            backend_ids().join(", ")
+        )
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::gemmini::gemmini_desc;
+    use crate::isa::Activation;
+    use crate::scheduler::solver::{solve, SolverConfig};
+    use crate::tir::{QuantAttrs, TirFunc};
+
+    #[test]
+    fn registry_resolves_known_ids() {
+        assert_eq!(lookup("gemmini").unwrap().id(), "gemmini");
+        assert_eq!(lookup("vector").unwrap().id(), "vector");
+        assert_eq!(backend_ids(), vec!["gemmini", "vector"]);
+        assert_eq!(backends().count(), BACKENDS.len());
+    }
+
+    #[test]
+    fn unknown_backend_is_clean_config_error() {
+        let err = lookup("npu9000").unwrap_err().to_string();
+        assert!(err.contains("unknown backend 'npu9000'"), "{err}");
+        assert!(err.contains("gemmini"), "{err}");
+        assert!(err.contains("vector"), "{err}");
+    }
+
+    #[test]
+    fn gemmini_make_desc_matches_direct_path() {
+        let via_trait = lookup("gemmini").unwrap().make_desc("gemmini", crate::arch::ArchDesc::gemmini()).unwrap();
+        let direct = gemmini_desc().unwrap();
+        assert_eq!(via_trait.functional_repr(), direct.functional_repr());
+        assert_eq!(via_trait.backend, "gemmini");
+    }
+
+    /// The tentpole safety property, in miniature: routing Gemmini through
+    /// the trait emits the exact same program as calling the module
+    /// functions directly (the full-model version is the golden-hash test).
+    #[test]
+    fn trait_dispatch_is_byte_identical_for_gemmini() {
+        let accel = gemmini_desc().unwrap();
+        let g = Gemm::new(48, 40, 24);
+        let cfg = SolverConfig::new(crate::arch::Dataflow::WeightStationary);
+        let s = &solve(&accel.arch, g, &cfg)[0];
+        let f = TirFunc::unscheduled(
+            "layer",
+            g,
+            QuantAttrs { scale: 0.25, act: Activation::Relu },
+        );
+        let bufs = LayerBufs { x: 0, w: 4096, bias: 8192, out: 12288 };
+
+        let direct_f = mapping::apply_schedule(&accel, &f, s).unwrap();
+        let mut direct = Program::new("direct");
+        codegen::generate(&accel, &direct_f, s, &bufs, &mut direct).unwrap();
+
+        let b = lookup("gemmini").unwrap();
+        let trait_f = b.apply_schedule(&accel, &f, s).unwrap();
+        let mut via = Program::new("via");
+        b.generate(&accel, &trait_f, s, &bufs, &mut via).unwrap();
+
+        assert_eq!(direct.disassemble(), via.disassemble());
+        let enc = |p: &Program| -> Vec<Word> {
+            p.items
+                .iter()
+                .filter_map(|it| match it {
+                    crate::isa::program::Item::Accel(i) => Some(b.encode(i)),
+                    _ => None,
+                })
+                .flatten()
+                .collect()
+        };
+        assert_eq!(enc(&direct), enc(&via));
+    }
+}

@@ -1,0 +1,473 @@
+//! The vector fallback backend: a genuinely different target family that
+//! proves the [`super::Backend`] trait generalizes past systolic arrays.
+//!
+//! The modeled engine is an in-order scalar/SIMD core with `pe_dim` MAC
+//! lanes and a single accumulator register file — no systolic array, no
+//! software-managed scratchpad, no decoupled load/store queues. Operands
+//! stream from DRAM on every use, so there is nothing to tile for reuse:
+//! the code generator emits one strip-mined MAC loop nest directly from
+//! the GEMM shape ([`Instr::VmacStrip`] and friends, encoded by
+//! [`crate::isa::vector_encode`]), and the "schedule" is a single
+//! degenerate candidate whose tiles are bookkeeping only.
+//!
+//! What the family still inherits for free by implementing the trait:
+//! graph partitioning, the schedule cache (keyed by the description
+//! fingerprint, which includes the backend id), session/service plumbing,
+//! multi-target linking, and every fuzzing axis. Weights use the same
+//! transposed `[C,K]` DRAM layout as the Gemmini family
+//! ([`Preprocessing::WeightTranspose`]) so gemmini+vector multi-target
+//! deployments share one constant layout.
+
+use anyhow::{ensure, Result};
+
+use crate::accel::{
+    AccelDesc, ComputeArgs, ConfigArgs, CoreCompute, HwIntrinsic, MemArgs, Preprocessing,
+};
+use crate::arch::{ArchConstraints, ArchDesc, Dataflow, DmaParams, HostParams};
+use crate::isa::program::Program;
+use crate::isa::{Instr, LocalAddr};
+use crate::scheduler::graph::LayerResidency;
+use crate::scheduler::solver::SearchStats;
+use crate::scheduler::sweep::{SweepOptions, SweepResult};
+use crate::scheduler::{Estimate, Schedule};
+use crate::tir::TirFunc;
+use crate::workload::{Dim, Gemm};
+
+use super::codegen::LayerBufs;
+use super::Backend;
+
+/// Longest reduction strip a single `VMAC_STRIP` covers (`n_in` is u16;
+/// this keeps strips well inside it and bounds per-instruction occupancy).
+pub const STRIP_MAX: usize = 4096;
+
+/// The built-in default vector architecture (`configs/vector.yaml` mirrors
+/// it): 8 MAC lanes, a narrow DMA, no double buffering. The on-chip level
+/// sizes exist to satisfy the shared architecture contract (the simulator
+/// allocates its scratchpad/accumulator from them) but the vector code
+/// generator never addresses them.
+pub fn vector_arch() -> ArchDesc {
+    use crate::arch::{LevelKind, MemLevel};
+    use crate::workload::Operand;
+    ArchDesc {
+        name: "vector".into(),
+        pe_dim: 8,
+        dataflows: vec![Dataflow::WeightStationary],
+        levels: vec![
+            MemLevel {
+                name: "PEArray".into(),
+                kind: LevelKind::PeArray,
+                size_bytes: 0,
+                residents: vec![Operand::Input, Operand::Weight, Operand::Output],
+                elem_bytes: [1, 1, 4],
+            },
+            MemLevel {
+                name: "Accumulator".into(),
+                kind: LevelKind::OnChip,
+                size_bytes: 4 * 1024,
+                residents: vec![Operand::Output],
+                elem_bytes: [1, 1, 4],
+            },
+            MemLevel {
+                name: "Scratchpad".into(),
+                kind: LevelKind::OnChip,
+                size_bytes: 16 * 1024,
+                residents: vec![Operand::Input, Operand::Weight],
+                elem_bytes: [1, 1, 4],
+            },
+            MemLevel {
+                name: "DRAM".into(),
+                kind: LevelKind::Dram,
+                size_bytes: usize::MAX,
+                residents: vec![Operand::Input, Operand::Weight, Operand::Output],
+                elem_bytes: [1, 1, 1],
+            },
+        ],
+        dma: DmaParams { bytes_per_cycle: 8, request_latency: 40, per_row_overhead: 2 },
+        host: HostParams {
+            cycles_per_elem_alu: 4,
+            cycles_per_elem_move: 2,
+            insn_issue_cycles: 2,
+            fence_cycles: 20,
+        },
+        constraints: ArchConstraints {
+            insn_tile_limit: 8,
+            fixed_spatial: true,
+            supports_double_buffering: false,
+            memory_share_configs: vec![],
+        },
+    }
+}
+
+/// Convenience: the full vector description on the default architecture.
+pub fn vector_desc() -> Result<AccelDesc> {
+    VectorBackend.make_desc("vector", vector_arch())
+}
+
+/// Config intrinsic: one `VCFG_REQ` sets the requant scale + activation
+/// applied by every following `VST_OUT`. The vector engine has no store
+/// pipeline stride (stores are contiguous runs), so `st_stride` and
+/// `dataflow` are ignored.
+fn vcfg(args: &ConfigArgs) -> Vec<Instr> {
+    vec![Instr::VcfgReq { scale: args.scale, act: args.act }]
+}
+
+/// Memory-load intrinsic: `cols` int32 bias words into the accumulator
+/// file (the only load the engine issues — activations and weights stream
+/// inside `VMAC_STRIP`).
+fn vld_bias(args: &MemArgs) -> Vec<Instr> {
+    vec![Instr::VldBias { dram: args.dram, len: args.cols }]
+}
+
+/// Memory-store intrinsic: requantize + store `cols` accumulator lanes.
+fn vst_out(args: &MemArgs) -> Vec<Instr> {
+    vec![Instr::VstOut { dram: args.dram, len: args.cols }]
+}
+
+/// Compute-role binding. Never called: `ComputeArgs` carries on-chip tile
+/// addresses, but the vector engine's MAC operands are DRAM addresses, so
+/// [`generate_layer`] emits [`Instr::VmacStrip`] directly. Registered only
+/// to satisfy the description's four-role contract
+/// (`AccelDesc::validate`).
+fn vmac_unused(_args: &ComputeArgs) -> Vec<Instr> {
+    Vec::new()
+}
+
+/// Emit one dense layer for the vector engine: for every batch row, for
+/// every lane-wide block of output columns, load the bias block, stream
+/// the reduction in `STRIP_MAX` chunks, then requantize + store. Ragged
+/// edges fall out of the `min`s.
+fn generate_layer(
+    accel: &AccelDesc,
+    f: &TirFunc,
+    s: &Schedule,
+    bufs: &LayerBufs,
+    prog: &mut Program,
+) -> Result<()> {
+    ensure!(f.gemm == s.workload, "schedule/function workload mismatch");
+    let g = f.gemm;
+    let lanes = accel.arch.pe_dim;
+    for i in accel.emit_config(&ConfigArgs {
+        dataflow: s.dataflow,
+        st_stride: g.k as u32,
+        scale: f.quant.scale,
+        act: f.quant.act,
+    })? {
+        prog.push(i);
+    }
+    for n in 0..g.n {
+        let mut kb = 0;
+        while kb < g.k {
+            let kl = lanes.min(g.k - kb);
+            for i in accel.emit_mem(
+                &accel.load_intrinsic,
+                &MemArgs {
+                    dram: bufs.bias + 4 * kb as u64,
+                    local: LocalAddr::acc(0),
+                    rows: 1,
+                    cols: kl as u16,
+                    stride: 0,
+                },
+            )? {
+                prog.push(i);
+            }
+            let mut cb = 0;
+            while cb < g.c {
+                let cl = STRIP_MAX.min(g.c - cb);
+                prog.push(Instr::VmacStrip {
+                    x_dram: bufs.x + (n * g.c + cb) as u64,
+                    w_dram: bufs.w + (cb * g.k + kb) as u64,
+                    w_stride: g.k as u32,
+                    n_out: kl as u16,
+                    n_in: cl as u16,
+                });
+                cb += cl;
+            }
+            for i in accel.emit_mem(
+                &accel.store_intrinsic,
+                &MemArgs {
+                    dram: bufs.out + (n * g.k + kb) as u64,
+                    local: LocalAddr::acc(0),
+                    rows: 1,
+                    cols: kl as u16,
+                    stride: g.k as u32,
+                },
+            )? {
+                prog.push(i);
+            }
+            kb += kl;
+        }
+    }
+    Ok(())
+}
+
+/// The vector target family. See the module docs for the modeled engine.
+pub struct VectorBackend;
+
+impl Backend for VectorBackend {
+    fn id(&self) -> &'static str {
+        "vector"
+    }
+
+    fn default_desc(&self) -> Result<AccelDesc> {
+        vector_desc()
+    }
+
+    fn make_desc(&self, name: &str, arch: ArchDesc) -> Result<AccelDesc> {
+        AccelDesc::builder(name, arch)
+            .backend("vector")
+            // Same constant preprocessing as the Gemmini family: weights in
+            // transposed [C,K] layout (VMAC_STRIP strides down a column),
+            // convolutions via im2col. Multi-target deployments share one
+            // DRAM constant layout because of this.
+            .register_preprocessing("dense", Preprocessing::WeightTranspose)
+            .register_preprocessing("conv2d", Preprocessing::Im2col)
+            .register_core_compute(CoreCompute::quantized_gemm("dense"))
+            .register_core_compute(CoreCompute::quantized_gemm("conv2d"))
+            .register_hw_intrinsic(HwIntrinsic::compute("vector_mac", vmac_unused))
+            .register_hw_intrinsic(HwIntrinsic::memory("vector_ld_bias", vld_bias))
+            .register_hw_intrinsic(HwIntrinsic::memory("vector_st_out", vst_out))
+            .register_hw_intrinsic(HwIntrinsic::config("vector_cfg", vcfg))
+            .build()
+    }
+
+    /// A single degenerate candidate: the engine streams the whole
+    /// workload, so there is no tiling space to search. The attached
+    /// estimate is an honest analytic model (lane-limited compute vs DRAM
+    /// streaming) so multi-target partitioning can rank vector layers
+    /// before simulator profiling refines them.
+    fn sweep(&self, arch: &ArchDesc, g: Gemm, _opts: &SweepOptions) -> SweepResult {
+        let lanes = arch.pe_dim as f64;
+        let compute = (g.n * g.c) as f64 * (g.k as f64 / lanes).ceil();
+        // Per batch row: the x strip once per k-block, the full weight
+        // matrix, and the bias blocks — no on-chip reuse at all.
+        let k_blocks = (g.k as f64 / lanes).ceil();
+        let bytes = [
+            (g.n * g.c) as f64 * k_blocks,
+            (g.n * (g.c * g.k + 4 * g.k)) as f64,
+            (g.n * g.k) as f64,
+        ];
+        let dma = bytes.iter().sum::<f64>() / arch.dma.bytes_per_cycle as f64;
+        let insns =
+            g.n as f64 * k_blocks * (2.0 + (g.c as f64 / STRIP_MAX as f64).ceil()) + 1.0;
+        let issue = insns * arch.host.insn_issue_cycles as f64;
+        let est = Estimate {
+            compute_cycles: compute,
+            dma_cycles: dma,
+            issue_cycles: issue,
+            // Single in-order queue: compute and streaming do not overlap
+            // across different resources, only within a strip (max).
+            latency: compute.max(dma) + issue,
+            bytes,
+            utilization: (g.k as f64 / lanes).min(1.0),
+        };
+        let s = Schedule {
+            workload: g,
+            dataflow: Dataflow::WeightStationary,
+            double_buffer: false,
+            shares: [0.5, 0.5, 1.0],
+            insn_tile: [1, 1, 1],
+            onchip_tile: [g.n, g.c, g.k],
+            dram_order: [Dim::N, Dim::C, Dim::K],
+            est,
+        };
+        SweepResult { candidates: vec![s], configs_explored: 1, stats: SearchStats::default() }
+    }
+
+    /// Identity: the vector code generator interprets the GEMM shape
+    /// directly, so the unscheduled nest is already its input form.
+    fn apply_schedule(&self, _accel: &AccelDesc, f: &TirFunc, s: &Schedule) -> Result<TirFunc> {
+        ensure!(f.gemm == s.workload, "schedule/function workload mismatch");
+        Ok(f.clone())
+    }
+
+    fn generate_resident(
+        &self,
+        accel: &AccelDesc,
+        f: &TirFunc,
+        s: &Schedule,
+        bufs: &LayerBufs,
+        resid: &LayerResidency,
+        prog: &mut Program,
+    ) -> Result<()> {
+        ensure!(
+            *resid == LayerResidency::default(),
+            "vector backend has no on-chip residency"
+        );
+        generate_layer(accel, f, s, bufs, prog)
+    }
+}
+
+/// Timing hooks the simulator calls for the vector instruction family.
+/// Every latency is a function of shapes and the architecture only — never
+/// of data — which the fuzz oracle's determinism axis relies on.
+pub mod timing {
+    use crate::arch::ArchDesc;
+    use crate::util::ceil_div;
+
+    fn dma(arch: &ArchDesc, rows: u64, bytes: u64) -> (u64, u64) {
+        let occ = rows * arch.dma.per_row_overhead
+            + ceil_div(bytes as usize, arch.dma.bytes_per_cycle) as u64;
+        (arch.dma.request_latency + occ, occ)
+    }
+
+    /// `(latency, occupancy)` of a bias load: one burst of `4·len` bytes.
+    pub fn ld_bias(arch: &ArchDesc, len: u16) -> (u64, u64) {
+        dma(arch, 1, 4 * len as u64)
+    }
+
+    /// `(latency, engine occupancy, DMA stream cycles)` of one MAC strip:
+    /// the ALU retires `ceil(n_out/lanes)` lane groups per input element
+    /// while the stream side moves the x strip plus one weight row per
+    /// element; the in-order engine is busy for whichever dominates.
+    pub fn mac_strip(arch: &ArchDesc, n_out: u16, n_in: u16) -> (u64, u64, u64) {
+        let alu = n_in as u64 * ceil_div(n_out as usize, arch.pe_dim) as u64;
+        let bytes = n_in as u64 * (1 + n_out as u64);
+        let (_, stream) = dma(arch, n_in as u64, bytes);
+        let occ = alu.max(stream);
+        (arch.dma.request_latency + occ, occ, stream)
+    }
+
+    /// `(latency, occupancy)` of the requantized store: `len` bytes out.
+    pub fn st_out(arch: &ArchDesc, len: u16) -> (u64, u64) {
+        dma(arch, 1, len as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Activation;
+    use crate::sim::{memory::Dram, requantize, Simulator};
+    use crate::tir::QuantAttrs;
+    use crate::util::prng::Rng;
+
+    fn reference(x: &[i8], w: &[i8], bias: &[i32], g: Gemm, scale: f32, act: Activation) -> Vec<i8> {
+        let mut out = vec![0i8; g.n * g.k];
+        for n in 0..g.n {
+            for k in 0..g.k {
+                let mut acc = bias[k];
+                for c in 0..g.c {
+                    acc = acc
+                        .wrapping_add(x[n * g.c + c] as i32 * w[c * g.k + k] as i32);
+                }
+                out[n * g.k + k] = requantize(acc, scale, act);
+            }
+        }
+        out
+    }
+
+    /// End-to-end: generate via the trait, execute, compare element-exactly
+    /// against the reference. Ragged in every dim, k wider than the lane
+    /// count, c wider than one strip.
+    #[test]
+    fn vector_layer_matches_reference() {
+        let accel = vector_desc().unwrap();
+        let b: &dyn Backend = &VectorBackend;
+        let g = Gemm::new(3, STRIP_MAX + 5, 11);
+        let quant = QuantAttrs { scale: 0.005, act: Activation::Clip { lo: -100, hi: 100 } };
+        let f = TirFunc::unscheduled("vlayer", g, quant);
+        let s = &b.sweep(&accel.arch, g, &SweepOptions::default()).candidates[0];
+        let f = b.apply_schedule(&accel, &f, s).unwrap();
+
+        let mut prog = Program::new("vec_e2e");
+        let rx = prog.layout.alloc("x", (g.n * g.c) as u64).unwrap().offset;
+        let rw = prog.layout.alloc("w", (g.c * g.k) as u64).unwrap().offset;
+        let rb = prog.layout.alloc("bias", 4 * g.k as u64).unwrap().offset;
+        let ro = prog.layout.alloc("out", (g.n * g.k) as u64).unwrap().offset;
+        let bufs = LayerBufs { x: rx, w: rw, bias: rb, out: ro };
+        b.generate(&accel, &f, s, &bufs, &mut prog).unwrap();
+
+        let mut rng = Rng::new(0x7ec_1234_5678);
+        let x: Vec<i8> = (0..g.n * g.c).map(|_| rng.i8()).collect();
+        let w: Vec<i8> = (0..g.c * g.k).map(|_| rng.i8()).collect();
+        let bias: Vec<i32> = (0..g.k).map(|_| rng.below(2001) as i32 - 1000).collect();
+        let mut dram = Dram::new(prog.layout.total_bytes() as usize + 64);
+        dram.write_i8_slice(rx, &x).unwrap();
+        dram.write_i8_slice(rw, &w).unwrap();
+        for (j, &v) in bias.iter().enumerate() {
+            dram.write_i32(rb + 4 * j as u64, v).unwrap();
+        }
+
+        let sim = Simulator::new(&accel.arch);
+        let rep = sim.run(&prog, &mut dram).unwrap();
+        let got = dram.read_i8_slice(ro, g.n * g.k).unwrap();
+        assert_eq!(got, reference(&x, &w, &bias, g, quant.scale, quant.act));
+        assert_eq!(rep.macs, (g.n * g.c * g.k) as u64);
+        assert!(rep.cycles > 0);
+    }
+
+    /// The timing model is data-independent: the same program over
+    /// different DRAM contents reports identical cycles.
+    #[test]
+    fn vector_timing_is_data_independent() {
+        let accel = vector_desc().unwrap();
+        let b: &dyn Backend = &VectorBackend;
+        let g = Gemm::new(2, 30, 9);
+        let f = TirFunc::unscheduled(
+            "vtime",
+            g,
+            QuantAttrs { scale: 0.5, act: Activation::Relu },
+        );
+        let s = &b.sweep(&accel.arch, g, &SweepOptions::default()).candidates[0];
+        let mut prog = Program::new("vec_time");
+        let rx = prog.layout.alloc("x", (g.n * g.c) as u64).unwrap().offset;
+        let rw = prog.layout.alloc("w", (g.c * g.k) as u64).unwrap().offset;
+        let rb = prog.layout.alloc("bias", 4 * g.k as u64).unwrap().offset;
+        let ro = prog.layout.alloc("out", (g.n * g.k) as u64).unwrap().offset;
+        b.generate(&accel, &f, s, &LayerBufs { x: rx, w: rw, bias: rb, out: ro }, &mut prog)
+            .unwrap();
+        let sim = Simulator::new(&accel.arch);
+        let size = prog.layout.total_bytes() as usize + 64;
+        let mut d0 = Dram::new(size);
+        let mut d1 = Dram::new(size);
+        let fill: Vec<i8> = (0..g.n * g.c).map(|i| (i % 251) as i8).collect();
+        d1.write_i8_slice(rx, &fill).unwrap();
+        let r0 = sim.run(&prog, &mut d0).unwrap();
+        let r1 = sim.run(&prog, &mut d1).unwrap();
+        assert_eq!(r0.cycles, r1.cycles);
+        assert_eq!(r0.dram_read_bytes, r1.dram_read_bytes);
+    }
+
+    #[test]
+    fn desc_builds_with_vector_backend_id() {
+        let d = vector_desc().unwrap();
+        assert_eq!(d.backend, "vector");
+        assert!(d.supported_ops().contains("accel.dense"));
+        assert!(d.functional_repr().contains("backend(vector)"));
+        assert_eq!(d.backend_impl().unwrap().id(), "vector");
+    }
+
+    /// configs/vector.yaml is the canonical copy used by the CLI and CI;
+    /// keep it in sync with the built-in default.
+    #[test]
+    fn shipped_vector_config_matches_builtin() {
+        let path =
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs/vector.yaml");
+        let src = std::fs::read_to_string(&path).unwrap();
+        let a = crate::arch::parse::arch_from_yaml(&src).unwrap();
+        let b = vector_arch();
+        assert_eq!(a.pe_dim, b.pe_dim);
+        assert_eq!(a.dataflows, b.dataflows);
+        assert_eq!(a.levels.len(), b.levels.len());
+        for (l1, l2) in a.levels.iter().zip(&b.levels) {
+            assert_eq!(l1.name, l2.name);
+            assert_eq!(l1.size_bytes, l2.size_bytes);
+        }
+        assert_eq!(a.dma.bytes_per_cycle, b.dma.bytes_per_cycle);
+        assert_eq!(a.constraints.insn_tile_limit, b.constraints.insn_tile_limit);
+        assert_eq!(crate::arch::parse::backend_from_yaml(&src).unwrap(), "vector");
+    }
+
+    #[test]
+    fn sweep_returns_one_degenerate_candidate() {
+        let arch = vector_arch();
+        let g = Gemm::new(10, 20, 30);
+        let r = VectorBackend.sweep(&arch, g, &SweepOptions::default());
+        assert_eq!(r.candidates.len(), 1);
+        let s = &r.candidates[0];
+        assert_eq!(s.workload, g);
+        assert_eq!(s.onchip_tile, [10, 20, 30]);
+        assert!(s.est.latency > 0.0);
+        assert!(!VectorBackend.supports_residency());
+    }
+}

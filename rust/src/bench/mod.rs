@@ -122,7 +122,10 @@ impl BenchReport {
     }
 }
 
-fn square_model(size: usize, seed: u64) -> Result<QModel> {
+/// A seeded square `size`×`size` single-dense-layer model (one Table-2
+/// workload). Deterministic for a fixed seed — the bench suite and the
+/// golden-hash byte-identity tests build the exact same models.
+pub fn square_model(size: usize, seed: u64) -> Result<QModel> {
     let mut rng = Rng::new(seed);
     let l = FloatDense {
         weight: (0..size * size).map(|_| (rng.f64() as f32 - 0.5) * 0.25).collect(),
@@ -134,7 +137,10 @@ fn square_model(size: usize, seed: u64) -> Result<QModel> {
     Ok(from_quantized(size, 0.04, &quantize_mlp(&[l], &[0.04, 0.05])?))
 }
 
-fn toycar_model(seed: u64) -> Result<QModel> {
+/// The seeded full ToyCar MLP stack (see
+/// [`crate::workload::suites::toycar_widths`]). Deterministic for a
+/// fixed seed, like [`square_model`].
+pub fn toycar_model(seed: u64) -> Result<QModel> {
     let mut rng = Rng::new(seed);
     let widths = suites::toycar_widths();
     let layers: Vec<FloatDense> = widths

@@ -6,12 +6,17 @@
 //!
 //! ```text
 //! magic   b"FZRP"        4 bytes
-//! version u8 = 1
+//! version u8 = 2
 //! seed    u64            (the originating case seed, for provenance)
 //! model_len u32, model   (a `.qmodel` blob, see crate::relay::import)
 //! n_inputs  u32
 //! per input: len u32, data i8[len]
+//! backend_len u32, backend utf-8   (which backend/pairing failed;
+//!                                   empty for representative seeds)
 //! ```
+//!
+//! Version 1 files (no trailing backend field) still parse — the
+//! backend reads back empty. Writers always emit version 2.
 //!
 //! The embedded model goes through [`parse_qmodel`]'s full validation on
 //! load, and every input length is checked against `batch * in_dim`, so
@@ -19,7 +24,8 @@
 //!
 //! The committed corpus lives in `rust/tests/corpus/` (one file per
 //! reproducer, named `seed-<hex>.repro`) and is replayed against every
-//! oracle axis by `tests/fuzz_corpus.rs` on `cargo test`.
+//! oracle axis — on every registered backend — by `tests/fuzz_corpus.rs`
+//! on `cargo test`.
 
 use std::path::Path;
 
@@ -30,10 +36,17 @@ use crate::relay::import::{parse_qmodel, write_qmodel};
 use super::gen::FuzzCase;
 
 const MAGIC: &[u8; 4] = b"FZRP";
-const VERSION: u8 = 1;
+const VERSION: u8 = 2;
 
-/// Serialize a case to reproducer bytes.
+/// Serialize a case to reproducer bytes with an empty backend field
+/// (representative seeds that pass every axis).
 pub fn write_repro(case: &FuzzCase) -> Vec<u8> {
+    write_repro_tagged(case, "")
+}
+
+/// Serialize a case to reproducer bytes, recording which backend (or
+/// multi-target pairing) the finding failed on.
+pub fn write_repro_tagged(case: &FuzzCase, backend: &str) -> Vec<u8> {
     let mut out = Vec::new();
     out.extend_from_slice(MAGIC);
     out.push(VERSION);
@@ -46,12 +59,20 @@ pub fn write_repro(case: &FuzzCase) -> Vec<u8> {
         out.extend_from_slice(&(x.len() as u32).to_le_bytes());
         out.extend(x.iter().map(|&v| v as u8));
     }
+    out.extend_from_slice(&(backend.len() as u32).to_le_bytes());
+    out.extend_from_slice(backend.as_bytes());
     out
 }
 
 /// Parse reproducer bytes back into a case (validating the embedded
-/// model and every input length).
+/// model and every input length), discarding the backend field.
 pub fn parse_repro(buf: &[u8]) -> Result<FuzzCase> {
+    Ok(parse_repro_tagged(buf)?.0)
+}
+
+/// Parse reproducer bytes into the case plus the recorded failed
+/// backend (empty for version-1 files and representative seeds).
+pub fn parse_repro_tagged(buf: &[u8]) -> Result<(FuzzCase, String)> {
     fn take<'a>(buf: &'a [u8], pos: &mut usize, n: usize) -> Result<&'a [u8]> {
         ensure!(*pos + n <= buf.len(), "truncated reproducer at byte {}", *pos);
         let s = &buf[*pos..*pos + n];
@@ -63,7 +84,10 @@ pub fn parse_repro(buf: &[u8]) -> Result<FuzzCase> {
         bail!("bad reproducer magic");
     }
     let version = take(buf, &mut pos, 1)?[0];
-    ensure!(version == VERSION, "unsupported reproducer version {version}");
+    ensure!(
+        version == 1 || version == VERSION,
+        "unsupported reproducer version {version}"
+    );
     let seed = u64::from_le_bytes(take(buf, &mut pos, 8)?.try_into().unwrap());
     let model_len = u32::from_le_bytes(take(buf, &mut pos, 4)?.try_into().unwrap()) as usize;
     let model = parse_qmodel(take(buf, &mut pos, model_len)?).context("embedded model")?;
@@ -79,8 +103,16 @@ pub fn parse_repro(buf: &[u8]) -> Result<FuzzCase> {
         );
         inputs.push(take(buf, &mut pos, len)?.iter().map(|&b| b as i8).collect());
     }
+    let backend = if version >= 2 {
+        let len = u32::from_le_bytes(take(buf, &mut pos, 4)?.try_into().unwrap()) as usize;
+        ensure!(len <= 256, "implausible backend-field length {len}");
+        String::from_utf8(take(buf, &mut pos, len)?.to_vec())
+            .context("backend field is not utf-8")?
+    } else {
+        String::new()
+    };
     ensure!(pos == buf.len(), "trailing bytes in reproducer");
-    Ok(FuzzCase { seed, model, inputs })
+    Ok((FuzzCase { seed, model, inputs }, backend))
 }
 
 /// The canonical file name for a reproducer: `seed-<hex>.repro`.
@@ -88,19 +120,33 @@ pub fn repro_file_name(case: &FuzzCase) -> String {
     format!("seed-{:016x}.repro", case.seed)
 }
 
-/// Load a reproducer file.
+/// Load a reproducer file (discarding the backend field).
 pub fn load_repro(path: &Path) -> Result<FuzzCase> {
+    Ok(load_repro_tagged(path)?.0)
+}
+
+/// Load a reproducer file plus its recorded failed backend.
+pub fn load_repro_tagged(path: &Path) -> Result<(FuzzCase, String)> {
     let buf = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
-    parse_repro(&buf).with_context(|| format!("parsing {}", path.display()))
+    parse_repro_tagged(&buf).with_context(|| format!("parsing {}", path.display()))
 }
 
 /// Write a reproducer into `dir` (created if needed) under its canonical
 /// name; returns the path written.
 pub fn save_repro(case: &FuzzCase, dir: &Path) -> Result<std::path::PathBuf> {
+    save_repro_tagged(case, "", dir)
+}
+
+/// [`save_repro`] recording the failed backend in the provenance field.
+pub fn save_repro_tagged(
+    case: &FuzzCase,
+    backend: &str,
+    dir: &Path,
+) -> Result<std::path::PathBuf> {
     std::fs::create_dir_all(dir)
         .with_context(|| format!("creating reproducer dir {}", dir.display()))?;
     let path = dir.join(repro_file_name(case));
-    std::fs::write(&path, write_repro(case))
+    std::fs::write(&path, write_repro_tagged(case, backend))
         .with_context(|| format!("writing {}", path.display()))?;
     Ok(path)
 }
@@ -116,12 +162,27 @@ mod tests {
         let opts = GenOptions::default();
         for seed in [3u64, 77, 123456789] {
             let case = gen_case(seed, &opts);
-            let bytes = write_repro(&case);
-            let back = parse_repro(&bytes).unwrap();
+            let bytes = write_repro_tagged(&case, "gemmini+vector");
+            let (back, backend) = parse_repro_tagged(&bytes).unwrap();
             assert_eq!(back.seed, case.seed);
             assert_eq!(write_qmodel(&back.model), write_qmodel(&case.model));
             assert_eq!(back.inputs, case.inputs);
+            assert_eq!(backend, "gemmini+vector");
         }
+    }
+
+    #[test]
+    fn v1_reproducers_still_parse_with_empty_backend() {
+        // A version-1 file is a version-2 file minus the version byte
+        // bump and the trailing backend field.
+        let case = gen_case(17, &GenOptions::default());
+        let v2 = write_repro(&case);
+        let mut v1 = v2[..v2.len() - 4].to_vec();
+        v1[4] = 1;
+        let (back, backend) = parse_repro_tagged(&v1).unwrap();
+        assert_eq!(back.seed, case.seed);
+        assert_eq!(back.inputs, case.inputs);
+        assert_eq!(backend, "");
     }
 
     #[test]
@@ -135,6 +196,9 @@ mod tests {
         let mut extra = bytes.clone();
         extra.push(0);
         assert!(parse_repro(&extra).is_err(), "trailing bytes");
+        let mut bad_version = bytes.clone();
+        bad_version[4] = 3;
+        assert!(parse_repro(&bad_version).is_err(), "future version");
         // Corrupting the batch inside the embedded model breaks the
         // input-length cross-check (or the model parse itself).
         let mut bad_batch = bytes.clone();
@@ -147,10 +211,11 @@ mod tests {
         let case = gen_case(21, &GenOptions::default());
         let dir = std::env::temp_dir()
             .join(format!("tvm-accel-fuzz-corpus-{}", std::process::id()));
-        let path = save_repro(&case, &dir).unwrap();
+        let path = save_repro_tagged(&case, "vector", &dir).unwrap();
         assert!(path.file_name().unwrap().to_str().unwrap().starts_with("seed-"));
-        let back = load_repro(&path).unwrap();
+        let (back, backend) = load_repro_tagged(&path).unwrap();
         assert_eq!(back.seed, case.seed);
+        assert_eq!(backend, "vector");
         std::fs::remove_dir_all(&dir).ok();
     }
 }

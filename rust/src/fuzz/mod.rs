@@ -23,10 +23,13 @@ pub mod gen;
 pub mod minimize;
 pub mod oracle;
 
-pub use corpus::{load_repro, parse_repro, repro_file_name, save_repro, write_repro};
+pub use corpus::{
+    load_repro, load_repro_tagged, parse_repro, parse_repro_tagged, repro_file_name,
+    save_repro, save_repro_tagged, write_repro, write_repro_tagged,
+};
 pub use gen::{gen_case, FuzzCase, GenOptions};
 pub use minimize::{minimize, MinimizeStats};
-pub use oracle::{bigarray_desc, check_case, Failure, Verdict};
+pub use oracle::{bigarray_desc, check_case, multi_target_pairings, Failure, Verdict};
 
 use std::path::{Path, PathBuf};
 
@@ -62,6 +65,10 @@ pub struct FuzzFinding {
     pub replay_base: u64,
     /// The oracle axis that broke (stable identifier, see [`oracle`]).
     pub axis: &'static str,
+    /// Which backend (registry id) or multi-target pairing broke the
+    /// axis; empty for backend-independent axes. Archived into the
+    /// `.repro` provenance field.
+    pub backend: String,
     /// Mismatch detail *after* minimization.
     pub detail: String,
     /// The minimized reproducer case.
@@ -97,8 +104,13 @@ impl FuzzSummary {
         );
         for f in &self.findings {
             s.push_str(&format!(
-                "  seed {:#018x} axis {} ({} layers, {} shrinks): {}\n",
-                f.seed, f.axis, f.minimized.model.layers.len(), f.stats.accepted, f.detail
+                "  seed {:#018x} axis {}{} ({} layers, {} shrinks): {}\n",
+                f.seed,
+                f.axis,
+                if f.backend.is_empty() { String::new() } else { format!(" [{}]", f.backend) },
+                f.minimized.model.layers.len(),
+                f.stats.accepted,
+                f.detail
             ));
             if let Some(p) = &f.repro_path {
                 s.push_str(&format!("    reproducer: {}\n", p.display()));
@@ -117,10 +129,11 @@ pub fn case_seed(base: u64, i: u64) -> u64 {
 }
 
 /// The detail string of the axis failure `case` currently produces, if
-/// it is the given axis.
-fn axis_detail(case: &FuzzCase, axis: &'static str) -> Option<String> {
+/// it is the given axis on the given backend (so a shrink that trades
+/// one backend's bug for another's is rejected too).
+fn axis_detail(case: &FuzzCase, axis: &'static str, backend: &str) -> Option<String> {
     match check_case(case) {
-        Verdict::Fail(f) if f.axis == axis => Some(f.detail),
+        Verdict::Fail(f) if f.axis == axis && f.backend == backend => Some(f.detail),
         _ => None,
     }
 }
@@ -142,20 +155,23 @@ pub fn run_fuzz(opts: &FuzzOptions) -> Result<FuzzSummary> {
             Verdict::Fail(f) => f,
         };
         eprintln!(
-            "fuzz: case {i} (seed {seed:#018x}) broke axis {}: {} — minimizing",
-            failure.axis, failure.detail
+            "fuzz: case {i} (seed {seed:#018x}) broke axis {} on backend '{}': {} — minimizing",
+            failure.axis, failure.backend, failure.detail
         );
         let axis = failure.axis;
-        let (minimized, stats) = minimize(&case, |c| axis_detail(c, axis).is_some());
-        let detail = axis_detail(&minimized, axis).unwrap_or(failure.detail);
+        let backend = failure.backend.clone();
+        let (minimized, stats) =
+            minimize(&case, |c| axis_detail(c, axis, &backend).is_some());
+        let detail = axis_detail(&minimized, axis, &backend).unwrap_or(failure.detail);
         let repro_path = match &opts.out_dir {
-            Some(dir) => Some(save_repro(&minimized, dir)?),
+            Some(dir) => Some(save_repro_tagged(&minimized, &backend, dir)?),
             None => None,
         };
         summary.findings.push(FuzzFinding {
             seed,
             replay_base: opts.seed.wrapping_add(i),
             axis,
+            backend,
             detail,
             minimized,
             repro_path,

@@ -3,22 +3,32 @@
 //! [`check_case`] compiles the case's model through each axis the repo
 //! makes promises about, executes on the simulator, and checks every
 //! promise against [`crate::relay::eval`] (element-exactness) or against
-//! a sibling configuration (cross-config invariants):
+//! a sibling configuration (cross-config invariants). The single-target
+//! axes iterate the backend registry ([`crate::backend::backends`]), so
+//! a newly registered target family is fuzzed without touching this
+//! module:
 //!
 //! | axis                  | invariant checked                                |
 //! |-----------------------|--------------------------------------------------|
-//! | `exact/single`        | pruned-sweep compile output == interpreter       |
+//! | `exact/single`        | each registered backend's output == interpreter  |
+//! | `timing/data-independent` | same program, same cycles for every input    |
 //! | `bytes/pruned-vs-serial` | serial sweep emits a byte-identical program   |
 //! | `exact/residency-off` | `cross_layer: false` output == interpreter       |
 //! | `residency/dram-transfer` | residency-on DRAM-transfer cycles ≤ off      |
-//! | `exact/multi`         | gemmini+bigarray multi-target output == interp.  |
+//! | `exact/multi`         | each multi-target partitioning == interpreter    |
 //! | `report/issued-commands` | merged `issued_commands` == accel insn count  |
 //! | `report/loop-ws`      | merged `loop_ws` count == program histogram      |
 //! | `report/host-counts`  | merged per-host-op counts == program histogram   |
 //! | `batch/exact`         | `run_batch` outputs == per-input `run` outputs   |
 //! | `batch/serial-sum`    | `serial_cycles` == Σ per-inference cycles        |
 //! | `batch/pipelined-le-serial` | pipelined ≤ serial (single and multi)      |
-//! | `timing/data-independent` | same program, same cycles for every input    |
+//!
+//! The multi-target axis checks every pairing in
+//! [`multi_target_pairings`]: the heterogeneous systolic pair
+//! (gemmini + bigarray-os) and the cross-family pair (gemmini + vector).
+//! Each [`Failure`] records which backend (or pairing) broke in
+//! [`Failure::backend`]; the minimizer shrinks only while the same
+//! axis *and* backend keep failing.
 //!
 //! The byte-identity pair compiles through two *fresh* compilers: the
 //! `pruned`/`parallel` sweep knobs are deliberately excluded from the
@@ -31,6 +41,7 @@ use std::collections::BTreeMap;
 use crate::accel::gemmini::{desc_for_arch, gemmini_desc};
 use crate::accel::AccelDesc;
 use crate::arch::ArchDesc;
+use crate::backend::vector::vector_desc;
 use crate::pipeline::{CompileOptions, Compiler, MultiCompiler};
 use crate::relay::eval::eval;
 use crate::relay::import::to_qnn_graph;
@@ -57,19 +68,29 @@ impl Verdict {
     }
 }
 
-/// One broken invariant: which axis caught it, and the details.
+/// One broken invariant: which axis caught it, on which backend, and the
+/// details.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Failure {
     /// Stable axis identifier (see the module table). The minimizer
     /// shrinks while the *same axis* keeps failing, so a shrink that
     /// trades one bug for a different one is rejected.
     pub axis: &'static str,
+    /// Which backend (registry id) or multi-target pairing
+    /// (`"gemmini+vector"`) broke the invariant. Empty for
+    /// backend-independent axes (import, reference eval). Archived into
+    /// the `.repro` provenance field.
+    pub backend: String,
     /// Human-readable mismatch description.
     pub detail: String,
 }
 
 fn fail(axis: &'static str, detail: impl Into<String>) -> Verdict {
-    Verdict::Fail(Failure { axis, detail: detail.into() })
+    fail_on("", axis, detail)
+}
+
+fn fail_on(backend: &str, axis: &'static str, detail: impl Into<String>) -> Verdict {
+    Verdict::Fail(Failure { axis, backend: backend.to_string(), detail: detail.into() })
 }
 
 /// The options every oracle compile uses (identical across the
@@ -92,6 +113,16 @@ pub fn bigarray_desc() -> anyhow::Result<AccelDesc> {
     arch.levels[2].size_bytes = 524288; // scratchpad
     arch.dma.bytes_per_cycle = 32;
     desc_for_arch("bigarray-os", arch)
+}
+
+/// Every multi-target pairing the oracle compiles: `(tag, targets)`.
+/// The tag names the pairing in [`Failure::backend`].
+pub fn multi_target_pairings() -> anyhow::Result<Vec<(&'static str, Vec<AccelDesc>)>> {
+    let gem = gemmini_desc()?;
+    Ok(vec![
+        ("gemmini+bigarray-os", vec![gem.clone(), bigarray_desc()?]),
+        ("gemmini+vector", vec![gem, vector_desc()?]),
+    ])
 }
 
 /// First index where two int8 vectors differ, with values (for the
@@ -123,12 +154,14 @@ fn reference_output(case: &FuzzCase, graph: &Graph, input: &[i8]) -> anyhow::Res
 /// Check the merged [`RunReport`] of a full-program execution against
 /// the instruction stream it claims to describe.
 fn check_report_counters(
+    backend: &str,
     rep: &RunReport,
     program: &crate::isa::program::Program,
 ) -> Option<Verdict> {
     let accel = program.accel_insn_count() as u64;
     if rep.issued_commands != accel {
-        return Some(fail(
+        return Some(fail_on(
+            backend,
             "report/issued-commands",
             format!(
                 "merged report issued {} commands, program has {accel} accel instructions",
@@ -140,7 +173,8 @@ fn check_report_counters(
     let hist_loop_ws = hist.get("loop_ws").copied().unwrap_or(0) as u64;
     let rep_loop_ws = rep.insn_counts.get("loop_ws").copied().unwrap_or(0);
     if rep_loop_ws != hist_loop_ws {
-        return Some(fail(
+        return Some(fail_on(
+            backend,
             "report/loop-ws",
             format!("report counted {rep_loop_ws} loop_ws, histogram has {hist_loop_ws}"),
         ));
@@ -153,7 +187,8 @@ fn check_report_counters(
         }
         let counted = rep.insn_counts.get(m).copied().unwrap_or(0);
         if counted != n as u64 {
-            return Some(fail(
+            return Some(fail_on(
+                backend,
                 "report/host-counts",
                 format!("host op {m}: report counted {counted}, histogram has {n}"),
             ));
@@ -163,8 +198,8 @@ fn check_report_counters(
 }
 
 /// Run `case` through every configuration axis. Returns the first
-/// broken invariant (axes are checked in a fixed order, so the verdict
-/// is deterministic).
+/// broken invariant (backends in registry order, axes in a fixed order,
+/// so the verdict is deterministic).
 pub fn check_case(case: &FuzzCase) -> Verdict {
     let graph = match to_qnn_graph(&case.model) {
         Ok(g) => g,
@@ -180,47 +215,56 @@ pub fn check_case(case: &FuzzCase) -> Verdict {
         }
     }
 
-    let accel = match gemmini_desc() {
-        Ok(a) => a,
-        Err(e) => return fail("compile/single", format!("gemmini_desc: {e:#}")),
-    };
-    let sim = Simulator::new(&accel.arch);
-
-    // Axis: single-target, default (pruned, parallel) sweep.
-    let dep = match Compiler::with_options(accel.clone(), fuzz_options()).compile(&graph) {
-        Ok(d) => d,
-        Err(e) => return fail("compile/single", format!("{e:#}")),
-    };
-    let mut single_reports = Vec::with_capacity(case.inputs.len());
-    for (i, input) in case.inputs.iter().enumerate() {
-        match dep.run(&sim, input) {
-            Ok((got, rep)) => {
-                if got != want[i] {
-                    return fail(
-                        "exact/single",
-                        format!("input {i}: {}", first_diff(&got, &want[i])),
-                    );
+    // Axes exact/single + timing/data-independent, once per registered
+    // backend on its default description. The gemmini deployment and
+    // reports feed the deeper gemmini-only axes below.
+    let mut gemmini = None;
+    for b in crate::backend::backends() {
+        let id = b.id();
+        let accel = match b.default_desc() {
+            Ok(a) => a,
+            Err(e) => return fail_on(id, "compile/single", format!("default_desc: {e:#}")),
+        };
+        let sim = Simulator::new(&accel.arch);
+        let dep = match Compiler::with_options(accel.clone(), fuzz_options()).compile(&graph)
+        {
+            Ok(d) => d,
+            Err(e) => return fail_on(id, "compile/single", format!("{e:#}")),
+        };
+        let mut reports = Vec::with_capacity(case.inputs.len());
+        for (i, input) in case.inputs.iter().enumerate() {
+            match dep.run(&sim, input) {
+                Ok((got, rep)) => {
+                    if got != want[i] {
+                        return fail_on(
+                            id,
+                            "exact/single",
+                            format!("input {i}: {}", first_diff(&got, &want[i])),
+                        );
+                    }
+                    reports.push(rep);
                 }
-                single_reports.push(rep);
+                Err(e) => return fail_on(id, "exact/single", format!("input {i}: run: {e:#}")),
             }
-            Err(e) => return fail("exact/single", format!("input {i}: run: {e:#}")),
+        }
+        // Timing is data-independent — same program, same cycles for
+        // every input.
+        if let Some((i, r)) =
+            reports.iter().enumerate().find(|(_, r)| r.cycles != reports[0].cycles)
+        {
+            return fail_on(
+                id,
+                "timing/data-independent",
+                format!("input {i} took {} cycles, input 0 took {}", r.cycles, reports[0].cycles),
+            );
+        }
+        if id == "gemmini" {
+            gemmini = Some((accel, sim, dep, reports));
         }
     }
-    // Axis: timing is data-independent — same program, same cycles for
-    // every input.
-    if let Some((i, r)) = single_reports
-        .iter()
-        .enumerate()
-        .find(|(_, r)| r.cycles != single_reports[0].cycles)
-    {
-        return fail(
-            "timing/data-independent",
-            format!(
-                "input {i} took {} cycles, input 0 took {}",
-                r.cycles, single_reports[0].cycles
-            ),
-        );
-    }
+    let Some((accel, sim, dep, single_reports)) = gemmini else {
+        return fail("registry", "no gemmini backend registered");
+    };
 
     // Axis: the serial, unpruned sweep must emit a byte-identical
     // program (fresh compiler: pruned/parallel are excluded from the
@@ -232,7 +276,8 @@ pub fn check_case(case: &FuzzCase) -> Verdict {
     match Compiler::with_options(accel.clone(), serial_opts).compile(&graph) {
         Ok(d) => {
             if d.program.items != dep.program.items {
-                return fail(
+                return fail_on(
+                    "gemmini",
                     "bytes/pruned-vs-serial",
                     format!(
                         "pruned sweep emitted {} items, serial emitted {} (first diff at {:?})",
@@ -243,7 +288,7 @@ pub fn check_case(case: &FuzzCase) -> Verdict {
                 );
             }
         }
-        Err(e) => return fail("compile/serial", format!("{e:#}")),
+        Err(e) => return fail_on("gemmini", "compile/serial", format!("{e:#}")),
     }
 
     // Axis: cross-layer residency off — still element-exact, and the
@@ -255,7 +300,8 @@ pub fn check_case(case: &FuzzCase) -> Verdict {
                 match d.run(&sim, input) {
                     Ok((got, rep)) => {
                         if got != want[i] {
-                            return fail(
+                            return fail_on(
+                                "gemmini",
                                 "exact/residency-off",
                                 format!("input {i}: {}", first_diff(&got, &want[i])),
                             );
@@ -263,7 +309,8 @@ pub fn check_case(case: &FuzzCase) -> Verdict {
                         if i == 0
                             && single_reports[0].dram_transfer_cycles > rep.dram_transfer_cycles
                         {
-                            return fail(
+                            return fail_on(
+                                "gemmini",
                                 "residency/dram-transfer",
                                 format!(
                                     "residency-on spent {} DRAM-transfer cycles, off spent {}",
@@ -273,52 +320,75 @@ pub fn check_case(case: &FuzzCase) -> Verdict {
                         }
                     }
                     Err(e) => {
-                        return fail("exact/residency-off", format!("input {i}: run: {e:#}"))
+                        return fail_on(
+                            "gemmini",
+                            "exact/residency-off",
+                            format!("input {i}: run: {e:#}"),
+                        )
                     }
                 }
             }
         }
-        Err(e) => return fail("compile/residency-off", format!("{e:#}")),
+        Err(e) => return fail_on("gemmini", "compile/residency-off", format!("{e:#}")),
     }
 
-    // Axis: multi-target (gemmini + bigarray-os) — element-exact, and
-    // the merged report's counters must match the instruction stream.
-    let bigarray = match bigarray_desc() {
-        Ok(a) => a,
-        Err(e) => return fail("compile/multi", format!("bigarray_desc: {e:#}")),
+    // Axis: every multi-target pairing — element-exact, report counters
+    // consistent, pipelined batch never slower than serial.
+    let refs: Vec<&[i8]> = case.inputs.iter().map(|v| v.as_slice()).collect();
+    let pairings = match multi_target_pairings() {
+        Ok(p) => p,
+        Err(e) => return fail("compile/multi", format!("pairings: {e:#}")),
     };
-    let multi = MultiCompiler::with_options(vec![accel.clone(), bigarray], fuzz_options());
-    let multi = match multi.and_then(|m| m.compile(&graph)) {
-        Ok(d) => d,
-        Err(e) => return fail("compile/multi", format!("{e:#}")),
-    };
-    for (i, input) in case.inputs.iter().enumerate() {
-        match multi.run(input) {
-            Ok((got, rep)) => {
-                if got != want[i] {
-                    return fail(
-                        "exact/multi",
-                        format!("input {i}: {}", first_diff(&got, &want[i])),
-                    );
-                }
-                if i == 0 {
-                    if let Some(v) = check_report_counters(&rep, &multi.program) {
-                        return v;
+    for (tag, targets) in pairings {
+        let multi = MultiCompiler::with_options(targets, fuzz_options());
+        let multi = match multi.and_then(|m| m.compile(&graph)) {
+            Ok(d) => d,
+            Err(e) => return fail_on(tag, "compile/multi", format!("{e:#}")),
+        };
+        for (i, input) in case.inputs.iter().enumerate() {
+            match multi.run(input) {
+                Ok((got, rep)) => {
+                    if got != want[i] {
+                        return fail_on(
+                            tag,
+                            "exact/multi",
+                            format!("input {i}: {}", first_diff(&got, &want[i])),
+                        );
+                    }
+                    if i == 0 {
+                        if let Some(v) = check_report_counters(tag, &rep, &multi.program) {
+                            return v;
+                        }
                     }
                 }
+                Err(e) => return fail_on(tag, "exact/multi", format!("input {i}: run: {e:#}")),
             }
-            Err(e) => return fail("exact/multi", format!("input {i}: run: {e:#}")),
+        }
+        match multi.run_batch(&refs) {
+            Ok(batch) => {
+                if batch.pipelined_cycles > batch.serial_cycles {
+                    return fail_on(
+                        tag,
+                        "batch/pipelined-le-serial",
+                        format!(
+                            "multi: pipelined {} > serial {}",
+                            batch.pipelined_cycles, batch.serial_cycles
+                        ),
+                    );
+                }
+            }
+            Err(e) => return fail_on(tag, "batch/exact", format!("multi run_batch: {e:#}")),
         }
     }
 
     // Axis: run_batch — outputs identical to per-input runs, serial
     // cycles are the sum, pipelined never exceeds serial.
-    let refs: Vec<&[i8]> = case.inputs.iter().map(|v| v.as_slice()).collect();
     match dep.run_batch(&sim, &refs) {
         Ok(batch) => {
             for (i, w) in want.iter().enumerate() {
                 if &batch.outputs[i] != w {
-                    return fail(
+                    return fail_on(
+                        "gemmini",
                         "batch/exact",
                         format!("inference {i}: {}", first_diff(&batch.outputs[i], w)),
                     );
@@ -326,13 +396,15 @@ pub fn check_case(case: &FuzzCase) -> Verdict {
             }
             let sum: u64 = batch.reports.iter().map(|r| r.cycles).sum();
             if batch.serial_cycles != sum {
-                return fail(
+                return fail_on(
+                    "gemmini",
                     "batch/serial-sum",
                     format!("serial_cycles {} != per-inference sum {sum}", batch.serial_cycles),
                 );
             }
             if batch.pipelined_cycles > batch.serial_cycles {
-                return fail(
+                return fail_on(
+                    "gemmini",
                     "batch/pipelined-le-serial",
                     format!(
                         "pipelined {} > serial {}",
@@ -341,21 +413,7 @@ pub fn check_case(case: &FuzzCase) -> Verdict {
                 );
             }
         }
-        Err(e) => return fail("batch/exact", format!("run_batch: {e:#}")),
-    }
-    match multi.run_batch(&refs) {
-        Ok(batch) => {
-            if batch.pipelined_cycles > batch.serial_cycles {
-                return fail(
-                    "batch/pipelined-le-serial",
-                    format!(
-                        "multi: pipelined {} > serial {}",
-                        batch.pipelined_cycles, batch.serial_cycles
-                    ),
-                );
-            }
-        }
-        Err(e) => return fail("batch/exact", format!("multi run_batch: {e:#}")),
+        Err(e) => return fail_on("gemmini", "batch/exact", format!("run_batch: {e:#}")),
     }
 
     Verdict::Pass
@@ -369,7 +427,7 @@ mod tests {
     #[test]
     fn small_cases_pass_every_axis() {
         // A handful of real end-to-end cases (kept small: each one runs
-        // four compiles and a dozen simulations).
+        // six compiles and a dozen simulations).
         let opts = GenOptions { max_layers: 2, max_dim: 16, max_batch: 2, max_inputs: 2 };
         for seed in [11u64, 12, 13] {
             let case = gen_case(seed, &opts);
@@ -383,5 +441,13 @@ mod tests {
         let opts = GenOptions { max_layers: 2, max_dim: 12, max_batch: 2, max_inputs: 1 };
         let case = gen_case(99, &opts);
         assert_eq!(check_case(&case), check_case(&case));
+    }
+
+    #[test]
+    fn pairings_cover_the_cross_family_case() {
+        let tags: Vec<&str> =
+            multi_target_pairings().unwrap().into_iter().map(|(t, _)| t).collect();
+        assert!(tags.contains(&"gemmini+bigarray-os"));
+        assert!(tags.contains(&"gemmini+vector"), "cross-family pairing must be fuzzed");
     }
 }

@@ -180,6 +180,12 @@ pub fn encode(i: &Instr) -> Vec<Word> {
         }
         Instr::Fence => vec![Word { funct: funct::FENCE, rs1: 0, rs2: 0 }],
         Instr::Flush => vec![Word { funct: funct::FLUSH, rs1: 0, rs2: 0 }],
+        // The vector family owns its own packing (disjoint funct range).
+        Instr::VcfgReq { .. }
+        | Instr::VldBias { .. }
+        | Instr::VmacStrip { .. }
+        | Instr::VstOut { .. } => super::vector_encode::encode_vector(i)
+            .expect("vector-family variants always encode"),
     }
 }
 
@@ -292,6 +298,11 @@ pub fn decode(words: &[Word]) -> Result<Vec<Instr>> {
             funct::LOOP_WS => bail!("LOOP_WS word without preceding config"),
             funct::FENCE => Instr::Fence,
             funct::FLUSH => Instr::Flush,
+            f if super::vector_encode::is_vector_funct(f) => {
+                let (instr, used) = super::vector_encode::decode_one(&words[i - 1..])?;
+                i += used - 1;
+                instr
+            }
             f => bail!("unknown funct {f}"),
         };
         out.push(instr);
@@ -313,7 +324,7 @@ mod tests {
                 _ => LocalAddr::acc_accumulate(row),
             }
         };
-        match rng.below(10) {
+        match rng.below(14) {
             0 => Instr::ConfigEx {
                 dataflow: if rng.chance(0.5) {
                     Dataflow::WeightStationary
@@ -373,6 +384,31 @@ mod tests {
                 a_stride: rng.below(1 << 20) as u32,
                 b_stride: rng.below(1 << 20) as u32,
                 c_stride: rng.below(1 << 20) as u32,
+            },
+            // Vector-family instructions mix into the same word stream
+            // (multi-target programs): decode must stay unambiguous.
+            10 => Instr::VcfgReq {
+                scale: rng.f64() as f32,
+                act: match rng.below(3) {
+                    0 => Activation::None,
+                    1 => Activation::Relu,
+                    _ => Activation::Clip { lo: rng.i8(), hi: rng.i8() },
+                },
+            },
+            11 => Instr::VldBias {
+                dram: rng.below(1 << 40),
+                len: rng.below(1 << 12) as u16,
+            },
+            12 => Instr::VmacStrip {
+                x_dram: rng.below(1 << 40),
+                w_dram: rng.below(1 << 40),
+                w_stride: rng.below(1 << 20) as u32,
+                n_out: rng.below(1 << 12) as u16,
+                n_in: rng.below(1 << 12) as u16,
+            },
+            13 => Instr::VstOut {
+                dram: rng.below(1 << 40),
+                len: rng.below(1 << 12) as u16,
             },
             _ => {
                 if rng.chance(0.5) {

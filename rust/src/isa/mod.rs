@@ -15,6 +15,7 @@
 
 pub mod encode;
 pub mod program;
+pub mod vector_encode;
 
 use std::fmt;
 
@@ -129,6 +130,21 @@ pub enum Instr {
     Fence,
     /// Flush the PE array's stationary state.
     Flush,
+    /// Vector backend: configure the requantization scale and activation
+    /// applied by `VST_OUT`.
+    VcfgReq { scale: f32, act: Activation },
+    /// Vector backend: load `len` int32 bias words from DRAM into the
+    /// vector accumulator file starting at element 0.
+    VldBias { dram: u64, len: u16 },
+    /// Vector backend: strip-mined multiply-accumulate over a weight
+    /// column block: `acc[o] += Σ_{c<n_in} x[x_dram+c] · w[w_dram +
+    /// c·w_stride + o]` for `o < n_out`. Operands stream from DRAM (the
+    /// vector engine has no software-managed scratchpad); weights are in
+    /// the shared accelerator `[C,K]` layout with row stride `w_stride`.
+    VmacStrip { x_dram: u64, w_dram: u64, w_stride: u32, n_out: u16, n_in: u16 },
+    /// Vector backend: requantize `acc[0..len]` with the configured
+    /// scale/activation and store to DRAM as int8.
+    VstOut { dram: u64, len: u16 },
 }
 
 impl Instr {
@@ -147,6 +163,10 @@ impl Instr {
             Instr::LoopWs { .. } => "loop_ws",
             Instr::Fence => "fence",
             Instr::Flush => "flush",
+            Instr::VcfgReq { .. } => "vcfg_req",
+            Instr::VldBias { .. } => "vld_bias",
+            Instr::VmacStrip { .. } => "vmac_strip",
+            Instr::VstOut { .. } => "vst_out",
         }
     }
 }
@@ -182,6 +202,21 @@ impl fmt::Display for Instr {
             Instr::LoopWs { m, n, k, .. } => write!(f, "loop_ws {m}x{n}x{k}"),
             Instr::Fence => write!(f, "fence"),
             Instr::Flush => write!(f, "flush"),
+            Instr::VcfgReq { scale, act } => {
+                write!(f, "vcfg_req scale={scale:.6} act={act:?}")
+            }
+            Instr::VldBias { dram, len } => {
+                write!(f, "vld_bias dram+{dram:#x} -> vacc[0..{len}]")
+            }
+            Instr::VmacStrip { x_dram, w_dram, w_stride, n_out, n_in } => {
+                write!(
+                    f,
+                    "vmac_strip x=dram+{x_dram:#x} w=dram+{w_dram:#x} stride={w_stride} {n_out}x{n_in}"
+                )
+            }
+            Instr::VstOut { dram, len } => {
+                write!(f, "vst_out vacc[0..{len}] -> dram+{dram:#x}")
+            }
         }
     }
 }

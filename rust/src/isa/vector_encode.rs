@@ -1,0 +1,213 @@
+//! Binary encoding of the vector-backend instruction family.
+//!
+//! The vector engine shares the RoCC-style `(funct, rs1, rs2)` command
+//! framing with the Gemmini-class family ([`super::encode`]) but owns a
+//! disjoint funct range (`0x20..`), so a mixed multi-target word stream
+//! decodes unambiguously. [`super::encode::encode`]/[`super::encode::decode`]
+//! dispatch into this module for the `V*` variants; the packing itself is
+//! defined here, next to the backend that owns it.
+
+use anyhow::{bail, ensure, Result};
+
+use super::encode::Word;
+use super::{Activation, Instr};
+
+/// Function codes of the vector family (disjoint from
+/// [`super::encode::funct`], which stays below 0x20).
+pub mod funct {
+    /// Configure requant scale + activation for `VST_OUT`.
+    pub const VCFG_REQ: u8 = 0x20;
+    /// Load int32 bias words into the vector accumulator file.
+    pub const VLD_BIAS: u8 = 0x21;
+    /// First word of a `VMAC_STRIP` pair (stride + extents).
+    pub const VMAC_STRIP_CFG: u8 = 0x22;
+    /// Second word of a `VMAC_STRIP` pair (operand addresses).
+    pub const VMAC_STRIP: u8 = 0x23;
+    /// Requantize + store the accumulator file to DRAM.
+    pub const VST_OUT: u8 = 0x24;
+}
+
+/// First funct value of the vector family.
+pub const FUNCT_BASE: u8 = funct::VCFG_REQ;
+
+/// Whether `f` is a vector-family funct.
+pub fn is_vector_funct(f: u8) -> bool {
+    (funct::VCFG_REQ..=funct::VST_OUT).contains(&f)
+}
+
+/// Whether `i` is a vector-family instruction.
+pub fn is_vector_instr(i: &Instr) -> bool {
+    matches!(
+        i,
+        Instr::VcfgReq { .. }
+            | Instr::VldBias { .. }
+            | Instr::VmacStrip { .. }
+            | Instr::VstOut { .. }
+    )
+}
+
+fn pack_act(act: Activation) -> u64 {
+    // Tag in [1:0], clip bounds in [9:2]/[17:10] (two's complement u8),
+    // mirroring the Gemmini CONFIG_ST layout.
+    match act {
+        Activation::None => 0,
+        Activation::Relu => 1,
+        Activation::Clip { lo, hi } => 2 | ((lo as u8 as u64) << 2) | ((hi as u8 as u64) << 10),
+    }
+}
+
+fn unpack_act(v: u64) -> Result<Activation> {
+    match v & 0b11 {
+        0 => Ok(Activation::None),
+        1 => Ok(Activation::Relu),
+        2 => Ok(Activation::Clip {
+            lo: ((v >> 2) & 0xFF) as u8 as i8,
+            hi: ((v >> 10) & 0xFF) as u8 as i8,
+        }),
+        t => bail!("bad vector activation tag {t}"),
+    }
+}
+
+/// Encode one vector-family instruction into one or two command words.
+/// Errors on non-vector instructions (those belong to [`super::encode`]).
+pub fn encode_vector(i: &Instr) -> Result<Vec<Word>> {
+    Ok(match *i {
+        Instr::VcfgReq { scale, act } => vec![Word {
+            funct: funct::VCFG_REQ,
+            rs1: pack_act(act),
+            rs2: f32::to_bits(scale) as u64,
+        }],
+        Instr::VldBias { dram, len } => {
+            vec![Word { funct: funct::VLD_BIAS, rs1: dram, rs2: len as u64 }]
+        }
+        Instr::VmacStrip { x_dram, w_dram, w_stride, n_out, n_in } => vec![
+            Word {
+                funct: funct::VMAC_STRIP_CFG,
+                rs1: w_stride as u64 | ((n_out as u64) << 32) | ((n_in as u64) << 48),
+                rs2: 0,
+            },
+            Word { funct: funct::VMAC_STRIP, rs1: x_dram, rs2: w_dram },
+        ],
+        Instr::VstOut { dram, len } => {
+            vec![Word { funct: funct::VST_OUT, rs1: dram, rs2: len as u64 }]
+        }
+        ref other => bail!("'{}' is not a vector-family instruction", other.mnemonic()),
+    })
+}
+
+/// Decode one vector-family instruction from the head of `words`,
+/// returning it together with the number of words consumed.
+pub fn decode_one(words: &[Word]) -> Result<(Instr, usize)> {
+    ensure!(!words.is_empty(), "empty vector word stream");
+    let w = words[0];
+    Ok(match w.funct {
+        funct::VCFG_REQ => (
+            Instr::VcfgReq { scale: f32::from_bits(w.rs2 as u32), act: unpack_act(w.rs1)? },
+            1,
+        ),
+        funct::VLD_BIAS => (Instr::VldBias { dram: w.rs1, len: w.rs2 as u16 }, 1),
+        funct::VMAC_STRIP_CFG => {
+            let Some(w_addr) = words.get(1) else { bail!("truncated VMAC_STRIP") };
+            if w_addr.funct != funct::VMAC_STRIP {
+                bail!("malformed VMAC_STRIP sequence");
+            }
+            (
+                Instr::VmacStrip {
+                    x_dram: w_addr.rs1,
+                    w_dram: w_addr.rs2,
+                    w_stride: (w.rs1 & 0xFFFF_FFFF) as u32,
+                    n_out: ((w.rs1 >> 32) & 0xFFFF) as u16,
+                    n_in: ((w.rs1 >> 48) & 0xFFFF) as u16,
+                },
+                2,
+            )
+        }
+        funct::VMAC_STRIP => bail!("VMAC_STRIP word without preceding config"),
+        funct::VST_OUT => (Instr::VstOut { dram: w.rs1, len: w.rs2 as u16 }, 1),
+        f => bail!("funct {f} is not a vector-family instruction"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prng::Rng, prop};
+
+    fn random_vector_instr(rng: &mut Rng) -> Instr {
+        match rng.below(4) {
+            0 => Instr::VcfgReq {
+                scale: rng.f64() as f32,
+                act: match rng.below(3) {
+                    0 => Activation::None,
+                    1 => Activation::Relu,
+                    _ => Activation::Clip { lo: rng.i8(), hi: rng.i8() },
+                },
+            },
+            1 => Instr::VldBias { dram: rng.below(1 << 40), len: rng.below(1 << 12) as u16 },
+            2 => Instr::VmacStrip {
+                x_dram: rng.below(1 << 40),
+                w_dram: rng.below(1 << 40),
+                w_stride: rng.below(1 << 20) as u32,
+                n_out: rng.below(1 << 12) as u16,
+                n_in: rng.below(1 << 12) as u16,
+            },
+            _ => Instr::VstOut { dram: rng.below(1 << 40), len: rng.below(1 << 12) as u16 },
+        }
+    }
+
+    #[test]
+    fn prop_vector_encode_decode_roundtrip() {
+        prop::check("vector isa roundtrip", 300, |rng| {
+            let i = random_vector_instr(rng);
+            let words = encode_vector(&i).map_err(|e| e.to_string())?;
+            let (back, used) = decode_one(&words).map_err(|e| e.to_string())?;
+            if used != words.len() {
+                return Err(format!("consumed {used} of {} words", words.len()));
+            }
+            if back != i {
+                return Err(format!("{back} != {i}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn vector_functs_disjoint_from_gemmini() {
+        // The Gemmini family stays below the vector FUNCT_BASE so a mixed
+        // multi-target word stream decodes unambiguously.
+        use crate::isa::encode::funct as g;
+        for f in [
+            g::CONFIG_EX,
+            g::CONFIG_LD,
+            g::CONFIG_ST,
+            g::MVIN,
+            g::MVOUT,
+            g::PRELOAD,
+            g::COMPUTE_PRELOADED,
+            g::COMPUTE_ACCUMULATED,
+            g::LOOP_WS,
+            g::LOOP_WS_CONFIG,
+            g::FENCE,
+            g::FLUSH,
+            g::MVOUT_SPAD,
+        ] {
+            assert!(f < FUNCT_BASE, "funct {f} collides with the vector range");
+            assert!(!is_vector_funct(f));
+        }
+    }
+
+    #[test]
+    fn rejects_orphan_and_truncated_mac() {
+        let full = encode_vector(&Instr::VmacStrip {
+            x_dram: 0,
+            w_dram: 0,
+            w_stride: 8,
+            n_out: 4,
+            n_in: 8,
+        })
+        .unwrap();
+        assert!(decode_one(&full[..1]).is_err()); // truncated pair
+        assert!(decode_one(&full[1..]).is_err()); // orphan addr word
+        assert!(encode_vector(&Instr::Fence).is_err());
+    }
+}

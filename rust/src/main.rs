@@ -50,8 +50,9 @@ use tvm_accel::pipeline::{CompileOptions, Deployment};
 use tvm_accel::relay::import::{load_qmodel, synth_qmodel, write_qmodel, QModel};
 #[cfg(feature = "xla-runtime")]
 use tvm_accel::runtime::{golden_inputs, Runtime};
+use tvm_accel::backend::Backend;
 use tvm_accel::scheduler::persist;
-use tvm_accel::scheduler::sweep::{sweep, SweepOptions};
+use tvm_accel::scheduler::sweep::SweepOptions;
 use tvm_accel::service::protocol::{parse_message, ObjBuilder};
 use tvm_accel::service::socket::{self, ServeOptions};
 use tvm_accel::service::{default_cache_path, CompileServer, CompiledArtifact};
@@ -123,9 +124,14 @@ fn build_deployment(args: &Args, accel: &AccelDesc, model: &QModel) -> Result<De
     match args.opt_or("backend", "proposed").as_str() {
         "proposed" => {
             // Route through the compile service so repeat invocations hit
-            // the persistent schedule cache.
+            // the persistent schedule cache (and, with --incremental, the
+            // persisted session memo).
             let server = local_server(args)?;
-            let reply = server.compile_model(model, std::slice::from_ref(accel))?;
+            let reply = if args.flag("incremental") {
+                server.compile_model_incremental(model, std::slice::from_ref(accel))?
+            } else {
+                server.compile_model(model, std::slice::from_ref(accel))?
+            };
             match reply.artifact {
                 CompiledArtifact::Single(d) => Ok(d),
                 CompiledArtifact::Multi(_) => bail!("one target cannot yield a multi deployment"),
@@ -144,7 +150,7 @@ fn cmd_schedule(args: &Args) -> Result<()> {
         args.opt_usize("k", 128)?,
     );
     let accel = load_accel(args)?;
-    let r = sweep(&accel.arch, g, &SweepOptions::default());
+    let r = accel.backend_impl()?.sweep(&accel.arch, g, &SweepOptions::default());
     println!("{} config points explored for {g}; top candidates:", r.configs_explored);
     for (i, s) in r.candidates.iter().enumerate() {
         println!("  [{i}] {s}");
@@ -221,7 +227,11 @@ fn cmd_compile(args: &Args) -> Result<()> {
 
     let accels = load_accels(args)?;
     let server = local_server(args)?;
-    let reply = server.compile_model(&model, &accels)?;
+    let reply = if args.flag("incremental") {
+        server.compile_model_incremental(&model, &accels)?
+    } else {
+        server.compile_model(&model, &accels)?
+    };
     let names: Vec<&str> = accels.iter().map(|a| a.name.as_str()).collect();
     println!(
         "compiled '{}' for {}: {} items, {} DRAM bytes",
@@ -251,6 +261,17 @@ fn cmd_compile(args: &Args) -> Result<()> {
         reply.solver_leaves_visited,
         reply.configs_pruned
     );
+    if args.flag("incremental") {
+        println!(
+            "session memo: {} hit(s) this compile, {} selection(s) memoized{}",
+            reply.schedule_stats.memo_hits,
+            server.memo().len(),
+            match server.memo_path() {
+                Some(p) => format!(", persisting to {}", p.display()),
+                None => String::new(),
+            }
+        );
+    }
     if let Some(p) = server.cache_path() {
         println!(
             "  {} entries persisted at {}",
@@ -494,7 +515,12 @@ fn cmd_fuzz(args: &Args) -> Result<()> {
                 Ok(())
             }
             fuzz::Verdict::Fail(f) => {
-                bail!("reproducer {path}: axis {} still fails: {}", f.axis, f.detail)
+                bail!(
+                    "reproducer {path}: axis {} [{}] still fails: {}",
+                    f.axis,
+                    f.backend,
+                    f.detail
+                )
             }
         };
     }
@@ -540,6 +566,7 @@ fn main() -> Result<()> {
                 "usage: tvm-accel <schedule|compile|run|disasm|serve|cache|bench|gen-model|fuzz>\n\
                  \x20 compile:     --model F.qmodel [--backend proposed|naive|c-toolchain]\n\
                  \x20              [--arch F.yaml[,G.yaml...]] [--cache F|--no-cache]\n\
+                 \x20              [--incremental  (persist the session memo beside the cache)]\n\
                  \x20              [--socket S  (proposed backend via a running server)]\n\
                  \x20 run/disasm:  --model F.qmodel [--backend ...] [--arch F.yaml]\n\
                  \x20              [--golden F.hlo.txt] [--inferences N] [--cache F|--no-cache]\n\

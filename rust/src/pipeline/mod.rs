@@ -45,8 +45,8 @@ use std::sync::{Arc, Mutex};
 use anyhow::{ensure, Result};
 
 use crate::accel::AccelDesc;
-use crate::backend::codegen::{generate, LayerBufs};
-use crate::backend::mapping::apply_schedule;
+use crate::backend::codegen::LayerBufs;
+use crate::backend::Backend;
 use crate::isa::program::Program;
 use crate::isa::Instr;
 use crate::relay::Graph;
@@ -54,7 +54,7 @@ use crate::scheduler::cache::{
     CacheKey, CacheStats, CachedSelection, ScheduleCache, SearchGate, SearchKey,
 };
 use crate::scheduler::graph::ResidencyConstraint;
-use crate::scheduler::sweep::{sweep, SweepOptions};
+use crate::scheduler::sweep::SweepOptions;
 use crate::scheduler::Schedule;
 use crate::sim::report::RunReport;
 use crate::sim::Simulator;
@@ -128,9 +128,12 @@ pub enum ScheduleSource {
 /// layers whose [`CacheKey`] — shape × arch fingerprint × search options
 /// × residency constraint — changed since the last compile. Unlike the
 /// shared [`ScheduleCache`] it is consulted *before* the single-flight
-/// gate (so it also works with `schedule_cache: false`), is plain
-/// process-local state (never persisted), and is only used when
-/// explicitly passed — plain [`Compiler::compile`] calls are unaffected.
+/// gate (so it also works with `schedule_cache: false`), and is only
+/// used when explicitly passed — plain [`Compiler::compile`] calls are
+/// unaffected. It lives in memory; services that want incremental
+/// compiles to survive a process restart snapshot it to a versioned
+/// artifact via [`crate::scheduler::persist::save_memo_to_file`] and
+/// rehydrate with [`crate::scheduler::persist::hydrate_memo_from_file`].
 #[derive(Debug, Default)]
 pub struct SessionMemo {
     entries: Mutex<HashMap<CacheKey, (Schedule, Option<u64>)>>,
@@ -156,6 +159,37 @@ impl SessionMemo {
     /// Lookups served from this memo (across all compiles it was used in).
     pub fn hits(&self) -> u64 {
         self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot every memoized selection (key, schedule, profiled cycles),
+    /// in unspecified order — the input to
+    /// [`crate::scheduler::persist::encode_memo`].
+    pub fn snapshot(&self) -> Vec<(CacheKey, Schedule, Option<u64>)> {
+        self.entries
+            .lock()
+            .expect("memo lock poisoned")
+            .iter()
+            .map(|(k, (s, c))| (*k, s.clone(), *c))
+            .collect()
+    }
+
+    /// Bulk-insert selections (from a persisted snapshot,
+    /// [`crate::scheduler::persist::load_memo_file`]). Existing keys are
+    /// overwritten; the hit counter is unaffected.
+    pub fn hydrate(
+        &self,
+        entries: impl IntoIterator<Item = (CacheKey, Schedule, Option<u64>)>,
+    ) {
+        let mut map = self.entries.lock().expect("memo lock poisoned");
+        for (k, s, c) in entries {
+            map.insert(k, (s, c));
+        }
+    }
+
+    /// Whether a selection for `key` is memoized (counter-neutral —
+    /// useful for prewarm planning without inflating the hit counter).
+    pub fn contains(&self, key: &CacheKey) -> bool {
+        self.entries.lock().expect("memo lock poisoned").contains_key(key)
     }
 
     fn get(&self, key: &CacheKey) -> Option<(Schedule, Option<u64>)> {
@@ -409,6 +443,12 @@ impl Compiler {
         self.cache.clone()
     }
 
+    /// The backend family this compiler's accelerator lowers through
+    /// (resolved from the registry via [`AccelDesc::backend_impl`]).
+    pub fn backend(&self) -> Result<&'static dyn Backend> {
+        self.accel.backend_impl()
+    }
+
     /// A cost-driven multi-accelerator compiler over a *set* of candidate
     /// descriptions (plus the implicit host fallback): each supported
     /// layer is placed on the candidate whose profiled schedule is
@@ -572,7 +612,7 @@ impl Compiler {
 
         let searched = (|| -> Result<(Schedule, Option<u64>)> {
             self.sweeps_run.fetch_add(1, Ordering::Relaxed);
-            let result = sweep(&self.accel.arch, g, &self.options.sweep);
+            let result = self.backend()?.sweep(&self.accel.arch, g, &self.options.sweep);
             self.solver_leaves.fetch_add(result.stats.leaves_visited, Ordering::Relaxed);
             self.configs_pruned.fetch_add(result.stats.configs_pruned, Ordering::Relaxed);
             ensure!(
@@ -670,7 +710,7 @@ impl Compiler {
         };
 
         self.sweeps_run.fetch_add(1, Ordering::Relaxed);
-        let result = sweep(&self.accel.arch, g, &self.options.sweep);
+        let result = self.backend()?.sweep(&self.accel.arch, g, &self.options.sweep);
         self.solver_leaves.fetch_add(result.stats.leaves_visited, Ordering::Relaxed);
         self.configs_pruned.fetch_add(result.stats.configs_pruned, Ordering::Relaxed);
         if result.candidates.is_empty() {
@@ -765,7 +805,8 @@ impl Compiler {
         let g = s.workload;
         let quant = crate::tir::QuantAttrs { scale: 0.05, act: crate::isa::Activation::None };
         let f = crate::tir::TirFunc::unscheduled("profile", g, quant);
-        let scheduled = apply_schedule(&self.accel, &f, s)?;
+        let backend = self.backend()?;
+        let scheduled = backend.apply_schedule(&self.accel, &f, s)?;
         let mut prog = Program::new("profile");
         let bufs = LayerBufs {
             x: prog.layout.alloc("x", (g.n * g.c) as u64)?.offset,
@@ -773,7 +814,7 @@ impl Compiler {
             bias: prog.layout.alloc("bias", (g.k * 4) as u64)?.offset,
             out: prog.layout.alloc("out", (g.n * g.k) as u64)?.offset,
         };
-        generate(&self.accel, &scheduled, s, &bufs, &mut prog)?;
+        backend.generate(&self.accel, &scheduled, s, &bufs, &mut prog)?;
         prog.push(Instr::Fence);
         let mut dram = prog.make_dram()?;
         Ok(sim.run(&prog, &mut dram)?.cycles)

@@ -46,9 +46,9 @@ use anyhow::{bail, ensure, Context, Result};
 
 use crate::accel::AccelDesc;
 use crate::arch::ArchDesc;
-use crate::backend::codegen::{generate_resident, LayerBufs};
-use crate::backend::mapping::apply_schedule;
-use crate::backend::strategy::{generate_strategy_typed, Strategy};
+use crate::backend::codegen::LayerBufs;
+use crate::backend::strategy::Strategy;
+use crate::backend::Backend;
 use crate::frontend::{configure_all, run_frontend_passes};
 use crate::isa::program::{HostOp, Program};
 use crate::isa::Instr;
@@ -254,6 +254,13 @@ impl<'a> CompilerSession<'a> {
     ) -> Result<(MultiDeployment, Vec<StageReport>, ScheduleStats)> {
         let lead = self.compilers[0];
         let is_multi = self.compilers.len() > 1;
+        // Resolve each target's backend family once: strategy binding,
+        // mapping, codegen and residency support all dispatch through it.
+        let backends: Vec<&'static dyn Backend> = self
+            .compilers
+            .iter()
+            .map(|c| c.backend())
+            .collect::<Result<Vec<_>>>()?;
         let search_effort = |compilers: &[&Compiler]| -> (u64, u64) {
             compilers.iter().fold((0, 0), |(l, p), c| {
                 (l + c.solver_leaves_visited(), p + c.configs_pruned())
@@ -321,7 +328,8 @@ impl<'a> CompilerSession<'a> {
                         .map(|&i| processed.node(i).ty.shape.clone())
                         .collect();
                     let c = compilers[t];
-                    let probe = generate_strategy_typed(&c.accel, node, &shapes)
+                    let probe = backends[t]
+                        .generate_strategy(&c.accel, node, &shapes)
                         .and_then(|strategy| c.select_schedule(strategy.gemm, fps[t], memo));
                     match probe {
                         // Profiled cycles when profiling ran; the analytic cost
@@ -348,6 +356,12 @@ impl<'a> CompilerSession<'a> {
                 // single-use, non-output activation.
                 |node, from, to| {
                     if !lead.options.cross_layer || !lead.options.use_scheduler {
+                        return 0;
+                    }
+                    // A same-target elision is only foregone if the
+                    // producer's backend family can actually keep
+                    // activations resident.
+                    if !backends[from].supports_residency() {
                         return 0;
                     }
                     let Some(&src) = node.inputs.first() else { return 0 };
@@ -412,7 +426,7 @@ impl<'a> CompilerSession<'a> {
             let c = self.compilers[target];
             let shapes: Vec<Vec<usize>> =
                 n.inputs.iter().map(|&i| g.node(i).ty.shape.clone()).collect();
-            let strategy = generate_strategy_typed(&c.accel, n, &shapes)?;
+            let strategy = backends[target].generate_strategy(&c.accel, n, &shapes)?;
             let (schedule, profiled_cycles, source) = c
                 .select_schedule(strategy.gemm, fps[target], self.memo)
                 .with_context(|| format!("schedule selection for layer '{}'", n.name))?;
@@ -482,11 +496,16 @@ impl<'a> CompilerSession<'a> {
             let mut edges: Vec<(usize, usize)> = Vec::new();
             for (li, w) in order.windows(2).enumerate() {
                 let (p, c) = (w[0], w[1]);
-                let same_target = match (&plans[p], &plans[c]) {
-                    (Some(pp), Some(cp)) => pp.target == cp.target,
+                // Same target, and its backend family can actually keep
+                // activations resident on-chip (a DRAM-streaming family
+                // like the vector backend never forms an edge).
+                let resident_capable = match (&plans[p], &plans[c]) {
+                    (Some(pp), Some(cp)) => {
+                        pp.target == cp.target && backends[pp.target].supports_residency()
+                    }
                     _ => false,
                 };
-                if g.node(c).inputs.first() == Some(&p) && uses[p] == 1 && same_target {
+                if g.node(c).inputs.first() == Some(&p) && uses[p] == 1 && resident_capable {
                     edges.push((li, li + 1));
                 }
             }
@@ -542,7 +561,8 @@ impl<'a> CompilerSession<'a> {
         for n in &g.nodes {
             if let Some(plan) = &plans[n.id] {
                 let accel = &self.compilers[plan.target].accel;
-                let f = apply_schedule(accel, &plan.strategy.tir, &plan.schedule)
+                let f = backends[plan.target]
+                    .apply_schedule(accel, &plan.strategy.tir, &plan.schedule)
                     .with_context(|| format!("mapping for layer '{}'", n.name))?;
                 lowered[n.id] = Some(f);
                 mapped += 1;
@@ -575,15 +595,16 @@ impl<'a> CompilerSession<'a> {
                         bias: region[n.inputs[2]],
                         out: region[n.id],
                     };
-                    generate_resident(
-                        accel,
-                        scheduled,
-                        &plan.schedule,
-                        &bufs,
-                        &node_resid[n.id],
-                        &mut prog,
-                    )
-                    .with_context(|| format!("codegen for layer '{}'", n.name))?;
+                    backends[plan.target]
+                        .generate_resident(
+                            accel,
+                            scheduled,
+                            &plan.schedule,
+                            &bufs,
+                            &node_resid[n.id],
+                            &mut prog,
+                        )
+                        .with_context(|| format!("codegen for layer '{}'", n.name))?;
                     // Drain before anything consumes this layer's DRAM
                     // output (the timing model tracks on-chip hazards only).
                     prog.push(Instr::Fence);

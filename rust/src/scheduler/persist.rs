@@ -37,6 +37,7 @@ use std::path::Path;
 use anyhow::{Context, Result};
 
 use crate::arch::Dataflow;
+use crate::pipeline::SessionMemo;
 use crate::workload::{Dim, Gemm};
 
 use super::cache::{CacheKey, CachedSelection, ScheduleCache, SearchKey};
@@ -50,6 +51,16 @@ pub const MAGIC: &[u8; 4] = b"TVAS";
 /// (old files load as empty, old readers skip new files). Version 2 added
 /// the residency-constraint key half and the last-served LRU stamp.
 pub const FORMAT_VERSION: u32 = 2;
+
+/// File magic of the session-memo artifact ("TVm-Accel Memo"). The memo
+/// ([`crate::pipeline::SessionMemo`]) persists next to the schedule cache
+/// so *incremental* recompiles stay warm across processes; it shares the
+/// cache artifact's entry codec (with a zero LRU stamp) but carries its
+/// own magic + version so the two files can never be confused.
+pub const MEMO_MAGIC: &[u8; 4] = b"TVAM";
+
+/// Current format version of the memo artifact.
+pub const MEMO_FORMAT_VERSION: u32 = 1;
 
 /// Upper bound on one entry's payload (an entry is a few hundred bytes;
 /// anything larger is a corrupted length prefix).
@@ -291,12 +302,16 @@ fn decode_entry(payload: &[u8]) -> Option<(CacheKey, CachedSelection, u64)> {
 
 // --- file I/O ---------------------------------------------------------
 
-/// Serialize stamped `entries` (as produced by
-/// [`ScheduleCache::snapshot_stamped`]) into the artifact byte format.
-pub fn encode(entries: &[(CacheKey, CachedSelection, u64)]) -> Vec<u8> {
+/// Serialize stamped entries under an artifact header (shared by the
+/// cache and memo artifacts).
+fn encode_entries(
+    entries: &[(CacheKey, CachedSelection, u64)],
+    magic: &[u8; 4],
+    version: u32,
+) -> Vec<u8> {
     let mut out = Vec::with_capacity(8 + entries.len() * 300);
-    out.extend_from_slice(MAGIC);
-    out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+    out.extend_from_slice(magic);
+    out.extend_from_slice(&version.to_le_bytes());
     for (key, sel, stamp) in entries {
         let payload = encode_entry(key, sel, *stamp);
         out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
@@ -306,16 +321,26 @@ pub fn encode(entries: &[(CacheKey, CachedSelection, u64)]) -> Vec<u8> {
     out
 }
 
-/// Decode an artifact byte buffer, skipping what cannot be read (see the
-/// module docs for the exact tolerance rules).
-pub fn decode(buf: &[u8]) -> (Vec<(CacheKey, CachedSelection, u64)>, LoadReport) {
+/// Serialize stamped `entries` (as produced by
+/// [`ScheduleCache::snapshot_stamped`]) into the artifact byte format.
+pub fn encode(entries: &[(CacheKey, CachedSelection, u64)]) -> Vec<u8> {
+    encode_entries(entries, MAGIC, FORMAT_VERSION)
+}
+
+/// Decode an artifact byte buffer under the expected header, skipping
+/// what cannot be read (see the module docs for the tolerance rules).
+fn decode_entries(
+    buf: &[u8],
+    magic: &[u8; 4],
+    expect_version: u32,
+) -> (Vec<(CacheKey, CachedSelection, u64)>, LoadReport) {
     let mut rep = LoadReport::default();
     let mut entries = Vec::new();
-    if buf.len() < 8 || &buf[0..4] != MAGIC {
+    if buf.len() < 8 || &buf[0..4] != magic {
         return (entries, rep);
     }
     let version = u32::from_le_bytes(buf[4..8].try_into().expect("4 bytes"));
-    if version != FORMAT_VERSION {
+    if version != expect_version {
         return (entries, rep);
     }
     let mut pos = 8;
@@ -347,6 +372,12 @@ pub fn decode(buf: &[u8]) -> (Vec<(CacheKey, CachedSelection, u64)>, LoadReport)
         }
     }
     (entries, rep)
+}
+
+/// Decode an artifact byte buffer, skipping what cannot be read (see the
+/// module docs for the exact tolerance rules).
+pub fn decode(buf: &[u8]) -> (Vec<(CacheKey, CachedSelection, u64)>, LoadReport) {
+    decode_entries(buf, MAGIC, FORMAT_VERSION)
 }
 
 /// Load an artifact file. Never fails — see the module docs.
@@ -403,6 +434,67 @@ pub fn save_to_file(cache: &ScheduleCache, path: &Path) -> Result<usize> {
     let entries: Vec<(CacheKey, CachedSelection, u64)> =
         merged.into_iter().map(|(k, (v, s))| (k, v, s)).collect();
     write_atomic(path, &encode(&entries))?;
+    Ok(entries.len())
+}
+
+// --- session-memo artifact --------------------------------------------
+
+/// Serialize session-memo entries (as produced by
+/// [`SessionMemo::snapshot`]). Memo entries carry no LRU stamp; zero is
+/// written in the shared entry codec's stamp slot.
+pub fn encode_memo(entries: &[(CacheKey, Schedule, Option<u64>)]) -> Vec<u8> {
+    let stamped: Vec<(CacheKey, CachedSelection, u64)> = entries
+        .iter()
+        .map(|(k, s, c)| {
+            (*k, CachedSelection { schedule: s.clone(), profiled_cycles: *c }, 0)
+        })
+        .collect();
+    encode_entries(&stamped, MEMO_MAGIC, MEMO_FORMAT_VERSION)
+}
+
+/// Decode a memo artifact buffer (same tolerance rules as [`decode`]; a
+/// schedule-cache artifact handed here loads cold thanks to the distinct
+/// magic).
+pub fn decode_memo(buf: &[u8]) -> (Vec<(CacheKey, Schedule, Option<u64>)>, LoadReport) {
+    let (entries, rep) = decode_entries(buf, MEMO_MAGIC, MEMO_FORMAT_VERSION);
+    let out = entries
+        .into_iter()
+        .map(|(k, v, _)| (k, v.schedule, v.profiled_cycles))
+        .collect();
+    (out, rep)
+}
+
+/// Load a memo artifact file. Never fails — missing/corrupt files load
+/// cold, exactly like [`load_file`].
+pub fn load_memo_file(path: &Path) -> (Vec<(CacheKey, Schedule, Option<u64>)>, LoadReport) {
+    match std::fs::read(path) {
+        Ok(buf) => decode_memo(&buf),
+        Err(_) => (Vec::new(), LoadReport::default()),
+    }
+}
+
+/// Hydrate `memo` from a memo artifact file (missing/corrupt files
+/// hydrate zero entries). Hit counters are untouched.
+pub fn hydrate_memo_from_file(memo: &SessionMemo, path: &Path) -> LoadReport {
+    let (entries, rep) = load_memo_file(path);
+    memo.hydrate(entries);
+    rep
+}
+
+/// Atomically write `memo`'s selections to `path`, **merged over**
+/// whatever the file already holds (same two-process rationale as
+/// [`save_to_file`]; this memo's entries win key conflicts). Returns the
+/// number of entries written.
+pub fn save_memo_to_file(memo: &SessionMemo, path: &Path) -> Result<usize> {
+    let (disk, _) = load_memo_file(path);
+    let mut merged: std::collections::BTreeMap<CacheKey, (Schedule, Option<u64>)> =
+        disk.into_iter().map(|(k, s, c)| (k, (s, c))).collect();
+    for (k, s, c) in memo.snapshot() {
+        merged.insert(k, (s, c));
+    }
+    let entries: Vec<(CacheKey, Schedule, Option<u64>)> =
+        merged.into_iter().map(|(k, (s, c))| (k, s, c)).collect();
+    write_atomic(path, &encode_memo(&entries))?;
     Ok(entries.len())
 }
 
@@ -608,6 +700,49 @@ mod tests {
         let rep = trim_file(&file, 10).unwrap();
         assert_eq!(rep, TrimReport { kept: 2, dropped: 0 });
         let _ = std::fs::remove_file(&file);
+    }
+
+    #[test]
+    fn memo_artifact_roundtrips_and_merges() {
+        let dir = std::env::temp_dir()
+            .join(format!("tvm-accel-memo-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let file = dir.join("session.memo");
+        let _ = std::fs::remove_file(&file);
+
+        let (k1, v1, _) = sample_entry(1, Gemm::new(4, 4, 4), Some(10));
+        let (k2, v2, _) = sample_entry(2, Gemm::new(8, 8, 8), None);
+        let a = SessionMemo::new();
+        a.hydrate([(k1, v1.schedule.clone(), v1.profiled_cycles)]);
+        assert_eq!(save_memo_to_file(&a, &file).unwrap(), 1);
+
+        // A second process's memo merges over the artifact.
+        let b = SessionMemo::new();
+        b.hydrate([(k2, v2.schedule.clone(), v2.profiled_cycles)]);
+        assert_eq!(save_memo_to_file(&b, &file).unwrap(), 2);
+
+        let fresh = SessionMemo::new();
+        let rep = hydrate_memo_from_file(&fresh, &file);
+        assert_eq!(rep, LoadReport { loaded: 2, skipped: 0 });
+        let mut back = fresh.snapshot();
+        back.sort_by(|a, b| a.0.cmp(&b.0));
+        assert_eq!(
+            back,
+            vec![
+                (k1, v1.schedule, v1.profiled_cycles),
+                (k2, v2.schedule, v2.profiled_cycles)
+            ]
+        );
+        let _ = std::fs::remove_file(&file);
+    }
+
+    #[test]
+    fn memo_and_cache_artifacts_never_cross_load() {
+        let (k, v, stamp) = sample_entry(7, Gemm::new(4, 4, 4), Some(9));
+        let cache_bytes = encode(&[(k, v.clone(), stamp)]);
+        let memo_bytes = encode_memo(&[(k, v.schedule, v.profiled_cycles)]);
+        assert!(decode_memo(&cache_bytes).0.is_empty(), "cache file must not hydrate a memo");
+        assert!(decode(&memo_bytes).0.is_empty(), "memo file must not hydrate a cache");
     }
 
     #[test]

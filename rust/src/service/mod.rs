@@ -43,7 +43,7 @@ pub mod socket;
 
 use std::path::PathBuf;
 
-pub use server::{CompileServer, CompiledArtifact, ServiceReply};
+pub use server::{memo_sibling_path, CompileServer, CompiledArtifact, ServiceReply};
 
 /// Default location of the persistent schedule-cache artifact:
 /// `$TVM_ACCEL_CACHE` when set, else `$XDG_CACHE_HOME/tvm-accel/` (or

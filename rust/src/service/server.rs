@@ -26,13 +26,13 @@ use std::time::{Duration, Instant};
 use anyhow::{ensure, Context, Result};
 
 use crate::accel::AccelDesc;
-use crate::backend::strategy::generate_strategy_typed;
+use crate::backend::Backend;
 use crate::baselines::naive_byoc::import_with_weight_chain;
 use crate::frontend::{configure_all, run_frontend_passes};
 use crate::isa::program::Program;
 use crate::pipeline::{
     CompileOptions, Compiler, Deployment, MultiCompiler, MultiDeployment, ScheduleStats,
-    StageReport,
+    SessionMemo, StageReport,
 };
 use crate::relay::import::QModel;
 use crate::relay::Graph;
@@ -110,10 +110,22 @@ pub struct ServiceReply {
 pub struct CompileServer {
     cache: Arc<ScheduleCache>,
     cache_path: Option<PathBuf>,
+    /// Incremental-session memo served to the `*_incremental` requests;
+    /// persisted as a `.memo` sibling of the cache artifact.
+    memo: SessionMemo,
+    memo_path: Option<PathBuf>,
     options: CompileOptions,
     workers: usize,
     persist_lock: Mutex<()>,
     requests: AtomicU64,
+}
+
+/// The session-memo artifact's location: a `.memo` sibling of the
+/// schedule-cache artifact (`schedules.bin` → `schedules.bin.memo`).
+pub fn memo_sibling_path(cache: &Path) -> PathBuf {
+    let mut os = cache.as_os_str().to_os_string();
+    os.push(".memo");
+    PathBuf::from(os)
 }
 
 impl CompileServer {
@@ -123,6 +135,8 @@ impl CompileServer {
         CompileServer {
             cache: Arc::new(ScheduleCache::new()),
             cache_path: None,
+            memo: SessionMemo::new(),
+            memo_path: None,
             options,
             workers,
             persist_lock: Mutex::new(()),
@@ -131,15 +145,20 @@ impl CompileServer {
     }
 
     /// A server whose cache is hydrated from (and persisted back to) the
-    /// artifact at `path`. A missing or unreadable artifact starts cold —
-    /// never an error. Returns the server plus what the load found.
+    /// artifact at `path`, and whose incremental-session memo is hydrated
+    /// from the `.memo` sibling ([`memo_sibling_path`]). A missing or
+    /// unreadable artifact starts cold — never an error. Returns the
+    /// server plus what the cache load found.
     pub fn with_cache_file(
         options: CompileOptions,
         path: PathBuf,
     ) -> (CompileServer, LoadReport) {
         let mut server = CompileServer::new(options);
         let report = persist::hydrate_from_file(&server.cache, &path);
+        let memo_path = memo_sibling_path(&path);
+        persist::hydrate_memo_from_file(&server.memo, &memo_path);
         server.cache_path = Some(path);
+        server.memo_path = Some(memo_path);
         (server, report)
     }
 
@@ -165,6 +184,17 @@ impl CompileServer {
         self.cache_path.as_deref()
     }
 
+    /// The incremental-session memo backing the `*_incremental` requests.
+    pub fn memo(&self) -> &SessionMemo {
+        &self.memo
+    }
+
+    /// Where the memo persists (the `.memo` sibling), when persistence is
+    /// enabled.
+    pub fn memo_path(&self) -> Option<&Path> {
+        self.memo_path.as_deref()
+    }
+
     /// Compile requests served so far.
     pub fn requests_served(&self) -> u64 {
         self.requests.load(Ordering::Relaxed)
@@ -185,11 +215,17 @@ impl CompileServer {
         Ok(())
     }
 
-    /// Atomically write the current cache contents to the artifact file.
-    /// No-op (returning 0) without a configured path.
+    /// Atomically write the current cache contents to the artifact file
+    /// (and the incremental-session memo to its `.memo` sibling, when it
+    /// has entries). No-op (returning 0) without a configured path.
     pub fn persist(&self) -> Result<usize> {
         let Some(path) = &self.cache_path else { return Ok(0) };
         let _guard = self.persist_lock.lock().expect("persist lock poisoned");
+        if let Some(memo_path) = &self.memo_path {
+            if !self.memo.is_empty() {
+                persist::save_memo_to_file(&self.memo, memo_path)?;
+            }
+        }
         persist::save_to_file(&self.cache, path)
     }
 
@@ -204,6 +240,17 @@ impl CompileServer {
         self.compile_graph(&graph, targets)
     }
 
+    /// [`CompileServer::compile_model`] through the server's
+    /// incremental-session memo ([`CompileServer::compile_graph_incremental`]).
+    pub fn compile_model_incremental(
+        &self,
+        model: &QModel,
+        targets: &[AccelDesc],
+    ) -> Result<ServiceReply> {
+        let graph = import_with_weight_chain(model)?;
+        self.compile_graph_incremental(&graph, targets)
+    }
+
     /// Compile an in-memory graph for one or many targets. One target
     /// produces [`CompiledArtifact::Single`] (byte-identical to the plain
     /// [`Compiler`] path); several produce the cost-partitioned
@@ -213,8 +260,31 @@ impl CompileServer {
         graph: &Graph,
         targets: &[AccelDesc],
     ) -> Result<ServiceReply> {
+        self.compile_graph_with(graph, targets, None)
+    }
+
+    /// [`CompileServer::compile_graph`] through the server's long-lived
+    /// incremental-session memo: layers the memo already knows skip even
+    /// the shared-cache gate, newly searched selections are recorded, and
+    /// memo growth triggers a persist of the `.memo` sibling — so a later
+    /// *process* resumes where this one stopped.
+    pub fn compile_graph_incremental(
+        &self,
+        graph: &Graph,
+        targets: &[AccelDesc],
+    ) -> Result<ServiceReply> {
+        self.compile_graph_with(graph, targets, Some(&self.memo))
+    }
+
+    fn compile_graph_with(
+        &self,
+        graph: &Graph,
+        targets: &[AccelDesc],
+        memo: Option<&SessionMemo>,
+    ) -> Result<ServiceReply> {
         ensure!(!targets.is_empty(), "compile request needs at least one target");
         let t0 = Instant::now();
+        let memo_len0 = memo.map(|m| m.len()).unwrap_or(0);
 
         // Per-request compilers over the server's long-lived cache.
         let warmers: Vec<Arc<Compiler>> = targets
@@ -230,14 +300,17 @@ impl CompileServer {
 
         // Shard the schedule searches before the (deterministic, in-order)
         // session runs: afterwards every session lookup is a cache hit.
-        self.prewarm(graph, &warmers)?;
+        self.prewarm(graph, &warmers, memo)?;
 
         // Per-request attribution comes from the request's own compilers
         // (the warmers; plus the MultiCompiler's candidates in the
         // multi-target case) — the shared cache's global counters would
         // pick up concurrent requests' traffic.
         let (artifact, stages, schedule_stats, session) = if targets.len() == 1 {
-            let out = warmers[0].compile_with_report(graph)?;
+            let out = match memo {
+                Some(m) => warmers[0].compile_incremental_with_report(graph, m)?,
+                None => warmers[0].compile_with_report(graph)?,
+            };
             (
                 CompiledArtifact::Single(out.deployment),
                 out.stages,
@@ -251,7 +324,10 @@ impl CompileServer {
                 self.options.clone(),
                 self.cache.clone(),
             )?;
-            let out = mc.compile_with_report(graph)?;
+            let out = match memo {
+                Some(m) => mc.compile_incremental_with_report(graph, m)?,
+                None => mc.compile_with_report(graph)?,
+            };
             (
                 CompiledArtifact::Multi(out.deployment),
                 out.stages,
@@ -275,9 +351,10 @@ impl CompileServer {
         let configs_pruned: u64 =
             warmers.iter().map(|c| c.configs_pruned()).sum::<u64>() + session.4;
 
-        // Write-on-update: only requests that learned something new pay
-        // the (atomic) persist.
-        if sweeps > 0 {
+        // Write-on-update: only requests that learned something new —
+        // fresh sweeps, or fresh memo entries — pay the (atomic) persist.
+        let memo_grew = memo.map(|m| m.len() > memo_len0).unwrap_or(false);
+        if sweeps > 0 || memo_grew {
             self.persist()?;
         }
         self.requests.fetch_add(1, Ordering::Relaxed);
@@ -300,7 +377,12 @@ impl CompileServer {
     /// the frontend-processed graph. Failed probes (shape infeasible on a
     /// candidate) are skipped here — the session reports them with full
     /// per-layer context.
-    fn prewarm(&self, graph: &Graph, warmers: &[Arc<Compiler>]) -> Result<()> {
+    fn prewarm(
+        &self,
+        graph: &Graph,
+        warmers: &[Arc<Compiler>],
+        memo: Option<&SessionMemo>,
+    ) -> Result<()> {
         let accels: Vec<&AccelDesc> = warmers.iter().map(|c| &c.accel).collect();
         let mut fcfg = configure_all(&accels);
         fcfg.fold_constants = self.options.fold_constants;
@@ -311,6 +393,7 @@ impl CompileServer {
         let mut jobs: Vec<(Arc<Compiler>, u64, Gemm)> = Vec::new();
         for c in warmers {
             let fp = accel_fingerprint(&c.accel);
+            let backend = c.backend()?;
             let supported = c.accel.supported_ops();
             for n in &processed.nodes {
                 if !supported.contains(n.op.name()) {
@@ -321,7 +404,7 @@ impl CompileServer {
                     .iter()
                     .map(|&i| processed.node(i).ty.shape.clone())
                     .collect();
-                let Ok(strategy) = generate_strategy_typed(&c.accel, n, &shapes) else {
+                let Ok(strategy) = backend.generate_strategy(&c.accel, n, &shapes) else {
                     continue; // unbindable here; the session will explain
                 };
                 // Counter-neutral peek: already-warm shapes (the steady
@@ -337,6 +420,9 @@ impl CompileServer {
                 if self.cache.contains(&key) {
                     continue;
                 }
+                if memo.is_some_and(|m| m.contains(&key)) {
+                    continue; // the session serves this straight from the memo
+                }
                 if seen.insert((fp, strategy.gemm)) {
                     jobs.push((c.clone(), fp, strategy.gemm));
                 }
@@ -345,7 +431,7 @@ impl CompileServer {
 
         if jobs.len() <= 1 {
             for (c, fp, g) in &jobs {
-                let _ = c.select_schedule(*g, *fp, None);
+                let _ = c.select_schedule(*g, *fp, memo);
             }
             return Ok(());
         }
@@ -361,7 +447,7 @@ impl CompileServer {
                     let (c, fp, g) = &jobs[i];
                     // Single-flight inside: concurrent requests sharing
                     // this key wait here instead of re-searching.
-                    let _ = c.select_schedule(*g, *fp, None);
+                    let _ = c.select_schedule(*g, *fp, memo);
                 });
             }
         });

@@ -15,9 +15,8 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use crate::accel::gemmini::desc_for_arch;
 use crate::accel::AccelDesc;
-use crate::arch::parse::arch_from_file;
+use crate::arch::parse::{arch_from_yaml, backend_from_yaml};
 use crate::relay::import::load_qmodel;
 
 use super::protocol::{parse_message, Message, ObjBuilder};
@@ -195,11 +194,21 @@ fn handle_compile(
         .finish())
 }
 
-/// Load one accelerator description from an architecture YAML.
+/// Load one accelerator description from an accelerator config YAML: the
+/// architectural half plus the `backend:` registry id (default gemmini),
+/// dispatched through the backend registry. An unknown backend id is a
+/// clean configuration error naming the known backends.
 pub fn load_target(path: &Path) -> Result<AccelDesc> {
-    let arch = arch_from_file(path)?;
+    let src = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let arch =
+        arch_from_yaml(&src).with_context(|| format!("parsing {}", path.display()))?;
+    let backend_id = backend_from_yaml(&src)
+        .with_context(|| format!("parsing {}", path.display()))?;
+    let backend = crate::backend::lookup(&backend_id)
+        .with_context(|| format!("resolving backend of {}", path.display()))?;
     let name = arch.name.clone();
-    desc_for_arch(&name, arch)
+    backend.make_desc(&name, arch)
 }
 
 fn ok_reply(server: &CompileServer, cmd: &str) -> ObjBuilder {

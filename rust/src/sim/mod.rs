@@ -60,6 +60,12 @@ struct ExecState {
     dst: Option<LocalAddr>,
     /// Under OS: C-tile column count carried by the PRELOAD.
     os_cols: u16,
+    /// Vector backend: the accumulator register file (one int32 per lane).
+    vacc: Vec<i32>,
+    /// Vector backend: requant scale configured by `VCFG_REQ`.
+    v_scale: f32,
+    /// Vector backend: activation configured by `VCFG_REQ`.
+    v_act: Activation,
 }
 
 impl ExecState {
@@ -89,6 +95,9 @@ impl ExecState {
             b_cols: 0,
             dst: None,
             os_cols: 0,
+            vacc: vec![0; dim],
+            v_scale: 1.0,
+            v_act: Activation::None,
         })
     }
 }
@@ -528,6 +537,66 @@ impl Simulator {
                 st.b_cols = 0;
                 t.step(QueueId::Ex, issue_gap, dim as u64, None, &[]);
             }
+            // Vector-backend family: an in-order scalar/SIMD engine with a
+            // single accumulator register file. Everything runs through the
+            // Ex queue (no decoupled load/store pipelines), and every
+            // latency below depends only on shapes + architecture, never on
+            // data — the timing model itself is owned by the backend
+            // (`backend::vector::timing`).
+            Instr::VcfgReq { scale, act } => {
+                st.v_scale = scale;
+                st.v_act = act;
+                t.step(QueueId::Ex, issue_gap, 1, None, &[]);
+            }
+            Instr::VldBias { dram: base, len } => {
+                ensure!(len > 0, "empty vld_bias");
+                ensure!(len as usize <= dim, "vld_bias len {len} exceeds lane count {dim}");
+                let data = dram.read_i32_slice(base, len as usize)?;
+                st.vacc[..len as usize].copy_from_slice(&data);
+                st.vacc[len as usize..].fill(0);
+                rep.dram_read_bytes += len as u64 * 4;
+                let (lat, occ) = crate::backend::vector::timing::ld_bias(&self.arch, len);
+                rep.dram_transfer_cycles += occ;
+                t.step(QueueId::Ex, issue_gap, lat, Some(occ), &[]);
+            }
+            Instr::VmacStrip { x_dram, w_dram, w_stride, n_out, n_in } => {
+                ensure!(n_out > 0 && n_in > 0, "empty vmac_strip");
+                ensure!(
+                    n_out as usize <= dim,
+                    "vmac_strip n_out {n_out} exceeds lane count {dim}"
+                );
+                ensure!(
+                    w_stride >= n_out as u32,
+                    "vmac_strip stride {w_stride} < n_out {n_out}"
+                );
+                let x = dram.read_i8_slice(x_dram, n_in as usize)?;
+                for c in 0..n_in as usize {
+                    let xv = x[c] as i32;
+                    let w_row =
+                        dram.read_i8_slice(w_dram + c as u64 * w_stride as u64, n_out as usize)?;
+                    for o in 0..n_out as usize {
+                        st.vacc[o] = st.vacc[o].wrapping_add(xv * w_row[o] as i32);
+                    }
+                }
+                rep.macs += n_out as u64 * n_in as u64;
+                rep.dram_read_bytes += n_in as u64 * (1 + n_out as u64);
+                let (lat, occ, stream) =
+                    crate::backend::vector::timing::mac_strip(&self.arch, n_out, n_in);
+                rep.dram_transfer_cycles += stream;
+                t.step(QueueId::Ex, issue_gap, lat, Some(occ), &[]);
+            }
+            Instr::VstOut { dram: base, len } => {
+                ensure!(len > 0, "empty vst_out");
+                ensure!(len as usize <= dim, "vst_out len {len} exceeds lane count {dim}");
+                for j in 0..len as usize {
+                    let q = requantize(st.vacc[j], st.v_scale, st.v_act);
+                    dram.write_i8(base + j as u64, q)?;
+                }
+                rep.dram_write_bytes += len as u64;
+                let (lat, occ) = crate::backend::vector::timing::st_out(&self.arch, len);
+                rep.dram_transfer_cycles += occ;
+                t.step(QueueId::Ex, issue_gap, lat, Some(occ), &[]);
+            }
         }
         Ok(())
     }
@@ -874,6 +943,37 @@ mod tests {
         prog.push(Instr::Mvin { dram: 0, local: LocalAddr::spad(0), rows: 1, cols: 4 });
         let mut dram = Dram::new(64);
         assert!(sim.run(&prog, &mut dram).is_err());
+    }
+
+    /// Hand-written vector-family program: bias load, one MAC strip over a
+    /// `[C=2, K=2]` weight block in the shared transposed layout, requantized
+    /// store — checked element-exactly.
+    #[test]
+    fn vector_family_semantics() {
+        let a = arch();
+        let sim = Simulator::new(&a);
+        let mut prog = Program::new("vec");
+        let rx = prog.layout.alloc("x", 2).unwrap().offset;
+        let rw = prog.layout.alloc("w", 4).unwrap().offset;
+        let rbias = prog.layout.alloc("bias", 8).unwrap().offset;
+        let rout = prog.layout.alloc("out", 2).unwrap().offset;
+        let mut dram = Dram::new(64);
+        dram.write_i8_slice(rx, &[2, 3]).unwrap();
+        // w[c*stride + o] with stride 2: column o=0 is [1,3], o=1 is [2,4].
+        dram.write_i8_slice(rw, &[1, 2, 3, 4]).unwrap();
+        dram.write_i32(rbias, 100).unwrap();
+        dram.write_i32(rbias + 4, -5).unwrap();
+        prog.push(Instr::VcfgReq { scale: 1.0, act: Activation::None });
+        prog.push(Instr::VldBias { dram: rbias, len: 2 });
+        prog.push(Instr::VmacStrip { x_dram: rx, w_dram: rw, w_stride: 2, n_out: 2, n_in: 2 });
+        prog.push(Instr::VstOut { dram: rout, len: 2 });
+        prog.push(Instr::Fence);
+        let rep = sim.run(&prog, &mut dram).unwrap();
+        // out[0] = 100 + 2*1 + 3*3 = 111; out[1] = -5 + 2*2 + 3*4 = 11
+        assert_eq!(dram.read_i8_slice(rout, 2).unwrap(), vec![111, 11]);
+        assert_eq!(rep.macs, 4);
+        assert_eq!(rep.dram_write_bytes, 2);
+        assert!(rep.cycles > 0);
     }
 
     #[test]

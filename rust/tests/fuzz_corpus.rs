@@ -1,16 +1,24 @@
 //! Seed regression corpus: every `.repro` file under `tests/corpus/` is
 //! a past (or representative) fuzz reproducer, replayed here through the
-//! *full* differential oracle on every `cargo test` run — past fuzz
-//! finds stay fixed as permanent tier-1 tests.
+//! *full* differential oracle — which iterates every registered backend
+//! — on every `cargo test` run, so past fuzz finds stay fixed as
+//! permanent tier-1 tests.
 //!
 //! To promote a new finding: copy the minimized reproducer the fuzzer
 //! wrote (`fuzz-reproducers/seed-<hex>.repro` by default) into
 //! `tests/corpus/` and commit it; this test picks it up by glob.
 
+use std::collections::BTreeMap;
 use std::ffi::OsStr;
 use std::path::PathBuf;
 
-use tvm_accel::fuzz::{check_case, load_repro, parse_repro, write_repro};
+use tvm_accel::backend;
+use tvm_accel::fuzz::{check_case, load_repro_tagged, parse_repro_tagged, write_repro_tagged};
+use tvm_accel::pipeline::Compiler;
+use tvm_accel::relay::eval::eval;
+use tvm_accel::relay::import::to_qnn_graph;
+use tvm_accel::relay::{Tensor, TensorData};
+use tvm_accel::sim::Simulator;
 
 fn corpus_entries() -> Vec<PathBuf> {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/corpus");
@@ -28,7 +36,8 @@ fn every_corpus_entry_passes_every_axis() {
     let entries = corpus_entries();
     assert!(!entries.is_empty(), "the committed corpus must not be empty");
     for path in &entries {
-        let case = load_repro(path).unwrap_or_else(|e| panic!("{}: {e:#}", path.display()));
+        let (case, _) =
+            load_repro_tagged(path).unwrap_or_else(|e| panic!("{}: {e:#}", path.display()));
         let verdict = check_case(&case);
         assert!(
             verdict.passed(),
@@ -39,16 +48,60 @@ fn every_corpus_entry_passes_every_axis() {
     }
 }
 
+/// Beyond the oracle's composite verdict: pin the per-backend claim
+/// directly. Every corpus case, compiled single-target on *each*
+/// registered backend's default description, matches the interpreter
+/// element-exactly on every input.
+#[test]
+fn every_corpus_entry_is_exact_on_every_registered_backend() {
+    for path in &corpus_entries() {
+        let (case, _) = load_repro_tagged(path).unwrap();
+        let graph = to_qnn_graph(&case.model).unwrap();
+        for b in backend::backends() {
+            let accel = b.default_desc().unwrap_or_else(|e| {
+                panic!("{}: backend {}: default_desc: {e:#}", path.display(), b.id())
+            });
+            let dep = Compiler::new(accel.clone()).compile(&graph).unwrap_or_else(|e| {
+                panic!("{}: backend {}: compile: {e:#}", path.display(), b.id())
+            });
+            let sim = Simulator::new(&accel.arch);
+            for (i, input) in case.inputs.iter().enumerate() {
+                let mut m = BTreeMap::new();
+                m.insert(
+                    "x".to_string(),
+                    Tensor::new(
+                        vec![case.model.batch, case.model.layers[0].in_dim],
+                        TensorData::I8(input.clone()),
+                    )
+                    .unwrap(),
+                );
+                let want = eval(&graph, &m).unwrap()[0].data.as_i8().unwrap().to_vec();
+                let (got, _) = dep.run(&sim, input).unwrap_or_else(|e| {
+                    panic!("{}: backend {}: run: {e:#}", path.display(), b.id())
+                });
+                assert_eq!(
+                    got,
+                    want,
+                    "{} (seed {:#018x}) input {i} diverges on backend {}",
+                    path.display(),
+                    case.seed,
+                    b.id()
+                );
+            }
+        }
+    }
+}
+
 #[test]
 fn corpus_entries_roundtrip_byte_identically() {
     // A committed reproducer must be in canonical form: re-serializing
-    // the parsed case yields the exact file bytes, so corpus diffs stay
-    // reviewable.
+    // the parsed case (with its recorded backend) yields the exact file
+    // bytes, so corpus diffs stay reviewable.
     for path in &corpus_entries() {
         let bytes = std::fs::read(path).unwrap();
-        let case = parse_repro(&bytes).unwrap();
+        let (case, backend) = parse_repro_tagged(&bytes).unwrap();
         assert_eq!(
-            write_repro(&case),
+            write_repro_tagged(&case, &backend),
             bytes,
             "{} is not in canonical serialized form",
             path.display()

@@ -1,0 +1,136 @@
+//! Golden-hash byte-identity for the Gemmini backend.
+//!
+//! The backend-trait refactor's safety net: compiling the ToyCar stack
+//! and every Table-2 square workload through the (trait-dispatched)
+//! pipeline must emit programs whose disassembly *and* encoded command
+//! words hash exactly to the values recorded in
+//! `tests/golden/gemmini_hashes.json`. Any codegen or encoding drift —
+//! however plausible-looking — fails here first.
+//!
+//! Bootstrap: the committed file starts as `{"bootstrap":"1"}`. In that
+//! state the test *records* the measured hashes into the file (and
+//! passes); CI's golden-hash step commits the recorded file from a green
+//! run, arming the check for every run after. To intentionally accept a
+//! codegen change, reset the file to the bootstrap sentinel and let CI
+//! re-record.
+
+use std::path::PathBuf;
+
+use tvm_accel::accel::AccelDesc;
+use tvm_accel::backend::Backend;
+use tvm_accel::baselines::naive_byoc::import_with_weight_chain;
+use tvm_accel::bench;
+use tvm_accel::isa::program::{Item, Program};
+use tvm_accel::pipeline::Compiler;
+use tvm_accel::scheduler::persist::fnv1a64;
+use tvm_accel::service::protocol::{parse_message, ObjBuilder};
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden/gemmini_hashes.json")
+}
+
+fn gem() -> AccelDesc {
+    tvm_accel::accel::gemmini::gemmini_desc().expect("gemmini desc")
+}
+
+/// `(disassembly fnv, encoded-command-words fnv)` of one program, both
+/// as fixed-width hex. The words hash encodes every accelerator
+/// instruction through the backend codec, so it pins the binary
+/// encoding as well as the instruction stream.
+fn program_hashes(prog: &Program, backend: &dyn Backend) -> (String, String) {
+    let disasm = fnv1a64(prog.disassemble().as_bytes());
+    let mut bytes = Vec::new();
+    for item in &prog.items {
+        if let Item::Accel(i) = item {
+            for w in backend.encode(i) {
+                bytes.push(w.funct);
+                bytes.extend_from_slice(&w.rs1.to_le_bytes());
+                bytes.extend_from_slice(&w.rs2.to_le_bytes());
+            }
+        }
+    }
+    (format!("{disasm:016x}"), format!("{:016x}", fnv1a64(&bytes)))
+}
+
+/// Compile the golden suite (Table-2 squares + ToyCar) and hash every
+/// program. Deterministic: seeded models, deterministic search.
+fn measure() -> Vec<(String, String, String)> {
+    let mut out = Vec::new();
+    for (name, model) in bench::standard_suite().expect("suite builds") {
+        let graph = import_with_weight_chain(&model).expect("import");
+        let compiler = Compiler::new(gem());
+        let backend = compiler.backend().expect("registered backend");
+        let dep = compiler.compile(&graph).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+        let (d, w) = program_hashes(&dep.program, backend);
+        out.push((name, d, w));
+    }
+    out
+}
+
+fn render(measured: &[(String, String, String)]) -> String {
+    let mut b = ObjBuilder::new();
+    for (name, d, w) in measured {
+        b = b.str_field(&format!("{name}.disasm"), d).str_field(&format!("{name}.words"), w);
+    }
+    b.finish() + "\n"
+}
+
+#[test]
+fn gemmini_programs_match_golden_hashes() {
+    let path = golden_path();
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("{}: {e} (commit the bootstrap sentinel)", path.display()));
+    let golden = parse_message(text.trim())
+        .unwrap_or_else(|e| panic!("{}: {e:#}", path.display()));
+
+    let measured = measure();
+    assert!(!measured.is_empty());
+
+    if golden.str_field("bootstrap").is_some() {
+        // Record mode: write the measured hashes where CI's golden-hash
+        // step will commit them from a green run.
+        std::fs::write(&path, render(&measured))
+            .unwrap_or_else(|e| panic!("recording {}: {e}", path.display()));
+        eprintln!(
+            "WARNING: golden hashes were in bootstrap mode — recorded {} entries to {}; \
+             byte-identity is NOT being checked until the recorded file is committed.",
+            2 * measured.len(),
+            path.display()
+        );
+        return;
+    }
+
+    for (name, disasm, words) in &measured {
+        assert_eq!(
+            golden.str_field(&format!("{name}.disasm")),
+            Some(disasm.as_str()),
+            "{name}: disassembly hash drifted (reset {} to {{\"bootstrap\":\"1\"}} only if \
+             the codegen change is intentional)",
+            path.display()
+        );
+        assert_eq!(
+            golden.str_field(&format!("{name}.words")),
+            Some(words.as_str()),
+            "{name}: encoded-command-words hash drifted (binary encoding changed)",
+            path.display()
+        );
+    }
+}
+
+#[test]
+fn golden_hashes_are_stable_across_compiles() {
+    // The hashes themselves must be reproducible within a process, or
+    // the golden file could never be trusted: compile the smallest suite
+    // entry twice and require identical hashes.
+    let model = bench::square_model(64, 500).expect("model");
+    let graph = import_with_weight_chain(&model).expect("import");
+    let hashes: Vec<(String, String)> = (0..2)
+        .map(|_| {
+            let c = Compiler::new(gem());
+            let b = c.backend().expect("backend");
+            let dep = c.compile(&graph).unwrap_or_else(|e| panic!("{e:#}"));
+            program_hashes(&dep.program, b)
+        })
+        .collect();
+    assert_eq!(hashes[0], hashes[1], "golden hashing must be deterministic");
+}

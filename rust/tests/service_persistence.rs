@@ -14,7 +14,7 @@ use tvm_accel::relay::import::{parse_qmodel, synth_qmodel, write_qmodel, QModel}
 use tvm_accel::scheduler::persist;
 use tvm_accel::service::protocol::{parse_message, ObjBuilder};
 use tvm_accel::service::socket::{self, ServeOptions};
-use tvm_accel::service::{CompileServer, CompiledArtifact};
+use tvm_accel::service::{memo_sibling_path, CompileServer, CompiledArtifact};
 
 static DIR_SEQ: AtomicU64 = AtomicU64::new(0);
 
@@ -164,6 +164,60 @@ fn hydrated_compile_is_sweep_free_and_byte_identical() {
         panic!("single-target compile must produce a single deployment")
     };
     assert_eq!(dep.program.items, plain.program.items);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Cross-process incremental compiles: a server's incremental-session
+/// memo persists as the cache artifact's `.memo` sibling, and a *fresh*
+/// server hydrated from that sibling serves every layer straight from
+/// the memo — zero sweeps and byte-identical output even with the
+/// schedule-cache artifact deleted out from under it.
+#[test]
+fn persisted_memo_survives_process_restart() {
+    let dir = scratch_dir("memo");
+    let file = dir.join("schedules.bin");
+    let model = sample_model(78, &[32, 48, 16], 4);
+    let accel = gemmini_desc().unwrap();
+
+    // Process 1: cold incremental compile; persisting writes the memo
+    // sibling alongside the cache artifact.
+    let (cold_server, _) =
+        CompileServer::with_cache_file(CompileOptions::default(), file.clone());
+    let cold =
+        cold_server.compile_model_incremental(&model, std::slice::from_ref(&accel)).unwrap();
+    assert!(cold.sweeps >= 2, "cold incremental compile still sweeps");
+    assert_eq!(cold.schedule_stats.memo_hits, 0);
+    assert!(cold_server.memo().len() >= 2, "every selection is memoized");
+    let memo_file = memo_sibling_path(&file);
+    assert!(memo_file.exists(), "persist must write the .memo sibling");
+
+    // Delete the schedule-cache artifact: what follows can only come from
+    // the memo.
+    std::fs::remove_file(&file).unwrap();
+
+    // Process 2: a fresh server hydrates the memo sibling and serves the
+    // whole model from it.
+    let (warm_server, load) =
+        CompileServer::with_cache_file(CompileOptions::default(), file.clone());
+    assert_eq!(load.loaded, 0, "cache artifact is gone; only the memo remains");
+    assert_eq!(warm_server.memo().len(), cold_server.memo().len());
+    let warm =
+        warm_server.compile_model_incremental(&model, std::slice::from_ref(&accel)).unwrap();
+    assert_eq!(warm.sweeps, 0, "memo-hydrated compile must run zero sweeps");
+    assert_eq!(
+        warm.schedule_stats.memo_hits, warm.schedule_stats.layers,
+        "every layer must be served from the persisted memo"
+    );
+    assert_eq!(
+        warm.artifact.program().items,
+        cold.artifact.program().items,
+        "memo-hydrated compile must emit a byte-identical program"
+    );
+
+    // The plain (non-incremental) path is unaffected by the hydrated memo.
+    let plain = warm_server.compile_model(&model, std::slice::from_ref(&accel)).unwrap();
+    assert_eq!(plain.schedule_stats.memo_hits, 0);
+    assert_eq!(plain.artifact.program().items, cold.artifact.program().items);
     let _ = std::fs::remove_dir_all(&dir);
 }
 
