@@ -12,7 +12,7 @@
 use tvm_accel::accel::gemmini::gemmini_desc;
 use tvm_accel::baselines::c_toolchain::compile_c_toolchain;
 use tvm_accel::baselines::naive_byoc::{compile_naive, import_with_weight_chain};
-use tvm_accel::metrics::{table2, LatencyRow};
+use tvm_accel::obs::{table2, LatencyRow};
 use tvm_accel::pipeline::Compiler;
 use tvm_accel::relay::import::{from_quantized, QModel};
 use tvm_accel::relay::quantize::{quantize_mlp, FloatDense};

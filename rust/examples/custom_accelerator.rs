@@ -13,7 +13,7 @@
 use anyhow::Result;
 use tvm_accel::accel::gemmini::{desc_for_arch, gemmini_desc};
 use tvm_accel::arch::parse::arch_from_file;
-use tvm_accel::metrics::describe;
+use tvm_accel::obs::describe;
 use tvm_accel::pipeline::Compiler;
 use tvm_accel::relay::import::{from_quantized, to_qnn_graph};
 use tvm_accel::relay::quantize::{quantize_mlp, FloatDense};

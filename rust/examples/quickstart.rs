@@ -6,7 +6,7 @@
 
 use anyhow::Result;
 use tvm_accel::accel::gemmini::gemmini_desc;
-use tvm_accel::metrics::describe;
+use tvm_accel::obs::describe;
 use tvm_accel::pipeline::Compiler;
 use tvm_accel::relay::import::{from_quantized, to_qnn_graph};
 use tvm_accel::relay::quantize::{quantize_mlp, FloatDense};

@@ -16,7 +16,7 @@ use anyhow::{ensure, Context, Result};
 use tvm_accel::accel::gemmini::gemmini_desc;
 use tvm_accel::baselines::c_toolchain::compile_c_toolchain;
 use tvm_accel::baselines::naive_byoc::{compile_naive, import_with_weight_chain};
-use tvm_accel::metrics::{describe, table2, LatencyRow};
+use tvm_accel::obs::{describe, table2, LatencyRow};
 use tvm_accel::pipeline::Compiler;
 use tvm_accel::relay::import::load_qmodel;
 use tvm_accel::runtime::{artifacts_dir, golden_inputs, Runtime};

@@ -101,7 +101,7 @@ pub mod bench;
 pub mod frontend;
 pub mod fuzz;
 pub mod isa;
-pub mod metrics;
+pub mod obs;
 pub mod pipeline;
 pub mod relay;
 #[cfg(feature = "xla-runtime")]

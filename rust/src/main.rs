@@ -15,7 +15,15 @@
 //!               served first)
 //!   bench     — cold-compile the Table-2 suite, print compile cost and
 //!               simulated cycles, optionally write BENCH_*.json and gate
-//!               against a committed baseline (the perf trajectory)
+//!               against a committed baseline (the perf trajectory);
+//!               --trace F.json writes the compile spans as a
+//!               Chrome-trace-event (Perfetto-loadable) file
+//!   profile   — compile a .qmodel with tracing on, run one profiled
+//!               inference, and write a Perfetto-compatible execution
+//!               timeline (compile spans + per-target DMA/compute/store/
+//!               host tracks) to --trace
+//!   metrics   — scrape a running serve's Prometheus exposition
+//!               (tvm-accel metrics --socket S)
 //!   gen-model — write a deterministic random .qmodel (for smoke tests)
 //!   fuzz      — differential fuzzing: seeded random graphs through every
 //!               compile-configuration axis, checked element-exactly
@@ -45,9 +53,9 @@ use tvm_accel::baselines::naive_byoc::compile_naive;
 use tvm_accel::bench;
 use tvm_accel::fuzz;
 use tvm_accel::isa::program::Program;
-use tvm_accel::metrics::describe;
-use tvm_accel::pipeline::{CompileOptions, Deployment};
-use tvm_accel::relay::import::{load_qmodel, synth_qmodel, write_qmodel, QModel};
+use tvm_accel::obs::{describe, spans_to_chrome, timeline_to_chrome, ChromeTrace};
+use tvm_accel::pipeline::{CompileOptions, Compiler, Deployment};
+use tvm_accel::relay::import::{load_qmodel, synth_qmodel, to_qnn_graph, write_qmodel, QModel};
 #[cfg(feature = "xla-runtime")]
 use tvm_accel::runtime::{golden_inputs, Runtime};
 use tvm_accel::backend::Backend;
@@ -65,7 +73,7 @@ use tvm_accel::workload::Gemm;
 const VALUE_OPTS: &[&str] = &[
     "n", "c", "k", "model", "backend", "arch", "golden", "inferences", "seed", "socket",
     "cache", "workers", "dims", "batch", "out", "max-entries", "out-dir", "baseline",
-    "max-regress", "cases", "replay",
+    "max-regress", "cases", "replay", "trace",
 ];
 
 /// Single-target variant of [`load_accels`] for subcommands that drive
@@ -478,6 +486,11 @@ fn cmd_bench(args: &Args) -> Result<()> {
             dir.display()
         );
     }
+    if let Some(path) = args.opt("trace") {
+        std::fs::write(path, report.chrome_trace())
+            .with_context(|| format!("writing {path}"))?;
+        println!("wrote compile-span trace to {path} (load in ui.perfetto.dev)");
+    }
     if let Some(base) = args.opt("baseline") {
         let outcome = bench::check_against_baseline(&report, Path::new(base), max_regress);
         print!("{}", outcome.render());
@@ -489,6 +502,75 @@ fn cmd_bench(args: &Args) -> Result<()> {
         }
         println!("cycle gate passed ({max_regress}% regression allowed)");
     }
+    Ok(())
+}
+
+/// Compile with tracing on, run one profiled inference on the simulator,
+/// and write a Chrome-trace-event JSON: the compile pipeline's spans as
+/// process 1, then one process per execution target with a thread per
+/// hardware track (DMA / compute / store / host; 1 simulated cycle =
+/// 1 µs). Load the file in ui.perfetto.dev or chrome://tracing.
+fn cmd_profile(args: &Args) -> Result<()> {
+    let path = args.opt("model").context("--model <file.qmodel> required")?;
+    let out_path = args.opt_or("trace", "trace.json");
+    let model = load_qmodel(Path::new(path))?;
+    let graph = to_qnn_graph(&model)?;
+    let accels = load_accels(args)?;
+    let elems = model.batch * model.layers[0].in_dim;
+    let input = Rng::new(args.opt_usize("seed", 1)? as u64).i8_vec(elems);
+
+    let mut ct = ChromeTrace::new();
+    ct.process_name(1, "compile pipeline");
+    ct.thread_name(1, 1, "stages");
+    let (rep, pe_dim, targets) = if accels.len() == 1 {
+        let accel = accels.into_iter().next().expect("len checked");
+        let pe_dim = accel.arch.pe_dim;
+        let name = accel.name.clone();
+        let sim = Simulator::new(&accel.arch);
+        let out = Compiler::new(accel).compile_traced(&graph)?;
+        spans_to_chrome(&mut ct, 1, 1, &out.trace.spans());
+        let (_, rep, tl) = out.deployment.run_profiled(&sim, &input)?;
+        ct.process_name(2, &name);
+        timeline_to_chrome(&mut ct, 2, &tl);
+        (rep, pe_dim, 1)
+    } else {
+        let pe_dim = accels[0].arch.pe_dim;
+        let out = Compiler::with_targets(&accels)?.compile_traced(&graph)?;
+        spans_to_chrome(&mut ct, 1, 1, &out.trace.spans());
+        let (_, rep, tls) = out.deployment.run_profiled(&input)?;
+        let n = tls.len();
+        for (i, (name, tl)) in tls.iter().enumerate() {
+            let pid = 2 + i as u64;
+            ct.process_name(pid, name);
+            timeline_to_chrome(&mut ct, pid, tl);
+        }
+        (rep, pe_dim, n)
+    };
+    std::fs::write(&out_path, ct.render())
+        .with_context(|| format!("writing {out_path}"))?;
+    println!("{}", describe("profiled inference", &rep, pe_dim));
+    println!(
+        "wrote execution timeline for {} target segment(s) to {} \
+         (load in ui.perfetto.dev)",
+        targets, out_path
+    );
+    Ok(())
+}
+
+/// Scrape a running server's metric registry over the line protocol and
+/// print the Prometheus text exposition.
+fn cmd_metrics(args: &Args) -> Result<()> {
+    let sock = args.opt("socket").context("--socket <path> required")?;
+    let req = ObjBuilder::new().str_field("cmd", "metrics").finish();
+    let resp = socket::request(Path::new(sock), &req)?;
+    let msg = parse_message(&resp).context("parsing server response")?;
+    if msg.bool_field("ok") != Some(true) {
+        bail!("server error: {}", msg.str_field("error").unwrap_or("unknown"));
+    }
+    let text = msg
+        .str_field("exposition")
+        .context("metrics reply lacks an \"exposition\" field")?;
+    print!("{text}");
     Ok(())
 }
 
@@ -559,11 +641,14 @@ fn main() -> Result<()> {
         Some("serve") => cmd_serve(&args),
         Some("cache") => cmd_cache(&args),
         Some("bench") => cmd_bench(&args),
+        Some("profile") => cmd_profile(&args),
+        Some("metrics") => cmd_metrics(&args),
         Some("gen-model") => cmd_gen_model(&args),
         Some("fuzz") => cmd_fuzz(&args),
         _ => {
             eprintln!(
-                "usage: tvm-accel <schedule|compile|run|disasm|serve|cache|bench|gen-model|fuzz>\n\
+                "usage: tvm-accel <schedule|compile|run|disasm|serve|cache|bench|profile|\n\
+                 \x20                metrics|gen-model|fuzz>\n\
                  \x20 compile:     --model F.qmodel [--backend proposed|naive|c-toolchain]\n\
                  \x20              [--arch F.yaml[,G.yaml...]] [--cache F|--no-cache]\n\
                  \x20              [--incremental  (persist the session memo beside the cache)]\n\
@@ -576,6 +661,10 @@ fn main() -> Result<()> {
                  \x20              [--max-entries N  (gc: LRU-trim the artifact)]\n\
                  \x20 bench:       [--out-dir D  (write BENCH_*.json)] [--baseline D]\n\
                  \x20              [--max-regress PCT  (cycle gate, default 10)]\n\
+                 \x20              [--trace F.json  (compile spans, Perfetto-loadable)]\n\
+                 \x20 profile:     --model F.qmodel [--arch F.yaml[,G.yaml...]] [--seed N]\n\
+                 \x20              [--trace F.json  (default trace.json)]\n\
+                 \x20 metrics:     --socket S  (print the server's Prometheus exposition)\n\
                  \x20 gen-model:   --out F.qmodel [--dims 32,48,16] [--batch N] [--seed N]\n\
                  \x20 fuzz:        [--cases N (default 500)] [--seed N]\n\
                  \x20              [--out-dir D  (reproducers, default fuzz-reproducers)]\n\

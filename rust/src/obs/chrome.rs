@@ -1,0 +1,219 @@
+//! Chrome-trace-event JSON writer (Perfetto / `chrome://tracing`
+//! loadable).
+//!
+//! Emits the JSON-object trace format: `{"traceEvents":[...]}` with
+//! `ph:"X"` complete events (microsecond `ts`/`dur`), `ph:"i"` instants,
+//! and `ph:"M"` metadata records naming processes and threads. The
+//! profiler maps compile spans onto one process and each execution
+//! target segment onto its own process with DMA / compute / store / host
+//! threads; simulated cycles are rendered as 1 cycle = 1 µs so the
+//! timeline is legible regardless of clock frequency.
+
+/// One trace event, held structured until [`ChromeTrace::render`] so
+/// tests can assert on the schema without parsing JSON.
+#[derive(Debug, Clone)]
+pub enum Event {
+    /// `ph:"M"` metadata: names a process (`what == "process_name"`) or
+    /// thread (`what == "thread_name"`).
+    Meta {
+        /// Process id.
+        pid: u64,
+        /// Thread id.
+        tid: u64,
+        /// `"process_name"` or `"thread_name"`.
+        what: &'static str,
+        /// The display name.
+        name: String,
+    },
+    /// `ph:"X"` complete event: one slice on a track.
+    Complete {
+        /// Process id (track group).
+        pid: u64,
+        /// Thread id (track).
+        tid: u64,
+        /// Slice name.
+        name: String,
+        /// Start, microseconds.
+        ts_us: f64,
+        /// Duration, microseconds.
+        dur_us: f64,
+        /// Extra `args` key/values.
+        args: Vec<(String, String)>,
+    },
+    /// `ph:"i"` instant event (thread-scoped).
+    Instant {
+        /// Process id.
+        pid: u64,
+        /// Thread id.
+        tid: u64,
+        /// Event name.
+        name: String,
+        /// Timestamp, microseconds.
+        ts_us: f64,
+        /// Extra `args` key/values.
+        args: Vec<(String, String)>,
+    },
+}
+
+/// An in-progress Chrome trace: push events, then [`render`][Self::render]
+/// to JSON.
+#[derive(Debug, Default)]
+pub struct ChromeTrace {
+    /// Events in emission order.
+    pub events: Vec<Event>,
+}
+
+impl ChromeTrace {
+    /// An empty trace.
+    pub fn new() -> ChromeTrace {
+        ChromeTrace::default()
+    }
+
+    /// Name process `pid`.
+    pub fn process_name(&mut self, pid: u64, name: &str) {
+        self.events.push(Event::Meta { pid, tid: 0, what: "process_name", name: name.to_string() });
+    }
+
+    /// Name thread `tid` of process `pid`.
+    pub fn thread_name(&mut self, pid: u64, tid: u64, name: &str) {
+        self.events.push(Event::Meta { pid, tid, what: "thread_name", name: name.to_string() });
+    }
+
+    /// Push a complete (`ph:"X"`) slice.
+    pub fn complete(
+        &mut self,
+        pid: u64,
+        tid: u64,
+        name: &str,
+        ts_us: f64,
+        dur_us: f64,
+        args: Vec<(String, String)>,
+    ) {
+        self.events.push(Event::Complete { pid, tid, name: name.to_string(), ts_us, dur_us, args });
+    }
+
+    /// Push an instant (`ph:"i"`) event.
+    pub fn instant(
+        &mut self,
+        pid: u64,
+        tid: u64,
+        name: &str,
+        ts_us: f64,
+        args: Vec<(String, String)>,
+    ) {
+        self.events.push(Event::Instant { pid, tid, name: name.to_string(), ts_us, args });
+    }
+
+    /// Serialize to Chrome trace JSON (`{"traceEvents":[...]}`).
+    pub fn render(&self) -> String {
+        let mut out = String::from("{\"traceEvents\":[");
+        for (i, ev) in self.events.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            render_event(&mut out, ev);
+        }
+        out.push_str("],\"displayTimeUnit\":\"ms\"}");
+        out
+    }
+}
+
+fn render_event(out: &mut String, ev: &Event) {
+    match ev {
+        Event::Meta { pid, tid, what, name } => {
+            out.push_str(&format!(
+                "{{\"ph\":\"M\",\"pid\":{pid},\"tid\":{tid},\"name\":\"{what}\",\
+                 \"args\":{{\"name\":\"{}\"}}}}",
+                json_escape(name)
+            ));
+        }
+        Event::Complete { pid, tid, name, ts_us, dur_us, args } => {
+            out.push_str(&format!(
+                "{{\"ph\":\"X\",\"pid\":{pid},\"tid\":{tid},\"name\":\"{}\",\
+                 \"ts\":{},\"dur\":{}",
+                json_escape(name),
+                json_number(*ts_us),
+                json_number(*dur_us)
+            ));
+            render_args(out, args);
+            out.push('}');
+        }
+        Event::Instant { pid, tid, name, ts_us, args } => {
+            out.push_str(&format!(
+                "{{\"ph\":\"i\",\"s\":\"t\",\"pid\":{pid},\"tid\":{tid},\"name\":\"{}\",\"ts\":{}",
+                json_escape(name),
+                json_number(*ts_us)
+            ));
+            render_args(out, args);
+            out.push('}');
+        }
+    }
+}
+
+fn render_args(out: &mut String, args: &[(String, String)]) {
+    if args.is_empty() {
+        return;
+    }
+    out.push_str(",\"args\":{");
+    for (i, (k, v)) in args.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!("\"{}\":\"{}\"", json_escape(k), json_escape(v)));
+    }
+    out.push('}');
+}
+
+/// Render an f64 as a JSON number (no NaN/Inf — clamp to 0).
+fn json_number(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "0".to_string()
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_valid_trace_events() {
+        let mut t = ChromeTrace::new();
+        t.process_name(1, "compile");
+        t.thread_name(1, 1, "pipeline");
+        t.complete(1, 1, "frontend", 0.0, 12.5, vec![("layers".into(), "4".into())]);
+        t.instant(1, 1, "cache_hit", 5.0, vec![]);
+        let json = t.render();
+        assert!(json.starts_with("{\"traceEvents\":["));
+        assert!(json.contains("\"ph\":\"M\""));
+        let slice = "\"ph\":\"X\",\"pid\":1,\"tid\":1,\"name\":\"frontend\",\"ts\":0,\"dur\":12.5";
+        assert!(json.contains(slice));
+        assert!(json.contains("\"args\":{\"layers\":\"4\"}"));
+        assert!(json.contains("\"ph\":\"i\",\"s\":\"t\""));
+    }
+
+    #[test]
+    fn escapes_names() {
+        let mut t = ChromeTrace::new();
+        t.complete(1, 1, "a\"b\\c\nd", 1.0, 2.0, vec![]);
+        let json = t.render();
+        assert!(json.contains("a\\\"b\\\\c\\nd"));
+    }
+}

@@ -1,0 +1,184 @@
+//! Unified observability: trace spans, Prometheus metrics, and
+//! execution-timeline profiling over one instrumentation core.
+//!
+//! Three surfaces share the same recorded facts:
+//!
+//! * [`span`] — a lightweight span recorder ([`Trace`]) every
+//!   [`crate::pipeline::CompilerSession`] threads through its seven
+//!   stages; `StageReport`s are a view over these spans, and schedule
+//!   events (cache hits/misses, memo consults, single-flight elections,
+//!   solver sweeps) nest inside the `schedule` stage span.
+//! * [`prom`] — a hand-rolled metric [`Registry`] rendered in Prometheus
+//!   text exposition format; [`crate::service::CompileServer`] keeps one
+//!   and serves it through the line protocol's `metrics` verb
+//!   (`tvm-accel metrics --socket …`).
+//! * [`chrome`] + [`timeline`] — a Chrome-trace-event/Perfetto JSON
+//!   exporter fed by both the compile spans and the simulator's
+//!   per-track execution [`Timeline`] (DMA / compute / store / host
+//!   occupancy per target segment), behind `tvm-accel profile`.
+//!
+//! The hard invariant: everything here is *passive*. Nothing in this
+//! module feeds back into cache keys, schedule selection, or codegen —
+//! a traced compile is byte-identical to an untraced one
+//! (`tests/obs_passive.rs`), and golden program hashes do not move when
+//! tracing is enabled.
+//!
+//! This module also carries the human-readable reporting helpers that
+//! previously lived in `metrics/` (Table-2 rendering, one-line run
+//! summaries).
+
+pub mod chrome;
+pub mod prom;
+pub mod span;
+pub mod timeline;
+
+pub use chrome::{ChromeTrace, Event};
+pub use prom::{Counter, Gauge, Histogram, Registry, LATENCY_BUCKETS};
+pub use span::{Span, SpanId, Trace};
+pub use timeline::{Slice, Timeline, Track};
+
+use crate::sim::report::RunReport;
+use crate::util::table::{commafy, Table};
+
+/// Append one trace's spans to `ct` on `(pid, tid)`: spans with real
+/// duration become `ph:"X"` complete slices (properly nested, since the
+/// recorder closes children before parents), zero-width spans become
+/// `ph:"i"` instants. Span attributes travel as slice `args`.
+/// Nanosecond timestamps map to Chrome's microsecond `ts`.
+pub fn spans_to_chrome(ct: &mut ChromeTrace, pid: u64, tid: u64, spans: &[Span]) {
+    for s in spans {
+        let ts = s.start_ns as f64 / 1000.0;
+        let args: Vec<(String, String)> =
+            s.attrs.iter().map(|(k, v)| (k.to_string(), v.clone())).collect();
+        if s.end_ns > s.start_ns {
+            ct.complete(pid, tid, s.name, ts, (s.end_ns - s.start_ns) as f64 / 1000.0, args);
+        } else {
+            ct.instant(pid, tid, s.name, ts, args);
+        }
+    }
+}
+
+/// Thread ids `timeline_to_chrome` assigns to the hardware tracks.
+pub const TRACK_TIDS: [(Track, u64); 4] =
+    [(Track::Dma, 1), (Track::Compute, 2), (Track::Store, 3), (Track::Host, 4)];
+
+/// Append one execution timeline to `ct` as process `pid`, one named
+/// thread per hardware track (1 simulated cycle = 1 µs, so the timeline
+/// is legible regardless of clock frequency).
+pub fn timeline_to_chrome(ct: &mut ChromeTrace, pid: u64, tl: &Timeline) {
+    for (track, tid) in TRACK_TIDS {
+        ct.thread_name(pid, tid, track.name());
+    }
+    for s in &tl.slices {
+        let tid = TRACK_TIDS
+            .iter()
+            .find(|(t, _)| *t == s.track)
+            .map(|(_, tid)| *tid)
+            .unwrap_or(1);
+        ct.complete(pid, tid, s.name, s.start as f64, (s.end - s.start) as f64, Vec::new());
+    }
+}
+
+/// One Table-2-style row: a workload and its latency under each backend.
+#[derive(Debug, Clone)]
+pub struct LatencyRow {
+    /// Workload label, e.g. `(64, 64, 64)`.
+    pub workload: String,
+    /// Cycles under the vendor C toolchain baseline.
+    pub c_toolchain: u64,
+    /// Cycles under the naive BYOC/UMA-style baseline.
+    pub byoc_uma: u64,
+    /// Cycles under the proposed integration flow.
+    pub proposed: u64,
+}
+
+/// Render rows in the layout of the paper's Table 2.
+pub fn table2(rows: &[LatencyRow]) -> Table {
+    let mut t = Table::new("Table 2: Deployment results — Latency (Cycles)").header(&[
+        "Workload",
+        "C-based Toolchain",
+        "Proposed",
+        "BYOC/UMA Backend",
+        "BYOC/Proposed",
+    ]);
+    for r in rows {
+        t.row(vec![
+            r.workload.clone(),
+            commafy(r.c_toolchain),
+            commafy(r.proposed),
+            commafy(r.byoc_uma),
+            format!("{:.2}x", r.byoc_uma as f64 / r.proposed as f64),
+        ]);
+    }
+    t
+}
+
+/// One-line textual summary of a run report, including the
+/// data-movement counters (`dram_transfer_cycles`, `input_stage_cycles`)
+/// the cross-layer and double-buffering optimizations act on.
+pub fn describe(name: &str, rep: &RunReport, pe_dim: usize) -> String {
+    format!(
+        "{name}: {} cycles (host {}), util {:.1}%, dram {}/{} B ({} xfer cyc), \
+         staged-in {} cyc, {} cmds",
+        commafy(rep.cycles),
+        commafy(rep.host_cycles),
+        rep.utilization(pe_dim) * 100.0,
+        commafy(rep.dram_read_bytes),
+        commafy(rep.dram_write_bytes),
+        commafy(rep.dram_transfer_cycles),
+        commafy(rep.input_stage_cycles),
+        commafy(rep.issued_commands),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_formats_ratio() {
+        let rows = vec![LatencyRow {
+            workload: "(64, 64, 64)".into(),
+            c_toolchain: 69_994,
+            byoc_uma: 160_163,
+            proposed: 69_995,
+        }];
+        let t = table2(&rows);
+        let s = t.render();
+        assert!(s.contains("2.29x"));
+        assert!(s.contains("160,163"));
+    }
+
+    #[test]
+    fn spans_and_timelines_export_to_chrome_events() {
+        let tr = Trace::new();
+        let root = tr.begin("compile");
+        tr.instant("cache_hit", vec![("shape", "8x8x8".into())]);
+        tr.end(root, vec![]);
+        let mut ct = ChromeTrace::new();
+        spans_to_chrome(&mut ct, 1, 1, &tr.spans());
+        let mut tl = Timeline::new();
+        tl.push(Track::Dma, "mvin", 0, 10);
+        tl.push(Track::Host, "host.memcpy", 12, 20);
+        timeline_to_chrome(&mut ct, 2, &tl);
+        let json = ct.render();
+        assert!(json.contains("\"name\":\"compile\""));
+        assert!(json.contains("\"ph\":\"i\""), "cache_hit renders as an instant");
+        assert!(json.contains("\"name\":\"mvin\""));
+        assert!(json.contains("\"tid\":4"), "host track gets its own thread");
+        assert!(json.contains("\"name\":\"thread_name\""));
+    }
+
+    #[test]
+    fn describe_surfaces_data_movement_counters() {
+        let rep = RunReport {
+            cycles: 1000,
+            dram_transfer_cycles: 321,
+            input_stage_cycles: 45,
+            ..RunReport::default()
+        };
+        let s = describe("w", &rep, 16);
+        assert!(s.contains("321 xfer cyc"), "missing dram_transfer_cycles: {s}");
+        assert!(s.contains("staged-in 45 cyc"), "missing input_stage_cycles: {s}");
+    }
+}

@@ -1,0 +1,370 @@
+//! Hand-rolled Prometheus metrics: counters, gauges, and histograms
+//! rendered in the text exposition format.
+//!
+//! No client library — the whole registry is a `Mutex<Vec<Family>>` of
+//! atomics, which is all a single-process compile server needs. The
+//! rendered output follows the exposition format rules the conformance
+//! test (`tests/obs_format.rs`) checks: one `# HELP` / `# TYPE` pair per
+//! family, histogram `_bucket` series with cumulative counts ending in
+//! `le="+Inf"`, and `_sum` / `_count` lines agreeing with the buckets.
+//!
+//! Handles ([`Counter`], [`Gauge`], [`Histogram`]) are `Arc`s shared
+//! between the registry (which renders them) and the instrumented code
+//! (which bumps them), so recording a sample is a single atomic op.
+
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Monotonically increasing counter.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    /// Add one.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Add `n`.
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Gauge: a value that can go up and down (queue depths, in-flight
+/// requests, cache entry counts).
+#[derive(Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    /// Set to an absolute value.
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    /// Add `n` (may be negative).
+    pub fn add(&self, n: i64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Cumulative histogram over fixed bucket bounds.
+///
+/// The sum is accumulated in integer microseconds so observation stays
+/// a pair of atomic adds; `render` divides back to seconds.
+pub struct Histogram {
+    bounds: Vec<f64>,
+    /// One counter per bound plus the `+Inf` bucket.
+    buckets: Vec<AtomicU64>,
+    sum_micros: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Histogram {
+    fn new(bounds: &[f64]) -> Histogram {
+        Histogram {
+            bounds: bounds.to_vec(),
+            buckets: (0..=bounds.len()).map(|_| AtomicU64::new(0)).collect(),
+            sum_micros: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one observation, in seconds.
+    pub fn observe(&self, seconds: f64) {
+        let idx = self.bounds.iter().position(|&b| seconds <= b).unwrap_or(self.bounds.len());
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        let micros = (seconds * 1e6).max(0.0).round() as u64;
+        self.sum_micros.fetch_add(micros, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Number of observations so far.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+}
+
+/// Latency bucket bounds suited to compile-path timings: 100µs to 10s.
+pub const LATENCY_BUCKETS: &[f64] = &[
+    0.0001, 0.00025, 0.0005, 0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5,
+    5.0, 10.0,
+];
+
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+impl Metric {
+    fn kind(&self) -> &'static str {
+        match self {
+            Metric::Counter(_) => "counter",
+            Metric::Gauge(_) => "gauge",
+            Metric::Histogram(_) => "histogram",
+        }
+    }
+}
+
+struct Series {
+    labels: Vec<(String, String)>,
+    metric: Metric,
+}
+
+struct Family {
+    name: String,
+    help: String,
+    series: Vec<Series>,
+}
+
+/// A metric registry: families in registration order, rendered as
+/// Prometheus text exposition.
+#[derive(Default)]
+pub struct Registry {
+    families: Mutex<Vec<Family>>,
+}
+
+impl Registry {
+    /// An empty registry.
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Vec<Family>> {
+        self.families.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn register(
+        &self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+        make: impl FnOnce() -> Metric,
+    ) -> Metric {
+        let mut families = self.lock();
+        let fam = match families.iter_mut().find(|f| f.name == name) {
+            Some(f) => f,
+            None => {
+                families.push(Family {
+                    name: name.to_string(),
+                    help: help.to_string(),
+                    series: Vec::new(),
+                });
+                families.last_mut().expect("just pushed")
+            }
+        };
+        if let Some(existing) = fam
+            .series
+            .iter()
+            .find(|s| s.labels.len() == labels.len() && labels_eq(&s.labels, labels))
+        {
+            return clone_metric(&existing.metric);
+        }
+        let metric = make();
+        fam.series.push(Series {
+            labels: labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect(),
+            metric: clone_metric(&metric),
+        });
+        metric
+    }
+
+    /// Register (or fetch) an unlabeled counter.
+    pub fn counter(&self, name: &str, help: &str) -> Arc<Counter> {
+        self.counter_with(name, help, &[])
+    }
+
+    /// Register (or fetch) a labeled counter series.
+    pub fn counter_with(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Arc<Counter> {
+        match self.register(name, help, labels, || Metric::Counter(Arc::new(Counter::default()))) {
+            Metric::Counter(c) => c,
+            _ => panic!("metric {name} already registered with a different type"),
+        }
+    }
+
+    /// Register (or fetch) an unlabeled gauge.
+    pub fn gauge(&self, name: &str, help: &str) -> Arc<Gauge> {
+        match self.register(name, help, &[], || Metric::Gauge(Arc::new(Gauge::default()))) {
+            Metric::Gauge(g) => g,
+            _ => panic!("metric {name} already registered with a different type"),
+        }
+    }
+
+    /// Register (or fetch) an unlabeled histogram with the given bucket
+    /// bounds.
+    pub fn histogram(&self, name: &str, help: &str, bounds: &[f64]) -> Arc<Histogram> {
+        self.histogram_with(name, help, bounds, &[])
+    }
+
+    /// Register (or fetch) a labeled histogram series.
+    pub fn histogram_with(
+        &self,
+        name: &str,
+        help: &str,
+        bounds: &[f64],
+        labels: &[(&str, &str)],
+    ) -> Arc<Histogram> {
+        let make = || Metric::Histogram(Arc::new(Histogram::new(bounds)));
+        match self.register(name, help, labels, make) {
+            Metric::Histogram(h) => h,
+            _ => panic!("metric {name} already registered with a different type"),
+        }
+    }
+
+    /// Render the whole registry as Prometheus text exposition.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for fam in self.lock().iter() {
+            let kind = fam.series.first().map(|s| s.metric.kind()).unwrap_or("counter");
+            out.push_str(&format!("# HELP {} {}\n", fam.name, escape_help(&fam.help)));
+            out.push_str(&format!("# TYPE {} {}\n", fam.name, kind));
+            for series in &fam.series {
+                render_series(&mut out, &fam.name, series);
+            }
+        }
+        out
+    }
+}
+
+fn labels_eq(a: &[(String, String)], b: &[(&str, &str)]) -> bool {
+    a.iter().zip(b.iter()).all(|((ak, av), (bk, bv))| ak == bk && av == bv)
+}
+
+fn clone_metric(m: &Metric) -> Metric {
+    match m {
+        Metric::Counter(c) => Metric::Counter(Arc::clone(c)),
+        Metric::Gauge(g) => Metric::Gauge(Arc::clone(g)),
+        Metric::Histogram(h) => Metric::Histogram(Arc::clone(h)),
+    }
+}
+
+fn render_series(out: &mut String, name: &str, series: &Series) {
+    let base_labels = render_labels(&series.labels, None);
+    match &series.metric {
+        Metric::Counter(c) => out.push_str(&format!("{name}{base_labels} {}\n", c.get())),
+        Metric::Gauge(g) => out.push_str(&format!("{name}{base_labels} {}\n", g.get())),
+        Metric::Histogram(h) => {
+            let mut cumulative = 0u64;
+            for (i, bound) in h.bounds.iter().enumerate() {
+                cumulative += h.buckets[i].load(Ordering::Relaxed);
+                let le = format_bound(*bound);
+                let labels = render_labels(&series.labels, Some(&le));
+                out.push_str(&format!("{name}_bucket{labels} {cumulative}\n"));
+            }
+            cumulative += h.buckets[h.bounds.len()].load(Ordering::Relaxed);
+            let labels = render_labels(&series.labels, Some("+Inf"));
+            out.push_str(&format!("{name}_bucket{labels} {cumulative}\n"));
+            let sum = h.sum_micros.load(Ordering::Relaxed) as f64 / 1e6;
+            out.push_str(&format!("{name}_sum{base_labels} {sum}\n"));
+            out.push_str(&format!("{name}_count{base_labels} {}\n", h.count()));
+        }
+    }
+}
+
+fn render_labels(labels: &[(String, String)], le: Option<&str>) -> String {
+    if labels.is_empty() && le.is_none() {
+        return String::new();
+    }
+    let mut parts: Vec<String> =
+        labels.iter().map(|(k, v)| format!("{k}=\"{}\"", escape_label(v))).collect();
+    if let Some(le) = le {
+        parts.push(format!("le=\"{le}\""));
+    }
+    format!("{{{}}}", parts.join(","))
+}
+
+/// Render a bucket bound without trailing-zero noise (`0.001`, not
+/// `0.001000`), matching how Prometheus clients print `le` values.
+fn format_bound(b: f64) -> String {
+    let s = format!("{b}");
+    if s.contains('.') || s.contains('e') {
+        s
+    } else {
+        format!("{s}.0")
+    }
+}
+
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+fn escape_help(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('\n', "\\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_render_registration_order() {
+        let r = Registry::new();
+        let c = r.counter("tvmaccel_requests_total", "Total compile requests.");
+        let g = r.gauge("tvmaccel_requests_in_flight", "Requests currently compiling.");
+        c.add(3);
+        g.set(2);
+        g.add(-1);
+        let text = r.render();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], "# HELP tvmaccel_requests_total Total compile requests.");
+        assert_eq!(lines[1], "# TYPE tvmaccel_requests_total counter");
+        assert_eq!(lines[2], "tvmaccel_requests_total 3");
+        assert_eq!(lines[3], "# HELP tvmaccel_requests_in_flight Requests currently compiling.");
+        assert_eq!(lines[4], "# TYPE tvmaccel_requests_in_flight gauge");
+        assert_eq!(lines[5], "tvmaccel_requests_in_flight 1");
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_and_end_at_inf() {
+        let r = Registry::new();
+        let h = r.histogram(
+            "tvmaccel_compile_duration_seconds",
+            "Compile latency.",
+            &[0.001, 0.01, 0.1],
+        );
+        h.observe(0.0005);
+        h.observe(0.005);
+        h.observe(5.0);
+        let text = r.render();
+        assert!(text.contains("tvmaccel_compile_duration_seconds_bucket{le=\"0.001\"} 1"));
+        assert!(text.contains("tvmaccel_compile_duration_seconds_bucket{le=\"0.01\"} 2"));
+        assert!(text.contains("tvmaccel_compile_duration_seconds_bucket{le=\"0.1\"} 2"));
+        assert!(text.contains("tvmaccel_compile_duration_seconds_bucket{le=\"+Inf\"} 3"));
+        assert!(text.contains("tvmaccel_compile_duration_seconds_count 3"));
+        let sum_line = text
+            .lines()
+            .find(|l| l.starts_with("tvmaccel_compile_duration_seconds_sum"))
+            .expect("sum line");
+        let sum: f64 = sum_line.split_whitespace().nth(1).unwrap().parse().unwrap();
+        assert!((sum - 5.0055).abs() < 1e-6, "sum was {sum}");
+    }
+
+    #[test]
+    fn labeled_series_share_one_family_header() {
+        let r = Registry::new();
+        let name = "tvmaccel_stage_duration_seconds";
+        let a = r.histogram_with(name, "Stage latency.", &[0.01], &[("stage", "frontend")]);
+        let b = r.histogram_with(name, "Stage latency.", &[0.01], &[("stage", "codegen")]);
+        a.observe(0.001);
+        b.observe(1.0);
+        let text = r.render();
+        assert_eq!(text.matches("# TYPE tvmaccel_stage_duration_seconds histogram").count(), 1);
+        assert!(text
+            .contains("tvmaccel_stage_duration_seconds_bucket{stage=\"frontend\",le=\"0.01\"} 1"));
+        assert!(text
+            .contains("tvmaccel_stage_duration_seconds_bucket{stage=\"codegen\",le=\"+Inf\"} 1"));
+        // Re-registering the same series returns the same handle.
+        let a2 = r.histogram_with(name, "Stage latency.", &[0.01], &[("stage", "frontend")]);
+        assert_eq!(a2.count(), 1);
+    }
+}

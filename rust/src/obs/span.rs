@@ -1,0 +1,232 @@
+//! The trace-span recorder: one monotonic clock, explicit parent/child
+//! nesting, zero dependencies.
+//!
+//! A [`Trace`] is the instrumentation core every observability surface
+//! shares: the session's stage reports are a *view* over its spans
+//! ([`crate::pipeline::StageReport`] carries the span-derived duration),
+//! `tvm-accel bench` derives compile cost from the same spans, and the
+//! Chrome-trace exporter ([`super::chrome`]) serializes them for
+//! Perfetto. Recording is strictly passive: spans never feed back into
+//! cache keys, schedule selection, or codegen — a traced compile is
+//! byte-identical to an untraced one (property-tested in
+//! `tests/obs_passive.rs`).
+//!
+//! Timestamps are nanoseconds since the trace's construction (`Instant`
+//! epoch, monotonic). Parent/child nesting is explicit: [`Trace::begin`]
+//! opens a span under the innermost open span, [`Trace::end`] closes it;
+//! [`Trace::record`] and [`Trace::instant`] attach completed spans /
+//! point events under the currently open span (this is how the schedule
+//! stage's cache-hit / sweep events land inside the `schedule` stage
+//! span).
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// One recorded span: a named interval with attributes and an optional
+/// parent (index into the trace's span list).
+#[derive(Debug, Clone)]
+pub struct Span {
+    /// Span name (stage names, `"sweep"`, `"cache_hit"`, …).
+    pub name: &'static str,
+    /// Start, in nanoseconds since the trace epoch.
+    pub start_ns: u64,
+    /// End, in nanoseconds since the trace epoch (== `start_ns` for
+    /// instant events, and until the span is closed).
+    pub end_ns: u64,
+    /// Index of the enclosing span, if any.
+    pub parent: Option<usize>,
+    /// Key/value attributes (layer names, hit counters, sweep effort).
+    pub attrs: Vec<(&'static str, String)>,
+}
+
+impl Span {
+    /// The span's duration.
+    pub fn elapsed(&self) -> Duration {
+        Duration::from_nanos(self.end_ns.saturating_sub(self.start_ns))
+    }
+}
+
+/// Handle to an open span (returned by [`Trace::begin`], consumed by
+/// [`Trace::end`]).
+#[derive(Debug, Clone, Copy)]
+pub struct SpanId(pub(crate) usize);
+
+#[derive(Default)]
+struct TraceInner {
+    spans: Vec<Span>,
+    /// Indices of currently open spans, outermost first.
+    open: Vec<usize>,
+}
+
+/// A lightweight span recorder. Cheap to create (one `Instant`), safe to
+/// share across threads (`Mutex` inside), and purely observational.
+pub struct Trace {
+    epoch: Instant,
+    inner: Mutex<TraceInner>,
+}
+
+impl Default for Trace {
+    fn default() -> Trace {
+        Trace::new()
+    }
+}
+
+impl Trace {
+    /// A fresh trace whose epoch is "now".
+    pub fn new() -> Trace {
+        Trace { epoch: Instant::now(), inner: Mutex::new(TraceInner::default()) }
+    }
+
+    fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, TraceInner> {
+        // Span data is plain values; a panic mid-record leaves nothing
+        // half-updated worth poisoning over.
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Open a span under the innermost open span.
+    pub fn begin(&self, name: &'static str) -> SpanId {
+        let now = self.now_ns();
+        let mut inner = self.lock();
+        let parent = inner.open.last().copied();
+        let id = inner.spans.len();
+        inner.spans.push(Span { name, start_ns: now, end_ns: now, parent, attrs: Vec::new() });
+        inner.open.push(id);
+        SpanId(id)
+    }
+
+    /// Close an open span, attaching `attrs`.
+    pub fn end(&self, id: SpanId, attrs: Vec<(&'static str, String)>) {
+        let now = self.now_ns();
+        let mut inner = self.lock();
+        inner.open.retain(|&i| i != id.0);
+        if let Some(s) = inner.spans.get_mut(id.0) {
+            s.end_ns = now;
+            s.attrs.extend(attrs);
+        }
+    }
+
+    /// Record a completed span that started at `started` and ends now,
+    /// nested under the innermost open span (e.g. a schedule sweep inside
+    /// the `schedule` stage).
+    pub fn record(&self, name: &'static str, started: Instant, attrs: Vec<(&'static str, String)>) {
+        let end_ns = self.now_ns();
+        let start_ns = started.saturating_duration_since(self.epoch).as_nanos() as u64;
+        let mut inner = self.lock();
+        let parent = inner.open.last().copied();
+        inner.spans.push(Span {
+            name,
+            start_ns: start_ns.min(end_ns),
+            end_ns,
+            parent,
+            attrs,
+        });
+    }
+
+    /// Record a zero-duration point event under the innermost open span
+    /// (cache hits/misses, memo consults, single-flight elections).
+    pub fn instant(&self, name: &'static str, attrs: Vec<(&'static str, String)>) {
+        let now = self.now_ns();
+        let mut inner = self.lock();
+        let parent = inner.open.last().copied();
+        inner.spans.push(Span { name, start_ns: now, end_ns: now, parent, attrs });
+    }
+
+    /// The duration of span `id` as recorded so far.
+    pub fn elapsed_of(&self, id: SpanId) -> Duration {
+        self.lock().spans.get(id.0).map(|s| s.elapsed()).unwrap_or_default()
+    }
+
+    /// Name and duration of span `id` (the stage-report view over a
+    /// span).
+    pub fn info_of(&self, id: SpanId) -> Option<(&'static str, Duration)> {
+        self.lock().spans.get(id.0).map(|s| (s.name, s.elapsed()))
+    }
+
+    /// Snapshot every recorded span, in recording order (parents precede
+    /// their children).
+    pub fn spans(&self) -> Vec<Span> {
+        self.lock().spans.clone()
+    }
+
+    /// Total nanoseconds covered by top-level (parentless) spans.
+    pub fn root_ns(&self) -> u64 {
+        self.lock()
+            .spans
+            .iter()
+            .filter(|s| s.parent.is_none())
+            .map(|s| s.end_ns.saturating_sub(s.start_ns))
+            .sum()
+    }
+
+    /// Spans named `name`, cloned (for tests and report derivation).
+    pub fn spans_named(&self, name: &str) -> Vec<Span> {
+        self.lock().spans.iter().filter(|s| s.name == name).cloned().collect()
+    }
+}
+
+impl std::fmt::Debug for Trace {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let inner = self.lock();
+        f.debug_struct("Trace")
+            .field("spans", &inner.spans.len())
+            .field("open", &inner.open.len())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_nest_under_open_parent() {
+        let t = Trace::new();
+        let outer = t.begin("outer");
+        let inner = t.begin("inner");
+        t.instant("tick", vec![("n", "1".into())]);
+        t.end(inner, vec![]);
+        t.end(outer, vec![("layers", "2".into())]);
+
+        let spans = t.spans();
+        assert_eq!(spans.len(), 3);
+        assert_eq!(spans[0].name, "outer");
+        assert_eq!(spans[0].parent, None);
+        assert_eq!(spans[1].parent, Some(0), "inner nests under outer");
+        assert_eq!(spans[2].parent, Some(1), "instant nests under inner");
+        assert!(spans[0].end_ns >= spans[1].end_ns);
+        assert_eq!(spans[0].attrs, vec![("layers", "2".to_string())]);
+    }
+
+    #[test]
+    fn record_backfills_a_completed_interval() {
+        let t = Trace::new();
+        let stage = t.begin("schedule");
+        let started = Instant::now();
+        std::thread::sleep(Duration::from_millis(1));
+        t.record("sweep", started, vec![("leaves", "42".into())]);
+        t.end(stage, vec![]);
+        let sweeps = t.spans_named("sweep");
+        assert_eq!(sweeps.len(), 1);
+        assert_eq!(sweeps[0].parent, Some(0));
+        assert!(sweeps[0].end_ns > sweeps[0].start_ns, "sweep has real duration");
+        assert!(t.elapsed_of(stage) >= sweeps[0].elapsed());
+    }
+
+    #[test]
+    fn timestamps_are_monotone_in_recording_order() {
+        let t = Trace::new();
+        for _ in 0..5 {
+            let s = t.begin("step");
+            t.end(s, vec![]);
+        }
+        let spans = t.spans();
+        for w in spans.windows(2) {
+            assert!(w[1].start_ns >= w[0].start_ns);
+        }
+        assert!(t.root_ns() <= t.now_ns());
+    }
+}

@@ -1,0 +1,111 @@
+//! The simulated execution timeline: per-track occupancy slices
+//! reconstructed from the cycle-accurate simulator.
+//!
+//! While the simulator walks a program it can record, for every
+//! instruction it prices, *which* hardware resource was busy and for
+//! which cycle interval: the shared DMA engine streaming DRAM↔SRAM, the
+//! execute queue doing preloads/computes, the store queue draining
+//! scratchpad, and the host core running fallback ops. The timing model
+//! already guarantees each of these serializes internally (the DMA
+//! cursor `dma_busy`, per-queue in-order issue, host ops running after
+//! `drained()`), so each track's slices never overlap — which is exactly
+//! the shape a Perfetto track wants, and what the schema test asserts.
+//!
+//! Timestamps are simulated cycles. Recording is optional (the hot
+//! simulation paths pass `None`) and purely additive: a profiled run
+//! returns the same outputs and `RunReport` as an unprofiled one.
+
+/// Which hardware resource a slice occupies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Track {
+    /// The shared DMA engine (DRAM↔local streams, vector strip streams).
+    Dma,
+    /// The execute queue (preload / compute / flush / vector MAC).
+    Compute,
+    /// The store queue (scratchpad-to-scratchpad `mvout_spad` drains).
+    Store,
+    /// Host-core fallback ops.
+    Host,
+}
+
+impl Track {
+    /// Display name for timeline exports.
+    pub fn name(self) -> &'static str {
+        match self {
+            Track::Dma => "dma",
+            Track::Compute => "compute",
+            Track::Store => "store",
+            Track::Host => "host",
+        }
+    }
+}
+
+/// One occupancy interval on a track, in simulated cycles.
+#[derive(Debug, Clone)]
+pub struct Slice {
+    /// Resource the slice occupies.
+    pub track: Track,
+    /// Instruction mnemonic (or host-op name).
+    pub name: &'static str,
+    /// First busy cycle.
+    pub start: u64,
+    /// One past the last busy cycle.
+    pub end: u64,
+}
+
+/// The recorded timeline of one simulated program slice.
+#[derive(Debug, Clone, Default)]
+pub struct Timeline {
+    /// Slices in issue order (per track this is also start order, since
+    /// every track serializes).
+    pub slices: Vec<Slice>,
+}
+
+impl Timeline {
+    /// An empty timeline.
+    pub fn new() -> Timeline {
+        Timeline::default()
+    }
+
+    /// Record a slice; zero-length intervals are dropped.
+    pub fn push(&mut self, track: Track, name: &'static str, start: u64, end: u64) {
+        if end > start {
+            self.slices.push(Slice { track, name, start, end });
+        }
+    }
+
+    /// Busy cycles on `track` (sum of slice lengths).
+    pub fn busy(&self, track: Track) -> u64 {
+        self.slices.iter().filter(|s| s.track == track).map(|s| s.end - s.start).sum()
+    }
+
+    /// The slices of one track, in recorded order.
+    pub fn track(&self, track: Track) -> Vec<&Slice> {
+        self.slices.iter().filter(|s| s.track == track).collect()
+    }
+
+    /// Last cycle covered by any slice.
+    pub fn horizon(&self) -> u64 {
+        self.slices.iter().map(|s| s.end).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_drops_empty_slices_and_busy_sums_per_track() {
+        let mut tl = Timeline::new();
+        tl.push(Track::Dma, "mvin", 0, 10);
+        tl.push(Track::Dma, "mvin", 10, 10); // dropped
+        tl.push(Track::Compute, "matmul.compute", 4, 20);
+        tl.push(Track::Dma, "mvout", 12, 18);
+        assert_eq!(tl.slices.len(), 3);
+        assert_eq!(tl.busy(Track::Dma), 16);
+        assert_eq!(tl.busy(Track::Compute), 16);
+        assert_eq!(tl.busy(Track::Host), 0);
+        assert_eq!(tl.horizon(), 20);
+        assert_eq!(tl.track(Track::Dma).len(), 2);
+    }
+}

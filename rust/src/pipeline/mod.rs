@@ -41,6 +41,7 @@ pub mod session;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use anyhow::{ensure, Result};
 
@@ -49,6 +50,8 @@ use crate::backend::codegen::LayerBufs;
 use crate::backend::Backend;
 use crate::isa::program::Program;
 use crate::isa::Instr;
+use crate::obs::span::Trace;
+use crate::obs::timeline::Timeline;
 use crate::relay::Graph;
 use crate::scheduler::cache::{
     CacheKey, CacheStats, CachedSelection, ScheduleCache, SearchGate, SearchKey,
@@ -245,6 +248,31 @@ impl Deployment {
         Ok((out, rep))
     }
 
+    /// [`Deployment::run`] with execution-timeline capture: alongside the
+    /// output and report, return the per-track occupancy [`Timeline`]
+    /// (DMA / compute / store / host) the simulator reconstructed.
+    /// Outputs and every report counter are identical to an unprofiled
+    /// run — capture is strictly passive.
+    pub fn run_profiled(
+        &self,
+        sim: &Simulator,
+        input: &[i8],
+    ) -> Result<(Vec<i8>, RunReport, Timeline)> {
+        ensure!(
+            input.len() == self.input_elems,
+            "input has {} elems, model wants {}",
+            input.len(),
+            self.input_elems
+        );
+        let mut dram = self.program.make_dram()?;
+        dram.write_i8_slice(self.input_offset, input)?;
+        let mut tl = Timeline::new();
+        let rep =
+            sim.run_profiled(&self.program, &mut dram, self.input_stage_hint(), &mut tl)?;
+        let out = dram.read_i8_slice(self.output_offset, self.output_elems)?;
+        Ok((out, rep, tl))
+    }
+
     /// The input-region hint for [`Simulator::run_hinted`]: double-buffered
     /// input staging needs a *spare* slot in the first accelerator layer's
     /// input buffer — with a single-buffered first layer the next
@@ -383,6 +411,12 @@ pub struct Compiler {
     /// Dominated sweep configuration points skipped across this
     /// compiler's sweeps.
     configs_pruned: AtomicU64,
+    /// Session trace attached for the duration of a traced compile
+    /// ([`Compiler::compile_traced`]): schedule-cache consults,
+    /// single-flight elections and sweep spans are recorded into it.
+    /// `None` (the default) costs one uncontended mutex lock per
+    /// schedule selection and records nothing.
+    trace: Mutex<Option<Arc<Trace>>>,
 }
 
 /// Drop guard for single-flight search leadership: if the leader errors
@@ -434,7 +468,25 @@ impl Compiler {
             cache_misses: AtomicU64::new(0),
             solver_leaves: AtomicU64::new(0),
             configs_pruned: AtomicU64::new(0),
+            trace: Mutex::new(None),
         }
+    }
+
+    /// Attach a session trace (see [`CompilerSession::traced`]); every
+    /// schedule selection records its cache/memo/sweep events into it
+    /// until [`Compiler::detach_trace`].
+    pub(crate) fn attach_trace(&self, trace: Arc<Trace>) {
+        *self.trace.lock().unwrap_or_else(|e| e.into_inner()) = Some(trace);
+    }
+
+    /// Detach the session trace (recording stops).
+    pub(crate) fn detach_trace(&self) {
+        *self.trace.lock().unwrap_or_else(|e| e.into_inner()) = None;
+    }
+
+    /// The currently attached trace, if a traced session is running.
+    fn trace_handle(&self) -> Option<Arc<Trace>> {
+        self.trace.lock().unwrap_or_else(|e| e.into_inner()).clone()
     }
 
     /// A handle to this compiler's schedule cache (for persistence or for
@@ -466,6 +518,16 @@ impl Compiler {
     /// Compile and return the per-stage reports alongside the deployment.
     pub fn compile_with_report(&self, graph: &Graph) -> Result<SessionOutput> {
         CompilerSession::new(self).run(graph)
+    }
+
+    /// Compile with fine-grained tracing: the returned
+    /// [`SessionOutput::trace`] carries, besides the per-stage spans every
+    /// compile records, the schedule-cache consults, single-flight
+    /// elections and solver-sweep spans of this run. Tracing is strictly
+    /// passive — the deployment is byte-identical to
+    /// [`Compiler::compile`]'s.
+    pub fn compile_traced(&self, graph: &Graph) -> Result<SessionOutput> {
+        CompilerSession::new(self).traced().run(graph)
     }
 
     /// Compile like [`Compiler::compile`], memoizing every schedule
@@ -580,11 +642,16 @@ impl Compiler {
             g,
             SearchKey::new(&self.options.sweep, self.options.profile_candidates),
         );
+        let trace = self.trace_handle();
+        let shape = || format!("{}x{}x{}", g.n, g.c, g.k);
         // An incremental-session memo short-circuits everything — even
         // the shared cache — so it works with `schedule_cache: false` and
         // adds no hit/miss accounting noise.
         if let Some(memo) = memo {
             if let Some((schedule, cycles)) = memo.get(&key) {
+                if let Some(tr) = &trace {
+                    tr.instant("memo_hit", vec![("shape", shape())]);
+                }
                 return Ok((schedule, cycles, ScheduleSource::Memo));
             }
         }
@@ -596,6 +663,9 @@ impl Compiler {
             match self.cache.begin(&key) {
                 SearchGate::Ready(hit) => {
                     self.cache_hits.fetch_add(1, Ordering::Relaxed);
+                    if let Some(tr) = &trace {
+                        tr.instant("cache_hit", vec![("shape", shape())]);
+                    }
                     if let Some(memo) = memo {
                         memo.put(key, &hit.schedule, hit.profiled_cycles);
                     }
@@ -603,6 +673,12 @@ impl Compiler {
                 }
                 SearchGate::Leader => {
                     self.cache_misses.fetch_add(1, Ordering::Relaxed);
+                    if let Some(tr) = &trace {
+                        tr.instant(
+                            "cache_miss",
+                            vec![("shape", shape()), ("single_flight", "leader".to_string())],
+                        );
+                    }
                     Some(SearchLease { cache: self.cache.as_ref(), key, armed: true })
                 }
             }
@@ -612,9 +688,21 @@ impl Compiler {
 
         let searched = (|| -> Result<(Schedule, Option<u64>)> {
             self.sweeps_run.fetch_add(1, Ordering::Relaxed);
+            let sweep_started = Instant::now();
             let result = self.backend()?.sweep(&self.accel.arch, g, &self.options.sweep);
             self.solver_leaves.fetch_add(result.stats.leaves_visited, Ordering::Relaxed);
             self.configs_pruned.fetch_add(result.stats.configs_pruned, Ordering::Relaxed);
+            if let Some(tr) = &trace {
+                tr.record(
+                    "sweep",
+                    sweep_started,
+                    vec![
+                        ("shape", shape()),
+                        ("leaves_visited", result.stats.leaves_visited.to_string()),
+                        ("configs_pruned", result.stats.configs_pruned.to_string()),
+                    ],
+                );
+            }
             ensure!(
                 !result.candidates.is_empty(),
                 "scheduler found no valid mapping for {g:?}"
@@ -686,8 +774,16 @@ impl Compiler {
             search: SearchKey::new(&self.options.sweep, self.options.profile_candidates),
             residency: rc,
         };
+        let trace = self.trace_handle();
+        let shape = || format!("{}x{}x{}", g.n, g.c, g.k);
         if let Some(memo) = memo {
             if let Some((schedule, cycles)) = memo.get(&key) {
+                if let Some(tr) = &trace {
+                    tr.instant(
+                        "memo_hit",
+                        vec![("shape", shape()), ("constrained", "true".to_string())],
+                    );
+                }
                 return Ok(Some((schedule, cycles)));
             }
         }
@@ -695,6 +791,12 @@ impl Compiler {
             match self.cache.begin(&key) {
                 SearchGate::Ready(hit) => {
                     self.cache_hits.fetch_add(1, Ordering::Relaxed);
+                    if let Some(tr) = &trace {
+                        tr.instant(
+                            "cache_hit",
+                            vec![("shape", shape()), ("constrained", "true".to_string())],
+                        );
+                    }
                     if let Some(memo) = memo {
                         memo.put(key, &hit.schedule, hit.profiled_cycles);
                     }
@@ -702,6 +804,16 @@ impl Compiler {
                 }
                 SearchGate::Leader => {
                     self.cache_misses.fetch_add(1, Ordering::Relaxed);
+                    if let Some(tr) = &trace {
+                        tr.instant(
+                            "cache_miss",
+                            vec![
+                                ("shape", shape()),
+                                ("constrained", "true".to_string()),
+                                ("single_flight", "leader".to_string()),
+                            ],
+                        );
+                    }
                     Some(SearchLease { cache: self.cache.as_ref(), key, armed: true })
                 }
             }
@@ -710,9 +822,22 @@ impl Compiler {
         };
 
         self.sweeps_run.fetch_add(1, Ordering::Relaxed);
+        let sweep_started = Instant::now();
         let result = self.backend()?.sweep(&self.accel.arch, g, &self.options.sweep);
         self.solver_leaves.fetch_add(result.stats.leaves_visited, Ordering::Relaxed);
         self.configs_pruned.fetch_add(result.stats.configs_pruned, Ordering::Relaxed);
+        if let Some(tr) = &trace {
+            tr.record(
+                "sweep",
+                sweep_started,
+                vec![
+                    ("shape", shape()),
+                    ("constrained", "true".to_string()),
+                    ("leaves_visited", result.stats.leaves_visited.to_string()),
+                    ("configs_pruned", result.stats.configs_pruned.to_string()),
+                ],
+            );
+        }
         if result.candidates.is_empty() {
             // No mapping at all (the lease's drop releases single-flight
             // leadership). Unreachable for layers that already scheduled.

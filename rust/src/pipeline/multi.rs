@@ -31,6 +31,8 @@ use anyhow::{ensure, Context, Result};
 
 use crate::accel::AccelDesc;
 use crate::isa::program::Program;
+use crate::obs::span::Trace;
+use crate::obs::timeline::Timeline;
 use crate::relay::Graph;
 use crate::scheduler::cache::{CacheStats, ScheduleCache};
 use crate::scheduler::Schedule;
@@ -173,6 +175,53 @@ impl MultiDeployment {
         Ok((out, rep))
     }
 
+    /// [`MultiDeployment::run`] with execution-timeline capture: one
+    /// [`Timeline`] per program segment, labeled with the executing
+    /// target's display name, each with cycle timestamps local to its
+    /// segment (a serial handoff — concatenate with accumulated offsets
+    /// to view end to end). Outputs and the merged report are identical
+    /// to an unprofiled run.
+    pub fn run_profiled(
+        &self,
+        input: &[i8],
+    ) -> Result<(Vec<i8>, RunReport, Vec<(String, Timeline)>)> {
+        ensure!(
+            input.len() == self.input_elems,
+            "input has {} elems, model wants {}",
+            input.len(),
+            self.input_elems
+        );
+        let sims = self.simulators();
+        let mut dram = self.program.make_dram()?;
+        dram.write_i8_slice(self.input_offset, input)?;
+        let hint = match self.assignments.first() {
+            Some(a) if a.schedule.double_buffer => {
+                Some((self.input_offset, self.input_elems as u64))
+            }
+            _ => None,
+        };
+        let mut rep = RunReport::default();
+        let mut timelines = Vec::with_capacity(self.segments.len());
+        for seg in &self.segments {
+            let sim = sims
+                .get(seg.target)
+                .with_context(|| format!("segment names unknown target {}", seg.target))?;
+            let mut tl = Timeline::new();
+            let r = sim
+                .run_slice_profiled(&self.program, &mut dram, seg.start..seg.end, hint, &mut tl)
+                .with_context(|| {
+                    format!(
+                        "items {}..{} on target '{}'",
+                        seg.start, seg.end, self.targets[seg.target].name
+                    )
+                })?;
+            rep.merge(&r);
+            timelines.push((self.targets[seg.target].name.clone(), tl));
+        }
+        let out = dram.read_i8_slice(self.output_offset, self.output_elems)?;
+        Ok((out, rep, timelines))
+    }
+
     /// Run many inferences back to back, staging the DRAM image once
     /// (mirrors [`super::Deployment::run_batch`], including the pipelined
     /// batch timing model in the returned [`BatchRun`]).
@@ -242,6 +291,9 @@ pub struct MultiSessionOutput {
     pub stages: Vec<StageReport>,
     /// Schedule-selection counters from the schedule stage.
     pub schedule_stats: ScheduleStats,
+    /// The session's trace (see
+    /// [`super::SessionOutput::trace`][crate::pipeline::SessionOutput]).
+    pub trace: Arc<Trace>,
 }
 
 impl MultiSessionOutput {
@@ -307,6 +359,14 @@ impl MultiCompiler {
     /// Compile and return the per-stage reports alongside the deployment.
     pub fn compile_with_report(&self, graph: &Graph) -> Result<MultiSessionOutput> {
         CompilerSession::multi(self.compilers.iter().collect()).run_multi(graph)
+    }
+
+    /// Compile with fine-grained tracing (see
+    /// [`Compiler::compile_traced`]): cache consults, single-flight
+    /// elections and sweep spans across every candidate land in the
+    /// returned trace. Byte-identical to [`MultiCompiler::compile`].
+    pub fn compile_traced(&self, graph: &Graph) -> Result<MultiSessionOutput> {
+        CompilerSession::multi(self.compilers.iter().collect()).traced().run_multi(graph)
     }
 
     /// Compile against an incremental-session memo: layers (and partition

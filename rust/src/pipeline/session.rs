@@ -40,7 +40,8 @@
 //! cache-keying rules.
 
 use std::collections::BTreeSet;
-use std::time::{Duration, Instant};
+use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{bail, ensure, Context, Result};
 
@@ -52,6 +53,7 @@ use crate::backend::Backend;
 use crate::frontend::{configure_all, run_frontend_passes};
 use crate::isa::program::{HostOp, Program};
 use crate::isa::Instr;
+use crate::obs::span::{SpanId, Trace};
 use crate::relay::partition::{partition, partition_multi, PartitionedGraph, Target};
 use crate::relay::{Graph, Node, Op, TensorData};
 use crate::scheduler::cache::accel_fingerprint;
@@ -67,11 +69,18 @@ use super::multi::{
 use super::{Compiler, Deployment, ScheduleSource, SessionMemo};
 
 /// Timing + diagnostics for one pipeline stage.
+///
+/// Stage reports are a *view over trace spans*: the session opens one
+/// span per stage on its [`Trace`], and each report's `name`/`elapsed`
+/// are read back from the closed span (the notes double as span
+/// attributes). The span is the single source of timing truth — the
+/// Chrome-trace exporter and `tvm-accel bench` derive from the same
+/// spans.
 #[derive(Debug, Clone)]
 pub struct StageReport {
     /// Stage name (`"frontend"`, `"partition"`, …).
     pub name: &'static str,
-    /// Wall-clock time the stage took.
+    /// Wall-clock time the stage took (span duration).
     pub elapsed: Duration,
     /// Human-readable diagnostics (counts, cache statistics, sizes; the
     /// multi-target partition stage lists the chosen target and its cost
@@ -132,6 +141,10 @@ pub struct SessionOutput {
     pub stages: Vec<StageReport>,
     /// Schedule-selection counters from the schedule stage.
     pub schedule_stats: ScheduleStats,
+    /// The session's trace: one `compile` root span, a child span per
+    /// stage, and (when compiled via [`Compiler::compile_traced`])
+    /// schedule-cache/sweep events nested inside the `schedule` stage.
+    pub trace: Arc<Trace>,
 }
 
 impl SessionOutput {
@@ -165,25 +178,44 @@ pub struct CompilerSession<'a> {
     ///
     /// [`CacheKey`]: crate::scheduler::cache::CacheKey
     memo: Option<&'a SessionMemo>,
+    /// The span recorder stage timings are read from.
+    trace: Arc<Trace>,
+    /// When set, the trace is attached to every compiler for the run so
+    /// schedule-cache/sweep events are recorded too. Stage spans are
+    /// always recorded (they *are* the stage timings); this flag only
+    /// governs the finer-grained events. Purely observational either way.
+    traced: bool,
 }
 
 impl<'a> CompilerSession<'a> {
     /// A session compiling for a single accelerator.
     pub fn new(compiler: &'a Compiler) -> CompilerSession<'a> {
-        CompilerSession { compilers: vec![compiler], stages: Vec::new(), memo: None }
+        CompilerSession {
+            compilers: vec![compiler],
+            stages: Vec::new(),
+            memo: None,
+            trace: Arc::new(Trace::new()),
+            traced: false,
+        }
     }
 
     /// A single-target session that reuses (and extends) an
     /// incremental-session memo: layers whose cache key already appears in
     /// `memo` skip the sweep, the profiling, and the shared-cache lookup.
     pub fn with_memo(compiler: &'a Compiler, memo: &'a SessionMemo) -> CompilerSession<'a> {
-        CompilerSession { compilers: vec![compiler], stages: Vec::new(), memo: Some(memo) }
+        CompilerSession { memo: Some(memo), ..CompilerSession::new(compiler) }
     }
 
     /// A session over several candidate targets (cost-driven partition).
     pub(crate) fn multi(compilers: Vec<&'a Compiler>) -> CompilerSession<'a> {
         assert!(!compilers.is_empty(), "session needs at least one target");
-        CompilerSession { compilers, stages: Vec::new(), memo: None }
+        CompilerSession {
+            compilers,
+            stages: Vec::new(),
+            memo: None,
+            trace: Arc::new(Trace::new()),
+            traced: false,
+        }
     }
 
     /// [`CompilerSession::multi`] with an incremental-session memo; the
@@ -193,12 +225,28 @@ impl<'a> CompilerSession<'a> {
         compilers: Vec<&'a Compiler>,
         memo: &'a SessionMemo,
     ) -> CompilerSession<'a> {
-        assert!(!compilers.is_empty(), "session needs at least one target");
-        CompilerSession { compilers, stages: Vec::new(), memo: Some(memo) }
+        let mut s = CompilerSession::multi(compilers);
+        s.memo = Some(memo);
+        s
     }
 
-    fn finish_stage(&mut self, name: &'static str, started: Instant, notes: Vec<String>) {
-        self.stages.push(StageReport { name, elapsed: started.elapsed(), notes });
+    /// Enable fine-grained tracing: schedule-cache consults, single-flight
+    /// elections, and sweep spans are recorded alongside the stage spans.
+    pub fn traced(mut self) -> CompilerSession<'a> {
+        self.traced = true;
+        self
+    }
+
+    fn start_stage(&self, name: &'static str) -> SpanId {
+        self.trace.begin(name)
+    }
+
+    /// Close a stage span and derive its [`StageReport`] from the span:
+    /// the report is a view, the span is the record.
+    fn finish_stage(&mut self, span: SpanId, notes: Vec<String>) {
+        self.trace.end(span, notes.iter().map(|n| ("note", n.clone())).collect());
+        let (name, elapsed) = self.trace.info_of(span).expect("stage span was opened");
+        self.stages.push(StageReport { name, elapsed, notes });
     }
 
     /// Run every stage over `graph`, producing the deployment and reports.
@@ -210,7 +258,7 @@ impl<'a> CompilerSession<'a> {
             "CompilerSession::run compiles for one target; use MultiCompiler for {}",
             self.compilers.len()
         );
-        let (dep, stages, schedule_stats) = self.run_core(graph)?;
+        let (dep, stages, schedule_stats, trace) = self.run_core(graph)?;
         let MultiDeployment {
             program,
             graph,
@@ -234,13 +282,14 @@ impl<'a> CompilerSession<'a> {
             },
             stages,
             schedule_stats,
+            trace,
         })
     }
 
     /// Run every stage, keeping the segmented multi-target deployment.
     pub(crate) fn run_multi(self, graph: &Graph) -> Result<MultiSessionOutput> {
-        let (deployment, stages, schedule_stats) = self.run_core(graph)?;
-        Ok(MultiSessionOutput { deployment, stages, schedule_stats })
+        let (deployment, stages, schedule_stats, trace) = self.run_core(graph)?;
+        Ok(MultiSessionOutput { deployment, stages, schedule_stats, trace })
     }
 
     /// The staged core shared by the single- and multi-target paths. With
@@ -251,9 +300,19 @@ impl<'a> CompilerSession<'a> {
     fn run_core(
         mut self,
         graph: &Graph,
-    ) -> Result<(MultiDeployment, Vec<StageReport>, ScheduleStats)> {
+    ) -> Result<(MultiDeployment, Vec<StageReport>, ScheduleStats, Arc<Trace>)> {
         let lead = self.compilers[0];
         let is_multi = self.compilers.len() > 1;
+        // Fine-grained tracing: hand every compiler the session trace so
+        // select_schedule records cache/memo/sweep events into it. The
+        // guard detaches on every exit path (including `?` errors) —
+        // compilers are long-lived and must not keep a stale trace.
+        let _trace_attach = if self.traced {
+            Some(TraceAttach::attach(&self.compilers, &self.trace))
+        } else {
+            None
+        };
+        let root = self.trace.begin("compile");
         // Resolve each target's backend family once: strategy binding,
         // mapping, codegen and residency support all dispatch through it.
         let backends: Vec<&'static dyn Backend> = self
@@ -269,7 +328,7 @@ impl<'a> CompilerSession<'a> {
         let effort0 = search_effort(&self.compilers);
 
         // --- Stage 1: frontend (legalize + constant fold) ----------------
-        let t0 = Instant::now();
+        let t0 = self.start_stage("frontend");
         let fcfg = {
             let accels: Vec<&AccelDesc> = self.compilers.iter().map(|c| &c.accel).collect();
             let mut fcfg = configure_all(&accels);
@@ -278,7 +337,6 @@ impl<'a> CompilerSession<'a> {
         };
         let processed = run_frontend_passes(graph, &fcfg)?;
         self.finish_stage(
-            "frontend",
             t0,
             vec![format!(
                 "{} nodes in, {} after legalize{}",
@@ -289,7 +347,7 @@ impl<'a> CompilerSession<'a> {
         );
 
         // --- Stage 2: partition ------------------------------------------
-        let t0 = Instant::now();
+        let t0 = self.start_stage("partition");
         let fps: Vec<u64> = self.compilers.iter().map(|c| accel_fingerprint(&c.accel)).collect();
         let mut infeasible: Vec<String> = Vec::new();
         // Use counts over the processed graph: an activation with several
@@ -410,11 +468,11 @@ impl<'a> CompilerSession<'a> {
             }
             notes.append(&mut infeasible);
         }
-        self.finish_stage("partition", t0, notes);
+        self.finish_stage(t0, notes);
         let g = &pg.graph;
 
         // --- Stage 3: per-layer schedule selection (cache + sweep) -------
-        let t0 = Instant::now();
+        let t0 = self.start_stage("schedule");
         let mut plans: Vec<Option<LayerPlan>> = Vec::new();
         plans.resize_with(g.nodes.len(), || None);
         let mut stats = ScheduleStats::default();
@@ -442,7 +500,6 @@ impl<'a> CompilerSession<'a> {
         let cache = lead.cache_stats();
         let effort_now = search_effort(&self.compilers);
         self.finish_stage(
-            "schedule",
             t0,
             vec![
                 format!(
@@ -469,7 +526,7 @@ impl<'a> CompilerSession<'a> {
         // codegen consumes the per-node residency decisions. With no
         // feasible edge every plan is untouched and the emitted program is
         // byte-identical to the per-layer pipeline.
-        let t0 = Instant::now();
+        let t0 = self.start_stage("crosslayer");
         let mut node_resid: Vec<LayerResidency> =
             vec![LayerResidency::default(); g.nodes.len()];
         let mut notes: Vec<String> = Vec::new();
@@ -548,13 +605,13 @@ impl<'a> CompilerSession<'a> {
         } else {
             notes.push("cross-layer pass disabled".to_string());
         }
-        self.finish_stage("crosslayer", t0, notes);
+        self.finish_stage(t0, notes);
         let effort_final = search_effort(&self.compilers);
         stats.solver_leaves = effort_final.0 - effort0.0;
         stats.configs_pruned = effort_final.1 - effort0.1;
 
         // --- Stage 5: mapping (apply TIR schedules) ----------------------
-        let t0 = Instant::now();
+        let t0 = self.start_stage("mapping");
         let mut lowered: Vec<Option<TirFunc>> = Vec::new();
         lowered.resize_with(g.nodes.len(), || None);
         let mut mapped = 0usize;
@@ -568,10 +625,10 @@ impl<'a> CompilerSession<'a> {
                 mapped += 1;
             }
         }
-        self.finish_stage("mapping", t0, vec![format!("{mapped} TIR function(s) scheduled")]);
+        self.finish_stage(t0, vec![format!("{mapped} TIR function(s) scheduled")]);
 
         // --- Stage 6: codegen (allocate + emit) --------------------------
-        let t0 = Instant::now();
+        let t0 = self.start_stage("codegen");
         let mut prog = Program::new("deployment");
         let region = allocate_regions(g, &mut prog)?;
         let mut assignments: Vec<LayerAssignment> = Vec::new();
@@ -647,10 +704,10 @@ impl<'a> CompilerSession<'a> {
                 self.compilers.len()
             ));
         }
-        self.finish_stage("codegen", t0, notes);
+        self.finish_stage(t0, notes);
 
         // --- Stage 7: link (bind I/O, wrap the deployment) ---------------
-        let t0 = Instant::now();
+        let t0 = self.start_stage("link");
         let in_node = g.node(g.inputs[0]);
         let out_node = g.node(g.outputs[0]);
         let boundaries: Vec<LayerBoundary> = pg
@@ -677,7 +734,6 @@ impl<'a> CompilerSession<'a> {
             boundaries,
         };
         self.finish_stage(
-            "link",
             t0,
             vec![format!(
                 "input {} elem(s) @ {:#x}, output {} elem(s) @ {:#x}",
@@ -688,7 +744,33 @@ impl<'a> CompilerSession<'a> {
             )],
         );
 
-        Ok((deployment, self.stages, stats))
+        self.trace.end(root, vec![("stages", self.stages.len().to_string())]);
+        Ok((deployment, self.stages, stats, self.trace))
+    }
+}
+
+/// Drop guard from [`CompilerSession::run_core`]: attaches the session
+/// trace to every compiler on construction and detaches it on drop, so
+/// long-lived compilers never keep recording into a finished session's
+/// trace — even when a stage errors out mid-run.
+struct TraceAttach<'a> {
+    compilers: Vec<&'a Compiler>,
+}
+
+impl<'a> TraceAttach<'a> {
+    fn attach(compilers: &[&'a Compiler], trace: &Arc<Trace>) -> TraceAttach<'a> {
+        for c in compilers {
+            c.attach_trace(Arc::clone(trace));
+        }
+        TraceAttach { compilers: compilers.to_vec() }
+    }
+}
+
+impl Drop for TraceAttach<'_> {
+    fn drop(&mut self) {
+        for c in &self.compilers {
+            c.detach_trace();
+        }
     }
 }
 

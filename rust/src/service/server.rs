@@ -30,6 +30,7 @@ use crate::backend::Backend;
 use crate::baselines::naive_byoc::import_with_weight_chain;
 use crate::frontend::{configure_all, run_frontend_passes};
 use crate::isa::program::Program;
+use crate::obs::prom::{Counter, Gauge, Histogram, Registry, LATENCY_BUCKETS};
 use crate::pipeline::{
     CompileOptions, Compiler, Deployment, MultiCompiler, MultiDeployment, ScheduleStats,
     SessionMemo, StageReport,
@@ -118,6 +119,98 @@ pub struct CompileServer {
     workers: usize,
     persist_lock: Mutex<()>,
     requests: AtomicU64,
+    metrics: ServerMetrics,
+}
+
+/// The server's Prometheus instrumentation: one registry per server,
+/// bumped on the serve path and rendered by
+/// [`CompileServer::metrics_text`] (exposed over the socket's `metrics`
+/// verb and `tvm-accel metrics --socket`). Strictly passive — nothing
+/// here feeds back into compilation.
+struct ServerMetrics {
+    registry: Registry,
+    requests_total: Arc<Counter>,
+    in_flight: Arc<Gauge>,
+    cache_hits: Arc<Counter>,
+    cache_misses: Arc<Counter>,
+    sweeps: Arc<Counter>,
+    solver_leaves: Arc<Counter>,
+    configs_pruned: Arc<Counter>,
+    prewarm_queue_depth: Arc<Gauge>,
+    cache_entries: Arc<Gauge>,
+    compile_duration: Arc<Histogram>,
+}
+
+impl ServerMetrics {
+    fn new() -> ServerMetrics {
+        let registry = Registry::new();
+        let requests_total =
+            registry.counter("tvmaccel_requests_total", "Compile requests accepted.");
+        let in_flight = registry
+            .gauge("tvmaccel_requests_in_flight", "Compile requests currently executing.");
+        let cache_hits = registry.counter(
+            "tvmaccel_cache_hits_total",
+            "Schedule-cache hits attributed to compile requests.",
+        );
+        let cache_misses = registry.counter(
+            "tvmaccel_cache_misses_total",
+            "Schedule-cache misses attributed to compile requests.",
+        );
+        let sweeps = registry
+            .counter("tvmaccel_schedule_sweeps_total", "Schedule sweeps executed by requests.");
+        let solver_leaves = registry.counter(
+            "tvmaccel_solver_leaves_total",
+            "Solver leaves costed by request sweeps.",
+        );
+        let configs_pruned = registry.counter(
+            "tvmaccel_configs_pruned_total",
+            "Dominated sweep configuration points skipped by request sweeps.",
+        );
+        let prewarm_queue_depth = registry.gauge(
+            "tvmaccel_prewarm_queue_depth",
+            "Schedule searches queued on the prewarm worker pool.",
+        );
+        let cache_entries =
+            registry.gauge("tvmaccel_cache_entries", "Entries in the shared schedule cache.");
+        let compile_duration = registry.histogram(
+            "tvmaccel_compile_duration_seconds",
+            "Wall-clock latency of whole compile requests.",
+            LATENCY_BUCKETS,
+        );
+        ServerMetrics {
+            registry,
+            requests_total,
+            in_flight,
+            cache_hits,
+            cache_misses,
+            sweeps,
+            solver_leaves,
+            configs_pruned,
+            prewarm_queue_depth,
+            cache_entries,
+            compile_duration,
+        }
+    }
+
+    /// The per-stage latency series for `stage` (registered on first use).
+    fn stage_duration(&self, stage: &str) -> Arc<Histogram> {
+        self.registry.histogram_with(
+            "tvmaccel_stage_duration_seconds",
+            "Per-stage compile latency.",
+            LATENCY_BUCKETS,
+            &[("stage", stage)],
+        )
+    }
+}
+
+/// Drop guard pairing the in-flight gauge increment with its decrement on
+/// every exit path (including compile errors).
+struct InFlight<'a>(&'a Gauge);
+
+impl Drop for InFlight<'_> {
+    fn drop(&mut self) {
+        self.0.add(-1);
+    }
 }
 
 /// The session-memo artifact's location: a `.memo` sibling of the
@@ -141,6 +234,7 @@ impl CompileServer {
             workers,
             persist_lock: Mutex::new(()),
             requests: AtomicU64::new(0),
+            metrics: ServerMetrics::new(),
         }
     }
 
@@ -198,6 +292,15 @@ impl CompileServer {
     /// Compile requests served so far.
     pub fn requests_served(&self) -> u64 {
         self.requests.load(Ordering::Relaxed)
+    }
+
+    /// The server's metrics in Prometheus text exposition format:
+    /// request/cache/sweep counters, worker-pool queue depth, and
+    /// per-stage latency histograms. The cache-entry gauge is refreshed
+    /// at scrape time so it reflects the shared cache's current size.
+    pub fn metrics_text(&self) -> String {
+        self.metrics.cache_entries.set(self.cache.stats().entries as i64);
+        self.metrics.registry.render()
     }
 
     /// Drop every cached selection, in memory and on disk.
@@ -285,6 +388,9 @@ impl CompileServer {
         ensure!(!targets.is_empty(), "compile request needs at least one target");
         let t0 = Instant::now();
         let memo_len0 = memo.map(|m| m.len()).unwrap_or(0);
+        self.metrics.requests_total.inc();
+        self.metrics.in_flight.add(1);
+        let _in_flight = InFlight(&self.metrics.in_flight);
 
         // Per-request compilers over the server's long-lived cache.
         let warmers: Vec<Arc<Compiler>> = targets
@@ -359,6 +465,17 @@ impl CompileServer {
         }
         self.requests.fetch_add(1, Ordering::Relaxed);
 
+        // Metrics last, off the same numbers the reply reports.
+        self.metrics.cache_hits.add(cache_hits);
+        self.metrics.cache_misses.add(cache_misses);
+        self.metrics.sweeps.add(sweeps);
+        self.metrics.solver_leaves.add(solver_leaves_visited);
+        self.metrics.configs_pruned.add(configs_pruned);
+        self.metrics.compile_duration.observe(t0.elapsed().as_secs_f64());
+        for s in &stages {
+            self.metrics.stage_duration(s.name).observe(s.elapsed.as_secs_f64());
+        }
+
         Ok(ServiceReply {
             artifact,
             stages,
@@ -429,9 +546,11 @@ impl CompileServer {
             }
         }
 
+        self.metrics.prewarm_queue_depth.add(jobs.len() as i64);
         if jobs.len() <= 1 {
             for (c, fp, g) in &jobs {
                 let _ = c.select_schedule(*g, *fp, memo);
+                self.metrics.prewarm_queue_depth.add(-1);
             }
             return Ok(());
         }
@@ -448,6 +567,7 @@ impl CompileServer {
                     // Single-flight inside: concurrent requests sharing
                     // this key wait here instead of re-searching.
                     let _ = c.select_schedule(*g, *fp, memo);
+                    self.metrics.prewarm_queue_depth.add(-1);
                 });
             }
         });
@@ -509,6 +629,35 @@ mod tests {
         // Prewarm ran every search up front: the session saw only hits.
         assert_eq!(reply.schedule_stats.searched, 0);
         assert_eq!(reply.schedule_stats.cache_hits, reply.schedule_stats.layers);
+    }
+
+    #[test]
+    fn metrics_text_reflects_request_traffic() {
+        let server = CompileServer::new(CompileOptions::default());
+        let graph = mlp_graph(44, &[16, 16], 2);
+        let accel = gemmini_desc().unwrap();
+        server.compile_graph(&graph, std::slice::from_ref(&accel)).unwrap();
+        server.compile_graph(&graph, std::slice::from_ref(&accel)).unwrap();
+        let text = server.metrics_text();
+        assert!(text.contains("tvmaccel_requests_total 2"), "text was:\n{text}");
+        assert!(text.contains("tvmaccel_requests_in_flight 0"));
+        assert!(text.contains("tvmaccel_prewarm_queue_depth 0"));
+        assert!(text.contains("# TYPE tvmaccel_compile_duration_seconds histogram"));
+        assert!(text.contains("tvmaccel_compile_duration_seconds_count 2"));
+        assert!(
+            text.contains("tvmaccel_stage_duration_seconds_bucket{stage=\"schedule\""),
+            "per-stage series registered from stage reports"
+        );
+        let field = |name: &str| -> i64 {
+            text.lines()
+                .find(|l| l.starts_with(name) && l.split_whitespace().count() == 2)
+                .and_then(|l| l.split_whitespace().nth(1))
+                .and_then(|v| v.parse().ok())
+                .unwrap_or_else(|| panic!("no {name} sample in:\n{text}"))
+        };
+        assert!(field("tvmaccel_cache_hits_total") >= 1, "warm request must record hits");
+        assert!(field("tvmaccel_schedule_sweeps_total") >= 1, "cold request swept");
+        assert!(field("tvmaccel_cache_entries") >= 1, "gauge refreshed at scrape time");
     }
 
     #[test]

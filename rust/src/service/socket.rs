@@ -136,6 +136,17 @@ fn handle_line(
             Ok(()) => (ok_reply(server, &cmd).finish(), false),
             Err(e) => (error_reply(&cmd, &format!("{e:#}")), false),
         },
+        // The Prometheus scrape: the exposition text travels as one
+        // escaped string field (the protocol escapes newlines), so any
+        // line-oriented client can unwrap it.
+        "metrics" => (
+            ObjBuilder::new()
+                .bool_field("ok", true)
+                .str_field("cmd", &cmd)
+                .str_field("exposition", &server.metrics_text())
+                .finish(),
+            false,
+        ),
         "shutdown" => match server.persist() {
             Ok(persisted) => (
                 ok_reply(server, &cmd).num_field("persisted", persisted as u64).finish(),
@@ -187,6 +198,8 @@ fn handle_compile(
         .num_field("sweeps", reply.sweeps)
         .num_field("solver_leaves_visited", reply.solver_leaves_visited)
         .num_field("configs_pruned", reply.configs_pruned)
+        .num_field("memo_hits", reply.schedule_stats.memo_hits as u64)
+        .num_field("resident_edges", reply.schedule_stats.resident_edges as u64)
         .num_field("cache_entries", stats.entries as u64)
         .num_field("elapsed_us", reply.elapsed.as_micros() as u64)
         .str_field("program_fnv", &format!("{:016x}", reply.artifact.program_fnv()))

@@ -19,6 +19,7 @@ use anyhow::{bail, ensure, Context, Result};
 use crate::arch::{ArchDesc, Dataflow};
 use crate::isa::program::{HostOp, Item, Program};
 use crate::isa::{Activation, Instr, LocalAddr, Space};
+use crate::obs::timeline::{Timeline, Track};
 use crate::util::ceil_div;
 use memory::{Accumulator, Dram, Scratchpad};
 use report::RunReport;
@@ -165,6 +166,46 @@ impl Simulator {
         range: std::ops::Range<usize>,
         input_region: Option<(u64, u64)>,
     ) -> Result<RunReport> {
+        self.run_slice_inner(prog, dram, range, input_region, None)
+    }
+
+    /// [`Simulator::run_hinted`], additionally recording each priced
+    /// instruction's resource-occupancy interval into `tl` (DMA engine,
+    /// execute queue, store queue, host core — see
+    /// [`crate::obs::timeline`]). Recording is passive: outputs and the
+    /// [`RunReport`] are identical to an unprofiled run.
+    pub fn run_profiled(
+        &self,
+        prog: &Program,
+        dram: &mut Dram,
+        input_region: Option<(u64, u64)>,
+        tl: &mut Timeline,
+    ) -> Result<RunReport> {
+        self.run_slice_inner(prog, dram, 0..prog.items.len(), input_region, Some(tl))
+    }
+
+    /// [`Simulator::run_slice_hinted`] with the timeline recording of
+    /// [`Simulator::run_profiled`] (the per-segment profiling primitive
+    /// behind `MultiDeployment::run_profiled`).
+    pub fn run_slice_profiled(
+        &self,
+        prog: &Program,
+        dram: &mut Dram,
+        range: std::ops::Range<usize>,
+        input_region: Option<(u64, u64)>,
+        tl: &mut Timeline,
+    ) -> Result<RunReport> {
+        self.run_slice_inner(prog, dram, range, input_region, Some(tl))
+    }
+
+    fn run_slice_inner(
+        &self,
+        prog: &Program,
+        dram: &mut Dram,
+        range: std::ops::Range<usize>,
+        input_region: Option<(u64, u64)>,
+        mut tl: Option<&mut Timeline>,
+    ) -> Result<RunReport> {
         ensure!(range.start <= range.end, "inverted item range {range:?}");
         ensure!(
             range.end <= prog.items.len(),
@@ -197,18 +238,38 @@ impl Simulator {
                     let mut gap = 4 * issue;
                     for m in &micro {
                         // FSM-generated micro-ops issue back-to-back.
-                        self.exec_instr(&mut st, dram, &mut t, &mut rep, m, gap, true, input_region)
-                            .with_context(|| format!("LOOP_WS micro-op {m}"))?;
+                        self.exec_instr(
+                            &mut st,
+                            dram,
+                            &mut t,
+                            &mut rep,
+                            m,
+                            gap,
+                            true,
+                            input_region,
+                            tl.as_deref_mut(),
+                        )
+                        .with_context(|| format!("LOOP_WS micro-op {m}"))?;
                         gap = 1;
                     }
                 }
                 Item::Accel(i) => {
                     rep.issued_commands += 1;
-                    self.exec_instr(&mut st, dram, &mut t, &mut rep, i, issue, false, input_region)
-                        .with_context(|| format!("item {idx}: {i}"))?;
+                    self.exec_instr(
+                        &mut st,
+                        dram,
+                        &mut t,
+                        &mut rep,
+                        i,
+                        issue,
+                        false,
+                        input_region,
+                        tl.as_deref_mut(),
+                    )
+                    .with_context(|| format!("item {idx}: {i}"))?;
                 }
                 Item::Host(h) => {
-                    self.exec_host(dram, &mut t, &mut rep, h)
+                    self.exec_host(dram, &mut t, &mut rep, h, tl.as_deref_mut())
                         .with_context(|| format!("item {idx}: {h:?}"))?;
                     if !seen_accel {
                         rep.host_prefix_cycles = t.host_cycles;
@@ -242,6 +303,7 @@ impl Simulator {
         issue_gap: u64,
         from_fsm: bool,
         input_region: Option<(u64, u64)>,
+        tl: Option<&mut Timeline>,
     ) -> Result<()> {
         if !from_fsm {
             rep.count(i.mnemonic());
@@ -316,13 +378,18 @@ impl Simulator {
                         rep.input_stage_cycles += occ;
                     }
                 }
-                t.step(
+                let (start, _) = t.step(
                     QueueId::Load,
                     issue_gap,
                     lat,
                     Some(occ),
                     &[Access::write(local.space, local.row, rows as u32)],
                 );
+                if let Some(tl) = tl {
+                    // Engine occupancy only: the request-latency tail
+                    // pipelines with the next transfer (mirrors `dma_busy`).
+                    tl.push(Track::Dma, "mvin", start, start + occ.min(lat));
+                }
             }
             Instr::Mvout { dram: base, local, rows, cols } => {
                 ensure!(rows > 0 && cols > 0, "empty mvout");
@@ -355,13 +422,16 @@ impl Simulator {
                 rep.dram_write_bytes += rows as u64 * cols as u64;
                 let (lat, occ) = self.dma_latency(rows as u64, bytes_onchip);
                 rep.dram_transfer_cycles += occ;
-                t.step(
+                let (start, _) = t.step(
                     QueueId::Store,
                     issue_gap,
                     lat,
                     Some(occ),
                     &[Access::read(local.space, local.row, rows as u32)],
                 );
+                if let Some(tl) = tl {
+                    tl.push(Track::Dma, "mvout", start, start + occ.min(lat));
+                }
             }
             Instr::MvoutSpad { src, dst, rows, cols } => {
                 ensure!(rows > 0 && cols > 0, "empty mvout_spad");
@@ -383,7 +453,7 @@ impl Simulator {
                 // Purely on-chip: occupies the store queue, but neither the
                 // DMA engine nor DRAM bandwidth (the whole point of keeping
                 // the activation resident).
-                t.step(
+                let (start, finish) = t.step(
                     QueueId::Store,
                     issue_gap,
                     rows as u64 + 4,
@@ -393,6 +463,9 @@ impl Simulator {
                         Access::write(Space::Spad, dst.row, rows as u32),
                     ],
                 );
+                if let Some(tl) = tl {
+                    tl.push(Track::Store, "mvout_spad", start, finish);
+                }
             }
             Instr::Preload { local, dst, rows, cols } => {
                 ensure!(rows as usize <= dim && cols as usize <= dim, "preload tile > DIM");
@@ -441,7 +514,10 @@ impl Simulator {
                     Dataflow::WeightStationary => 4,
                     Dataflow::OutputStationary => rows as u64 + dim as u64,
                 };
-                t.step(QueueId::Ex, issue_gap, lat, None, &accesses);
+                let (start, finish) = t.step(QueueId::Ex, issue_gap, lat, None, &accesses);
+                if let Some(tl) = tl {
+                    tl.push(Track::Compute, "preload", start, finish);
+                }
             }
             Instr::Compute { a, d, rows, cols, preloaded } => {
                 ensure!(a.space == Space::Spad, "compute A must come from scratchpad");
@@ -525,7 +601,10 @@ impl Simulator {
                 // full, so the full fill/drain cost is not paid per tile
                 // (it shows up in the preload/flush costs instead).
                 let lat = rows as u64 + 8;
-                t.step(QueueId::Ex, issue_gap, lat, None, &accesses);
+                let (start, finish) = t.step(QueueId::Ex, issue_gap, lat, None, &accesses);
+                if let Some(tl) = tl {
+                    tl.push(Track::Compute, "compute", start, finish);
+                }
             }
             Instr::LoopWs { .. } => bail!("nested LOOP_WS is not supported"),
             Instr::Fence => {
@@ -535,7 +614,10 @@ impl Simulator {
                 st.b_tile.iter_mut().for_each(|v| *v = 0);
                 st.b_rows = 0;
                 st.b_cols = 0;
-                t.step(QueueId::Ex, issue_gap, dim as u64, None, &[]);
+                let (start, finish) = t.step(QueueId::Ex, issue_gap, dim as u64, None, &[]);
+                if let Some(tl) = tl {
+                    tl.push(Track::Compute, "flush", start, finish);
+                }
             }
             // Vector-backend family: an in-order scalar/SIMD engine with a
             // single accumulator register file. Everything runs through the
@@ -557,7 +639,10 @@ impl Simulator {
                 rep.dram_read_bytes += len as u64 * 4;
                 let (lat, occ) = crate::backend::vector::timing::ld_bias(&self.arch, len);
                 rep.dram_transfer_cycles += occ;
-                t.step(QueueId::Ex, issue_gap, lat, Some(occ), &[]);
+                let (start, _) = t.step(QueueId::Ex, issue_gap, lat, Some(occ), &[]);
+                if let Some(tl) = tl {
+                    tl.push(Track::Dma, "vld_bias", start, start + occ.min(lat));
+                }
             }
             Instr::VmacStrip { x_dram, w_dram, w_stride, n_out, n_in } => {
                 ensure!(n_out > 0 && n_in > 0, "empty vmac_strip");
@@ -583,7 +668,13 @@ impl Simulator {
                 let (lat, occ, stream) =
                     crate::backend::vector::timing::mac_strip(&self.arch, n_out, n_in);
                 rep.dram_transfer_cycles += stream;
-                t.step(QueueId::Ex, issue_gap, lat, Some(occ), &[]);
+                let (start, finish) = t.step(QueueId::Ex, issue_gap, lat, Some(occ), &[]);
+                if let Some(tl) = tl {
+                    // The strip both streams operands (DMA) and MACs them
+                    // (lanes) — it shows on both tracks.
+                    tl.push(Track::Dma, "vmac_strip", start, start + occ.min(lat));
+                    tl.push(Track::Compute, "vmac_strip", start, finish);
+                }
             }
             Instr::VstOut { dram: base, len } => {
                 ensure!(len > 0, "empty vst_out");
@@ -595,7 +686,10 @@ impl Simulator {
                 rep.dram_write_bytes += len as u64;
                 let (lat, occ) = crate::backend::vector::timing::st_out(&self.arch, len);
                 rep.dram_transfer_cycles += occ;
-                t.step(QueueId::Ex, issue_gap, lat, Some(occ), &[]);
+                let (start, _) = t.step(QueueId::Ex, issue_gap, lat, Some(occ), &[]);
+                if let Some(tl) = tl {
+                    tl.push(Track::Dma, "vst_out", start, start + occ.min(lat));
+                }
             }
         }
         Ok(())
@@ -607,6 +701,7 @@ impl Simulator {
         t: &mut Timing,
         rep: &mut RunReport,
         h: &HostOp,
+        tl: Option<&mut Timeline>,
     ) -> Result<()> {
         rep.count(h.mnemonic());
         // Functional execution.
@@ -722,7 +817,10 @@ impl Simulator {
         let cost = 10
             + h.alu_elems() * self.arch.host.cycles_per_elem_alu
             + h.moved_elems() * self.arch.host.cycles_per_elem_move;
-        t.host(cost);
+        let end = t.host(cost);
+        if let Some(tl) = tl {
+            tl.push(Track::Host, h.mnemonic(), end - cost, end);
+        }
         Ok(())
     }
 }

@@ -99,12 +99,14 @@ impl RunReport {
     /// One-line summary for logs.
     pub fn summary(&self) -> String {
         format!(
-            "cycles={} (host {}) macs={} dram r/w={}/{} util-denom-pending issued={}",
+            "cycles={} (host {}) macs={} dram r/w={}/{} xfer={} staged-in={} issued={}",
             commafy(self.cycles),
             commafy(self.host_cycles),
             commafy(self.macs),
             commafy(self.dram_read_bytes),
             commafy(self.dram_write_bytes),
+            commafy(self.dram_transfer_cycles),
+            commafy(self.input_stage_cycles),
             commafy(self.issued_commands),
         )
     }

@@ -1,0 +1,277 @@
+//! Wire-format conformance for the two machine-readable obs surfaces.
+//!
+//! * The `metrics` verb's payload must be valid Prometheus text
+//!   exposition: every sample belongs to a family declared by exactly one
+//!   `# HELP` and one `# TYPE` line, every value parses, and histogram
+//!   buckets are cumulative and end at `le="+Inf"` with a consistent
+//!   `_count`/`_sum` pair.
+//! * `tvm-accel profile`'s output must be a structurally valid
+//!   Chrome-trace-event JSON whose events carry known phases, whose
+//!   compile spans nest properly, and whose per-track execution slices
+//!   never overlap (the simulator's queues are in-order).
+
+use std::collections::BTreeMap;
+
+use tvm_accel::accel::gemmini::gemmini_desc;
+use tvm_accel::bench::square_model;
+use tvm_accel::obs::{spans_to_chrome, timeline_to_chrome, ChromeTrace, Track};
+use tvm_accel::pipeline::{CompileOptions, Compiler};
+use tvm_accel::relay::import::to_qnn_graph;
+use tvm_accel::service::CompileServer;
+use tvm_accel::sim::Simulator;
+use tvm_accel::util::prng::Rng;
+
+/// `[a-zA-Z_:][a-zA-Z0-9_:]*` — the Prometheus metric-name grammar.
+fn metric_name_ok(s: &str) -> bool {
+    let mut chars = s.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' || c == ':' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+/// Split one sample line into (metric name, label pairs, value).
+fn parse_sample(line: &str) -> (String, Vec<(String, String)>, f64) {
+    let (name_labels, value) = line.rsplit_once(' ').unwrap_or_else(|| {
+        panic!("sample line has no value: {line:?}");
+    });
+    let value: f64 =
+        value.parse().unwrap_or_else(|_| panic!("unparseable value in {line:?}"));
+    let (name, labels) = match name_labels.split_once('{') {
+        None => (name_labels.to_string(), Vec::new()),
+        Some((n, rest)) => {
+            let body = rest.strip_suffix('}').unwrap_or_else(|| {
+                panic!("unclosed label set in {line:?}");
+            });
+            let mut pairs = Vec::new();
+            for kv in body.split(',').filter(|s| !s.is_empty()) {
+                let (k, v) = kv.split_once('=').unwrap_or_else(|| {
+                    panic!("label without '=' in {line:?}");
+                });
+                let v = v
+                    .strip_prefix('"')
+                    .and_then(|v| v.strip_suffix('"'))
+                    .unwrap_or_else(|| panic!("unquoted label value in {line:?}"));
+                pairs.push((k.to_string(), v.to_string()));
+            }
+            (n.to_string(), pairs)
+        }
+    };
+    (name, labels, value)
+}
+
+#[test]
+fn metrics_exposition_conforms_to_prometheus_text_format() {
+    let server = CompileServer::new(CompileOptions::default());
+    let targets = vec![gemmini_desc().unwrap()];
+    let model = square_model(32, 9).expect("model");
+    server.compile_model(&model, &targets).expect("first compile");
+    server.compile_model(&model, &targets).expect("second compile");
+    let text = server.metrics_text();
+
+    let mut help: BTreeMap<String, u32> = BTreeMap::new();
+    let mut types: BTreeMap<String, String> = BTreeMap::new();
+    let mut samples: Vec<(String, Vec<(String, String)>, f64)> = Vec::new();
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let name = rest.split(' ').next().unwrap();
+            assert!(metric_name_ok(name), "bad family name in {line:?}");
+            *help.entry(name.to_string()).or_insert(0) += 1;
+        } else if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split(' ');
+            let name = it.next().unwrap();
+            let ty = it.next().unwrap_or("");
+            assert!(
+                matches!(ty, "counter" | "gauge" | "histogram"),
+                "unknown metric type in {line:?}"
+            );
+            assert!(
+                types.insert(name.to_string(), ty.to_string()).is_none(),
+                "family {name} declares TYPE twice"
+            );
+            assert_eq!(help.get(name), Some(&1), "family {name}: HELP must precede TYPE");
+        } else if !line.is_empty() {
+            let (name, labels, value) = parse_sample(line);
+            assert!(metric_name_ok(&name), "bad sample name in {line:?}");
+            assert!(value.is_finite(), "non-finite value in {line:?}");
+            samples.push((name, labels, value));
+        }
+    }
+    for (name, n) in &help {
+        assert_eq!(*n, 1, "family {name} declares HELP {n} times");
+        assert!(types.contains_key(name), "family {name} has HELP but no TYPE");
+    }
+
+    // Every sample belongs to a declared family (histogram samples via
+    // their _bucket/_sum/_count suffixes).
+    for (name, _, _) in &samples {
+        let family = types.contains_key(name)
+            || ["_bucket", "_sum", "_count"].iter().any(|suf| {
+                name.strip_suffix(suf)
+                    .is_some_and(|f| types.get(f).map(String::as_str) == Some("histogram"))
+            });
+        assert!(family, "sample {name} belongs to no declared family");
+    }
+
+    // The serve-path families the CI smoke test scrapes.
+    for family in [
+        "tvmaccel_requests_total",
+        "tvmaccel_requests_in_flight",
+        "tvmaccel_cache_hits_total",
+        "tvmaccel_cache_misses_total",
+        "tvmaccel_schedule_sweeps_total",
+        "tvmaccel_cache_entries",
+        "tvmaccel_compile_duration_seconds",
+        "tvmaccel_stage_duration_seconds",
+    ] {
+        assert!(types.contains_key(family), "expected family {family} missing:\n{text}");
+    }
+
+    // Histogram conformance on the single-series compile-latency family:
+    // buckets cumulative, closed by +Inf, consistent with _count/_sum.
+    let buckets: Vec<(String, f64)> = samples
+        .iter()
+        .filter(|(n, _, _)| n == "tvmaccel_compile_duration_seconds_bucket")
+        .map(|(_, labels, v)| {
+            let le = labels
+                .iter()
+                .find(|(k, _)| k == "le")
+                .map(|(_, v)| v.clone())
+                .expect("bucket sample without le label");
+            (le, *v)
+        })
+        .collect();
+    assert!(buckets.len() >= 2, "histogram renders its bucket series");
+    for w in buckets.windows(2) {
+        assert!(w[1].1 >= w[0].1, "buckets must be cumulative: {buckets:?}");
+    }
+    assert_eq!(buckets.last().unwrap().0, "+Inf", "bucket series must end at +Inf");
+    let count = samples
+        .iter()
+        .find(|(n, _, _)| n == "tvmaccel_compile_duration_seconds_count")
+        .map(|(_, _, v)| *v)
+        .expect("_count sample");
+    assert_eq!(count, buckets.last().unwrap().1, "+Inf bucket must equal _count");
+    assert_eq!(count, 2.0, "two compiles were observed");
+    assert!(
+        samples.iter().any(|(n, _, _)| n == "tvmaccel_compile_duration_seconds_sum"),
+        "_sum sample present"
+    );
+
+    // The per-stage histogram carries its stage label alongside le.
+    assert!(
+        samples.iter().any(|(n, labels, _)| {
+            n == "tvmaccel_stage_duration_seconds_bucket"
+                && labels.iter().any(|(k, v)| k == "stage" && v == "schedule")
+                && labels.iter().any(|(k, v)| k == "le" && v == "+Inf")
+        }),
+        "schedule-stage latency series missing:\n{text}"
+    );
+}
+
+/// Minimal structural JSON check: balanced braces/brackets outside
+/// strings, escapes honored, nothing dangling.
+fn assert_well_formed_json(s: &str) {
+    let mut stack = Vec::new();
+    let mut in_str = false;
+    let mut esc = false;
+    for c in s.chars() {
+        if in_str {
+            if esc {
+                esc = false;
+            } else if c == '\\' {
+                esc = true;
+            } else if c == '"' {
+                in_str = false;
+            }
+            continue;
+        }
+        match c {
+            '"' => in_str = true,
+            '{' | '[' => stack.push(c),
+            '}' => assert_eq!(stack.pop(), Some('{'), "unbalanced braces"),
+            ']' => assert_eq!(stack.pop(), Some('['), "unbalanced brackets"),
+            _ => {}
+        }
+    }
+    assert!(!in_str, "unterminated string");
+    assert!(stack.is_empty(), "unclosed container(s): {stack:?}");
+}
+
+#[test]
+fn profile_trace_is_well_formed_chrome_json() {
+    let model = square_model(32, 11).expect("model");
+    let graph = to_qnn_graph(&model).expect("import");
+    let accel = gemmini_desc().unwrap();
+    let out = Compiler::new(accel.clone()).compile_traced(&graph).expect("compile");
+    let sim = Simulator::new(&accel.arch);
+    let input = Rng::new(3).i8_vec(model.batch * model.layers[0].in_dim);
+    let (_, _, tl) = out.deployment.run_profiled(&sim, &input).expect("run");
+
+    // Spans nest: every child interval sits inside its parent's.
+    let spans = out.trace.spans();
+    for s in &spans {
+        if let Some(p) = s.parent {
+            assert!(
+                s.start_ns >= spans[p].start_ns && s.end_ns <= spans[p].end_ns,
+                "span {} escapes its parent {}",
+                s.name,
+                spans[p].name
+            );
+        }
+    }
+
+    // Per-track slices never overlap (each simulator queue is in-order,
+    // and DMA occupancy serializes transfers).
+    for track in [Track::Dma, Track::Compute, Track::Store, Track::Host] {
+        let mut on_track: Vec<(u64, u64)> = tl
+            .slices
+            .iter()
+            .filter(|s| s.track == track)
+            .map(|s| (s.start, s.end))
+            .collect();
+        on_track.sort_unstable();
+        for w in on_track.windows(2) {
+            assert!(
+                w[1].0 >= w[0].1,
+                "{} track overlaps: {:?} then {:?}",
+                track.name(),
+                w[0],
+                w[1]
+            );
+        }
+    }
+    assert!(
+        tl.slices.iter().any(|s| s.track == Track::Dma),
+        "the run staged data over DMA"
+    );
+    assert!(
+        tl.slices.iter().any(|s| s.track == Track::Compute),
+        "the run computed something"
+    );
+
+    // Exported JSON: structurally valid, known event phases only, and
+    // the metadata that names processes/tracks is present.
+    let mut ct = ChromeTrace::new();
+    ct.process_name(1, "compile pipeline");
+    ct.thread_name(1, 1, "stages");
+    spans_to_chrome(&mut ct, 1, 1, &spans);
+    ct.process_name(2, &accel.name);
+    timeline_to_chrome(&mut ct, 2, &tl);
+    let json = ct.render();
+
+    assert_well_formed_json(&json);
+    assert!(json.starts_with("{\"traceEvents\":["));
+    assert!(json.ends_with("],\"displayTimeUnit\":\"ms\"}"));
+    for chunk in json.split("\"ph\":\"").skip(1) {
+        let ph = chunk.chars().next().unwrap();
+        assert!(
+            matches!(ph, 'X' | 'i' | 'M'),
+            "unexpected event phase {ph:?} in trace"
+        );
+    }
+    assert!(json.contains("\"name\":\"process_name\""));
+    assert!(json.contains("\"name\":\"compile\""));
+    assert!(json.contains("\"name\":\"mvin\""), "DMA slices exported");
+}

@@ -1,0 +1,76 @@
+//! Observability is strictly passive.
+//!
+//! The whole obs layer — trace spans, timeline capture, metric counters —
+//! must be invisible to the artifact: a traced compile emits a program
+//! byte-identical to an untraced one (so the golden hashes in
+//! `tests/golden/gemmini_hashes.json` pin traced and untraced compiles
+//! alike), and a profiled run reports exactly the counters of an
+//! unprofiled run.
+
+use tvm_accel::accel::gemmini::gemmini_desc;
+use tvm_accel::bench::{square_model, toycar_model};
+use tvm_accel::pipeline::Compiler;
+use tvm_accel::relay::import::to_qnn_graph;
+use tvm_accel::sim::Simulator;
+use tvm_accel::util::prng::Rng;
+
+#[test]
+fn toycar_traced_compile_is_byte_identical() {
+    let model = toycar_model(42).expect("toycar model");
+    let graph = to_qnn_graph(&model).expect("import");
+
+    let plain = Compiler::new(gemmini_desc().unwrap()).compile(&graph).expect("untraced");
+    let traced_out =
+        Compiler::new(gemmini_desc().unwrap()).compile_traced(&graph).expect("traced");
+    let traced = traced_out.deployment;
+
+    assert_eq!(
+        plain.program.items, traced.program.items,
+        "tracing must not perturb the instruction stream"
+    );
+    assert_eq!(
+        plain.program.disassemble(),
+        traced.program.disassemble(),
+        "tracing must not perturb the disassembly (golden hashes pin this)"
+    );
+    assert_eq!(
+        plain.program.layout.total_bytes(),
+        traced.program.layout.total_bytes(),
+        "tracing must not perturb the DRAM layout"
+    );
+    assert_eq!(plain.chosen.len(), traced.chosen.len());
+    for (a, b) in plain.chosen.iter().zip(&traced.chosen) {
+        assert_eq!(a.1, b.1, "{}: tracing must not perturb schedule selection", a.0);
+        assert_eq!(a.2, b.2, "{}: tracing must not perturb profiled cost", a.0);
+    }
+
+    // The traced session really did trace: stage spans under one root,
+    // and at least one solver sweep for this cold compile.
+    let spans = traced_out.trace.spans();
+    assert!(spans.iter().any(|s| s.name == "compile"));
+    assert!(spans.iter().any(|s| s.name == "schedule"));
+    assert!(spans.iter().any(|s| s.name == "sweep"), "cold compile records sweep spans");
+}
+
+#[test]
+fn profiled_run_reports_the_same_counters() {
+    let model = square_model(64, 500).expect("model");
+    let graph = to_qnn_graph(&model).expect("import");
+    let accel = gemmini_desc().unwrap();
+    let dep = Compiler::new(accel.clone()).compile(&graph).expect("compile");
+    let sim = Simulator::new(&accel.arch);
+
+    let input = Rng::new(7).i8_vec(model.batch * model.layers[0].in_dim);
+    let (out_plain, rep_plain) = dep.run(&sim, &input).expect("run");
+    let (out_prof, rep_prof, tl) = dep.run_profiled(&sim, &input).expect("run_profiled");
+
+    assert_eq!(out_plain, out_prof, "profiling must not change the computation");
+    // RunReport holds only scalars and a BTreeMap, so its Debug form is a
+    // deterministic, complete field-by-field comparison.
+    assert_eq!(
+        format!("{rep_plain:?}"),
+        format!("{rep_prof:?}"),
+        "profiling must not change any run counter"
+    );
+    assert!(!tl.slices.is_empty(), "the profiled run captured timeline slices");
+}
