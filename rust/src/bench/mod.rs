@@ -11,8 +11,12 @@
 //!   profile` exports, so bench numbers and profiler timelines agree),
 //!   `<name>.sweeps`, `<name>.solver_leaves`, `<name>.configs_pruned`
 //!   (the search effort behind the compile).
-//! * `BENCH_cycles.json` — per workload: simulated end-to-end cycles
-//!   (`{"<name>": cycles}`).
+//! * `BENCH_cycles.json` — per workload: simulated end-to-end cycles of
+//!   the single-target gemmini compile (`{"<name>": cycles}`) plus the
+//!   overlapped makespan of the same workload compiled against the
+//!   heterogeneous gemmini+vector pair (`{"<name>.overlapped":
+//!   cycles}`) — the graph-level async executor's headline number, gated
+//!   exactly like the serial cycles.
 //!
 //! With `--trace <path>` the CLI additionally writes the concatenated
 //! compile spans of every workload as Chrome-trace JSON
@@ -38,11 +42,12 @@ use std::path::Path;
 use anyhow::{Context, Result};
 
 use crate::accel::gemmini::gemmini_desc;
+use crate::backend::vector::vector_desc;
 use crate::baselines::naive_byoc::import_with_weight_chain;
 use crate::obs::chrome::ChromeTrace;
 use crate::obs::span::Span;
 use crate::obs::spans_to_chrome;
-use crate::pipeline::Compiler;
+use crate::pipeline::{Compiler, MultiCompiler};
 use crate::relay::import::{from_quantized, QModel};
 use crate::relay::quantize::{quantize_mlp, FloatDense};
 use crate::service::protocol::{parse_message, ObjBuilder};
@@ -78,6 +83,10 @@ pub struct WorkloadResult {
     /// Simulated end-to-end cycles of one inference (deterministic —
     /// this is what the CI gate checks).
     pub cycles: u64,
+    /// Overlapped makespan of one inference through the heterogeneous
+    /// gemmini+vector compile of the same workload (deterministic, gated
+    /// like `cycles`; always ≤ that compile's serial total).
+    pub overlapped: u64,
 }
 
 /// Everything one bench run measured.
@@ -105,7 +114,9 @@ impl BenchReport {
     pub fn cycles_json(&self) -> String {
         let mut b = ObjBuilder::new();
         for r in &self.results {
-            b = b.num_field(&r.name, r.cycles);
+            b = b
+                .num_field(&r.name, r.cycles)
+                .num_field(&format!("{}.overlapped", r.name), r.overlapped);
         }
         b.finish()
     }
@@ -142,9 +153,15 @@ impl BenchReport {
         let mut out = String::new();
         for r in &self.results {
             out.push_str(&format!(
-                "{:<16} {:>12} cycles   compile {:>9} µs   {:>3} sweep(s)   \
-                 {:>9} leaf(s) visited   {:>3} config(s) pruned\n",
-                r.name, r.cycles, r.compile_us, r.sweeps, r.solver_leaves, r.configs_pruned
+                "{:<16} {:>12} cycles   {:>12} overlapped   compile {:>9} µs   \
+                 {:>3} sweep(s)   {:>9} leaf(s) visited   {:>3} config(s) pruned\n",
+                r.name,
+                r.cycles,
+                r.overlapped,
+                r.compile_us,
+                r.sweeps,
+                r.solver_leaves,
+                r.configs_pruned
             ));
         }
         out
@@ -205,6 +222,7 @@ pub fn standard_suite() -> Result<Vec<(String, QModel)>> {
 /// sweeps and solver leaves to exactly one workload.
 pub fn run_suite(suite: &[(String, QModel)]) -> Result<BenchReport> {
     let accel = gemmini_desc()?;
+    let vector = vector_desc()?;
     let sim = Simulator::new(&accel.arch);
     let mut results = Vec::new();
     for (name, model) in suite {
@@ -229,6 +247,15 @@ pub fn run_suite(suite: &[(String, QModel)]) -> Result<BenchReport> {
         let x = Rng::new(7).i8_vec(model.batch * model.layers[0].in_dim);
         let (_, rep) =
             dep.run(&sim, &x).with_context(|| format!("simulating '{name}'"))?;
+        // The same workload through the heterogeneous gemmini+vector
+        // pair (fresh compiler, same cold-compile rules): the run prices
+        // the overlapped segment schedule alongside the serial total.
+        let multi = MultiCompiler::new(vec![accel.clone(), vector.clone()])?
+            .compile(&graph)
+            .with_context(|| format!("cold-compiling '{name}' (gemmini+vector)"))?;
+        let (_, multi_rep) = multi
+            .run(&x)
+            .with_context(|| format!("simulating '{name}' (gemmini+vector)"))?;
         results.push(WorkloadResult {
             name: name.clone(),
             compile_us,
@@ -237,6 +264,7 @@ pub fn run_suite(suite: &[(String, QModel)]) -> Result<BenchReport> {
             solver_leaves: compiler.solver_leaves_visited(),
             configs_pruned: compiler.configs_pruned(),
             cycles: rep.cycles,
+            overlapped: multi_rep.overlapped_cycles,
         });
     }
     Ok(BenchReport { results })
@@ -313,7 +341,9 @@ pub fn check_against_baseline(
     let cycles_path = baseline_dir.join(CYCLES_FILE);
     match read_flat_json(&cycles_path) {
         None => {
-            out.bootstrap_entries += report.results.len();
+            // Two gated entries per workload: serial cycles and the
+            // overlapped makespan.
+            out.bootstrap_entries += 2 * report.results.len();
             out.notes.push(format!(
                 "no cycle baseline at {} — recording only",
                 cycles_path.display()
@@ -321,35 +351,39 @@ pub fn check_against_baseline(
         }
         Some(base) => {
             for r in &report.results {
-                match base.num_field(&r.name) {
-                    None => {
-                        out.bootstrap_entries += 1;
-                        out.notes.push(format!(
-                            "{}: no baseline entry — recording only",
-                            r.name
-                        ))
-                    }
-                    Some(b) if b <= 0.0 => {
-                        out.bootstrap_entries += 1;
-                        out.notes.push(format!(
-                            "{}: baseline unset (0) — gate activates once a measured \
-                             baseline is committed",
-                            r.name
-                        ))
-                    }
-                    Some(b) => {
-                        let delta_pct = (r.cycles as f64 - b) / b * 100.0;
-                        if delta_pct > max_regress_pct {
-                            out.failures.push(format!(
-                                "{}: {} simulated cycles vs baseline {} \
-                                 ({:+.1}% > {:.1}% allowed)",
-                                r.name, r.cycles, b as u64, delta_pct, max_regress_pct
-                            ));
-                        } else {
+                let tracked = [
+                    (r.name.clone(), r.cycles),
+                    (format!("{}.overlapped", r.name), r.overlapped),
+                ];
+                for (key, current) in tracked {
+                    match base.num_field(&key) {
+                        None => {
+                            out.bootstrap_entries += 1;
                             out.notes.push(format!(
-                                "{}: {} cycles vs baseline {} ({:+.1}%)",
-                                r.name, r.cycles, b as u64, delta_pct
-                            ));
+                                "{key}: no baseline entry — recording only"
+                            ))
+                        }
+                        Some(b) if b <= 0.0 => {
+                            out.bootstrap_entries += 1;
+                            out.notes.push(format!(
+                                "{key}: baseline unset (0) — gate activates once a \
+                                 measured baseline is committed"
+                            ))
+                        }
+                        Some(b) => {
+                            let delta_pct = (current as f64 - b) / b * 100.0;
+                            if delta_pct > max_regress_pct {
+                                out.failures.push(format!(
+                                    "{key}: {current} simulated cycles vs baseline {} \
+                                     ({:+.1}% > {:.1}% allowed)",
+                                    b as u64, delta_pct, max_regress_pct
+                                ));
+                            } else {
+                                out.notes.push(format!(
+                                    "{key}: {current} cycles vs baseline {} ({:+.1}%)",
+                                    b as u64, delta_pct
+                                ));
+                            }
                         }
                     }
                 }
@@ -387,6 +421,7 @@ mod tests {
                     solver_leaves: 50,
                     configs_pruned: 1,
                     cycles: 1100,
+                    overlapped: 880,
                 },
                 WorkloadResult {
                     name: "b".into(),
@@ -396,6 +431,7 @@ mod tests {
                     solver_leaves: 80,
                     configs_pruned: 0,
                     cycles: 900,
+                    overlapped: 700,
                 },
             ],
         }
@@ -416,6 +452,8 @@ mod tests {
         let cycles = read_flat_json(&dir.join(CYCLES_FILE)).unwrap();
         assert_eq!(cycles.num_field("a"), Some(1100.0));
         assert_eq!(cycles.num_field("b"), Some(900.0));
+        assert_eq!(cycles.num_field("a.overlapped"), Some(880.0));
+        assert_eq!(cycles.num_field("b.overlapped"), Some(700.0));
         let compile = read_flat_json(&dir.join(COMPILE_FILE)).unwrap();
         assert_eq!(compile.num_field("a.compile_us"), Some(1000.0));
         assert_eq!(compile.num_field("b.sweeps"), Some(5.0));
@@ -427,8 +465,13 @@ mod tests {
     fn gate_fails_only_on_regression_beyond_threshold() {
         let dir = tmp_dir("gate");
         // Baseline: 'a' at 1000 (current 1100 = +10%), 'b' at 1000
-        // (current 900, an improvement — never a failure).
-        std::fs::write(dir.join(CYCLES_FILE), "{\"a\":1000,\"b\":1000}\n").unwrap();
+        // (current 900, an improvement — never a failure); both
+        // overlapped entries at their current values (0%).
+        std::fs::write(
+            dir.join(CYCLES_FILE),
+            "{\"a\":1000,\"a.overlapped\":880,\"b\":1000,\"b.overlapped\":700}\n",
+        )
+        .unwrap();
         let rep = fake_report();
         let loose = check_against_baseline(&rep, &dir, 15.0);
         assert!(loose.passed(), "+10% within a 15% gate: {:?}", loose.failures);
@@ -449,11 +492,15 @@ mod tests {
         assert!(missing.passed(), "no baseline file = record-only");
         assert!(!missing.notes.is_empty());
         assert!(!missing.armed(), "no baseline file means the gate is unarmed");
-        std::fs::write(dir.join(CYCLES_FILE), "{\"a\":0,\"b\":0}\n").unwrap();
+        std::fs::write(
+            dir.join(CYCLES_FILE),
+            "{\"a\":0,\"a.overlapped\":0,\"b\":0,\"b.overlapped\":0}\n",
+        )
+        .unwrap();
         let zero = check_against_baseline(&rep, &dir, 10.0);
         assert!(zero.passed(), "zero baseline = bootstrap, record-only");
         assert!(zero.notes.iter().any(|n| n.contains("baseline unset")));
-        assert_eq!(zero.bootstrap_entries, 2);
+        assert_eq!(zero.bootstrap_entries, 4, "two tracked entries per workload");
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -462,12 +509,20 @@ mod tests {
         let rep = fake_report();
         let dir = tmp_dir("warn");
         // All-zero bootstrap baseline: the rendered outcome must shout.
-        std::fs::write(dir.join(CYCLES_FILE), "{\"a\":0,\"b\":0}\n").unwrap();
+        std::fs::write(
+            dir.join(CYCLES_FILE),
+            "{\"a\":0,\"a.overlapped\":0,\"b\":0,\"b.overlapped\":0}\n",
+        )
+        .unwrap();
         let boot = check_against_baseline(&rep, &dir, 10.0);
         assert!(boot.render().contains("WARNING"), "got: {}", boot.render());
         assert!(boot.render().contains("record-only bootstrap"));
         // Measured baseline: armed, no warning.
-        std::fs::write(dir.join(CYCLES_FILE), "{\"a\":1000,\"b\":1000}\n").unwrap();
+        std::fs::write(
+            dir.join(CYCLES_FILE),
+            "{\"a\":1000,\"a.overlapped\":880,\"b\":1000,\"b.overlapped\":700}\n",
+        )
+        .unwrap();
         let armed = check_against_baseline(&rep, &dir, 15.0);
         assert!(armed.armed());
         assert!(!armed.render().contains("WARNING"), "got: {}", armed.render());
@@ -475,9 +530,30 @@ mod tests {
     }
 
     #[test]
+    fn overlapped_regressions_fail_the_gate() {
+        let dir = tmp_dir("overlapped");
+        // Serial cycles at current values; 'a' overlapped baseline 800
+        // (current 880 = +10%) regresses past a 5% gate.
+        std::fs::write(
+            dir.join(CYCLES_FILE),
+            "{\"a\":1100,\"a.overlapped\":800,\"b\":900,\"b.overlapped\":700}\n",
+        )
+        .unwrap();
+        let out = check_against_baseline(&fake_report(), &dir, 5.0);
+        assert!(!out.passed(), "overlapped makespan is gated too");
+        assert_eq!(out.failures.len(), 1, "{:?}", out.failures);
+        assert!(out.failures[0].starts_with("a.overlapped:"), "{:?}", out.failures);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
     fn compile_time_deltas_are_advisory() {
         let dir = tmp_dir("advisory");
-        std::fs::write(dir.join(CYCLES_FILE), "{\"a\":1100,\"b\":900}\n").unwrap();
+        std::fs::write(
+            dir.join(CYCLES_FILE),
+            "{\"a\":1100,\"a.overlapped\":880,\"b\":900,\"b.overlapped\":700}\n",
+        )
+        .unwrap();
         // Wildly slower compiles than baseline must not fail the gate.
         std::fs::write(
             dir.join(COMPILE_FILE),
@@ -497,8 +573,10 @@ mod tests {
         assert_eq!(rep.results.len(), 1);
         let r = &rep.results[0];
         assert!(r.cycles > 0, "one simulated inference ran");
+        assert!(r.overlapped > 0, "the gemmini+vector compile priced its overlap");
         assert!(r.sweeps > 0 && r.solver_leaves > 0, "cold compile searched");
         assert!(rep.cycles_json().contains("(64, 64, 64)"));
+        assert!(rep.cycles_json().contains("(64, 64, 64).overlapped"));
         assert!(!rep.render().is_empty());
         // Span-derived timing: the compile root span exists and covers
         // every stage span recorded under it.

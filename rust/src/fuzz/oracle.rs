@@ -22,6 +22,7 @@
 //! | `batch/exact`         | `run_batch` outputs == per-input `run` outputs   |
 //! | `batch/serial-sum`    | `serial_cycles` == Σ per-inference cycles        |
 //! | `batch/pipelined-le-serial` | pipelined ≤ serial (single and multi)      |
+//! | `async/overlap-le-serial` | overlapped makespan nonzero and ≤ serial on every multi run |
 //!
 //! The multi-target axis checks every pairing in
 //! [`multi_target_pairings`]: the heterogeneous systolic pair
@@ -353,6 +354,18 @@ pub fn check_case(case: &FuzzCase) -> Verdict {
                             tag,
                             "exact/multi",
                             format!("input {i}: {}", first_diff(&got, &want[i])),
+                        );
+                    }
+                    // Every multi-target run prices the overlapped
+                    // schedule; it can never exceed the serial total.
+                    if rep.overlapped_cycles == 0 || rep.overlapped_cycles > rep.cycles {
+                        return fail_on(
+                            tag,
+                            "async/overlap-le-serial",
+                            format!(
+                                "input {i}: overlapped {} vs serial {}",
+                                rep.overlapped_cycles, rep.cycles
+                            ),
                         );
                     }
                     if i == 0 {

@@ -115,10 +115,17 @@ pub fn table2(rows: &[LatencyRow]) -> Table {
 
 /// One-line textual summary of a run report, including the
 /// data-movement counters (`dram_transfer_cycles`, `input_stage_cycles`)
-/// the cross-layer and double-buffering optimizations act on.
+/// the cross-layer and double-buffering optimizations act on. Multi-target
+/// runs (nonzero [`RunReport::overlapped_cycles`]) additionally show the
+/// overlapped makespan next to the serial total.
 pub fn describe(name: &str, rep: &RunReport, pe_dim: usize) -> String {
+    let overlap = if rep.overlapped_cycles > 0 {
+        format!(" (overlapped {})", commafy(rep.overlapped_cycles))
+    } else {
+        String::new()
+    };
     format!(
-        "{name}: {} cycles (host {}), util {:.1}%, dram {}/{} B ({} xfer cyc), \
+        "{name}: {} cycles{overlap} (host {}), util {:.1}%, dram {}/{} B ({} xfer cyc), \
          staged-in {} cyc, {} cmds",
         commafy(rep.cycles),
         commafy(rep.host_cycles),
@@ -180,5 +187,9 @@ mod tests {
         let s = describe("w", &rep, 16);
         assert!(s.contains("321 xfer cyc"), "missing dram_transfer_cycles: {s}");
         assert!(s.contains("staged-in 45 cyc"), "missing input_stage_cycles: {s}");
+        assert!(!s.contains("overlapped"), "single-target runs stay quiet: {s}");
+        let multi = RunReport { overlapped_cycles: 800, ..rep };
+        let s = describe("w", &multi, 16);
+        assert!(s.contains("(overlapped 800)"), "overlapped makespan surfaced: {s}");
     }
 }

@@ -88,6 +88,17 @@ impl Timeline {
     pub fn horizon(&self) -> u64 {
         self.slices.iter().map(|s| s.end).max().unwrap_or(0)
     }
+
+    /// Shift every slice `offset` cycles later. The simulator records
+    /// slice-local timestamps; a multi-target profile shifts each
+    /// segment's timeline by its *overlapped-schedule* start cycle so the
+    /// exported tracks show true concurrent starts, not serial offsets.
+    pub fn shift(&mut self, offset: u64) {
+        for s in &mut self.slices {
+            s.start += offset;
+            s.end += offset;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -107,5 +118,18 @@ mod tests {
         assert_eq!(tl.busy(Track::Host), 0);
         assert_eq!(tl.horizon(), 20);
         assert_eq!(tl.track(Track::Dma).len(), 2);
+    }
+
+    #[test]
+    fn shift_moves_every_slice_by_the_offset() {
+        let mut tl = Timeline::new();
+        tl.push(Track::Dma, "mvin", 0, 10);
+        tl.push(Track::Host, "host.memcpy", 12, 20);
+        tl.shift(100);
+        assert_eq!(tl.slices[0].start, 100);
+        assert_eq!(tl.slices[0].end, 110);
+        assert_eq!(tl.slices[1].start, 112);
+        assert_eq!(tl.horizon(), 120);
+        assert_eq!(tl.busy(Track::Dma), 10, "shift preserves slice lengths");
     }
 }

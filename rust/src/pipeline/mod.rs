@@ -65,7 +65,7 @@ use crate::workload::{Dim, Gemm};
 
 pub use multi::{
     LayerAssignment, LayerBoundary, MultiCompiler, MultiDeployment, MultiSessionOutput,
-    ProgramSegment,
+    OverlapReport, ProgramSegment,
 };
 pub use session::{CompilerSession, ScheduleStats, SessionOutput, StageReport};
 

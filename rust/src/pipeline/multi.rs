@@ -20,10 +20,22 @@
 //! stage would run, and repeated shapes (per target) are searched once.
 //! Two candidates describing the same machine even share entries.
 //!
-//! Execution is a serial handoff: each [`ProgramSegment`] runs on its
-//! target's simulator, all segments share one DRAM, and the per-segment
-//! reports are summed. Overlapping execution across target boundaries is
-//! a ROADMAP follow-on.
+//! Functionally, execution is a serial handoff: each [`ProgramSegment`]
+//! runs on its target's simulator, all segments share one DRAM, and the
+//! per-segment reports are summed ([`RunReport::cycles`] stays that
+//! serial total, so outputs — and single-target programs — are untouched
+//! by anything below). On top of it every run *also* prices the
+//! graph-level asynchronous schedule: segments are placed by data
+//! dependency, so a consumer segment may start while its producer is
+//! still running — its double-buffered reload of the boundary activation
+//! (the first cycles of its head) only has to land after the producer's
+//! last write of that region — and segments on different targets proceed
+//! concurrently, each target's track serializing internally. The
+//! simulator observes the actual boundary-region access times
+//! ([`crate::sim::BoundaryWatch`]), the schedule is computed from them,
+//! and the resulting makespan is reported as
+//! [`RunReport::overlapped_cycles`] (provably ≤ the serial total) and in
+//! per-segment detail as [`OverlapReport`].
 
 use std::sync::Arc;
 
@@ -37,7 +49,7 @@ use crate::relay::Graph;
 use crate::scheduler::cache::{CacheStats, ScheduleCache};
 use crate::scheduler::Schedule;
 use crate::sim::report::RunReport;
-use crate::sim::Simulator;
+use crate::sim::{BoundaryWatch, Simulator};
 
 use super::session::{render_stage_reports, ScheduleStats, StageReport};
 use super::{BatchRun, CompileOptions, Compiler, CompilerSession, SessionMemo};
@@ -71,6 +83,12 @@ pub struct LayerBoundary {
     pub to: String,
     /// Switch penalty in cycles.
     pub penalty: u64,
+    /// The portion of `penalty` the overlapped executor hides by
+    /// double-buffering the consumer's boundary reload under the
+    /// producer's tail (see
+    /// [`crate::scheduler::graph::switch_overlap_discount`]); the
+    /// partitioner charges `penalty - overlap_discount`.
+    pub overlap_discount: u64,
     /// Whether this switch won the placement.
     pub taken: bool,
 }
@@ -102,6 +120,13 @@ pub struct MultiDeployment {
     pub program: Program,
     /// Per-target segments covering `program.items` in execution order.
     pub segments: Vec<ProgramSegment>,
+    /// Per-segment boundary activation regions, parallel to `segments`:
+    /// entry *i* is the DRAM `(offset, bytes)` range the activation
+    /// crossing the segment *i−1* → *i* handoff occupies (`None` for the
+    /// first segment, which consumes the graph input instead). Segment
+    /// *i*'s executor watches entry *i* as its incoming region and entry
+    /// *i+1* as its outgoing one to time the overlapped schedule.
+    pub boundary_regions: Vec<Option<(u64, u64)>>,
     /// The processed (post-frontend) graph.
     pub graph: Graph,
     /// DRAM byte offset of the int8 input region.
@@ -120,47 +145,176 @@ pub struct MultiDeployment {
     pub boundaries: Vec<LayerBoundary>,
 }
 
+/// The overlapped (graph-level asynchronous) schedule of one
+/// multi-deployment run, computed from the boundary access times the
+/// simulator observed. All vectors are parallel to
+/// [`MultiDeployment::segments`].
+#[derive(Debug, Clone, Default)]
+pub struct OverlapReport {
+    /// Global start cycle of each segment under the overlapped schedule.
+    pub starts: Vec<u64>,
+    /// Measured duration of each segment (its serial `RunReport::cycles`).
+    pub durations: Vec<u64>,
+    /// Segment-local cycle of each segment's *first read* of its incoming
+    /// boundary region — the head it can run before needing the
+    /// producer's data (0 when unobserved: no claimed overlap).
+    pub heads: Vec<u64>,
+    /// Segment-local cycle of each segment's *last write* to its outgoing
+    /// boundary region — when its consumer's data is ready (the duration
+    /// when unobserved: release only at segment end).
+    pub readies: Vec<u64>,
+    /// Serial handoff total (Σ durations) — equals `RunReport::cycles`.
+    pub serial_cycles: u64,
+    /// Overlapped makespan: max over segments of `start + duration`.
+    /// Always ≤ `serial_cycles`.
+    pub overlapped_cycles: u64,
+}
+
+impl OverlapReport {
+    /// Cycles the overlapped schedule saves over the serial handoff.
+    pub fn saved_cycles(&self) -> u64 {
+        self.serial_cycles - self.overlapped_cycles
+    }
+}
+
+/// Place segments under the dependency-driven overlapped model: segment
+/// *i* starts at the later of (a) when its target's track frees up and
+/// (b) the latest start at which its first boundary read (`heads[i]`
+/// cycles in) still lands after the producer's release
+/// (`start_{i-1} + readies[i-1]`). Since `readies[i] ≤ durations[i]`,
+/// induction gives `starts[i] ≤ Σ_{j<i} durations[j]`, hence
+/// overlapped ≤ serial.
+fn overlap_schedule(
+    n_targets: usize,
+    segments: &[ProgramSegment],
+    durations: Vec<u64>,
+    heads: Vec<u64>,
+    readies: Vec<u64>,
+) -> OverlapReport {
+    let mut avail = vec![0u64; n_targets];
+    let mut prev_release = 0u64;
+    let mut starts = Vec::with_capacity(segments.len());
+    for (i, seg) in segments.iter().enumerate() {
+        let dep = if i == 0 { 0 } else { prev_release.saturating_sub(heads[i]) };
+        let start = avail[seg.target].max(dep);
+        starts.push(start);
+        avail[seg.target] = start + durations[i];
+        prev_release = start + readies[i];
+    }
+    let overlapped_cycles =
+        starts.iter().zip(&durations).map(|(s, d)| s + d).max().unwrap_or(0);
+    let serial_cycles = durations.iter().sum();
+    OverlapReport { starts, durations, heads, readies, serial_cycles, overlapped_cycles }
+}
+
 impl MultiDeployment {
     fn simulators(&self) -> Vec<Simulator> {
         self.targets.iter().map(|t| Simulator::new(&t.arch)).collect()
     }
 
-    fn run_segments(
-        &self,
-        sims: &[Simulator],
-        dram: &mut crate::sim::memory::Dram,
-    ) -> Result<RunReport> {
-        let mut rep = RunReport::default();
-        // Double-buffered input staging needs a spare slot in the first
-        // layer's input buffer (see `Deployment`'s hint of the same name).
-        let hint = match self.assignments.first() {
+    /// Double-buffered input staging needs a spare slot in the first
+    /// layer's input buffer (see `Deployment`'s hint of the same name).
+    fn input_hint(&self) -> Option<(u64, u64)> {
+        match self.assignments.first() {
             Some(a) if a.schedule.double_buffer => {
                 Some((self.input_offset, self.input_elems as u64))
             }
             _ => None,
-        };
-        for seg in &self.segments {
+        }
+    }
+
+    /// The boundary regions segment `i` watches while executing: incoming
+    /// is the activation it consumes across the handoff into it, outgoing
+    /// the one it produces for the next segment.
+    fn watch_for(&self, i: usize) -> BoundaryWatch {
+        BoundaryWatch {
+            incoming: self.boundary_regions.get(i).copied().flatten(),
+            outgoing: self.boundary_regions.get(i + 1).copied().flatten(),
+        }
+    }
+
+    /// Execute every segment (serial, fence-drained handoff over the
+    /// shared DRAM), watching each segment's boundary regions, then place
+    /// the segments under the overlapped schedule. The merged report's
+    /// `overlapped_cycles` carries the makespan; with `timelines` set,
+    /// one per-segment [`Timeline`] is captured and shifted to its
+    /// overlapped start so the tracks show true concurrent starts.
+    fn run_segments(
+        &self,
+        sims: &[Simulator],
+        dram: &mut crate::sim::memory::Dram,
+        mut timelines: Option<&mut Vec<(String, Timeline)>>,
+    ) -> Result<(RunReport, OverlapReport)> {
+        let mut rep = RunReport::default();
+        let hint = self.input_hint();
+        let n = self.segments.len();
+        let (mut durations, mut heads, mut readies) =
+            (Vec::with_capacity(n), Vec::with_capacity(n), Vec::with_capacity(n));
+        for (i, seg) in self.segments.iter().enumerate() {
             let sim = sims
                 .get(seg.target)
                 .with_context(|| format!("segment names unknown target {}", seg.target))?;
-            let r = sim
-                .run_slice_hinted(&self.program, dram, seg.start..seg.end, hint)
-                .with_context(|| {
-                    format!(
-                        "items {}..{} on target '{}'",
-                        seg.start, seg.end, self.targets[seg.target].name
-                    )
-                })?;
+            let watch = self.watch_for(i);
+            let ctx = || {
+                format!(
+                    "items {}..{} on target '{}'",
+                    seg.start, seg.end, self.targets[seg.target].name
+                )
+            };
+            let (r, obs) = match timelines.as_deref_mut() {
+                Some(tls) => {
+                    let mut tl = Timeline::new();
+                    let out = sim
+                        .run_slice_observed(
+                            &self.program,
+                            dram,
+                            seg.start..seg.end,
+                            hint,
+                            watch,
+                            &mut tl,
+                        )
+                        .with_context(ctx)?;
+                    tls.push((self.targets[seg.target].name.clone(), tl));
+                    out
+                }
+                None => sim
+                    .run_slice_watched(&self.program, dram, seg.start..seg.end, hint, watch)
+                    .with_context(ctx)?,
+            };
+            durations.push(r.cycles);
+            // Unobserved boundaries fall back to "no head to run early,
+            // data ready only at segment end" — never claiming overlap
+            // the execution didn't exhibit. `ready ≤ duration` is what
+            // makes overlapped ≤ serial provable, so clamp.
+            heads.push(obs.first_read.unwrap_or(0));
+            readies.push(obs.last_write.unwrap_or(r.cycles).min(r.cycles));
             rep.merge(&r);
         }
-        Ok(rep)
+        let ov = overlap_schedule(self.targets.len(), &self.segments, durations, heads, readies);
+        rep.overlapped_cycles = ov.overlapped_cycles;
+        if let Some(tls) = timelines {
+            for (tl, &start) in tls.iter_mut().zip(&ov.starts) {
+                tl.1.shift(start);
+            }
+        }
+        Ok((rep, ov))
     }
 
     /// Run one inference: stage constants into a fresh DRAM, write the
     /// int8 input, execute each segment on its target's simulator (serial
     /// handoff over the shared DRAM), and read the int8 output. The
-    /// report is the sum over segments.
+    /// report is the sum over segments, with
+    /// [`RunReport::overlapped_cycles`] carrying the overlapped makespan.
     pub fn run(&self, input: &[i8]) -> Result<(Vec<i8>, RunReport)> {
+        let (out, rep, _) = self.run_overlapped(input)?;
+        Ok((out, rep))
+    }
+
+    /// [`MultiDeployment::run`], additionally returning the full
+    /// per-segment [`OverlapReport`]: where each segment starts under the
+    /// dependency-driven schedule, its observed boundary head/ready
+    /// cycles, and the serial vs overlapped totals.
+    pub fn run_overlapped(&self, input: &[i8]) -> Result<(Vec<i8>, RunReport, OverlapReport)> {
         ensure!(
             input.len() == self.input_elems,
             "input has {} elems, model wants {}",
@@ -170,17 +324,18 @@ impl MultiDeployment {
         let sims = self.simulators();
         let mut dram = self.program.make_dram()?;
         dram.write_i8_slice(self.input_offset, input)?;
-        let rep = self.run_segments(&sims, &mut dram)?;
+        let (rep, ov) = self.run_segments(&sims, &mut dram, None)?;
         let out = dram.read_i8_slice(self.output_offset, self.output_elems)?;
-        Ok((out, rep))
+        Ok((out, rep, ov))
     }
 
     /// [`MultiDeployment::run`] with execution-timeline capture: one
     /// [`Timeline`] per program segment, labeled with the executing
-    /// target's display name, each with cycle timestamps local to its
-    /// segment (a serial handoff — concatenate with accumulated offsets
-    /// to view end to end). Outputs and the merged report are identical
-    /// to an unprofiled run.
+    /// target's display name. Each timeline is shifted to its segment's
+    /// *overlapped-schedule* start cycle, so exporting the tracks side by
+    /// side shows the true concurrent starts (a consumer's head under its
+    /// producer's tail), not serial offsets. Outputs and the merged
+    /// report are identical to an unprofiled run.
     pub fn run_profiled(
         &self,
         input: &[i8],
@@ -194,42 +349,25 @@ impl MultiDeployment {
         let sims = self.simulators();
         let mut dram = self.program.make_dram()?;
         dram.write_i8_slice(self.input_offset, input)?;
-        let hint = match self.assignments.first() {
-            Some(a) if a.schedule.double_buffer => {
-                Some((self.input_offset, self.input_elems as u64))
-            }
-            _ => None,
-        };
-        let mut rep = RunReport::default();
         let mut timelines = Vec::with_capacity(self.segments.len());
-        for seg in &self.segments {
-            let sim = sims
-                .get(seg.target)
-                .with_context(|| format!("segment names unknown target {}", seg.target))?;
-            let mut tl = Timeline::new();
-            let r = sim
-                .run_slice_profiled(&self.program, &mut dram, seg.start..seg.end, hint, &mut tl)
-                .with_context(|| {
-                    format!(
-                        "items {}..{} on target '{}'",
-                        seg.start, seg.end, self.targets[seg.target].name
-                    )
-                })?;
-            rep.merge(&r);
-            timelines.push((self.targets[seg.target].name.clone(), tl));
-        }
+        let (rep, _) = self.run_segments(&sims, &mut dram, Some(&mut timelines))?;
         let out = dram.read_i8_slice(self.output_offset, self.output_elems)?;
         Ok((out, rep, timelines))
     }
 
     /// Run many inferences back to back, staging the DRAM image once
-    /// (mirrors [`super::Deployment::run_batch`], including the pipelined
-    /// batch timing model in the returned [`BatchRun`]).
+    /// (mirrors [`super::Deployment::run_batch`]). The returned
+    /// [`BatchRun`]'s pipelined model is the better of the host-prefix
+    /// overlap (inference *i+1*'s preprocessing under inference *i*'s
+    /// accelerator work) and the full cross-accelerator layer pipeline:
+    /// inference *i+1*'s head segments start on target A as soon as A's
+    /// track frees, while inference *i*'s tail still occupies target B.
     pub fn run_batch(&self, inputs: &[&[i8]]) -> Result<BatchRun> {
         let sims = self.simulators();
         let mut dram = self.program.make_dram()?;
         let mut outputs = Vec::with_capacity(inputs.len());
         let mut reports = Vec::with_capacity(inputs.len());
+        let mut overlaps = Vec::with_capacity(inputs.len());
         for (i, input) in inputs.iter().enumerate() {
             ensure!(
                 input.len() == self.input_elems,
@@ -238,10 +376,37 @@ impl MultiDeployment {
                 self.input_elems
             );
             dram.write_i8_slice(self.input_offset, input)?;
-            reports.push(self.run_segments(&sims, &mut dram)?);
+            let (rep, ov) = self.run_segments(&sims, &mut dram, None)?;
+            reports.push(rep);
+            overlaps.push(ov);
             outputs.push(dram.read_i8_slice(self.output_offset, self.output_elems)?);
         }
-        Ok(BatchRun::new(outputs, reports))
+        let mut brun = BatchRun::new(outputs, reports);
+        brun.pipelined_cycles =
+            brun.pipelined_cycles.min(self.batch_overlap_makespan(&overlaps));
+        Ok(brun)
+    }
+
+    /// Makespan of the whole batch under the segment-level pipeline:
+    /// per-target availability persists *across* inferences, so inference
+    /// *i+1* claims target A the moment A's track frees, while within an
+    /// inference the usual dependency/head-overlap placement applies. A
+    /// single-segment deployment degenerates to the serial total, so
+    /// `run_batch`'s `min` keeps the host-prefix model there.
+    fn batch_overlap_makespan(&self, overlaps: &[OverlapReport]) -> u64 {
+        let mut avail = vec![0u64; self.targets.len()];
+        let mut makespan = 0u64;
+        for ov in overlaps {
+            let mut prev_release = 0u64;
+            for (i, seg) in self.segments.iter().enumerate() {
+                let dep = if i == 0 { 0 } else { prev_release.saturating_sub(ov.heads[i]) };
+                let start = avail[seg.target].max(dep);
+                avail[seg.target] = start + ov.durations[i];
+                prev_release = start + ov.readies[i];
+                makespan = makespan.max(start + ov.durations[i]);
+            }
+        }
+        makespan
     }
 
     /// Number of layers assigned to accelerator `target`.
@@ -250,20 +415,36 @@ impl MultiDeployment {
     }
 
     /// Render the evaluated target-switch boundaries (penalty in cycles,
-    /// taken or avoided) as an indented summary.
+    /// how much of it the overlapped executor hides, taken or avoided) as
+    /// an indented summary.
     pub fn render_boundaries(&self) -> String {
         let mut out = String::new();
         for b in &self.boundaries {
             out.push_str(&format!(
-                "{:<12} {} -> {}: switch cost {} cycles ({})\n",
+                "{:<12} {} -> {}: switch cost {} cycles, overlap hides {} ({})\n",
                 b.layer,
                 b.from,
                 b.to,
                 b.penalty,
+                b.overlap_discount.min(b.penalty),
                 if b.taken { "taken" } else { "avoided" }
             ));
         }
         out
+    }
+
+    /// The partitioner's compile-time estimate of the serial vs overlapped
+    /// end-to-end cycles: profiled per-layer costs plus taken switch
+    /// penalties, with the overlap discount of every taken boundary
+    /// subtracted from the overlapped figure. Returns
+    /// `(serial_estimate, overlapped_estimate)`.
+    pub fn overlap_estimate(&self) -> (u64, u64) {
+        let compute: u64 = self.assignments.iter().map(|a| a.cycles.unwrap_or(0)).sum();
+        let taken = self.boundaries.iter().filter(|b| b.taken);
+        let (switch, hidden) = taken.fold((0u64, 0u64), |(s, h), b| {
+            (s + b.penalty, h + b.overlap_discount.min(b.penalty))
+        });
+        (compute + switch, compute + switch - hidden)
     }
 
     /// Render the per-layer target choices as an indented summary.
@@ -465,6 +646,64 @@ mod tests {
         assert_eq!(md.output_offset, plain.output_offset);
         let all = ProgramSegment { target: 0, start: 0, end: md.program.items.len() };
         assert_eq!(md.segments, vec![all]);
+        // One segment has nothing to overlap with: the makespan equals the
+        // serial total.
+        let mut rng = Rng::new(21);
+        let (_, rep, ov) = md.run_overlapped(&rng.i8_vec(4 * 32)).unwrap();
+        assert_eq!(ov.overlapped_cycles, ov.serial_cycles);
+        assert_eq!(rep.overlapped_cycles, rep.cycles);
+        assert_eq!(ov.saved_cycles(), 0);
+    }
+
+    #[test]
+    fn overlap_schedule_hides_head_under_producer_tail() {
+        let segs = [
+            ProgramSegment { target: 0, start: 0, end: 1 },
+            ProgramSegment { target: 1, start: 1, end: 2 },
+        ];
+        // Producer releases its boundary write at cycle 80 (of 100); the
+        // consumer first reads it 30 cycles into its own run. The consumer
+        // may therefore start at 80 - 30 = 50, overlapping its head with
+        // the producer's tail: makespan 50 + 60 = 110 < 160 serial.
+        let ov = overlap_schedule(2, &segs, vec![100, 60], vec![0, 30], vec![80, 60]);
+        assert_eq!(ov.starts, vec![0, 50]);
+        assert_eq!(ov.serial_cycles, 160);
+        assert_eq!(ov.overlapped_cycles, 110);
+        assert_eq!(ov.saved_cycles(), 50);
+        // Unobserved boundaries (head 0, ready = duration) degenerate to
+        // the serial handoff.
+        let ov = overlap_schedule(2, &segs, vec![100, 60], vec![0, 0], vec![100, 60]);
+        assert_eq!(ov.starts, vec![0, 100]);
+        assert_eq!(ov.overlapped_cycles, ov.serial_cycles);
+    }
+
+    #[test]
+    fn overlap_schedule_never_self_overlaps_a_target_track() {
+        // Three segments, the outer two on target 0: even with a huge head
+        // on segment 2, target 0's track must serialize.
+        let segs = [
+            ProgramSegment { target: 0, start: 0, end: 1 },
+            ProgramSegment { target: 1, start: 1, end: 2 },
+            ProgramSegment { target: 0, start: 2, end: 3 },
+        ];
+        let ov = overlap_schedule(
+            2,
+            &segs,
+            vec![100, 50, 40],
+            vec![0, 50, 40],
+            vec![50, 10, 40],
+        );
+        // Segment 1's head covers the whole producer wait (start 0 legal),
+        // but its track is target 1 so it can truly start at 0; segment 2
+        // would also be dependency-free early, yet target 0 is busy until
+        // cycle 100.
+        assert_eq!(ov.starts, vec![0, 0, 100]);
+        assert!(ov.overlapped_cycles <= ov.serial_cycles);
+        // Dependency invariant: every consumer's first boundary read lands
+        // at or after its producer's release.
+        for i in 1..3 {
+            assert!(ov.starts[i] + ov.heads[i] >= ov.starts[i - 1] + ov.readies[i - 1]);
+        }
     }
 
     #[test]
@@ -498,6 +737,19 @@ mod tests {
         let want = eval(&graph, &m).unwrap();
         assert_eq!(TensorData::I8(got), want[0].data);
         assert!(rep.cycles > 0);
+
+        // The overlapped makespan is priced on every run, never exceeds
+        // the serial handoff, and the detailed report is consistent.
+        let (got2, rep2, ov) = dep.run_overlapped(&input).unwrap();
+        assert_eq!(TensorData::I8(got2), want[0].data);
+        assert!(rep.overlapped_cycles > 0);
+        assert!(rep.overlapped_cycles <= rep.cycles);
+        assert_eq!(rep2.overlapped_cycles, rep.overlapped_cycles);
+        assert_eq!(ov.serial_cycles, rep.cycles);
+        assert_eq!(ov.overlapped_cycles, rep.overlapped_cycles);
+        assert_eq!(ov.starts.len(), dep.segments.len());
+        let (est_serial, est_overlapped) = dep.overlap_estimate();
+        assert!(est_overlapped <= est_serial);
 
         // Batch runs agree with individual runs; the pipelined batch model
         // never exceeds the serial total.

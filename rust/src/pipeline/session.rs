@@ -58,7 +58,8 @@ use crate::relay::partition::{partition, partition_multi, PartitionedGraph, Targ
 use crate::relay::{Graph, Node, Op, TensorData};
 use crate::scheduler::cache::accel_fingerprint;
 use crate::scheduler::graph::{
-    plan as plan_residency, switch_round_trip_cycles, LayerResidency, LayerSched,
+    plan as plan_residency, switch_overlap_discount, switch_round_trip_cycles, LayerResidency,
+    LayerSched,
 };
 use crate::scheduler::Schedule;
 use crate::tir::TirFunc;
@@ -411,26 +412,34 @@ impl<'a> CompilerSession<'a> {
                 // via cross-layer residency. Previously switching was free.
                 // The penalty is the *foregone elision*, so it only applies
                 // where residency could actually happen: pass enabled and a
-                // single-use, non-output activation.
+                // single-use, non-output activation. The second tuple field
+                // is the overlap discount — the consumer-side load half the
+                // overlapped executor hides under the producer's tail — so
+                // placements are costed against the overlapped makespan
+                // rather than the serial handoff sum.
                 |node, from, to| {
                     if !lead.options.cross_layer || !lead.options.use_scheduler {
-                        return 0;
+                        return (0, 0);
                     }
                     // A same-target elision is only foregone if the
                     // producer's backend family can actually keep
                     // activations resident.
                     if !backends[from].supports_residency() {
-                        return 0;
+                        return (0, 0);
                     }
-                    let Some(&src) = node.inputs.first() else { return 0 };
+                    let Some(&src) = node.inputs.first() else { return (0, 0) };
                     if act_uses[src] != 1 {
-                        return 0;
+                        return (0, 0);
                     }
-                    switch_round_trip_cycles(
+                    let elems = processed.node(src).ty.elems();
+                    let penalty = switch_round_trip_cycles(
                         &compilers[from].accel.arch,
                         &compilers[to].accel.arch,
-                        processed.node(src).ty.elems(),
-                    )
+                        elems,
+                    );
+                    let discount =
+                        switch_overlap_discount(&compilers[to].accel.arch, elems).min(penalty);
+                    (penalty, discount)
                 },
             )?
         };
@@ -458,11 +467,12 @@ impl<'a> CompilerSession<'a> {
             }
             for b in &pg.boundaries {
                 notes.push(format!(
-                    "{}: switch {} -> {} costs {} cycle round-trip ({})",
+                    "{}: switch {} -> {} costs {} cycle round-trip, overlap hides {} ({})",
                     pg.graph.node(b.node).name,
                     self.compilers[b.from].accel.name,
                     self.compilers[b.to].accel.name,
                     b.penalty,
+                    b.discount,
                     if b.taken { "taken" } else { "avoided" }
                 ));
             }
@@ -634,8 +644,12 @@ impl<'a> CompilerSession<'a> {
         let mut assignments: Vec<LayerAssignment> = Vec::new();
         // Segment boundaries: (first item index, target). A new boundary
         // opens whenever the emitting accelerator changes; host items fall
-        // into the surrounding segment.
+        // into the surrounding segment. `seg_bounds[i]` records the DRAM
+        // region the boundary activation crosses *into* segment i (its
+        // opening layer's first input) — the overlapped executor watches
+        // that region to find the consumer's first boundary read.
         let mut seg_starts: Vec<(usize, usize)> = Vec::new();
+        let mut seg_bounds: Vec<Option<(u64, u64)>> = Vec::new();
         for n in &g.nodes {
             match pg.targets[n.id] {
                 Target::None => {}
@@ -643,7 +657,16 @@ impl<'a> CompilerSession<'a> {
                     let plan = plans[n.id].as_ref().expect("scheduled accel layer");
                     let accel = &self.compilers[plan.target].accel;
                     if seg_starts.last().map(|&(_, t)| t) != Some(plan.target) {
+                        let bound = if seg_starts.is_empty() {
+                            None
+                        } else {
+                            Some((
+                                region[n.inputs[0]],
+                                g.node(n.inputs[0]).ty.bytes() as u64,
+                            ))
+                        };
                         seg_starts.push((prog.items.len(), plan.target));
+                        seg_bounds.push(bound);
                     }
                     let scheduled = lowered[n.id].as_ref().expect("mapped accel layer");
                     let bufs = LayerBufs {
@@ -689,6 +712,7 @@ impl<'a> CompilerSession<'a> {
         }
         if segments.is_empty() {
             segments.push(ProgramSegment { target: 0, start: 0, end: prog.items.len() });
+            seg_bounds.push(None);
         } else {
             segments[0].start = 0;
         }
@@ -718,6 +742,7 @@ impl<'a> CompilerSession<'a> {
                 from: self.compilers[b.from].accel.name.clone(),
                 to: self.compilers[b.to].accel.name.clone(),
                 penalty: b.penalty,
+                overlap_discount: b.discount,
                 taken: b.taken,
             })
             .collect();
@@ -729,6 +754,7 @@ impl<'a> CompilerSession<'a> {
             output_elems: out_node.ty.elems(),
             program: prog,
             segments,
+            boundary_regions: seg_bounds,
             graph: pg.graph,
             assignments,
             boundaries,

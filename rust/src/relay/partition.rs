@@ -54,6 +54,10 @@ pub struct BoundaryEval {
     pub to: usize,
     /// Switch penalty charged to the candidate, in cycles.
     pub penalty: u64,
+    /// Portion of the penalty the overlapped executor hides (the
+    /// consumer's boundary reload double-buffers under the producer's
+    /// tail). The objective charges `penalty - min(discount, penalty)`.
+    pub discount: u64,
     /// Whether this candidate won the placement (the penalty was paid).
     pub taken: bool,
 }
@@ -178,17 +182,22 @@ pub fn partition(g: &Graph, supported: &BTreeSet<String>) -> Result<PartitionedG
 /// shape-level: e.g. memories too small for the layer's minimal tile);
 /// infeasible candidates are simply skipped.
 ///
-/// `boundary(node, from, to)` prices a target *switch*: when `node`'s
-/// direct data producer (its first input) was already placed on
-/// accelerator `from`, every candidate `to != from` is additionally
-/// charged the returned penalty — the DRAM round-trip the switch forces
-/// on the activation, which same-target placement could elide via
-/// cross-layer residency (previously switching was free in the
-/// objective). Each evaluated boundary is recorded in
+/// `boundary(node, from, to)` prices a target *switch* as
+/// `(penalty, discount)`: when `node`'s direct data producer (its first
+/// input) was already placed on accelerator `from`, every candidate
+/// `to != from` is additionally charged `penalty` — the DRAM round-trip
+/// the switch forces on the activation, which same-target placement
+/// could elide via cross-layer residency — minus `discount`, the portion
+/// of that round-trip the overlapped executor hides by double-buffering
+/// the consumer's reload under the producer's tail. The discount is
+/// clamped to the penalty, so the effective charge never goes negative.
+/// Each evaluated boundary is recorded in
 /// [`PartitionedGraph::boundaries`].
 ///
 /// The node is assigned to the candidate with the cheapest
-/// `cost + penalty`; ties break toward the lower index, so the assignment
+/// `cost + penalty - min(discount, penalty)` — the *overlapped-makespan*
+/// objective, which can prefer a split that serializes worse but
+/// overlaps better. Ties break toward the lower index, so the assignment
 /// is deterministic. A node that no candidate supports (or that every
 /// candidate reports infeasible) falls back to [`Target::Host`]. An `Err`
 /// from `cost` aborts the partition.
@@ -196,7 +205,7 @@ pub fn partition_multi(
     g: &Graph,
     supported: &[BTreeSet<String>],
     mut cost: impl FnMut(&Node, usize) -> Result<Option<u64>>,
-    mut boundary: impl FnMut(&Node, usize, usize) -> u64,
+    mut boundary: impl FnMut(&Node, usize, usize) -> (u64, u64),
 ) -> Result<PartitionedGraph> {
     ensure!(!supported.is_empty(), "need at least one candidate accelerator");
     let mut targets = Vec::with_capacity(g.nodes.len());
@@ -221,15 +230,16 @@ pub fn partition_multi(
                     };
                     let penalty = match producer_target {
                         Some(from) if from != idx => {
-                            let p = boundary(n, from, idx);
+                            let (p, d) = boundary(n, from, idx);
                             boundaries.push(BoundaryEval {
                                 node: n.id,
                                 from,
                                 to: idx,
                                 penalty: p,
+                                discount: d.min(p),
                                 taken: false, // fixed up below
                             });
-                            p
+                            p - d.min(p)
                         }
                         _ => 0,
                     };
@@ -357,7 +367,7 @@ mod tests {
                     _ => unreachable!(),
                 }))
             },
-            |_, _, _| 0,
+            |_, _, _| (0, 0),
         )
         .unwrap();
         assert_eq!(pg.accel_of[l1], Some(0));
@@ -372,7 +382,7 @@ mod tests {
     fn multi_tie_breaks_toward_lower_index() {
         let (g, l1, l2) = two_layer_graph();
         let sets = vec![supported(), supported(), supported()];
-        let pg = partition_multi(&g, &sets, |_, _| Ok(Some(42)), |_, _, _| 0).unwrap();
+        let pg = partition_multi(&g, &sets, |_, _| Ok(Some(42)), |_, _, _| (0, 0)).unwrap();
         assert_eq!(pg.accel_of[l1], Some(0));
         assert_eq!(pg.accel_of[l2], Some(0));
         assert_eq!(pg.regions.len(), 1, "same target keeps one region");
@@ -396,7 +406,7 @@ mod tests {
                 queried.push((n.name.clone(), t));
                 Ok(Some(7))
             },
-            |_, _, _| 0,
+            |_, _, _| (0, 0),
         )
         .unwrap();
         assert_eq!(pg.targets[t], Target::Host);
@@ -425,14 +435,14 @@ mod tests {
                     _ => unreachable!(),
                 })
             },
-            |_, _, _| 0,
+            |_, _, _| (0, 0),
         )
         .unwrap();
         assert_eq!(pg.accel_of[l1], Some(0));
         assert_eq!(pg.accel_of[l2], Some(1));
 
         let all_infeasible =
-            partition_multi(&g, &sets, |_, _| Ok(None), |_, _, _| 0).unwrap();
+            partition_multi(&g, &sets, |_, _| Ok(None), |_, _, _| (0, 0)).unwrap();
         assert_eq!(all_infeasible.targets[l1], Target::Host);
         assert_eq!(all_infeasible.targets[l2], Target::Host);
         assert_eq!(all_infeasible.accel_nodes(), 0);
@@ -441,6 +451,52 @@ mod tests {
     #[test]
     fn multi_with_no_candidates_rejected() {
         let (g, _, _) = two_layer_graph();
-        assert!(partition_multi(&g, &[], |_, _| Ok(None), |_, _, _| 0).is_err());
+        assert!(partition_multi(&g, &[], |_, _| Ok(None), |_, _, _| (0, 0)).is_err());
+    }
+
+    #[test]
+    fn overlap_discount_can_flip_the_serial_sum_optimum() {
+        // l1 lands on target 0 (cheaper there). For l2, target 1 is 2
+        // cycles faster raw but a switch costs 5: the serial-sum
+        // objective (10 vs 8+5=13) keeps l2 on target 0, while the
+        // overlapped objective (10 vs 8+5-4=9) prefers the split —
+        // the consumer reload hides under the producer's tail.
+        let (g, l1, l2) = two_layer_graph();
+        let sets = vec![supported(), supported()];
+        let cost = |n: &Node, t: usize| {
+            Ok(Some(match (n.name.as_str(), t) {
+                ("l1", 0) => 10,
+                ("l1", 1) => 20,
+                ("l2", 0) => 10,
+                ("l2", 1) => 8,
+                _ => unreachable!(),
+            }))
+        };
+        let serial = partition_multi(&g, &sets, cost, |_, _, _| (5, 0)).unwrap();
+        assert_eq!(serial.accel_of[l1], Some(0));
+        assert_eq!(serial.accel_of[l2], Some(0), "full penalty keeps l2 home");
+        assert!(serial.boundaries.iter().any(|b| b.node == l2 && !b.taken));
+
+        let overlapped = partition_multi(&g, &sets, cost, |_, _, _| (5, 4)).unwrap();
+        assert_eq!(overlapped.accel_of[l1], Some(0));
+        assert_eq!(
+            overlapped.accel_of[l2],
+            Some(1),
+            "discounted boundary makes the split the optimum"
+        );
+        let b = overlapped
+            .boundaries
+            .iter()
+            .find(|b| b.node == l2 && b.taken)
+            .expect("the taken switch is recorded");
+        assert_eq!((b.penalty, b.discount), (5, 4));
+        assert_eq!(overlapped.regions.len(), 2);
+
+        // A discount larger than the penalty clamps: the charge is 0,
+        // never negative.
+        let clamped = partition_multi(&g, &sets, cost, |_, _, _| (5, 99)).unwrap();
+        assert_eq!(clamped.accel_of[l2], Some(1));
+        let b = clamped.boundaries.iter().find(|b| b.node == l2 && b.taken).unwrap();
+        assert_eq!(b.discount, 5, "recorded discount is clamped to the penalty");
     }
 }

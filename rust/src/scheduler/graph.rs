@@ -240,6 +240,20 @@ pub fn switch_round_trip_cycles(store: &ArchDesc, load: &ArchDesc, elems: usize)
         + ceil_div(elems, load.dma.bytes_per_cycle) as u64
 }
 
+/// The portion of [`switch_round_trip_cycles`] the overlapped executor
+/// hides: the consumer side's reload (its request latency, per-row
+/// overheads and streaming beats) double-buffers under the producer's
+/// tail, leaving only the producer's store on the boundary's critical
+/// path. By construction this is the load half of the round trip, so it
+/// is always ≤ the full penalty and the discounted objective never goes
+/// negative.
+pub fn switch_overlap_discount(load: &ArchDesc, elems: usize) -> u64 {
+    let rows_l = ceil_div(elems, load.pe_dim.max(1)) as u64;
+    load.dma.request_latency
+        + rows_l * load.dma.per_row_overhead
+        + ceil_div(elems, load.dma.bytes_per_cycle) as u64
+}
+
 fn cycles_of(s: &Schedule, profiled: Option<u64>) -> u64 {
     profiled.unwrap_or_else(|| s.est.cost() as u64)
 }
@@ -563,6 +577,22 @@ mod tests {
         assert!(big > small);
         let sw = switch_round_trip_cycles(&arch, &arch, 128);
         assert!(sw > 0);
+    }
+
+    #[test]
+    fn overlap_discount_never_exceeds_the_round_trip() {
+        let gem = ArchDesc::gemmini();
+        let mut wide = ArchDesc::gemmini();
+        wide.pe_dim = 32;
+        wide.dma.bytes_per_cycle = 32;
+        for elems in [1usize, 8, 128, 640, 1000] {
+            for (s, l) in [(&gem, &gem), (&gem, &wide), (&wide, &gem)] {
+                let rt = switch_round_trip_cycles(s, l, elems);
+                let d = switch_overlap_discount(l, elems);
+                assert!(d > 0, "the consumer reload always costs something");
+                assert!(d < rt, "discount {d} must stay below round trip {rt}");
+            }
+        }
     }
 
     #[test]

@@ -20,7 +20,7 @@ use crate::arch::parse::{arch_from_yaml, backend_from_yaml};
 use crate::relay::import::load_qmodel;
 
 use super::protocol::{parse_message, Message, ObjBuilder};
-use super::server::CompileServer;
+use super::server::{CompileServer, CompiledArtifact};
 
 /// Configuration of one serving loop.
 #[derive(Debug, Clone)]
@@ -187,7 +187,7 @@ fn handle_compile(
         .map(|s| format!("{}:{}us", s.name, s.elapsed.as_micros()))
         .collect();
     let stats = server.cache_stats();
-    Ok(ObjBuilder::new()
+    let mut b = ObjBuilder::new()
         .bool_field("ok", true)
         .str_field("cmd", "compile")
         .num_field("items", reply.artifact.program().items.len() as u64)
@@ -202,9 +202,16 @@ fn handle_compile(
         .num_field("resident_edges", reply.schedule_stats.resident_edges as u64)
         .num_field("cache_entries", stats.entries as u64)
         .num_field("elapsed_us", reply.elapsed.as_micros() as u64)
-        .str_field("program_fnv", &format!("{:016x}", reply.artifact.program_fnv()))
-        .list_field("stages", &stage_summary)
-        .finish())
+        .str_field("program_fnv", &format!("{:016x}", reply.artifact.program_fnv()));
+    // Multi-target compiles carry the async timing model's estimate:
+    // the serial per-layer sum against the boundary-overlapped makespan.
+    if let CompiledArtifact::Multi(d) = &reply.artifact {
+        let (serial, overlapped) = d.overlap_estimate();
+        b = b
+            .num_field("serial_cycles_est", serial)
+            .num_field("overlapped_cycles_est", overlapped);
+    }
+    Ok(b.list_field("stages", &stage_summary).finish())
 }
 
 /// Load one accelerator description from an accelerator config YAML: the
@@ -260,4 +267,59 @@ pub fn request(socket: &Path, line: &str) -> Result<String> {
     reader.read_line(&mut resp).context("reading response")?;
     anyhow::ensure!(!resp.is_empty(), "server closed the connection without replying");
     Ok(resp.trim_end().to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::gemmini::gemmini_desc;
+    use crate::backend::vector::vector_desc;
+    use crate::pipeline::CompileOptions;
+    use crate::relay::import::{write_qmodel, QModel};
+    use crate::relay::quantize::{quantize_mlp, FloatDense};
+    use crate::util::prng::Rng;
+
+    fn tiny_model() -> QModel {
+        let mut rng = Rng::new(9);
+        let l = FloatDense {
+            weight: (0..16 * 8).map(|_| (rng.f64() as f32 - 0.5) * 0.3).collect(),
+            bias: (0..8).map(|_| (rng.f64() as f32 - 0.5) * 0.1).collect(),
+            in_dim: 16,
+            out_dim: 8,
+            relu: false,
+        };
+        crate::relay::import::from_quantized(
+            1,
+            0.04,
+            &quantize_mlp(&[l], &[0.04, 0.05]).unwrap(),
+        )
+    }
+
+    #[test]
+    fn multi_target_compile_reply_carries_overlap_estimate() {
+        let dir = std::env::temp_dir()
+            .join(format!("tvm-accel-socket-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let model_path = dir.join("tiny.qmodel");
+        std::fs::write(&model_path, write_qmodel(&tiny_model())).unwrap();
+        let server = CompileServer::new(CompileOptions::default());
+        let targets = vec![gemmini_desc().unwrap(), vector_desc().unwrap()];
+        let line = format!("{{\"cmd\":\"compile\",\"model\":\"{}\"}}", model_path.display());
+        let (reply, shutdown) = handle_line(&server, &line, &targets);
+        assert!(!shutdown);
+        let msg = parse_message(&reply).unwrap();
+        assert_eq!(msg.bool_field("ok"), Some(true), "reply: {reply}");
+        let serial = msg.num_field("serial_cycles_est").expect("serial estimate");
+        let overlapped =
+            msg.num_field("overlapped_cycles_est").expect("overlapped estimate");
+        assert!(serial > 0.0, "reply: {reply}");
+        assert!(overlapped > 0.0 && overlapped <= serial, "reply: {reply}");
+        // Single-target compiles stay free of the multi-only fields.
+        let single = vec![gemmini_desc().unwrap()];
+        let (reply, _) = handle_line(&server, &line, &single);
+        let msg = parse_message(&reply).unwrap();
+        assert_eq!(msg.bool_field("ok"), Some(true), "reply: {reply}");
+        assert_eq!(msg.num_field("serial_cycles_est"), None, "reply: {reply}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
 }

@@ -28,6 +28,59 @@ use timing::{Access, QueueId, Timing};
 /// Maximum rows a single `MVIN`/`MVOUT` may move (DMA command limit).
 pub const MAX_DMA_ROWS: u16 = 4096;
 
+/// DRAM regions a watched run observes for the overlapped execution
+/// model: the *incoming* boundary region a segment reads from its
+/// producer, and the *outgoing* boundary region it writes for its
+/// consumer. Each region is `(byte offset, length in bytes)`. A `None`
+/// region records nothing — the observation defaults then claim no
+/// overlap, which is always safe.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BoundaryWatch {
+    /// Region whose first read the run should timestamp.
+    pub incoming: Option<(u64, u64)>,
+    /// Region whose last write the run should timestamp.
+    pub outgoing: Option<(u64, u64)>,
+}
+
+impl BoundaryWatch {
+    fn active(&self) -> bool {
+        self.incoming.is_some() || self.outgoing.is_some()
+    }
+
+    /// Does the byte span `[lo, hi)` touch the incoming region?
+    fn reads(&self, lo: u64, hi: u64) -> bool {
+        self.incoming.is_some_and(|(off, len)| lo < off + len && off < hi)
+    }
+
+    /// Does the byte span `[lo, hi)` touch the outgoing region?
+    fn writes(&self, lo: u64, hi: u64) -> bool {
+        self.outgoing.is_some_and(|(off, len)| lo < off + len && off < hi)
+    }
+}
+
+/// What a watched run observed about its [`BoundaryWatch`] regions, in
+/// cycles local to the executed slice. The defaults are conservative:
+/// `first_read: None` means "assume the region is needed at cycle 0"
+/// (no head overlap) and `last_write: None` means "assume it is ready
+/// only when the slice finishes" (no tail overlap).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BoundaryObs {
+    /// Start cycle of the first DRAM access reading the incoming region.
+    pub first_read: Option<u64>,
+    /// Finish cycle of the last DRAM access writing the outgoing region.
+    pub last_write: Option<u64>,
+}
+
+impl BoundaryObs {
+    fn note_read(&mut self, at: u64) {
+        self.first_read = Some(self.first_read.map_or(at, |v| v.min(at)));
+    }
+
+    fn note_write(&mut self, at: u64) {
+        self.last_write = Some(self.last_write.map_or(at, |v| v.max(at)));
+    }
+}
+
 /// Requantize an int32 accumulator value to int8 with round-to-nearest-even
 /// (matches `jnp.round`; keep in sync with `python/compile/kernels/ref.py`).
 #[inline]
@@ -166,7 +219,40 @@ impl Simulator {
         range: std::ops::Range<usize>,
         input_region: Option<(u64, u64)>,
     ) -> Result<RunReport> {
-        self.run_slice_inner(prog, dram, range, input_region, None)
+        Ok(self.run_slice_inner(prog, dram, range, input_region, BoundaryWatch::default(), None)?.0)
+    }
+
+    /// [`Simulator::run_slice_hinted`], additionally observing when the
+    /// slice first reads its incoming boundary region and last writes its
+    /// outgoing one (see [`BoundaryWatch`]). This is the measurement
+    /// primitive behind the overlapped multi-target timing model: the
+    /// observed head/tail cycles bound how far a consumer segment's start
+    /// may slide under its producer. Watching is passive — outputs and
+    /// the [`RunReport`] are identical to an unwatched run.
+    pub fn run_slice_watched(
+        &self,
+        prog: &Program,
+        dram: &mut Dram,
+        range: std::ops::Range<usize>,
+        input_region: Option<(u64, u64)>,
+        watch: BoundaryWatch,
+    ) -> Result<(RunReport, BoundaryObs)> {
+        self.run_slice_inner(prog, dram, range, input_region, watch, None)
+    }
+
+    /// [`Simulator::run_slice_watched`] with the timeline recording of
+    /// [`Simulator::run_profiled`] (one call drives both the overlapped
+    /// schedule and the per-segment profiler tracks).
+    pub fn run_slice_observed(
+        &self,
+        prog: &Program,
+        dram: &mut Dram,
+        range: std::ops::Range<usize>,
+        input_region: Option<(u64, u64)>,
+        watch: BoundaryWatch,
+        tl: &mut Timeline,
+    ) -> Result<(RunReport, BoundaryObs)> {
+        self.run_slice_inner(prog, dram, range, input_region, watch, Some(tl))
     }
 
     /// [`Simulator::run_hinted`], additionally recording each priced
@@ -181,7 +267,16 @@ impl Simulator {
         input_region: Option<(u64, u64)>,
         tl: &mut Timeline,
     ) -> Result<RunReport> {
-        self.run_slice_inner(prog, dram, 0..prog.items.len(), input_region, Some(tl))
+        Ok(self
+            .run_slice_inner(
+                prog,
+                dram,
+                0..prog.items.len(),
+                input_region,
+                BoundaryWatch::default(),
+                Some(tl),
+            )?
+            .0)
     }
 
     /// [`Simulator::run_slice_hinted`] with the timeline recording of
@@ -195,7 +290,9 @@ impl Simulator {
         input_region: Option<(u64, u64)>,
         tl: &mut Timeline,
     ) -> Result<RunReport> {
-        self.run_slice_inner(prog, dram, range, input_region, Some(tl))
+        Ok(self
+            .run_slice_inner(prog, dram, range, input_region, BoundaryWatch::default(), Some(tl))?
+            .0)
     }
 
     fn run_slice_inner(
@@ -204,8 +301,9 @@ impl Simulator {
         dram: &mut Dram,
         range: std::ops::Range<usize>,
         input_region: Option<(u64, u64)>,
+        watch: BoundaryWatch,
         mut tl: Option<&mut Timeline>,
-    ) -> Result<RunReport> {
+    ) -> Result<(RunReport, BoundaryObs)> {
         ensure!(range.start <= range.end, "inverted item range {range:?}");
         ensure!(
             range.end <= prog.items.len(),
@@ -215,6 +313,7 @@ impl Simulator {
         let mut st = ExecState::new(&self.arch)?;
         let mut t = Timing::new(st.spad.rows, st.acc.rows);
         let mut rep = RunReport::default();
+        let mut obs = BoundaryObs::default();
         let issue = self.arch.host.insn_issue_cycles;
 
         // Host cycles before the first accelerator instruction: the
@@ -247,6 +346,8 @@ impl Simulator {
                             gap,
                             true,
                             input_region,
+                            watch,
+                            &mut obs,
                             tl.as_deref_mut(),
                         )
                         .with_context(|| format!("LOOP_WS micro-op {m}"))?;
@@ -264,12 +365,14 @@ impl Simulator {
                         issue,
                         false,
                         input_region,
+                        watch,
+                        &mut obs,
                         tl.as_deref_mut(),
                     )
                     .with_context(|| format!("item {idx}: {i}"))?;
                 }
                 Item::Host(h) => {
-                    self.exec_host(dram, &mut t, &mut rep, h, tl.as_deref_mut())
+                    self.exec_host(dram, &mut t, &mut rep, h, watch, &mut obs, tl.as_deref_mut())
                         .with_context(|| format!("item {idx}: {h:?}"))?;
                     if !seen_accel {
                         rep.host_prefix_cycles = t.host_cycles;
@@ -280,7 +383,7 @@ impl Simulator {
         // Account trailing in-flight work even without a final fence.
         rep.cycles = t.now();
         rep.host_cycles = t.host_cycles;
-        Ok(rep)
+        Ok((rep, obs))
     }
 
     /// (total latency, engine occupancy) of one DMA transfer: the fixed
@@ -303,6 +406,8 @@ impl Simulator {
         issue_gap: u64,
         from_fsm: bool,
         input_region: Option<(u64, u64)>,
+        watch: BoundaryWatch,
+        obs: &mut BoundaryObs,
         tl: Option<&mut Timeline>,
     ) -> Result<()> {
         if !from_fsm {
@@ -385,6 +490,16 @@ impl Simulator {
                     Some(occ),
                     &[Access::write(local.space, local.row, rows as u32)],
                 );
+                if watch.active() {
+                    let (row_bytes, row_stride) = match local.space {
+                        Space::Spad => (cols as u64, stride),
+                        Space::Acc => (cols as u64 * 4, stride * 4),
+                    };
+                    let hi = base + (rows as u64 - 1) * row_stride + row_bytes;
+                    if watch.reads(base, hi) {
+                        obs.note_read(start);
+                    }
+                }
                 if let Some(tl) = tl {
                     // Engine occupancy only: the request-latency tail
                     // pipelines with the next transfer (mirrors `dma_busy`).
@@ -422,13 +537,16 @@ impl Simulator {
                 rep.dram_write_bytes += rows as u64 * cols as u64;
                 let (lat, occ) = self.dma_latency(rows as u64, bytes_onchip);
                 rep.dram_transfer_cycles += occ;
-                let (start, _) = t.step(
+                let (start, finish) = t.step(
                     QueueId::Store,
                     issue_gap,
                     lat,
                     Some(occ),
                     &[Access::read(local.space, local.row, rows as u32)],
                 );
+                if watch.writes(base, base + (rows as u64 - 1) * stride + cols as u64) {
+                    obs.note_write(finish);
+                }
                 if let Some(tl) = tl {
                     tl.push(Track::Dma, "mvout", start, start + occ.min(lat));
                 }
@@ -640,6 +758,9 @@ impl Simulator {
                 let (lat, occ) = crate::backend::vector::timing::ld_bias(&self.arch, len);
                 rep.dram_transfer_cycles += occ;
                 let (start, _) = t.step(QueueId::Ex, issue_gap, lat, Some(occ), &[]);
+                if watch.reads(base, base + len as u64 * 4) {
+                    obs.note_read(start);
+                }
                 if let Some(tl) = tl {
                     tl.push(Track::Dma, "vld_bias", start, start + occ.min(lat));
                 }
@@ -669,6 +790,10 @@ impl Simulator {
                     crate::backend::vector::timing::mac_strip(&self.arch, n_out, n_in);
                 rep.dram_transfer_cycles += stream;
                 let (start, finish) = t.step(QueueId::Ex, issue_gap, lat, Some(occ), &[]);
+                let w_hi = w_dram + (n_in as u64 - 1) * w_stride as u64 + n_out as u64;
+                if watch.reads(x_dram, x_dram + n_in as u64) || watch.reads(w_dram, w_hi) {
+                    obs.note_read(start);
+                }
                 if let Some(tl) = tl {
                     // The strip both streams operands (DMA) and MACs them
                     // (lanes) — it shows on both tracks.
@@ -686,7 +811,10 @@ impl Simulator {
                 rep.dram_write_bytes += len as u64;
                 let (lat, occ) = crate::backend::vector::timing::st_out(&self.arch, len);
                 rep.dram_transfer_cycles += occ;
-                let (start, _) = t.step(QueueId::Ex, issue_gap, lat, Some(occ), &[]);
+                let (start, finish) = t.step(QueueId::Ex, issue_gap, lat, Some(occ), &[]);
+                if watch.writes(base, base + len as u64) {
+                    obs.note_write(finish);
+                }
                 if let Some(tl) = tl {
                     tl.push(Track::Dma, "vst_out", start, start + occ.min(lat));
                 }
@@ -695,12 +823,15 @@ impl Simulator {
         Ok(())
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn exec_host(
         &self,
         dram: &mut Dram,
         t: &mut Timing,
         rep: &mut RunReport,
         h: &HostOp,
+        watch: BoundaryWatch,
+        obs: &mut BoundaryObs,
         tl: Option<&mut Timeline>,
     ) -> Result<()> {
         rep.count(h.mnemonic());
@@ -818,10 +949,68 @@ impl Simulator {
             + h.alu_elems() * self.arch.host.cycles_per_elem_alu
             + h.moved_elems() * self.arch.host.cycles_per_elem_move;
         let end = t.host(cost);
+        if watch.active() {
+            let (reads, writes) = host_spans(h);
+            if reads.iter().any(|&(lo, hi)| watch.reads(lo, hi)) {
+                obs.note_read(end - cost);
+            }
+            if writes.iter().any(|&(lo, hi)| watch.writes(lo, hi)) {
+                obs.note_write(end);
+            }
+        }
         if let Some(tl) = tl {
             tl.push(Track::Host, h.mnemonic(), end - cost, end);
         }
         Ok(())
+    }
+}
+
+/// The `[lo, hi)` DRAM byte spans a host op reads and writes — mirrors
+/// the functional implementations in `exec_host`, for boundary watching.
+fn host_spans(h: &HostOp) -> (Vec<(u64, u64)>, Vec<(u64, u64)>) {
+    match *h {
+        HostOp::TransposeI8 { src, dst, rows, cols } => {
+            let n = (rows * cols) as u64;
+            (vec![(src, src + n)], vec![(dst, dst + n)])
+        }
+        HostOp::QuantizeF32 { src, dst, n, .. } => {
+            (vec![(src, src + 4 * n as u64)], vec![(dst, dst + n as u64)])
+        }
+        HostOp::DequantizeI8 { src, dst, n, .. } => {
+            (vec![(src, src + n as u64)], vec![(dst, dst + 4 * n as u64)])
+        }
+        HostOp::RequantizeI32 { src, dst, n, .. } => {
+            (vec![(src, src + 4 * n as u64)], vec![(dst, dst + n as u64)])
+        }
+        HostOp::WidenI8ToI32 { src, dst, n } => {
+            (vec![(src, src + n as u64)], vec![(dst, dst + 4 * n as u64)])
+        }
+        HostOp::Memcpy { src, dst, bytes } => {
+            (vec![(src, src + bytes as u64)], vec![(dst, dst + bytes as u64)])
+        }
+        HostOp::AddI32 { a, b, dst, n } => {
+            let len = 4 * n as u64;
+            (vec![(a, a + len), (b, b + len)], vec![(dst, dst + len)])
+        }
+        HostOp::BiasAddI32 { x, bias, dst, n, k } => {
+            let len = 4 * (n * k) as u64;
+            (vec![(x, x + len), (bias, bias + 4 * k as u64)], vec![(dst, dst + len)])
+        }
+        HostOp::MatmulI8 { a, b, c, n, c_dim, k } => (
+            vec![(a, a + (n * c_dim) as u64), (b, b + (c_dim * k) as u64)],
+            vec![(c, c + 4 * (n * k) as u64)],
+        ),
+        HostOp::ClipI8 { buf, n, .. } => {
+            (vec![(buf, buf + n as u64)], vec![(buf, buf + n as u64)])
+        }
+        HostOp::Im2col { src, dst, n, h, w, c, kh, kw, stride, pad } => {
+            let oh = (h + 2 * pad - kh) / stride + 1;
+            let ow = (w + 2 * pad - kw) / stride + 1;
+            (
+                vec![(src, src + (n * h * w * c) as u64)],
+                vec![(dst, dst + (n * oh * ow * kh * kw * c) as u64)],
+            )
+        }
     }
 }
 

@@ -40,6 +40,12 @@ pub struct RunReport {
     pub insn_counts: BTreeMap<&'static str, u64>,
     /// Commands issued by the host front-end (one per RoCC instruction).
     pub issued_commands: u64,
+    /// Overlapped makespan of a multi-target run: the end-to-end latency
+    /// when segments are scheduled by data dependency (the consumer's
+    /// boundary reload double-buffered under the producer's tail) instead
+    /// of as a serial handoff. Always ≤ `cycles`. Zero means "not a
+    /// multi-target run" — single-target reports never set it.
+    pub overlapped_cycles: u64,
 }
 
 impl RunReport {
@@ -74,6 +80,10 @@ impl RunReport {
         self.dram_transfer_cycles += other.dram_transfer_cycles;
         self.macs += other.macs;
         self.issued_commands += other.issued_commands;
+        // Per-segment reports never carry an overlapped makespan (the
+        // schedule is a whole-deployment notion) — `MultiDeployment`
+        // sets the merged report's value after scheduling all segments.
+        self.overlapped_cycles += other.overlapped_cycles;
         for (&m, &n) in &other.insn_counts {
             *self.insn_counts.entry(m).or_insert(0) += n;
         }
@@ -96,10 +106,17 @@ impl RunReport {
         self.macs as f64 / traffic as f64
     }
 
-    /// One-line summary for logs.
+    /// One-line summary for logs. Multi-target runs additionally show the
+    /// overlapped makespan next to the serial cycle count.
     pub fn summary(&self) -> String {
+        let overlapped = if self.overlapped_cycles > 0 {
+            format!(" overlapped={}", commafy(self.overlapped_cycles))
+        } else {
+            String::new()
+        };
         format!(
-            "cycles={} (host {}) macs={} dram r/w={}/{} xfer={} staged-in={} issued={}",
+            "cycles={}{overlapped} (host {}) macs={} dram r/w={}/{} xfer={} staged-in={} \
+             issued={}",
             commafy(self.cycles),
             commafy(self.host_cycles),
             commafy(self.macs),
@@ -185,6 +202,14 @@ mod tests {
         };
         lead.merge(&tail);
         assert_eq!(lead.input_stage_cycles, 14);
+    }
+
+    #[test]
+    fn summary_shows_overlapped_only_when_set() {
+        let plain = RunReport { cycles: 100, ..Default::default() };
+        assert!(!plain.summary().contains("overlapped"), "{}", plain.summary());
+        let multi = RunReport { cycles: 100, overlapped_cycles: 80, ..Default::default() };
+        assert!(multi.summary().contains("overlapped=80"), "{}", multi.summary());
     }
 
     #[test]

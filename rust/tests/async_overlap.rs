@@ -1,0 +1,192 @@
+//! Property tests for the graph-level overlapped execution schedule.
+//!
+//! For every multi-target pairing the fuzzer exercises (the heterogeneous
+//! systolic pair and the cross-family gemmini+vector pair), compile a
+//! bottlenecked MLP, run it under the overlapped executor, and check the
+//! schedule's structural promises:
+//!
+//! * outputs stay element-exact against the graph interpreter (the
+//!   overlap is a timing reinterpretation, never a functional change);
+//! * the overlapped makespan never exceeds the serial handoff total;
+//! * data dependencies hold — a consumer segment's first read of its
+//!   boundary region never lands before the producer released it;
+//! * per-target tracks never self-overlap: segment windows on one target
+//!   are disjoint, and the shifted profiler timelines pass the same
+//!   per-track non-overlap check `obs_format.rs` applies to single runs.
+
+use std::collections::BTreeMap;
+
+use tvm_accel::fuzz::oracle::multi_target_pairings;
+use tvm_accel::obs::timeline::{Timeline, Track};
+use tvm_accel::pipeline::{MultiCompiler, OverlapReport, ProgramSegment};
+use tvm_accel::relay::eval::eval;
+use tvm_accel::relay::import::{from_quantized, to_qnn_graph};
+use tvm_accel::relay::quantize::{quantize_mlp, FloatDense};
+use tvm_accel::relay::{Graph, Tensor, TensorData};
+use tvm_accel::util::prng::Rng;
+
+/// A seeded quantized MLP with the given layer widths.
+fn mlp_graph(seed: u64, dims: &[usize], batch: usize) -> Graph {
+    let mut rng = Rng::new(seed);
+    let layers: Vec<FloatDense> = dims
+        .windows(2)
+        .enumerate()
+        .map(|(i, w)| FloatDense {
+            weight: (0..w[0] * w[1]).map(|_| (rng.f64() as f32 - 0.5) * 0.3).collect(),
+            bias: (0..w[1]).map(|_| (rng.f64() as f32 - 0.5) * 0.1).collect(),
+            in_dim: w[0],
+            out_dim: w[1],
+            relu: i + 2 < dims.len(),
+        })
+        .collect();
+    let scales: Vec<f32> = (0..dims.len()).map(|i| 0.03 + 0.004 * i as f32).collect();
+    let model = from_quantized(batch, scales[0], &quantize_mlp(&layers, &scales).unwrap());
+    to_qnn_graph(&model).unwrap()
+}
+
+/// The schedule-level invariants every overlapped run must satisfy.
+fn check_schedule(tag: &str, segments: &[ProgramSegment], ov: &OverlapReport) {
+    let n = segments.len();
+    assert_eq!(ov.starts.len(), n, "{tag}: one start per segment");
+    assert_eq!(ov.durations.len(), n, "{tag}: one duration per segment");
+    assert!(
+        ov.overlapped_cycles <= ov.serial_cycles,
+        "{tag}: overlapped {} > serial {}",
+        ov.overlapped_cycles,
+        ov.serial_cycles
+    );
+    assert_eq!(
+        ov.serial_cycles,
+        ov.durations.iter().sum::<u64>(),
+        "{tag}: serial total is the duration sum"
+    );
+    assert_eq!(
+        ov.overlapped_cycles,
+        ov.starts.iter().zip(&ov.durations).map(|(s, d)| s + d).max().unwrap_or(0),
+        "{tag}: makespan is the latest segment finish"
+    );
+    for i in 0..n {
+        assert!(ov.heads[i] <= ov.durations[i], "{tag}: head within segment {i}");
+        assert!(ov.readies[i] <= ov.durations[i], "{tag}: ready within segment {i}");
+    }
+    // Data dependency: segment i's first boundary read happens at or
+    // after its producer's release (the producer's last boundary write).
+    for i in 1..n {
+        assert!(
+            ov.starts[i] + ov.heads[i] >= ov.starts[i - 1] + ov.readies[i - 1],
+            "{tag}: segment {i} reads its boundary at {} before producer released at {}",
+            ov.starts[i] + ov.heads[i],
+            ov.starts[i - 1] + ov.readies[i - 1]
+        );
+    }
+    // Per-target tracks never self-overlap: the busy windows of all
+    // segments placed on one target are pairwise disjoint.
+    let mut per_target: BTreeMap<usize, Vec<(u64, u64)>> = BTreeMap::new();
+    for (i, seg) in segments.iter().enumerate() {
+        per_target
+            .entry(seg.target)
+            .or_default()
+            .push((ov.starts[i], ov.starts[i] + ov.durations[i]));
+    }
+    for (target, mut windows) in per_target {
+        windows.sort_unstable();
+        for w in windows.windows(2) {
+            assert!(
+                w[1].0 >= w[0].1,
+                "{tag}: target {target} self-overlaps: {:?} then {:?}",
+                w[0],
+                w[1]
+            );
+        }
+    }
+}
+
+/// The `obs_format.rs` per-track non-overlap check, applied to the merged
+/// shifted timelines of every segment that ran on one target.
+fn check_tracks(tag: &str, name: &str, timelines: &[&Timeline]) {
+    for track in [Track::Dma, Track::Compute, Track::Store, Track::Host] {
+        let mut on_track: Vec<(u64, u64)> = timelines
+            .iter()
+            .flat_map(|tl| tl.slices.iter())
+            .filter(|s| s.track == track)
+            .map(|s| (s.start, s.end))
+            .collect();
+        on_track.sort_unstable();
+        for w in on_track.windows(2) {
+            assert!(
+                w[1].0 >= w[0].1,
+                "{tag}: {name} {} track overlaps across segments: {:?} then {:?}",
+                track.name(),
+                w[0],
+                w[1]
+            );
+        }
+    }
+}
+
+#[test]
+fn overlapped_schedule_respects_dependencies_on_every_pairing() {
+    // A bottlenecked stack (wide → narrow → wide) at small batch: the
+    // shape mix that makes cost-driven partitions place layers on
+    // different targets when the models disagree about the bottleneck.
+    let dims = [96usize, 64, 8, 48];
+    let batch = 2;
+    let graph = mlp_graph(31, &dims, batch);
+    let mut rng = Rng::new(77);
+    let input = rng.i8_vec(batch * dims[0]);
+    let mut m = BTreeMap::new();
+    m.insert(
+        "x".to_string(),
+        Tensor::new(vec![batch, dims[0]], TensorData::I8(input.clone())).unwrap(),
+    );
+    let want = eval(&graph, &m).unwrap();
+
+    for (tag, targets) in multi_target_pairings().unwrap() {
+        let dep = MultiCompiler::new(targets).unwrap().compile(&graph).unwrap();
+        let (got, rep, ov) = dep.run_overlapped(&input).unwrap();
+        assert_eq!(TensorData::I8(got), want[0].data, "{tag}: overlapped run is exact");
+        assert_eq!(rep.cycles, ov.serial_cycles, "{tag}");
+        assert_eq!(rep.overlapped_cycles, ov.overlapped_cycles, "{tag}");
+        check_schedule(tag, &dep.segments, &ov);
+
+        // Profiled timelines sit at the overlapped starts; per target,
+        // the merged tracks must still be non-overlapping.
+        let (got2, rep2, timelines) = dep.run_profiled(&input).unwrap();
+        assert_eq!(TensorData::I8(got2), want[0].data, "{tag}: profiled run is exact");
+        assert_eq!(rep2.cycles, rep.cycles, "{tag}: profiling is passive");
+        assert_eq!(timelines.len(), dep.segments.len(), "{tag}");
+        let names: Vec<&str> = timelines.iter().map(|(n, _)| n.as_str()).collect();
+        for name in &names {
+            let on_target: Vec<&Timeline> = timelines
+                .iter()
+                .filter(|(n, _)| n == name)
+                .map(|(_, tl)| tl)
+                .collect();
+            check_tracks(tag, name, &on_target);
+        }
+    }
+}
+
+#[test]
+fn overlapped_never_exceeds_serial_across_shapes() {
+    // Sweep a few shapes/batches per pairing; the ≤ invariant must hold
+    // on every compile, split or not.
+    let cases: [(&[usize], usize, u64); 3] =
+        [(&[64, 96, 32], 4, 5), (&[32, 8, 32], 1, 6), (&[48, 48, 48, 48], 2, 7)];
+    for (dims, batch, seed) in cases {
+        let graph = mlp_graph(seed, dims, batch);
+        let mut rng = Rng::new(seed + 100);
+        let input = rng.i8_vec(batch * dims[0]);
+        for (tag, targets) in multi_target_pairings().unwrap() {
+            let dep = MultiCompiler::new(targets).unwrap().compile(&graph).unwrap();
+            let (_, rep, ov) = dep.run_overlapped(&input).unwrap();
+            assert!(
+                rep.overlapped_cycles > 0 && rep.overlapped_cycles <= rep.cycles,
+                "{tag} dims {dims:?}: overlapped {} vs serial {}",
+                rep.overlapped_cycles,
+                rep.cycles
+            );
+            check_schedule(tag, &dep.segments, &ov);
+        }
+    }
+}
